@@ -1,0 +1,97 @@
+//! Fig 2-style scaling study on the REAL training driver: epoch wall time
+//! at 1/2/4 worker nodes (unthrottled, so computation is visible), plus
+//! the simulated weak-scaling breakdown of Fig 3.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example scaling_study
+//! ```
+
+use std::path::PathBuf;
+
+use solar::config::RunConfig;
+use solar::data::spec::DatasetSpec;
+use solar::data::synth;
+use solar::dist::sim::simulate;
+use solar::exp::ExpCtx;
+use solar::loader::LoaderPolicy;
+use solar::runtime::executable::DenseImpl;
+use solar::storage::pfs::CostModel;
+use solar::storage::shdf::ShdfReader;
+use solar::train::driver::{train, TrainConfig};
+use solar::util::fmt_secs;
+use solar::util::stats::TextTable;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = PathBuf::from("artifacts");
+    let n_train = 512;
+
+    if artifacts.join("manifest.json").exists() {
+        // Real-driver strong scaling.
+        let dir = PathBuf::from("results/data");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("cd_scaling_{n_train}.shdf"));
+        let mut spec = DatasetSpec::paper("cd17").unwrap();
+        spec.id = format!("cd_scaling_{n_train}");
+        spec.n_samples = n_train;
+        let ok = ShdfReader::open(&path).map(|r| r.n_samples() == n_train).unwrap_or(false);
+        if !ok {
+            synth::generate_dataset(&path, &spec, 99)?;
+        }
+        let mut t = TextTable::new(&["#workers", "epoch wall", "compute", "load", "speedup"]);
+        let mut base = None;
+        for n_nodes in [1usize, 2, 4] {
+            let cfg = RunConfig {
+                spec: spec.clone(),
+                n_nodes,
+                local_batch: 16,
+                n_epochs: 1,
+                seed: 1,
+                buffer_capacity: n_train,
+                cost: CostModel::default(),
+            };
+            let tc = TrainConfig {
+                run: cfg,
+                dataset_path: path.clone(),
+                artifacts_dir: artifacts.clone(),
+                policy: LoaderPolicy::pytorch(),
+                dense: DenseImpl::Xla,
+                lr: 0.05,
+                throttle: 0.0, // unthrottled: show compute scaling
+                eval_every: 0,
+                max_steps: 0,
+                holdout: 0,
+            };
+            let r = train(&tc)?;
+            let b = *base.get_or_insert(r.total_wall_s);
+            t.rowv(vec![
+                format!("{n_nodes}"),
+                fmt_secs(r.total_wall_s),
+                fmt_secs(r.comp_wall_s),
+                fmt_secs(r.load_wall_s),
+                format!("{:.2}x", b / r.total_wall_s),
+            ]);
+        }
+        println!("Fig 2-style: real-driver scaling (PJRT CPU workers, {n_train} samples)\n\n{}", t.render());
+    } else {
+        println!("(artifacts missing — skipping the real-driver scaling; run `make artifacts`)");
+    }
+
+    // Fig 3 weak-scaling breakdown (simulated).
+    let ctx = ExpCtx::new(true);
+    let mut t = TextTable::new(&["dataset", "#nodes", "load share"]);
+    for ds in ["cd17", "bcdi", "cosmoflow"] {
+        for n in [4usize, 16] {
+            let mut cfg = ctx.run_config(ds, solar::storage::pfs::SystemTier::Low, 64)?;
+            cfg.n_nodes = n;
+            cfg.n_epochs = 3;
+            let r = simulate(&cfg, &LoaderPolicy::pytorch());
+            t.rowv(vec![
+                ds.into(),
+                format!("{n}"),
+                format!("{:.1}%", 100.0 * r.avg_load_s() / (r.avg_load_s() + r.avg_comp_s())),
+            ]);
+        }
+    }
+    println!("\nFig 3-style: loading share grows under weak scaling (simulated)\n\n{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,136 @@
+"""AOT compile path: lower the L2 model (with its L1 Pallas kernels) to
+HLO *text* artifacts the rust runtime loads via the PJRT C API.
+
+HLO text, NOT serialized protos: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the `xla`
+crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  ptychonn_grads_b{B}.hlo.txt        training step (pallas dense layers)
+  ptychonn_grads_b{B}_xla.hlo.txt    training step (plain-XLA dense) — A/B
+  ptychonn_fwd_b{B}.hlo.txt          inference
+  params_init.bin                    f32 LE initial parameters, spec order
+  manifest.json                      shapes/order/artifacts description
+
+Run via `make artifacts`; a stamp check makes it a no-op when inputs are
+unchanged.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(fn, shapes) -> str:
+    lowered = jax.jit(fn).lower(*shapes)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources; drives the no-op stamp."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for rel in ["aot.py", "model.py", "kernels/matmul.py", "kernels/ref.py"]:
+        with open(os.path.join(base, rel), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--batch", type=int, default=32, help="max per-node batch (mask pads)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+    stamp_path = os.path.join(out, "stamp.json")
+    fp = input_fingerprint()
+    stamp = {"fingerprint": fp, "batch": args.batch, "seed": args.seed}
+    if not args.force and os.path.exists(stamp_path):
+        with open(stamp_path) as f:
+            if json.load(f) == stamp:
+                print(f"artifacts up to date (stamp {fp})")
+                return 0
+
+    b = args.batch
+    artifacts = {}
+
+    for tag, use_pallas in [("", True), ("_xla", False)]:
+        fn, shapes = model.make_grads_flat(b, use_pallas=use_pallas)
+        name = f"ptychonn_grads_b{b}{tag}.hlo.txt"
+        text = to_hlo_text(fn, shapes)
+        with open(os.path.join(out, name), "w") as f:
+            f.write(text)
+        artifacts[f"grads{tag}"] = name
+        print(f"wrote {name} ({len(text)} chars)")
+
+    fn, shapes = model.make_forward_flat(b, use_pallas=True)
+    name = f"ptychonn_fwd_b{b}.hlo.txt"
+    text = to_hlo_text(fn, shapes)
+    with open(os.path.join(out, name), "w") as f:
+        f.write(text)
+    artifacts["fwd"] = name
+    print(f"wrote {name} ({len(text)} chars)")
+
+    # Initial parameters, flat f32 little-endian in spec order.
+    params = model.init_params(args.seed)
+    blobs = []
+    for pname, shape in model.param_spec():
+        arr = np.asarray(params[pname], dtype="<f4")
+        assert arr.shape == shape, (pname, arr.shape, shape)
+        blobs.append(arr.tobytes())
+    with open(os.path.join(out, "params_init.bin"), "wb") as f:
+        f.write(b"".join(blobs))
+
+    manifest = {
+        "model": "ptychonn",
+        "img": model.IMG,
+        "batch": b,
+        "seed": args.seed,
+        "n_params": model.n_params(),
+        "params": [{"name": n, "shape": list(s)} for n, s in model.param_spec()],
+        "inputs_after_params": [
+            {"name": "x", "shape": [b, 1, model.IMG, model.IMG]},
+            {"name": "y", "shape": [b, 2, model.IMG, model.IMG]},
+            {"name": "mask", "shape": [b]},
+        ],
+        "outputs": ["loss_sum"] + [n for n, _ in model.param_spec()],
+        "artifacts": artifacts,
+        "pallas_blocks": {
+            "dense0": dict_of_blocks(b, model.FLAT, model.LATENT),
+            "dense1": dict_of_blocks(b, model.LATENT, model.FLAT),
+        },
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    with open(stamp_path, "w") as f:
+        json.dump(stamp, f)
+    print(f"wrote manifest.json ({model.n_params()} params)")
+    return 0
+
+
+def dict_of_blocks(m, k, n):
+    from compile.kernels.matmul import describe_blocks
+
+    d = describe_blocks(m, n, k)
+    return {kk: (list(v) if isinstance(v, tuple) else v) for kk, v in d.items()}
+
+
+if __name__ == "__main__":
+    sys.exit(main())

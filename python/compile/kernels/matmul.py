@@ -1,0 +1,140 @@
+"""L1: Pallas tiled-matmul kernel — the surrogate's compute hot-spot.
+
+The PtychoNN-like model's dense bottleneck layers (flatten->latent->expand)
+dominate its FLOPs; they are computed by this kernel. The kernel is written
+the TPU way (see DESIGN.md §Hardware-Adaptation):
+
+* a (M/bm, N/bn, K/bk) grid with BlockSpec-mapped VMEM tiles,
+* f32 accumulation in a VMEM scratch buffer across the K grid dimension
+  (the Pallas idiom for the HBM<->VMEM schedule a CUDA kernel would express
+  with threadblock tiling + shared-memory staging),
+* MXU-friendly default block shapes (multiples of 128 where the operand
+  allows).
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO through the Pallas
+interpreter. Correctness vs ``ref.py`` is enforced by pytest + hypothesis.
+
+A ``jax.custom_vjp`` makes the kernel differentiable (pallas_call has no
+autodiff rule): the backward pass reuses the same Pallas kernel for
+``dx = g @ w.T`` and ``dw = x.T @ g``, so the AOT'd training step runs the
+Pallas path in both directions.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU-friendly preferred tile edges, largest first.
+_PREFERRED = (256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def pick_block(dim: int, cap: int = 256) -> int:
+    """Largest preferred tile edge that divides ``dim`` (≤ cap)."""
+    for b in _PREFERRED:
+        if b <= cap and dim % b == 0:
+            return b
+    return 1
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    """One (i, j, k) grid step: acc += x_tile @ w_tile; flush on last k."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _matmul_pallas(x, w, bm=None, bn=None, bk=None):
+    """Raw pallas matmul (no autodiff). Shapes must tile evenly."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = bm or pick_block(m, 128)
+    bn = bn or pick_block(n, 256)
+    bk = bk or pick_block(k, 512)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, w)
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable Pallas matmul: ``x @ w`` with f32 accumulation."""
+    return _matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    # dx = g @ w.T ; dw = x.T @ g — both through the Pallas kernel.
+    dx = _matmul_pallas(g, w.T)
+    dw = _matmul_pallas(x.T, g)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def dense(x, w, b, activation="none"):
+    """Dense layer on the Pallas matmul: ``act(x @ w + b)``.
+
+    Bias-add and activation stay in jnp — XLA fuses them into the kernel's
+    consumer for free, and keeping the Pallas body a pure matmul keeps the
+    custom VJP exact.
+    """
+    y = matmul(x, w) + b
+    if activation == "relu":
+        y = jax.nn.relu(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step (x, w, out, acc tiles).
+
+    Used by the §Perf analysis: must stay well under ~16 MiB of VMEM for
+    real-TPU viability; see EXPERIMENTS.md §Perf.
+    """
+    return (bm * bk + bk * bn + bm * bn) * itemsize + bm * bn * 4
+
+
+@functools.lru_cache(maxsize=None)
+def describe_blocks(m: int, n: int, k: int) -> dict:
+    """Chosen tiling + VMEM estimate for a given problem shape."""
+    bm, bn, bk = pick_block(m, 128), pick_block(n, 256), pick_block(k, 512)
+    return {
+        "bm": bm,
+        "bn": bn,
+        "bk": bk,
+        "grid": (m // bm, n // bn, k // bk),
+        "vmem_bytes": vmem_bytes(bm, bn, bk),
+        # fraction of the 128x128 MXU tile the (bm, bn) output block fills
+        "mxu_fill": min(bm, 128) * min(bn, 128) / (128 * 128),
+    }

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package must match its reference here (pytest +
+hypothesis sweep shapes and dtypes); the references are also used to build
+the `--dense xla` model variant, which lets the rust side A/B the Pallas
+path against plain XLA.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Reference for kernels.matmul: plain jnp matmul with f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def dense_ref(x, w, b, activation="none"):
+    """Reference for kernels.dense."""
+    y = matmul_ref(x, w) + b
+    if activation == "relu":
+        y = jax.nn.relu(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y

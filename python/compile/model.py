@@ -1,0 +1,169 @@
+"""L2: the PtychoNN-like CNN surrogate (build-time JAX, never on the
+request path).
+
+A two-headed convolutional autoencoder mapping a 64x64 diffraction
+amplitude to the real-space object's amplitude and phase (Cherukara et
+al.'s PtychoNN task, ~2M parameters — same order as the paper's 1.2M):
+
+    x [B,1,64,64]
+      -> conv s2 16 -> conv s2 32 -> conv s2 64          (encoder)
+      -> flatten -> dense 4096->256 -> dense 256->4096    (Pallas kernels)
+      -> reshape [B,64,8,8]
+      -> two heads, each: convT s2 32 -> convT s2 16 -> convT s2 1
+    y [B,2,64,64]  (amplitude head, phase head)
+
+The exported training step takes a *mask* so per-node batch sizes can vary
+(SOLAR's load-balancing trade-off, §4.3) under a single compiled
+executable: gradients are sums over valid samples; the rust coordinator
+divides by the global valid count after its allreduce — bit-identical to
+training with the unpermuted global batch (paper eq. 3).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul as pallas_mm
+from compile.kernels import ref as kref
+
+IMG = 64  # image side
+ENC = (16, 32, 64)  # encoder channel widths
+LATENT = 256
+FLAT = ENC[-1] * (IMG // 8) * (IMG // 8)  # 64 * 8 * 8 = 4096
+
+
+def param_spec():
+    """Ordered list of (name, shape). The manifest and the rust runtime
+    both follow this order exactly."""
+    spec = []
+    cin = 1
+    for li, c in enumerate(ENC):
+        spec.append((f"enc{li}_w", (c, cin, 3, 3)))
+        spec.append((f"enc{li}_b", (c,)))
+        cin = c
+    spec.append(("dense0_w", (FLAT, LATENT)))
+    spec.append(("dense0_b", (LATENT,)))
+    spec.append(("dense1_w", (LATENT, FLAT)))
+    spec.append(("dense1_b", (FLAT,)))
+    for head in ("amp", "phi"):
+        cin = ENC[-1]
+        for li, c in enumerate((32, 16, 1)):
+            spec.append((f"{head}{li}_w", (cin, c, 3, 3)))  # convT: (in, out, kh, kw)
+            spec.append((f"{head}{li}_b", (c,)))
+            cin = c
+    return spec
+
+
+def init_params(seed: int = 0):
+    """He-normal initialization, deterministic in `seed`. Returns a dict
+    keyed by param_spec names."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_spec():
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = math.prod(shape[1:]) if len(shape) == 4 else shape[0]
+            std = math.sqrt(2.0 / fan_in)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def _conv(x, w, b, stride):
+    y = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def _conv_t(x, w, b, stride):
+    y = jax.lax.conv_transpose(
+        x, w,
+        strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "IOHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def forward(params, x, use_pallas: bool = True):
+    """x: [B,1,64,64] -> [B,2,64,64] (amplitude, phase)."""
+    h = x
+    for li in range(len(ENC)):
+        h = jax.nn.relu(_conv(h, params[f"enc{li}_w"], params[f"enc{li}_b"], 2))
+    b = h.shape[0]
+    h = h.reshape(b, FLAT)
+    dense = pallas_mm.dense if use_pallas else kref.dense_ref
+    h = dense(h, params["dense0_w"], params["dense0_b"], activation="relu")
+    h = dense(h, params["dense1_w"], params["dense1_b"], activation="relu")
+    h = h.reshape(b, ENC[-1], IMG // 8, IMG // 8)
+    heads = []
+    for head in ("amp", "phi"):
+        g = h
+        for li, act in ((0, True), (1, True), (2, False)):
+            g = _conv_t(g, params[f"{head}{li}_w"], params[f"{head}{li}_b"], 2)
+            if act:
+                g = jax.nn.relu(g)
+        heads.append(g)  # [B,1,64,64]
+    return jnp.concatenate(heads, axis=1)
+
+
+def loss_sum(params, x, y, mask, use_pallas: bool = True):
+    """Masked SUM of per-sample MSE losses (not the mean!).
+
+    Summing keeps gradients additive across nodes, so the coordinator's
+    allreduce + divide-by-global-valid-count reproduces the global-batch
+    mean gradient exactly, whatever the per-node batch split (paper eq. 3).
+    """
+    pred = forward(params, x, use_pallas=use_pallas)
+    per_sample = jnp.mean((pred - y) ** 2, axis=(1, 2, 3))  # [B]
+    return jnp.sum(per_sample * mask)
+
+
+def grads_fn(params, x, y, mask, use_pallas: bool = True):
+    """Returns (loss_sum, grads dict). This is the AOT'd training step."""
+    l, g = jax.value_and_grad(loss_sum)(params, x, y, mask, use_pallas)
+    return l, g
+
+
+def make_grads_flat(batch: int, use_pallas: bool = True):
+    """A flat-signature version for AOT export: positional param arrays in
+    param_spec order, then x, y, mask; returns (loss, *grads-in-order)."""
+    names = [n for n, _ in param_spec()]
+
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        x, y, mask = args[len(names):]
+        l, g = grads_fn(params, x, y, mask, use_pallas=use_pallas)
+        return (l, *[g[n] for n in names])
+
+    shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in param_spec()]
+    shapes += [
+        jax.ShapeDtypeStruct((batch, 1, IMG, IMG), jnp.float32),
+        jax.ShapeDtypeStruct((batch, 2, IMG, IMG), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.float32),
+    ]
+    return fn, shapes
+
+
+def make_forward_flat(batch: int, use_pallas: bool = True):
+    """Flat-signature inference fn for AOT export."""
+    names = [n for n, _ in param_spec()]
+
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        x = args[len(names)]
+        return (forward(params, x, use_pallas=use_pallas),)
+
+    shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in param_spec()]
+    shapes += [jax.ShapeDtypeStruct((batch, 1, IMG, IMG), jnp.float32)]
+    return fn, shapes
+
+
+def n_params():
+    return sum(math.prod(s) for _, s in param_spec())

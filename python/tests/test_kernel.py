@@ -1,0 +1,103 @@
+"""L1 correctness: the Pallas matmul kernel vs the pure-jnp oracle.
+
+hypothesis sweeps shapes and dtypes; explicit tests cover the custom VJP
+(the training step differentiates through the kernel) and block selection.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as pk
+from compile.kernels import ref as kref
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+# Shapes as multiples of small tile edges to exercise several grid layouts.
+dims = st.sampled_from([1, 2, 3, 4, 6, 8, 16])
+scales = st.sampled_from([1, 2, 4])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, k=dims, s=scales)
+def test_matmul_matches_ref_f32(m, n, k, s):
+    x = rand(m * 31 + n, (m * s, k * 8 * s), jnp.float32)
+    w = rand(k * 17 + 1, (k * 8 * s, n * s), jnp.float32)
+    got = pk.matmul(x, w)
+    want = kref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=dims, n=dims, k=dims)
+def test_matmul_matches_ref_bf16(m, n, k):
+    x = rand(m, (m * 8, k * 16), jnp.bfloat16)
+    w = rand(n, (k * 16, n * 8), jnp.bfloat16)
+    got = pk.matmul(x, w).astype(jnp.float32)
+    want = kref.matmul_ref(x, w).astype(jnp.float32)
+    # bf16 inputs, f32 accumulation in both paths.
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_explicit_mxu_shape():
+    x = rand(0, (128, 512), jnp.float32)
+    w = rand(1, (512, 256), jnp.float32)
+    np.testing.assert_allclose(pk.matmul(x, w), kref.matmul_ref(x, w), rtol=2e-3, atol=1e-3)
+
+
+def test_grad_matches_ref():
+    x = rand(2, (16, 64), jnp.float32)
+    w = rand(3, (64, 32), jnp.float32)
+
+    def f_pallas(x, w):
+        return jnp.sum(jnp.sin(pk.matmul(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.sin(kref.matmul_ref(x, w)))
+
+    gx_p, gw_p = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=2e-3, atol=1e-4)
+    np.testing.assert_allclose(gw_p, gw_r, rtol=2e-3, atol=1e-4)
+
+
+def test_dense_bias_relu():
+    x = rand(4, (8, 32), jnp.float32)
+    w = rand(5, (32, 16), jnp.float32)
+    b = rand(6, (16,), jnp.float32)
+    got = pk.dense(x, w, b, activation="relu")
+    want = kref.dense_ref(x, w, b, activation="relu")
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-3)
+    assert (np.asarray(got) >= 0).all()
+
+
+def test_dense_rejects_unknown_activation():
+    x = rand(4, (8, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        pk.dense(x, x, jnp.zeros((8,)), activation="gelu!!")
+
+
+def test_pick_block_divides():
+    for dim in [1, 2, 7, 8, 24, 96, 128, 4096, 520]:
+        b = pk.pick_block(dim)
+        assert dim % b == 0
+        assert b <= 256
+
+
+def test_vmem_estimate_under_budget():
+    # The model's dense layers must fit VMEM comfortably (DESIGN §Perf).
+    for (m, n, k) in [(32, 256, 4096), (32, 4096, 256)]:
+        d = pk.describe_blocks(m, n, k)
+        assert d["vmem_bytes"] < 16 * 1024 * 1024 / 4, d
+
+
+def test_kernel_inside_jit():
+    x = rand(7, (32, 128), jnp.float32)
+    w = rand(8, (128, 64), jnp.float32)
+    got = jax.jit(pk.matmul)(x, w)
+    np.testing.assert_allclose(got, kref.matmul_ref(x, w), rtol=2e-3, atol=1e-3)

@@ -1,0 +1,82 @@
+"""Additional L1 property coverage: VJP linearity, tiling invariance,
+degenerate shapes, and block descriptor sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as pk
+from compile.kernels import ref as kref
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def test_tiny_shapes():
+    # 1x1 through non-power-of-two dims still tile (pick_block falls to 1).
+    for (m, k, n) in [(1, 1, 1), (3, 5, 7), (2, 12, 6)]:
+        x = rand(m, (m, k))
+        w = rand(n, (k, n))
+        np.testing.assert_allclose(pk.matmul(x, w), kref.matmul_ref(x, w), rtol=2e-3, atol=1e-3)
+
+
+def test_result_independent_of_tiling():
+    # The same problem with different explicit block shapes must agree.
+    x = rand(1, (32, 256))
+    w = rand(2, (256, 64))
+    a = pk._matmul_pallas(x, w, bm=32, bn=64, bk=256)
+    b = pk._matmul_pallas(x, w, bm=8, bn=16, bk=32)
+    c = pk._matmul_pallas(x, w, bm=16, bn=32, bk=128)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.sampled_from([4, 8, 16]), k=st.sampled_from([16, 32]), n=st.sampled_from([8, 16]))
+def test_vjp_is_linear_in_cotangent(m, k, n):
+    # d/dg of <g, matmul(x,w)> is linear: vjp(2g) == 2 vjp(g).
+    x = rand(m + k, (m, k))
+    w = rand(n, (k, n))
+    g = rand(m * n, (m, n))
+    _, vjp = jax.vjp(pk.matmul, x, w)
+    dx1, dw1 = vjp(g)
+    dx2, dw2 = vjp(2.0 * g)
+    np.testing.assert_allclose(2.0 * dx1, dx2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(2.0 * dw1, dw2, rtol=1e-4, atol=1e-5)
+
+
+def test_grad_matches_finite_differences():
+    x = rand(3, (4, 8))
+    w = rand(4, (8, 4))
+
+    def f(w):
+        return jnp.sum(pk.matmul(x, w) ** 2)
+
+    g = jax.grad(f)(w)
+    eps = 1e-3
+    for idx in [(0, 0), (3, 2), (7, 3)]:
+        wp = w.at[idx].add(eps)
+        wm = w.at[idx].add(-eps)
+        fd = (f(wp) - f(wm)) / (2 * eps)
+        np.testing.assert_allclose(g[idx], fd, rtol=2e-2, atol=1e-2)
+
+
+def test_describe_blocks_consistent():
+    d = pk.describe_blocks(32, 4096, 256)
+    assert d["bm"] * d["grid"][0] == 32
+    assert d["bn"] * d["grid"][1] == 4096
+    assert d["bk"] * d["grid"][2] == 256
+    assert 0.0 < d["mxu_fill"] <= 1.0
+    assert d["vmem_bytes"] == pk.vmem_bytes(d["bm"], d["bn"], d["bk"])
+
+
+def test_dense_no_activation_is_affine():
+    x = rand(5, (8, 16))
+    w = rand(6, (16, 8))
+    b = rand(7, (8,))
+    y1 = pk.dense(x, w, b, activation="none")
+    y2 = pk.dense(2.0 * x, w, b, activation="none")
+    # Affine: y2 - b == 2 (y1 - b)
+    np.testing.assert_allclose(y2 - b, 2.0 * (y1 - b), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,96 @@
+"""L2 correctness: model shapes, masking semantics, pallas-vs-xla parity,
+and that a few SGD steps actually reduce the loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def batch(b, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(k1, (b, 1, model.IMG, model.IMG))
+    y = jax.random.uniform(k2, (b, 2, model.IMG, model.IMG))
+    return x, y
+
+
+def test_param_spec_consistent_with_init():
+    params = model.init_params(0)
+    spec = model.param_spec()
+    assert set(params) == {n for n, _ in spec}
+    for n, s in spec:
+        assert params[n].shape == s, n
+    assert model.n_params() == sum(int(np.prod(s)) for _, s in spec)
+    # Same order of magnitude as PtychoNN's 1.2M parameters.
+    assert 1e6 < model.n_params() < 5e6
+
+
+def test_forward_shapes():
+    params = model.init_params(0)
+    x, _ = batch(4)
+    out = model.forward(params, x)
+    assert out.shape == (4, 2, model.IMG, model.IMG)
+
+
+def test_pallas_and_xla_paths_agree():
+    params = model.init_params(1)
+    x, y = batch(8, seed=1)
+    mask = jnp.ones((8,))
+    out_p = model.forward(params, x, use_pallas=True)
+    out_x = model.forward(params, x, use_pallas=False)
+    np.testing.assert_allclose(out_p, out_x, rtol=1e-4, atol=1e-5)
+    lp, gp = model.grads_fn(params, x, y, mask, use_pallas=True)
+    lx, gx = model.grads_fn(params, x, y, mask, use_pallas=False)
+    np.testing.assert_allclose(lp, lx, rtol=1e-5, atol=1e-6)
+    for n in gp:
+        np.testing.assert_allclose(gp[n], gx[n], rtol=2e-3, atol=1e-5, err_msg=n)
+
+
+def test_mask_zeroes_contribution():
+    params = model.init_params(2)
+    x, y = batch(4, seed=2)
+    full = model.loss_sum(params, x, y, jnp.array([1.0, 1.0, 0.0, 0.0]))
+    half = model.loss_sum(params, x[:2], y[:2], jnp.ones((2,)))
+    np.testing.assert_allclose(full, half, rtol=1e-6)
+
+
+def test_grads_sum_additive_across_splits():
+    # The coordinator's allreduce correctness: grads of the union batch ==
+    # sum of grads of disjoint sub-batches (mask-padded).
+    params = model.init_params(3)
+    x, y = batch(8, seed=3)
+    ones = jnp.ones((8,))
+    _, g_all = model.grads_fn(params, x, y, ones, use_pallas=False)
+    _, g_a = model.grads_fn(params, x[:4], y[:4], jnp.ones((4,)), use_pallas=False)
+    _, g_b = model.grads_fn(params, x[4:], y[4:], jnp.ones((4,)), use_pallas=False)
+    for n in g_all:
+        np.testing.assert_allclose(g_a[n] + g_b[n], g_all[n], rtol=1e-3, atol=1e-5, err_msg=n)
+
+
+def test_sgd_reduces_loss():
+    params = model.init_params(4)
+    x, y = batch(8, seed=4)
+    mask = jnp.ones((8,))
+    l0, _ = model.grads_fn(params, x, y, mask, use_pallas=False)
+    lr = 0.05
+    for _ in range(5):
+        _, g = model.grads_fn(params, x, y, mask, use_pallas=False)
+        params = {n: params[n] - lr * g[n] / 8.0 for n in params}
+    l1, _ = model.grads_fn(params, x, y, mask, use_pallas=False)
+    assert float(l1) < float(l0), (float(l0), float(l1))
+
+
+def test_flat_signatures_roundtrip():
+    b = 4
+    fn, shapes = model.make_grads_flat(b, use_pallas=False)
+    assert len(shapes) == len(model.param_spec()) + 3
+    params = model.init_params(5)
+    x, y = batch(b, seed=5)
+    args = [params[n] for n, _ in model.param_spec()] + [x, y, jnp.ones((b,))]
+    out = fn(*args)
+    assert len(out) == 1 + len(model.param_spec())
+    l_direct, g_direct = model.grads_fn(params, x, y, jnp.ones((b,)), use_pallas=False)
+    np.testing.assert_allclose(out[0], l_direct, rtol=1e-6)
+    np.testing.assert_allclose(out[1], g_direct[model.param_spec()[0][0]], rtol=1e-5, atol=1e-7)

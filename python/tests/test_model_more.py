@@ -1,0 +1,63 @@
+"""More L2 coverage: determinism, head independence, spec stability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def test_init_deterministic_and_seed_sensitive():
+    a = model.init_params(0)
+    b = model.init_params(0)
+    c = model.init_params(1)
+    for n in a:
+        np.testing.assert_array_equal(a[n], b[n])
+    assert any(not np.array_equal(a[n], c[n]) for n in a)
+
+
+def test_biases_start_zero():
+    p = model.init_params(0)
+    for n, _ in model.param_spec():
+        if n.endswith("_b"):
+            assert float(jnp.abs(p[n]).max()) == 0.0, n
+
+
+def test_heads_are_independent():
+    # Perturbing the phase head's weights must not change the amplitude head.
+    p = model.init_params(2)
+    x = jax.random.uniform(jax.random.PRNGKey(0), (2, 1, model.IMG, model.IMG))
+    base = model.forward(p, x, use_pallas=False)
+    p2 = dict(p)
+    p2["phi0_w"] = p["phi0_w"] + 1.0
+    out = model.forward(p2, x, use_pallas=False)
+    np.testing.assert_array_equal(base[:, 0], out[:, 0])  # amplitude unchanged
+    assert not np.array_equal(base[:, 1], out[:, 1])  # phase changed
+
+
+def test_param_spec_is_stable_contract():
+    # The manifest contract: names unique, shapes positive, order fixed.
+    spec = model.param_spec()
+    names = [n for n, _ in spec]
+    assert len(names) == len(set(names))
+    assert names[0] == "enc0_w"
+    assert names[-1] == "phi2_b"
+    for _, s in spec:
+        assert all(d > 0 for d in s)
+
+
+def test_forward_batch_independence():
+    # Sample i's output must not depend on other samples in the batch.
+    p = model.init_params(3)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 1, model.IMG, model.IMG))
+    full = model.forward(p, x, use_pallas=False)
+    solo = model.forward(p, x[1:2], use_pallas=False)
+    np.testing.assert_allclose(full[1:2], solo, rtol=1e-4, atol=1e-5)
+
+
+def test_loss_nonnegative_and_zero_on_perfect_prediction():
+    p = model.init_params(4)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (2, 1, model.IMG, model.IMG))
+    pred = model.forward(p, x, use_pallas=False)
+    l = model.loss_sum(p, x, pred, jnp.ones((2,)), use_pallas=False)
+    assert float(l) < 1e-8

@@ -1,0 +1,65 @@
+//! End-to-end bench: distributed training steps/second through the whole
+//! stack (loader → PJRT workers → allreduce → SGD), unthrottled and
+//! throttled. Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use solar::config::RunConfig;
+use solar::data::spec::DatasetSpec;
+use solar::data::synth;
+use solar::loader::LoaderPolicy;
+use solar::runtime::executable::DenseImpl;
+use solar::storage::pfs::CostModel;
+use solar::storage::shdf::ShdfReader;
+use solar::train::driver::{train, TrainConfig};
+use solar::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_e2e");
+    let artifacts = PathBuf::from("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("bench_e2e: artifacts missing — run `make artifacts` first (skipping)");
+        return;
+    }
+    let n = 256usize;
+    let dir = std::env::temp_dir().join("solar_bench_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("e2e.shdf");
+    let mut spec = DatasetSpec::paper("cd17").unwrap();
+    spec.n_samples = n;
+    spec.id = "e2e".into();
+    let ok = ShdfReader::open(&path).map(|r| r.n_samples() == n).unwrap_or(false);
+    if !ok {
+        synth::generate_dataset(&path, &spec, 21).unwrap();
+    }
+    let steps = 4usize;
+    for (loader, throttle) in [("solar", 0.0), ("solar", 1.0), ("pytorch", 1.0)] {
+        let cfg = RunConfig {
+            spec: spec.clone(),
+            n_nodes: 2,
+            local_batch: 16,
+            n_epochs: 1,
+            seed: 2,
+            buffer_capacity: n / 2,
+            cost: CostModel::default(),
+        };
+        let tc = TrainConfig {
+            run: cfg,
+            dataset_path: path.clone(),
+            artifacts_dir: artifacts.clone(),
+            policy: LoaderPolicy::by_name(loader).unwrap(),
+            dense: DenseImpl::Xla,
+            lr: 0.05,
+            throttle,
+            eval_every: 0,
+            max_steps: steps,
+            holdout: 0,
+        };
+        suite.bench_units(
+            &format!("train {steps}steps 2workers loader={loader} throttle={throttle}"),
+            (steps * 32) as f64,
+            || train(&tc).unwrap().steps,
+        );
+    }
+    suite.finish();
+}

@@ -1,0 +1,50 @@
+//! Loading-simulation benches (the Fig 9 machinery): full simulated
+//! epochs per loader, reported as scheduled samples/second — the L3
+//! coordinator's end-to-end decision throughput.
+
+use solar::config::RunConfig;
+use solar::data::spec::DatasetSpec;
+use solar::dist::sim::simulate;
+use solar::loader::LoaderPolicy;
+use solar::storage::pfs::CostModel;
+use solar::util::bench::BenchSuite;
+
+fn cfg(n_samples: usize, n_nodes: usize, cap_frac: f64, epochs: usize) -> RunConfig {
+    let mut spec = DatasetSpec::paper("cd17").unwrap();
+    spec.n_samples = n_samples;
+    RunConfig {
+        spec,
+        n_nodes,
+        local_batch: 64,
+        n_epochs: epochs,
+        seed: 11,
+        buffer_capacity: ((n_samples as f64 * cap_frac) as usize / n_nodes).max(1),
+        cost: CostModel::default(),
+    }
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_loading");
+    let n = if suite.is_quick() { 16_384 } else { 65_536 };
+    let epochs = 3;
+    let samples_scheduled = (n * epochs) as f64;
+
+    for loader in ["pytorch", "pytorch+lru", "nopfs", "deepio", "solar"] {
+        let c = cfg(n, 8, 0.6, epochs);
+        let policy = LoaderPolicy::by_name(loader).unwrap();
+        suite.bench_units(&format!("simulate {loader} n={n} 8nodes 3ep"), samples_scheduled, || {
+            simulate(&c, &policy)
+        });
+    }
+
+    // Node scaling of the solar engine.
+    for nodes in [4usize, 16, 32] {
+        let c = cfg(n, nodes, 0.6, epochs);
+        let policy = LoaderPolicy::solar();
+        suite.bench_units(&format!("simulate solar n={n} {nodes}nodes"), samples_scheduled, || {
+            simulate(&c, &policy)
+        });
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,46 @@
+//! Table 3 hot path: access-pattern request generation + cost evaluation,
+//! and real SHDF chunk reads vs per-sample reads.
+
+use solar::data::spec::DatasetSpec;
+use solar::data::synth;
+use solar::storage::access::{measured_time, modeled_parallel_time, AccessPattern};
+use solar::storage::pfs::CostModel;
+use solar::storage::shdf::ShdfReader;
+use solar::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_patterns");
+    let model = CostModel::default();
+
+    // Modeled pattern evaluation at paper scale (pure computation).
+    for p in AccessPattern::all() {
+        suite.bench(&format!("model {} n=262896", p.name()), || {
+            modeled_parallel_time(262_896, 65_536, 4, p, &model, 3)
+        });
+    }
+
+    // Real file: chunked vs per-sample reads (512 × 64 KiB = 32 MiB).
+    let dir = std::env::temp_dir().join("solar_bench_patterns");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.shdf");
+    let n = 512usize;
+    let mut spec = DatasetSpec::paper("cd17").unwrap();
+    spec.n_samples = n;
+    spec.id = "bench".into();
+    let ok = ShdfReader::open(&path).map(|r| r.n_samples() == n).unwrap_or(false);
+    if !ok {
+        synth::generate_dataset(&path, &spec, 5).unwrap();
+    }
+    let mut reader = ShdfReader::open(&path).unwrap();
+    suite.bench_units("shdf full-chunk read 512 samples", n as f64, || {
+        reader.read_range(0, n).unwrap().len()
+    });
+    let mut reader2 = ShdfReader::open(&path).unwrap();
+    suite.bench_units("shdf per-sample reads 512 samples", n as f64, || {
+        let (secs, bytes, _) = measured_time(&mut reader2, AccessPattern::Random, 1, 0, 9).unwrap();
+        let _ = secs;
+        bytes
+    });
+
+    suite.finish();
+}

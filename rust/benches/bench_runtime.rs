@@ -1,0 +1,35 @@
+//! PJRT runtime benches: AOT'd training-step latency — Pallas dense vs
+//! plain-XLA dense — and inference latency. Requires `make artifacts`.
+
+use std::path::Path;
+
+use solar::runtime::executable::{DenseImpl, TrainRuntime};
+use solar::runtime::params::ParamStore;
+use solar::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_runtime");
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("bench_runtime: artifacts missing — run `make artifacts` first (skipping)");
+        return;
+    }
+    for (dense, label) in [(DenseImpl::Xla, "xla"), (DenseImpl::Pallas, "pallas")] {
+        let rt = TrainRuntime::load(artifacts, dense, dense == DenseImpl::Xla).unwrap();
+        let params = ParamStore::load_init(&rt.manifest).unwrap();
+        let b = rt.manifest.batch;
+        let n = rt.manifest.img;
+        let x: Vec<f32> = (0..b * n * n).map(|i| ((i % 97) as f32) / 97.0).collect();
+        let y: Vec<f32> = (0..b * 2 * n * n).map(|i| ((i % 31) as f32) / 31.0).collect();
+        let mask = vec![1.0f32; b];
+        suite.bench_units(&format!("grads_step b={b} dense={label}"), b as f64, || {
+            rt.grads(&params, &x, &y, &mask).unwrap().loss_sum
+        });
+        if dense == DenseImpl::Xla {
+            suite.bench_units(&format!("forward b={b} dense={label}"), b as f64, || {
+                rt.forward(&params, &x).unwrap().len()
+            });
+        }
+    }
+    suite.finish();
+}

@@ -1,0 +1,61 @@
+//! Scheduler benches: the offline scheduler's building blocks at growing
+//! problem sizes — epoch-graph construction (eq. 1), PSO vs greedy TSP,
+//! locality remap, balance, chunk aggregation. These are the L3 hot paths
+//! profiled in EXPERIMENTS.md §Perf.
+
+use solar::sched::balance::balance_fetches;
+use solar::sched::chunkagg::aggregate;
+use solar::sched::graph::EpochGraph;
+use solar::sched::locality::remap_global_batch;
+use solar::sched::{greedy, pso};
+use solar::shuffle::ShuffleSchedule;
+use solar::util::bench::BenchSuite;
+use solar::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_sched");
+    let quick = suite.is_quick();
+
+    // Epoch graph build: E epochs over n samples (bitset difference counts).
+    for &(e, n) in &[(10usize, 100_000usize), (20, 262_896)] {
+        if quick && n > 100_000 {
+            continue;
+        }
+        let s = ShuffleSchedule::new(n, e, 3);
+        suite.bench_units(&format!("epoch_graph_build E={e} n={n}"), (e * e) as f64, || {
+            EpochGraph::build(&s, n / 4)
+        });
+    }
+
+    // TSP solvers on a 20-epoch graph.
+    let s = ShuffleSchedule::new(50_000, 20, 5);
+    let g = EpochGraph::build(&s, 12_500);
+    suite.bench("pso_solve E=20", || pso::solve(&g, &pso::PsoParams::default(), 7));
+    suite.bench("greedy_2opt E=20", || greedy::solve_best_start(&g));
+
+    // Locality remap of one global batch (1024 samples, 16 nodes).
+    let mut rng = Rng::new(9);
+    let n_samples = 500_000;
+    let global: Vec<u32> = rng.sample_distinct(n_samples, 1024);
+    let loc: Vec<i16> =
+        (0..n_samples).map(|_| if rng.gen_f64() < 0.6 { rng.gen_index(16) as i16 } else { -1 }).collect();
+    suite.bench_units("locality_remap G=1024 nodes=16", 1024.0, || {
+        remap_global_batch(&global, &loc, 16, 64, false)
+    });
+
+    // Balance 512 pending fetches over 16 nodes.
+    suite.bench_units("balance_fetches M=512 nodes=16", 512.0, || {
+        let mut assign: Vec<Vec<u32>> = (0..16).map(|k| vec![0u32; k * 4]).collect();
+        balance_fetches(&mut assign, (0..512).collect(), usize::MAX)
+    });
+
+    // Chunk aggregation of 4096 sorted ids.
+    let mut ids = rng.sample_distinct(1_000_000, 4096);
+    ids.sort_unstable();
+    suite.bench_units("chunk_aggregate n=4096", 4096.0, || aggregate(&ids, 24));
+
+    // Full shuffle-list generation (the pre-training step).
+    suite.bench("shuffle_perm n=262896", || ShuffleSchedule::new(262_896, 1, 11).epoch_perm(0));
+
+    suite.finish();
+}

@@ -1,0 +1,150 @@
+//! Hand-rolled CLI (clap is not in the offline crate set — DESIGN.md
+//! substitutions). Subcommands:
+//!
+//! ```text
+//! solar exp --id <fig2|...|all> [--full] [--epochs N] [--out DIR]
+//! solar sim --dataset cd17 --tier medium --loader solar [--epochs N]
+//! solar gen-data --dataset cd17 --scale 1000 --out data.shdf
+//! solar schedule --dataset cd17 --tier medium --epochs 8 --out plan.json
+//! solar train --data data.shdf --loader solar --nodes 2 [--throttle X]
+//! solar smoke [hlo.txt]
+//! solar info
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Parsed argv: a subcommand plus `--key value` / `--flag` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub cmd: String,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        a.cmd = it.next().cloned().unwrap_or_else(|| "help".into());
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument '{tok}'");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    a.opts.insert(key.to_string(), it.next().unwrap().clone());
+                }
+                _ => a.flags.push(key.to_string()),
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} must be a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_path(&self, name: &str) -> Option<PathBuf> {
+        self.get(name).map(PathBuf::from)
+    }
+}
+
+pub fn parse_tier(s: &str) -> Result<crate::storage::pfs::SystemTier> {
+    use crate::storage::pfs::SystemTier;
+    Ok(match s {
+        "low" | "low-end" => SystemTier::Low,
+        "medium" | "medium-end" | "mid" => SystemTier::Medium,
+        "high" | "high-end" => SystemTier::High,
+        _ => bail!("unknown tier '{s}' (low|medium|high)"),
+    })
+}
+
+pub const USAGE: &str = "\
+SOLAR — data-loading framework for distributed surrogate training
+(rust + JAX + Pallas reproduction of PVLDB'22 SOLAR)
+
+USAGE: solar <command> [options]
+
+COMMANDS
+  exp       regenerate a paper table/figure
+            --id fig2|fig3|tab1|tab3|fig7|fig9|fig10|fig11|fig12|fig13|fig14|fig16|eoo|all
+            [--full] (paper-scale sample counts)  [--epochs N]  [--seed S]
+  sim       simulate one loading run
+            --dataset cd17|cd321|cd1200|bcdi|cosmoflow  [--tier medium]
+            [--loader solar] [--epochs 6] [--nodes N] [--batch B] [--full]
+  gen-data  materialize a synthetic dataset to SHDF
+            --dataset cd17 [--scale 1000] --out PATH [--seed S]
+  schedule  run the offline scheduler, write the plan artifact
+            --dataset cd17 [--tier medium] [--epochs 8] [--loader solar]
+            [--scale 1000] --out plan.json
+  train     end-to-end distributed training on real bytes
+            --data PATH [--loader solar] [--nodes 2] [--epochs 3]
+            [--batch 16] [--throttle 1.0] [--holdout 32] [--lr 0.08]
+            [--dense pallas|xla] [--curve out.csv]
+  smoke     PJRT round-trip check   [--hlo PATH]
+  info      print manifest + environment info
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_and_flags() {
+        let a = parse(&["exp", "--id", "fig9", "--full", "--epochs", "12"]);
+        assert_eq!(a.cmd, "exp");
+        assert_eq!(a.get("id"), Some("fig9"));
+        assert!(a.flag("full"));
+        assert_eq!(a.get_usize("epochs", 0).unwrap(), 12);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        let r = Args::parse(&["sim".into(), "oops".into()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn numeric_validation() {
+        let a = parse(&["sim", "--epochs", "abc"]);
+        assert!(a.get_usize("epochs", 1).is_err());
+        let a = parse(&["train", "--throttle", "2.5"]);
+        assert_eq!(a.get_f64("throttle", 0.0).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn tier_parsing() {
+        assert!(parse_tier("medium").is_ok());
+        assert!(parse_tier("mid").is_ok());
+        assert!(parse_tier("ultra").is_err());
+    }
+}

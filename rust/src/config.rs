@@ -1,0 +1,142 @@
+//! Run configuration: dataset, cluster shape, batch sizes, buffers, seeds.
+//!
+//! Mirrors the paper's experimental setup (§5.1): one GPU per node, a
+//! per-node in-memory buffer of 8/16/40 GB (low/medium/high-end systems),
+//! synchronous data parallelism with a fixed global batch.
+
+use anyhow::{Context, Result};
+
+use crate::data::spec::DatasetSpec;
+use crate::storage::pfs::{CostModel, SystemTier};
+use crate::util::json::Json;
+
+/// Full configuration of one training/loading run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub spec: DatasetSpec,
+    /// Number of nodes (= devices; one GPU per node as in §5.2).
+    pub n_nodes: usize,
+    /// Per-node (local) mini-batch size.
+    pub local_batch: usize,
+    /// Number of epochs.
+    pub n_epochs: usize,
+    /// Master seed; everything (shuffles, PSO, synthetic data) forks off it.
+    pub seed: u64,
+    /// Per-node buffer capacity in samples.
+    pub buffer_capacity: usize,
+    /// I/O + network + memory cost model.
+    pub cost: CostModel,
+}
+
+impl RunConfig {
+    /// Build a config from a dataset spec and a system tier (buffer size per
+    /// Table 4), using the paper's node count for that dataset/tier.
+    pub fn for_tier(spec: DatasetSpec, tier: SystemTier, local_batch: usize, n_epochs: usize, seed: u64) -> RunConfig {
+        let n_nodes = spec.paper_nodes(tier);
+        let buffer_capacity = (tier.buffer_bytes_per_node() / spec.sample_bytes as u64) as usize;
+        RunConfig {
+            spec,
+            n_nodes,
+            local_batch,
+            n_epochs,
+            seed,
+            buffer_capacity,
+            cost: CostModel::default(),
+        }
+    }
+
+    /// Global batch size (samples per synchronized step).
+    pub fn global_batch(&self) -> usize {
+        self.n_nodes * self.local_batch
+    }
+
+    /// Steps per epoch (`drop_last` semantics, like the PyTorch DataLoader).
+    pub fn steps_per_epoch(&self) -> usize {
+        self.spec.n_samples / self.global_batch()
+    }
+
+    /// Which buffer scenario of §5.1 this config falls into:
+    /// 1 = dataset ≤ local buffer, 2 = local < dataset ≤ total, 3 = beyond.
+    pub fn buffer_scenario(&self) -> u8 {
+        let n = self.spec.n_samples;
+        if n <= self.buffer_capacity {
+            1
+        } else if n <= self.buffer_capacity * self.n_nodes {
+            2
+        } else {
+            3
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("dataset", Json::Str(self.spec.id.clone()))
+            .set("n_samples", Json::Num(self.spec.n_samples as f64))
+            .set("sample_bytes", Json::Num(self.spec.sample_bytes as f64))
+            .set("n_nodes", Json::Num(self.n_nodes as f64))
+            .set("local_batch", Json::Num(self.local_batch as f64))
+            .set("n_epochs", Json::Num(self.n_epochs as f64))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("buffer_capacity", Json::Num(self.buffer_capacity as f64));
+        o
+    }
+
+    /// Parse the fields written by [`to_json`]; the dataset spec is
+    /// reconstructed from the registry (plus overridden counts).
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let id = j.req_str("dataset")?;
+        let base = id.split("_s").next().unwrap_or(id);
+        let mut spec = DatasetSpec::paper(base).with_context(|| format!("unknown dataset '{id}'"))?;
+        spec.id = id.to_string();
+        spec.n_samples = j.req_usize("n_samples")?;
+        Ok(RunConfig {
+            spec,
+            n_nodes: j.req_usize("n_nodes")?,
+            local_batch: j.req_usize("local_batch")?,
+            n_epochs: j.req_usize("n_epochs")?,
+            seed: j.req_u64("seed")?,
+            buffer_capacity: j.req_usize("buffer_capacity")?,
+            cost: CostModel::default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> RunConfig {
+        RunConfig::for_tier(DatasetSpec::paper("cd17").unwrap(), SystemTier::Medium, 512, 10, 42)
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let c = cfg();
+        assert_eq!(c.n_nodes, 2);
+        assert_eq!(c.global_batch(), 1024);
+        assert_eq!(c.steps_per_epoch(), 262_896 / 1024);
+    }
+
+    #[test]
+    fn buffer_scenarios_match_paper_cd17() {
+        // §5.2: CD 17 GB is scenario 3 on low-end, 2 on medium, 1 on high.
+        let spec = DatasetSpec::paper("cd17").unwrap();
+        let low = RunConfig::for_tier(spec.clone(), SystemTier::Low, 512, 1, 0);
+        let med = RunConfig::for_tier(spec.clone(), SystemTier::Medium, 512, 1, 0);
+        let high = RunConfig::for_tier(spec, SystemTier::High, 512, 1, 0);
+        assert_eq!(low.buffer_scenario(), 3);
+        assert_eq!(med.buffer_scenario(), 2);
+        assert_eq!(high.buffer_scenario(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = cfg();
+        let j = c.to_json();
+        let c2 = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c2.n_nodes, c.n_nodes);
+        assert_eq!(c2.spec.n_samples, c.spec.n_samples);
+        assert_eq!(c2.buffer_capacity, c.buffer_capacity);
+        assert_eq!(c2.seed, c.seed);
+    }
+}

@@ -1,0 +1,219 @@
+//! Radix-2 Cooley–Tukey FFT (1D + 2D), used to synthesize coherent-
+//! diffraction training data: PtychoNN's task is predicting the real-space
+//! amplitude/phase of an object from its far-field diffraction pattern,
+//! which is |FFT(object)| — so the dataset generator needs an FFT.
+
+use std::f64::consts::PI;
+
+/// Complex number (we avoid external crates; this is all we need).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cpx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cpx {
+    pub const ZERO: Cpx = Cpx { re: 0.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Cpx {
+        Cpx { re, im }
+    }
+
+    /// e^{iθ}
+    #[inline]
+    pub fn cis(theta: f64) -> Cpx {
+        Cpx { re: theta.cos(), im: theta.sin() }
+    }
+
+    #[inline]
+    pub fn add(self, o: Cpx) -> Cpx {
+        Cpx { re: self.re + o.re, im: self.im + o.im }
+    }
+
+    #[inline]
+    pub fn sub(self, o: Cpx) -> Cpx {
+        Cpx { re: self.re - o.re, im: self.im - o.im }
+    }
+
+    #[inline]
+    pub fn mul(self, o: Cpx) -> Cpx {
+        Cpx { re: self.re * o.re - self.im * o.im, im: self.re * o.im + self.im * o.re }
+    }
+
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+}
+
+/// In-place iterative radix-2 FFT. `xs.len()` must be a power of two.
+/// `inverse` applies the conjugate transform and 1/n scaling.
+pub fn fft_inplace(xs: &mut [Cpx], inverse: bool) {
+    let n = xs.len();
+    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i.reverse_bits() >> (usize::BITS - bits)) as usize;
+        if i < j {
+            xs.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wlen = Cpx::cis(ang);
+        let mut i = 0;
+        while i < n {
+            let mut w = Cpx::new(1.0, 0.0);
+            for j in 0..len / 2 {
+                let u = xs[i + j];
+                let v = xs[i + j + len / 2].mul(w);
+                xs[i + j] = u.add(v);
+                xs[i + j + len / 2] = u.sub(v);
+                w = w.mul(wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let inv_n = 1.0 / n as f64;
+        for x in xs.iter_mut() {
+            x.re *= inv_n;
+            x.im *= inv_n;
+        }
+    }
+}
+
+/// 2D FFT over a row-major `n×n` grid (rows then columns).
+pub fn fft2_inplace(grid: &mut [Cpx], n: usize, inverse: bool) {
+    assert_eq!(grid.len(), n * n);
+    // Rows.
+    for r in 0..n {
+        fft_inplace(&mut grid[r * n..(r + 1) * n], inverse);
+    }
+    // Columns (gather/scatter through a scratch row).
+    let mut col = vec![Cpx::ZERO; n];
+    for c in 0..n {
+        for r in 0..n {
+            col[r] = grid[r * n + c];
+        }
+        fft_inplace(&mut col, inverse);
+        for r in 0..n {
+            grid[r * n + c] = col[r];
+        }
+    }
+}
+
+/// fftshift for a row-major `n×n` grid (even `n`): moves the zero-frequency
+/// component to the center, as diffraction detectors record it.
+pub fn fftshift2(grid: &mut [Cpx], n: usize) {
+    assert_eq!(grid.len(), n * n);
+    assert_eq!(n % 2, 0, "fftshift2 requires even n");
+    let h = n / 2;
+    for r in 0..h {
+        for c in 0..h {
+            grid.swap(r * n + c, (r + h) * n + (c + h));
+            grid.swap(r * n + (c + h), (r + h) * n + c);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut xs = vec![Cpx::ZERO; 8];
+        xs[0] = Cpx::new(1.0, 0.0);
+        fft_inplace(&mut xs, false);
+        for x in &xs {
+            assert_close(x.re, 1.0, 1e-12);
+            assert_close(x.im, 0.0, 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_roundtrip_identity() {
+        let mut xs: Vec<Cpx> =
+            (0..64).map(|i| Cpx::new((i as f64 * 0.37).sin(), (i as f64 * 0.11).cos())).collect();
+        let orig = xs.clone();
+        fft_inplace(&mut xs, false);
+        fft_inplace(&mut xs, true);
+        for (a, b) in xs.iter().zip(orig.iter()) {
+            assert_close(a.re, b.re, 1e-10);
+            assert_close(a.im, b.im, 1e-10);
+        }
+    }
+
+    #[test]
+    fn fft_matches_dft_naive() {
+        let n = 16;
+        let xs: Vec<Cpx> = (0..n).map(|i| Cpx::new((i as f64).sin(), (i as f64 * 0.5).cos())).collect();
+        let mut fast = xs.clone();
+        fft_inplace(&mut fast, false);
+        for k in 0..n {
+            let mut acc = Cpx::ZERO;
+            for (j, x) in xs.iter().enumerate() {
+                acc = acc.add(x.mul(Cpx::cis(-2.0 * PI * (k * j) as f64 / n as f64)));
+            }
+            assert_close(fast[k].re, acc.re, 1e-9);
+            assert_close(fast[k].im, acc.im, 1e-9);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_conserved() {
+        let n = 128;
+        let xs: Vec<Cpx> = (0..n).map(|i| Cpx::new((i as f64 * 0.7).sin(), 0.0)).collect();
+        let e_time: f64 = xs.iter().map(|x| x.re * x.re + x.im * x.im).sum();
+        let mut f = xs.clone();
+        fft_inplace(&mut f, false);
+        let e_freq: f64 = f.iter().map(|x| (x.re * x.re + x.im * x.im) / n as f64).sum();
+        assert_close(e_time, e_freq, 1e-8);
+    }
+
+    #[test]
+    fn fft2_roundtrip_identity() {
+        let n = 16;
+        let mut g: Vec<Cpx> =
+            (0..n * n).map(|i| Cpx::new((i as f64 * 0.13).sin(), (i as f64 * 0.31).cos())).collect();
+        let orig = g.clone();
+        fft2_inplace(&mut g, n, false);
+        fft2_inplace(&mut g, n, true);
+        for (a, b) in g.iter().zip(orig.iter()) {
+            assert_close(a.re, b.re, 1e-9);
+            assert_close(a.im, b.im, 1e-9);
+        }
+    }
+
+    #[test]
+    fn fftshift_is_involution() {
+        let n = 8;
+        let mut g: Vec<Cpx> = (0..n * n).map(|i| Cpx::new(i as f64, 0.0)).collect();
+        let orig = g.clone();
+        fftshift2(&mut g, n);
+        assert_ne!(g, orig);
+        fftshift2(&mut g, n);
+        assert_eq!(g, orig);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn fft_rejects_non_power_of_two() {
+        let mut xs = vec![Cpx::ZERO; 12];
+        fft_inplace(&mut xs, false);
+    }
+}

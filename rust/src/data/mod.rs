@@ -1,0 +1,5 @@
+//! Data substrate: FFT, synthetic dataset generation, dataset specs.
+
+pub mod fft;
+pub mod spec;
+pub mod synth;

@@ -1,0 +1,205 @@
+//! Dataset specifications mirroring the paper's five evaluation datasets
+//! (§5.1), plus scaled-down variants for real-bytes runs.
+//!
+//! The trace-driven simulator only needs (#samples, sample size); the
+//! real-bytes mode (`gen-data` + end-to-end training) materializes a scaled
+//! synthetic SHDF container with the same per-sample shape.
+
+use crate::storage::pfs::SystemTier;
+
+/// A dataset described by its loading-relevant parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetSpec {
+    /// Short id, e.g. "cd17".
+    pub id: String,
+    /// Human name matching the paper.
+    pub name: String,
+    /// Number of samples.
+    pub n_samples: usize,
+    /// Bytes per sample (one training record).
+    pub sample_bytes: usize,
+    /// Logical shape of one record as stored (f32 elements).
+    pub shape: Vec<usize>,
+    /// Which surrogate trains on it (for compute-time modeling).
+    pub model: SurrogateModel,
+}
+
+/// The three surrogate models benchmarked in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SurrogateModel {
+    PtychoNN,
+    AutoPhaseNN,
+    CosmoFlow,
+}
+
+impl SurrogateModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SurrogateModel::PtychoNN => "PtychoNN",
+            SurrogateModel::AutoPhaseNN => "AutoPhaseNN",
+            SurrogateModel::CosmoFlow => "CosmoFlow",
+        }
+    }
+
+    /// Modeled per-sample fwd+bwd compute time on one device, seconds.
+    /// Calibrated against Fig 3's 4-GPU breakdown (loading = 83.1% / 77.3%
+    /// / 43.2% for PtychoNN / AutoPhaseNN / CosmoFlow) given the calibrated
+    /// PFS model's per-sample loading costs; Table 1's higher loading share
+    /// on the 1.2 TB set then falls out of the larger seek distances.
+    pub fn compute_per_sample_s(&self) -> f64 {
+        match self {
+            SurrogateModel::PtychoNN => 0.264e-3,
+            SurrogateModel::AutoPhaseNN => 1.14e-3, // 3D CNN on 3.1 MB samples
+            SurrogateModel::CosmoFlow => 11.2e-3,   // 3D CNN on 17 MB samples
+        }
+    }
+}
+
+impl DatasetSpec {
+    pub fn total_bytes(&self) -> u64 {
+        self.n_samples as u64 * self.sample_bytes as u64
+    }
+
+    /// The five paper datasets at full scale (for trace simulation).
+    pub fn paper(id: &str) -> Option<DatasetSpec> {
+        // CD sample: 65 KB image (the paper's Coherent Diffraction data).
+        // Our record shape for CD is [4, 64, 64] f32 = 64 KiB ≈ the paper's
+        // 65 KB per image (diffraction + amplitude + phase + pad channel).
+        let cd_shape = vec![4, 64, 64];
+        let cd_bytes = 4 * 64 * 64 * 4;
+        Some(match id {
+            "cd17" => DatasetSpec {
+                id: "cd17".into(),
+                name: "CD 17 GB".into(),
+                n_samples: 262_896,
+                sample_bytes: cd_bytes,
+                shape: cd_shape,
+                model: SurrogateModel::PtychoNN,
+            },
+            // NOTE: the paper says the synthesized 321 GB set has 1,752,660
+            // samples, but 1,752,660 × 65 KB ≈ 114 GB — internally
+            // inconsistent. Buffer behaviour depends on the byte volume, so
+            // we derive the count from the stated 321 GB instead.
+            "cd321" => DatasetSpec {
+                id: "cd321".into(),
+                name: "CD 321 GB".into(),
+                n_samples: 4_897_280,
+                sample_bytes: cd_bytes,
+                shape: cd_shape,
+                model: SurrogateModel::PtychoNN,
+            },
+            "cd1200" => DatasetSpec {
+                id: "cd1200".into(),
+                name: "CD 1.2 TB".into(),
+                n_samples: 18_928_620,
+                sample_bytes: cd_bytes,
+                shape: cd_shape,
+                model: SurrogateModel::PtychoNN,
+            },
+            "bcdi" => DatasetSpec {
+                id: "bcdi".into(),
+                name: "BCDI 151 GB".into(),
+                n_samples: 54_030,
+                sample_bytes: 3_145_728, // 3.1 MB ≈ [3, 64, 64, 64] f32
+                shape: vec![3, 64, 64, 64],
+                model: SurrogateModel::AutoPhaseNN,
+            },
+            "cosmoflow" => DatasetSpec {
+                id: "cosmoflow".into(),
+                name: "CosmoFlow 1 TB".into(),
+                n_samples: 63_808,
+                sample_bytes: 16_777_216, // 17 MB ≈ [4, 128, 128, 64] f32
+                shape: vec![4, 128, 128, 64],
+                model: SurrogateModel::CosmoFlow,
+            },
+            _ => return None,
+        })
+    }
+
+    pub fn paper_ids() -> [&'static str; 5] {
+        ["cd17", "cd321", "cd1200", "bcdi", "cosmoflow"]
+    }
+
+    /// A scaled variant: same per-sample shape/size, `1/factor` as many
+    /// samples (floored, min 1). Used for real-bytes runs.
+    pub fn scaled(&self, factor: usize) -> DatasetSpec {
+        let mut s = self.clone();
+        s.id = format!("{}_s{}", self.id, factor);
+        s.name = format!("{} (1/{factor} scale)", self.name);
+        s.n_samples = (self.n_samples / factor).max(1);
+        s
+    }
+
+    /// Number of nodes (one GPU per node, as in §5.2) the paper uses for
+    /// this dataset on each system tier — Table 4.
+    pub fn paper_nodes(&self, tier: SystemTier) -> usize {
+        let base_id = self.id.split("_s").next().unwrap_or(&self.id);
+        match (base_id, tier) {
+            ("cd17", _) => 2,
+            ("cd321", SystemTier::High) => 8,
+            ("cd321", _) => 16,
+            ("cd1200", SystemTier::High) => 16,
+            ("cd1200", _) => 32,
+            ("bcdi", _) => 8,
+            ("cosmoflow", _) => 16,
+            _ => 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_dataset_sizes_are_close_to_reported() {
+        let close = |spec: &str, gb: f64, tol: f64| {
+            let s = DatasetSpec::paper(spec).unwrap();
+            let actual = s.total_bytes() as f64 / 1e9;
+            assert!((actual - gb).abs() / gb < tol, "{spec}: {actual} GB vs paper {gb} GB");
+        };
+        close("cd17", 17.0, 0.05);
+        close("cd321", 321.0, 0.15);
+        close("cd1200", 1200.0, 0.15);
+        close("bcdi", 151.0, 0.20);
+        close("cosmoflow", 1000.0, 0.15);
+    }
+
+    #[test]
+    fn unknown_id_is_none() {
+        assert!(DatasetSpec::paper("nope").is_none());
+    }
+
+    #[test]
+    fn scaled_preserves_sample_size() {
+        let s = DatasetSpec::paper("cd17").unwrap();
+        let t = s.scaled(100);
+        assert_eq!(t.sample_bytes, s.sample_bytes);
+        assert_eq!(t.n_samples, s.n_samples / 100);
+        assert!(t.id.contains("_s100"));
+    }
+
+    #[test]
+    fn table4_node_counts() {
+        let cd321 = DatasetSpec::paper("cd321").unwrap();
+        assert_eq!(cd321.paper_nodes(SystemTier::Low), 16);
+        assert_eq!(cd321.paper_nodes(SystemTier::High), 8);
+        let cd1200 = DatasetSpec::paper("cd1200").unwrap();
+        assert_eq!(cd1200.paper_nodes(SystemTier::Medium), 32);
+        assert_eq!(cd1200.paper_nodes(SystemTier::High), 16);
+        // Scaled variants inherit the parent's node counts.
+        assert_eq!(cd321.scaled(10).paper_nodes(SystemTier::Low), 16);
+    }
+
+    #[test]
+    fn compute_costs_ordered_by_model_size() {
+        assert!(
+            SurrogateModel::PtychoNN.compute_per_sample_s()
+                < SurrogateModel::AutoPhaseNN.compute_per_sample_s()
+        );
+        assert!(
+            SurrogateModel::AutoPhaseNN.compute_per_sample_s()
+                < SurrogateModel::CosmoFlow.compute_per_sample_s()
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! Fig 7: computation time with balanced vs imbalanced per-node batch
+//! sizes — the observation that justifies SOLAR's load-balancing trade-off
+//! (§4.3). Measured on the REAL AOT'd training step (PJRT CPU): per-node
+//! batch `B` vs `B − rank`, realized through the mask.
+
+use anyhow::{Context, Result};
+
+use crate::exp::ExpCtx;
+use crate::runtime::executable::{DenseImpl, TrainRuntime};
+use crate::runtime::params::ParamStore;
+use crate::util::stats::{mean, TextTable};
+use crate::util::timer::Stopwatch;
+
+pub fn fig7_imbalanced_compute(ctx: &ExpCtx) -> Result<()> {
+    if !ctx.artifacts_dir.join("manifest.json").exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    // XLA dense variant: fig 7 measures *compute-time sensitivity to batch
+    // size*, which must not be confounded by interpret-mode Pallas
+    // emulation overhead.
+    let rt = TrainRuntime::load(&ctx.artifacts_dir, DenseImpl::Xla, false)
+        .context("load runtime")?;
+    let params = ParamStore::load_init(&rt.manifest)?;
+    let b = rt.manifest.batch;
+    let n = rt.manifest.img;
+    let x: Vec<f32> = (0..b * n * n).map(|i| ((i % 89) as f32) / 89.0).collect();
+    let y: Vec<f32> = (0..b * 2 * n * n).map(|i| ((i % 43) as f32) / 43.0).collect();
+
+    let ranks = 16usize;
+    let reps = if ctx.quick { 3 } else { 10 };
+    let mut t = TextTable::new(&["rank", "balanced batch", "t(ms)", "imbalanced batch", "t(ms)"]);
+    let mut bal_all = Vec::new();
+    let mut imb_all = Vec::new();
+    // Warmup.
+    let _ = rt.grads(&params, &x, &y, &vec![1.0; b])?;
+    for rank in 0..ranks {
+        // Balanced: full batch B. Imbalanced: B − min(rank, B−1) valid.
+        let full_mask = vec![1.0f32; b];
+        let mut imb_mask = vec![0.0f32; b];
+        let imb_b = b - (rank % (b - 1));
+        for m in imb_mask.iter_mut().take(imb_b) {
+            *m = 1.0;
+        }
+        let time_of = |mask: &[f32]| -> Result<f64> {
+            let mut samples = Vec::with_capacity(reps);
+            for _ in 0..reps {
+                let sw = Stopwatch::start();
+                let _ = rt.grads(&params, &x, &y, mask)?;
+                samples.push(sw.elapsed_s());
+            }
+            Ok(mean(&samples))
+        };
+        let t_bal = time_of(&full_mask)?;
+        let t_imb = time_of(&imb_mask)?;
+        bal_all.push(t_bal);
+        imb_all.push(t_imb);
+        t.rowv(vec![
+            format!("{rank}"),
+            format!("{b}"),
+            format!("{:.2}", t_bal * 1e3),
+            format!("{imb_b}"),
+            format!("{:.2}", t_imb * 1e3),
+        ]);
+    }
+    let rel = (mean(&imb_all) - mean(&bal_all)).abs() / mean(&bal_all);
+    let text = format!(
+        "Fig 7 — per-'GPU' training-step compute time, balanced batch {b} vs\n\
+         imbalanced batch {b}−rank (masked), real PJRT execution, {reps} reps.\n\
+         Paper shape: the two curves are close (imbalance is cheap).\n\n{}\n\
+         mean balanced = {:.2} ms, mean imbalanced = {:.2} ms, gap = {:.1}%\n",
+        t.render(),
+        mean(&bal_all) * 1e3,
+        mean(&imb_all) * 1e3,
+        rel * 100.0
+    );
+    ctx.emit("fig7", &text)
+}

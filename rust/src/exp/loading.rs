@@ -1,0 +1,306 @@
+//! The core loading experiments: Fig 9 (speedups vs PyTorch/NoPFS across
+//! five datasets × three systems), Fig 10 (per-optimization ablation),
+//! Fig 11 (numPFS), Fig 12 (load balancing), Fig 13 (chunked fraction),
+//! Fig 16 (batch-size distribution), and the §5.5 EOO ablation.
+
+use anyhow::Result;
+
+use crate::data::spec::DatasetSpec;
+use crate::dist::sim::{simulate, SimReport};
+use crate::exp::ExpCtx;
+use crate::loader::LoaderPolicy;
+use crate::storage::pfs::SystemTier;
+use crate::util::stats::{mean, std_dev, TextTable};
+
+fn sim(ctx: &ExpCtx, dataset: &str, tier: SystemTier, loader: &str, local_batch: usize) -> Result<SimReport> {
+    let cfg = ctx.run_config(dataset, tier, local_batch)?;
+    Ok(simulate(&cfg, &LoaderPolicy::by_name(loader).expect("loader")))
+}
+
+/// Fig 9: data-loading speedup of NoPFS and SOLAR over the PyTorch
+/// DataLoader on five datasets × three system tiers.
+pub fn fig9_speedups(ctx: &ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(&[
+        "system", "dataset", "scenario", "pytorch(s)", "nopfs(s)", "solar(s)", "solar/pytorch",
+        "solar/nopfs",
+    ]);
+    let mut lines = String::from(
+        "Fig 9 — data-loading time per epoch (avg, excl. warmup) and speedups.\n\
+         Paper shape: SOLAR up to 24.4x over PyTorch, up to 3.5x over NoPFS;\n\
+         speedups grow with buffer size (high-end > medium > low).\n\n",
+    );
+    for tier in SystemTier::all() {
+        for ds in DatasetSpec::paper_ids() {
+            let cfg = ctx.run_config(ds, tier, 64)?;
+            let scenario = cfg.buffer_scenario();
+            let py = sim(ctx, ds, tier, "pytorch", 64)?;
+            let no = sim(ctx, ds, tier, "nopfs", 64)?;
+            let so = sim(ctx, ds, tier, "solar", 64)?;
+            t.rowv(vec![
+                tier.name().into(),
+                ds.into(),
+                format!("{scenario}"),
+                format!("{:.3}", py.avg_load_s()),
+                format!("{:.3}", no.avg_load_s()),
+                format!("{:.3}", so.avg_load_s()),
+                format!("{:.2}x", py.avg_load_s() / so.avg_load_s().max(1e-9)),
+                format!("{:.2}x", no.avg_load_s() / so.avg_load_s().max(1e-9)),
+            ]);
+        }
+    }
+    lines.push_str(&t.render());
+    ctx.emit("fig9", &lines)
+}
+
+/// Fig 10: cumulative contribution of each optimization on CD-17GB
+/// (medium-end): LRU buffer → +access order → +load balance → +chunks.
+pub fn fig10_ablation(ctx: &ExpCtx) -> Result<()> {
+    let variants: [(&str, &str); 5] = [
+        ("pytorch", "PyTorch DataLoader"),
+        ("pytorch+lru", "+ LRU buffer"),
+        ("solar-o1", "+ access order (Optim_1)"),
+        ("solar-o12", "+ load balancing (Optim_2)"),
+        ("solar", "+ chunk loading (Optim_3) = SOLAR"),
+    ];
+    // Low-end tier: per-node buffers hold ~half the dataset, so the LRU
+    // baseline is not saturated and the per-optimization steps separate.
+    let base = sim(ctx, "cd17", SystemTier::Low, "pytorch", 64)?.avg_load_s();
+    let mut t = TextTable::new(&["variant", "load(s)", "cumulative speedup"]);
+    for (name, label) in variants {
+        let r = sim(ctx, "cd17", SystemTier::Low, name, 64)?;
+        t.rowv(vec![
+            label.into(),
+            format!("{:.3}", r.avg_load_s()),
+            format!("{:.2}x", base / r.avg_load_s().max(1e-9)),
+        ]);
+    }
+    let text = format!(
+        "Fig 10 — per-optimization breakdown, CD 17 GB, low-end system.\n\
+         Paper shape: LRU ~1.2x; access order largest single win; cumulative ~7.5x.\n\n{}",
+        t.render()
+    );
+    ctx.emit("fig10", &text)
+}
+
+/// Fig 11: max per-iteration numPFS (samples loaded from the PFS),
+/// PyTorch vs SOLAR, across buffer sizes.
+pub fn fig11_numpfs(ctx: &ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(&["buffer (MB/node)", "pytorch numPFS", "solar numPFS", "reduction"]);
+    // The paper sweeps buffer sizes at 16 GPUs, batch 512. With 16 nodes
+    // the aggregate must stay below the dataset for misses to exist, so
+    // the per-node sweep is in the sub-GB range.
+    for buf_mb in [64u64, 128, 256, 512] {
+        let mut cfg = ctx.run_config("cd17", SystemTier::Medium, 64)?;
+        cfg.n_nodes = 16;
+        let d = ctx.divisor("cd17") as u64;
+        cfg.buffer_capacity = ((buf_mb << 20) / cfg.spec.sample_bytes as u64 / d).max(1) as usize;
+        if cfg.steps_per_epoch() == 0 {
+            cfg.local_batch = (cfg.spec.n_samples / cfg.n_nodes / 4).max(1);
+        }
+        let py = simulate(&cfg, &LoaderPolicy::pytorch());
+        let so = simulate(&cfg, &LoaderPolicy::solar());
+        // Mean-over-steps of the per-iteration max numPFS (excl. warmup).
+        let post = (cfg.n_epochs - 1).max(1) as f64;
+        let py_n: f64 = py.epochs.iter().skip(1).map(|e| e.mean_max_numpfs).sum::<f64>() / post;
+        let so_n: f64 = so.epochs.iter().skip(1).map(|e| e.mean_max_numpfs).sum::<f64>() / post;
+        t.rowv(vec![
+            format!("{buf_mb}"),
+            format!("{py_n:.0}"),
+            format!("{so_n:.0}"),
+            format!("{:.2}x", py_n / so_n.max(1.0)),
+        ]);
+    }
+    let text = format!(
+        "Fig 11 — max per-iteration numPFS (16 nodes). Paper shape: SOLAR\n\
+         reduces numPFS by up to ~4.9x, improving with buffer size.\n\n{}",
+        t.render()
+    );
+    ctx.emit("fig11", &text)
+}
+
+/// Fig 12: per-node numPFS at one step, before vs after load balancing,
+/// with the sync-barrier (max) line.
+pub fn fig12_balance(ctx: &ExpCtx) -> Result<()> {
+    // Buffers sized so the aggregate holds ~40% of the dataset: PFS
+    // fetches occur every step, as in the paper's measurement.
+    let mut cfg = ctx.run_config("cd17", SystemTier::Low, 64)?;
+    cfg.n_nodes = 16;
+    cfg.buffer_capacity = (cfg.spec.n_samples * 2 / 5 / cfg.n_nodes).max(1);
+    if cfg.steps_per_epoch() == 0 {
+        cfg.local_batch = (cfg.spec.n_samples / cfg.n_nodes / 4).max(1);
+    }
+    let imb = simulate(&cfg, &LoaderPolicy::by_name("solar-o1").unwrap());
+    let bal = simulate(&cfg, &LoaderPolicy::by_name("solar-o12").unwrap());
+    let mut t = TextTable::new(&["node", "imbalanced numPFS", "balanced numPFS"]);
+    for k in 0..cfg.n_nodes {
+        t.rowv(vec![
+            format!("{k}"),
+            format!("{}", imb.sample_step_fetches.get(k).copied().unwrap_or(0)),
+            format!("{}", bal.sample_step_fetches.get(k).copied().unwrap_or(0)),
+        ]);
+    }
+    let imb_max = imb.sample_step_fetches.iter().max().copied().unwrap_or(0);
+    let bal_max = bal.sample_step_fetches.iter().max().copied().unwrap_or(0);
+    // The time effect over whole epochs (the paper's 1.39x number).
+    let load_ratio = imb.avg_load_s() / bal.avg_load_s().max(1e-12);
+    let text = format!(
+        "Fig 12 — per-node PFS fetch counts at one early-epoch step (16 nodes).\n\
+         The sync barrier sits at the max; balancing lowers it.\n\n{}\n\
+         sync barrier at this step: imbalanced = {imb_max}, balanced = {bal_max}\n\
+         epoch loading-time improvement from balancing: {load_ratio:.2}x (paper: 1.39x)\n",
+        t.render(),
+    );
+    ctx.emit("fig12", &text)
+}
+
+/// Fig 13: fraction of PFS-fetched samples that travel in multi-sample
+/// chunks, across several runs (seeds).
+pub fn fig13_chunked(ctx: &ExpCtx) -> Result<()> {
+    let mut fracs: Vec<f64> = Vec::new();
+    for seed in 0..8u64 {
+        let mut cfg = ctx.run_config("cd17", SystemTier::Low, 64)?;
+        cfg.n_nodes = 4;
+        // Aggregate buffer ≈ 30% of the dataset: steady-state misses exist
+        // at a fetch density comparable to the paper's 16-GPU/batch-512 run.
+        cfg.buffer_capacity = (cfg.spec.n_samples * 3 / 10 / cfg.n_nodes).max(1);
+        cfg.seed = ctx.seed + seed;
+        cfg.n_epochs = 4;
+        let r = simulate(&cfg, &LoaderPolicy::solar());
+        for e in r.epochs.iter().skip(1) {
+            if e.pfs_samples > 0 {
+                fracs.push(e.chunked_frac);
+            }
+        }
+    }
+    let text = format!(
+        "Fig 13 — % of PFS-fetched samples loaded in chunks, across runs.\n\
+         Paper shape: ~7% on average, up to ~20.6%, worst case 0% (no harm).\n\n\
+         runs: {}\n  mean: {:.1}%\n  max:  {:.1}%\n  min:  {:.1}%\n",
+        fracs.len(),
+        100.0 * mean(&fracs),
+        100.0 * fracs.iter().cloned().fold(0.0, f64::max),
+        100.0 * fracs.iter().cloned().fold(f64::INFINITY, f64::min).min(1.0),
+    );
+    ctx.emit("fig13", &text)
+}
+
+/// Fig 16: distribution of per-node batch sizes after the load-balancing
+/// trade-off (paper: std 7.0–16.4 around batch 512 at 16 nodes).
+pub fn fig16_batch_sizes(ctx: &ExpCtx) -> Result<()> {
+    let mut cfg = ctx.run_config("cd17", SystemTier::Medium, 512)?;
+    cfg.n_nodes = 16;
+    if cfg.steps_per_epoch() < 10 {
+        cfg.local_batch = (cfg.spec.n_samples / cfg.n_nodes / 12).max(2);
+    }
+    let r = simulate(&cfg, &LoaderPolicy::solar());
+    let nominal = cfg.local_batch;
+    let mut t = TextTable::new(&["step", "min", "p50", "max", "std"]);
+    for (s, sizes) in r.early_batch_sizes.iter().enumerate() {
+        let v: Vec<f64> = sizes.iter().map(|&x| x as f64).collect();
+        let mut sorted = v.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        t.rowv(vec![
+            format!("{s}"),
+            format!("{:.0}", sorted[0]),
+            format!("{:.0}", sorted[sorted.len() / 2]),
+            format!("{:.0}", sorted[sorted.len() - 1]),
+            format!("{:.2}", std_dev(&v)),
+        ]);
+    }
+    let text = format!(
+        "Fig 16 — per-node training batch sizes in the first 10 steps after\n\
+         load balancing (16 nodes, nominal batch {nominal}). Paper shape:\n\
+         concentrated around the nominal size, std ≈ 7–16 at batch 512.\n\n{}",
+        t.render()
+    );
+    ctx.emit("fig16", &text)
+}
+
+/// §5.5: epoch-order-optimization ablation — LRU+EOO vs LRU, and SOLAR
+/// with vs without EOO.
+pub fn eoo_ablation(ctx: &ExpCtx) -> Result<()> {
+    // Tight aggregate buffer (25% of dataset) and a longer horizon: the
+    // regime where epoch ordering can matter at all.
+    let run = |name: &str| -> Result<crate::dist::sim::SimReport> {
+        let mut cfg = ctx.run_config("cd17", SystemTier::Low, 64)?;
+        cfg.n_nodes = 4;
+        cfg.buffer_capacity = (cfg.spec.n_samples / 4 / cfg.n_nodes).max(1);
+        cfg.n_epochs = 12;
+        Ok(simulate(&cfg, &LoaderPolicy::by_name(name).unwrap()))
+    };
+    let lru = run("pytorch+lru")?.avg_load_s();
+    let lru_eoo = run("pytorch+lru+eoo")?.avg_load_s();
+    let solar_r = run("solar")?;
+    let solar = solar_r.avg_load_s();
+    let solar_noeoo = run("solar-noeoo")?.avg_load_s();
+    // Transition-cost view: optimized order vs identity on the same graph.
+    let shuffle = crate::shuffle::ShuffleSchedule::new(
+        ctx.spec("cd17")?.n_samples,
+        12,
+        ctx.seed,
+    );
+    let graph = crate::sched::graph::EpochGraph::build(
+        &shuffle,
+        (ctx.spec("cd17")?.n_samples / 4).max(1),
+    );
+    let identity: Vec<usize> = (0..12).collect();
+    let id_cost = graph.path_cost(&identity);
+    let opt_cost = solar_r.epoch_order_cost.unwrap_or(id_cost);
+    let text = format!(
+        "§5.5 — effect of epoch order optimization (EOO), CD 17 GB,\n\
+         aggregate buffer = 25% of dataset, 12 epochs.\n\
+         Paper: EOO improves PyTorch+LRU by 25.6% and SOLAR by 59.4%.\n\
+         REPRODUCTION NOTE: with uniform per-epoch shuffles the epoch-graph\n\
+         edge weights concentrate (hypergeometric), so the achievable EOO\n\
+         gain is a few percent, not tens — see EXPERIMENTS.md discussion.\n\n\
+         pytorch+lru       : {lru:.3} s\n\
+         pytorch+lru + EOO : {lru_eoo:.3} s   ({:+.1}%)\n\
+         solar  w/o EOO    : {solar_noeoo:.3} s\n\
+         solar  with EOO   : {solar:.3} s   ({:+.1}%)\n\n\
+         modeled transition cost (eq. 2): identity order {id_cost}, optimized {opt_cost}\n\
+         ({:.1}% fewer samples reloaded at epoch boundaries)\n",
+        100.0 * (lru / lru_eoo - 1.0),
+        100.0 * (solar_noeoo / solar - 1.0),
+        100.0 * (1.0 - opt_cost as f64 / id_cost.max(1) as f64),
+    );
+    ctx.emit("eoo", &text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_ctx() -> ExpCtx {
+        let mut ctx = ExpCtx::new(true);
+        ctx.out_dir = std::env::temp_dir().join("solar_exp_tests");
+        ctx.epochs = 4;
+        ctx
+    }
+
+    #[test]
+    fn fig10_runs_and_orders_variants() {
+        // Smoke + sanity: cumulative variants must be monotone-ish (solar
+        // at least as fast as plain LRU).
+        let ctx = test_ctx();
+        let lru = sim(&ctx, "cd17", SystemTier::Medium, "pytorch+lru", 64).unwrap().avg_load_s();
+        let solar = sim(&ctx, "cd17", SystemTier::Medium, "solar", 64).unwrap().avg_load_s();
+        assert!(solar < lru, "solar {solar} vs lru {lru}");
+        fig10_ablation(&ctx).unwrap();
+        assert!(ctx.out_dir.join("fig10.txt").exists());
+    }
+
+    #[test]
+    fn fig12_emits_per_node_rows() {
+        let ctx = test_ctx();
+        fig12_balance(&ctx).unwrap();
+        let text = std::fs::read_to_string(ctx.out_dir.join("fig12.txt")).unwrap();
+        assert!(text.contains("sync barrier"));
+    }
+
+    #[test]
+    fn fig16_batch_sizes_emits() {
+        let ctx = test_ctx();
+        fig16_batch_sizes(&ctx).unwrap();
+        assert!(ctx.out_dir.join("fig16.txt").exists());
+    }
+}

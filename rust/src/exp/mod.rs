@@ -1,0 +1,161 @@
+//! Experiment registry: one runner per table/figure of the paper's
+//! evaluation (see DESIGN.md per-experiment index). Each runner prints the
+//! paper-style rows and writes `results/<id>.txt` (+ CSVs where the figure
+//! is a curve).
+//!
+//! `quick` mode (the default) runs every dataset at a reduced scale with
+//! the buffer scaled by the same factor — hit rates and speedup *ratios*
+//! are preserved exactly (set sizes scale together); `--full` uses the
+//! paper's sample counts.
+
+pub mod compute;
+pub mod e2e;
+pub mod io;
+pub mod loading;
+pub mod motivation;
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+use crate::config::RunConfig;
+use crate::data::spec::DatasetSpec;
+use crate::storage::pfs::SystemTier;
+
+/// Shared experiment context.
+#[derive(Debug, Clone)]
+pub struct ExpCtx {
+    /// Reduced-scale mode (default true; `--full` for paper scale).
+    pub quick: bool,
+    pub out_dir: PathBuf,
+    pub artifacts_dir: PathBuf,
+    pub data_dir: PathBuf,
+    pub seed: u64,
+    /// Epochs per simulated run.
+    pub epochs: usize,
+}
+
+impl ExpCtx {
+    pub fn new(quick: bool) -> ExpCtx {
+        ExpCtx {
+            quick,
+            out_dir: PathBuf::from("results"),
+            artifacts_dir: PathBuf::from("artifacts"),
+            data_dir: PathBuf::from("results/data"),
+            seed: 42,
+            epochs: 10,
+        }
+    }
+
+    /// Scale divisor for a dataset in quick mode — keeps every simulated
+    /// run under a few seconds while preserving buffer/dataset ratios.
+    pub fn divisor(&self, id: &str) -> usize {
+        if !self.quick {
+            return 1;
+        }
+        match id {
+            "cd17" => 16,
+            "cd321" => 128,
+            "cd1200" => 512,
+            "bcdi" => 4,
+            "cosmoflow" => 4,
+            _ => 16,
+        }
+    }
+
+    /// Paper dataset scaled for this context.
+    pub fn spec(&self, id: &str) -> Result<DatasetSpec> {
+        let s = DatasetSpec::paper(id).with_context(|| format!("unknown dataset {id}"))?;
+        let d = self.divisor(id);
+        Ok(if d == 1 { s } else { s.scaled(d) })
+    }
+
+    /// RunConfig for a dataset on a tier, with the buffer scaled by the
+    /// same divisor as the sample count.
+    pub fn run_config(&self, id: &str, tier: SystemTier, local_batch: usize) -> Result<RunConfig> {
+        let spec = self.spec(id)?;
+        let d = self.divisor(id);
+        let mut cfg = RunConfig::for_tier(spec, tier, local_batch, self.epochs, self.seed);
+        cfg.buffer_capacity = (cfg.buffer_capacity / d).max(1);
+        Ok(cfg)
+    }
+
+    /// Print + persist an experiment's rendered output.
+    pub fn emit(&self, id: &str, text: &str) -> Result<()> {
+        println!("{text}");
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = self.out_dir.join(format!("{id}.txt"));
+        std::fs::write(&path, text).with_context(|| format!("write {}", path.display()))?;
+        eprintln!("[saved {}]", path.display());
+        Ok(())
+    }
+}
+
+/// All experiment ids, in paper order.
+pub fn known_ids() -> Vec<&'static str> {
+    vec![
+        "fig2", "fig3", "tab1", "tab3", "fig7", "fig9", "fig10", "fig11", "fig12", "fig13",
+        "fig14", "fig16", "eoo",
+    ]
+}
+
+/// Dispatch one experiment.
+pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
+    match id {
+        "fig2" => motivation::fig2_scaling(ctx),
+        "fig3" => motivation::fig3_breakdown(ctx),
+        "tab1" => motivation::tab1_breakdown_1_2tb(ctx),
+        "tab3" => io::tab3_access_patterns(ctx),
+        "fig7" => compute::fig7_imbalanced_compute(ctx),
+        "fig9" => loading::fig9_speedups(ctx),
+        "fig10" => loading::fig10_ablation(ctx),
+        "fig11" => loading::fig11_numpfs(ctx),
+        "fig12" => loading::fig12_balance(ctx),
+        "fig13" => loading::fig13_chunked(ctx),
+        "fig14" => e2e::fig14_end_to_end(ctx),
+        "fig16" => loading::fig16_batch_sizes(ctx),
+        "eoo" => loading::eoo_ablation(ctx),
+        "all" => {
+            for id in known_ids() {
+                eprintln!("=== running {id} ===");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        _ => bail!("unknown experiment '{id}'; known: {:?} or 'all'", known_ids()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_scaling_preserves_ratio() {
+        let ctx = ExpCtx::new(true);
+        let cfg = ctx.run_config("cd17", SystemTier::Medium, 64).unwrap();
+        let full = RunConfig::for_tier(
+            DatasetSpec::paper("cd17").unwrap(),
+            SystemTier::Medium,
+            64,
+            10,
+            42,
+        );
+        let r_quick = cfg.spec.n_samples as f64 / cfg.buffer_capacity as f64;
+        let r_full = full.spec.n_samples as f64 / full.buffer_capacity as f64;
+        assert!((r_quick - r_full).abs() / r_full < 0.01, "{r_quick} vs {r_full}");
+        // Scenario classification must be preserved too.
+        assert_eq!(cfg.buffer_scenario(), full.buffer_scenario());
+    }
+
+    #[test]
+    fn full_mode_uses_paper_counts() {
+        let ctx = ExpCtx::new(false);
+        assert_eq!(ctx.spec("cd17").unwrap().n_samples, 262_896);
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let ctx = ExpCtx::new(true);
+        assert!(run("figNaN", &ctx).is_err());
+    }
+}

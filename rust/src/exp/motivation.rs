@@ -1,0 +1,156 @@
+//! Motivation experiments (§3): Fig 2 (framework scaling), Fig 3 (time
+//! breakdown — loading dominates), Table 1 (1.2 TB breakdown at scale).
+
+use anyhow::Result;
+
+use crate::dist::sim::simulate;
+use crate::exp::ExpCtx;
+use crate::loader::LoaderPolicy;
+use crate::storage::pfs::SystemTier;
+use crate::util::stats::TextTable;
+
+/// Fig 2: scalability of distributed training 1→8 workers.
+///
+/// Substitution (DESIGN.md): the paper compares TF-mirrored / Horovod /
+/// PyTorch-DDP and finds they scale similarly, concluding "pick DDP". We
+/// model the three frameworks' synchronization styles on the simulator —
+/// per-step allreduce (DDP), bucketed-overlap allreduce (Horovod), and
+/// graph-level sync (TF mirrored) — as small multipliers on the comm cost,
+/// and report epoch times 1..8 workers showing the same "all three scale
+/// alike" shape.
+pub fn fig2_scaling(ctx: &ExpCtx) -> Result<()> {
+    // Communication overhead per step, as a fraction of compute, for the
+    // three styles (bucketed overlap hides most of it; graph-level sync a
+    // bit more than DDP).
+    let frameworks = [("pytorch-ddp", 0.08), ("horovod", 0.05), ("tf-mirrored", 0.12)];
+    let mut t = TextTable::new(&["#workers", "pytorch-ddp(s)", "horovod(s)", "tf-mirrored(s)"]);
+    for &n in &[1usize, 2, 4, 8] {
+        let mut row = vec![format!("{n}")];
+        for (_, comm_frac) in frameworks {
+            let mut cfg = ctx.run_config("cd17", SystemTier::High, 64)?;
+            cfg.n_nodes = n;
+            cfg.n_epochs = 3;
+            let r = simulate(&cfg, &LoaderPolicy::pytorch());
+            // Epoch time = load + compute·(1 + comm overhead).
+            let epoch = r.avg_load_s() + r.avg_comp_s() * (1.0 + comm_frac);
+            row.push(format!("{epoch:.3}"));
+        }
+        t.rowv(row);
+    }
+    let text = format!(
+        "Fig 2 — epoch time vs #workers for three framework sync styles\n\
+         (substituted: modeled comm overheads on one driver; see DESIGN.md).\n\
+         Paper shape: all three scale similarly from 1 to 8 GPUs.\n\n{}",
+        t.render()
+    );
+    ctx.emit("fig2", &text)
+}
+
+/// Fig 3: time breakdown (loading vs computation) for the three surrogates
+/// across node counts — loading dominates and worsens under weak scaling.
+pub fn fig3_breakdown(ctx: &ExpCtx) -> Result<()> {
+    let mut t = TextTable::new(&["dataset", "#nodes", "load(s)", "comp(s)", "load %"]);
+    let mut check_lines = String::new();
+    for ds in ["cd17", "bcdi", "cosmoflow"] {
+        let mut pcts = Vec::new();
+        for &n in &[4usize, 8, 16] {
+            let mut cfg = ctx.run_config(ds, SystemTier::Low, 64)?;
+            cfg.n_nodes = n;
+            cfg.n_epochs = 3;
+            let r = simulate(&cfg, &LoaderPolicy::pytorch());
+            let (l, c) = (r.avg_load_s(), r.avg_comp_s());
+            let pct = 100.0 * l / (l + c);
+            pcts.push(pct);
+            t.rowv(vec![
+                ds.into(),
+                format!("{n}"),
+                format!("{l:.3}"),
+                format!("{c:.3}"),
+                format!("{pct:.1}%"),
+            ]);
+        }
+        check_lines.push_str(&format!(
+            "  {ds}: load share {:.1}% -> {:.1}% as nodes 4 -> 16 (paper: grows)\n",
+            pcts[0],
+            pcts[pcts.len() - 1]
+        ));
+    }
+    let text = format!(
+        "Fig 3 — time breakdown with the PyTorch-style loader (prefetch on).\n\
+         Paper: loading takes 83.1%/77.3%/43.2% at 4 GPUs for\n\
+         PtychoNN/AutoPhaseNN/CosmoFlow and GROWS with more nodes.\n\n{}\n{}",
+        t.render(),
+        check_lines
+    );
+    ctx.emit("fig3", &text)
+}
+
+/// Table 1: loading vs computation on the 1.2 TB CD dataset at 32/64/128
+/// nodes — loading is ~98.5% of the time; total scales ~1.93x/3.84x.
+pub fn tab1_breakdown_1_2tb(ctx: &ExpCtx) -> Result<()> {
+    let mut rows: Vec<(usize, f64, f64)> = Vec::new();
+    for &n in &[32usize, 64, 128] {
+        let mut cfg = ctx.run_config("cd1200", SystemTier::Low, 64)?;
+        cfg.n_nodes = n;
+        cfg.n_epochs = 3;
+        let r = simulate(&cfg, &LoaderPolicy::pytorch());
+        rows.push((n, r.avg_load_s(), r.avg_comp_s()));
+    }
+    let (base_l, base_c) = (rows[0].1, rows[0].2);
+    let mut t = TextTable::new(&["#nodes", "loading(s)", "load %", "load scaling", "comp(s)", "comp scaling", "total(s)", "total scaling"]);
+    for &(n, l, c) in &rows {
+        t.rowv(vec![
+            format!("{n}"),
+            format!("{l:.2}"),
+            format!("{:.1}%", 100.0 * l / (l + c)),
+            format!("{:.2}x", base_l / l),
+            format!("{c:.3}"),
+            format!("{:.2}x", base_c / c),
+            format!("{:.2}", l + c),
+            format!("{:.2}x", (base_l + base_c) / (l + c)),
+        ]);
+    }
+    let text = format!(
+        "Table 1 — PtychoNN on CD 1.2 TB, PyTorch-style loader.\n\
+         Paper: loading is 98.5–98.6% of total; total scales 1.93x (64) and\n\
+         3.84x (128) over 32 GPUs.\n\n{}",
+        t.render()
+    );
+    ctx.emit("tab1", &text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_ctx() -> ExpCtx {
+        let mut ctx = ExpCtx::new(true);
+        ctx.out_dir = std::env::temp_dir().join("solar_exp_motivation");
+        ctx.epochs = 3;
+        ctx
+    }
+
+    #[test]
+    fn fig3_loading_dominates_and_grows() {
+        let ctx = test_ctx();
+        let share = |n: usize| {
+            let mut cfg = ctx.run_config("cd17", SystemTier::Low, 64).unwrap();
+            cfg.n_nodes = n;
+            cfg.n_epochs = 3;
+            let r = simulate(&cfg, &LoaderPolicy::pytorch());
+            r.avg_load_s() / (r.avg_load_s() + r.avg_comp_s())
+        };
+        let s4 = share(4);
+        let s16 = share(16);
+        assert!(s4 > 0.4, "loading share at 4 nodes: {s4}");
+        assert!(s16 >= s4, "share should grow with weak scaling: {s4} -> {s16}");
+    }
+
+    #[test]
+    fn tab1_emits() {
+        let ctx = test_ctx();
+        tab1_breakdown_1_2tb(&ctx).unwrap();
+        let text = std::fs::read_to_string(ctx.out_dir.join("tab1.txt")).unwrap();
+        assert!(text.contains("128"));
+    }
+}

@@ -1,0 +1,27 @@
+//! # SOLAR — data-loading framework for distributed surrogate training
+//!
+//! Rust + JAX + Pallas reproduction of *SOLAR: A Highly Optimized Data
+//! Loading Framework for Distributed Training of CNN-based Scientific
+//! Surrogates* (PVLDB 16(1), 2022). See DESIGN.md for the system inventory
+//! and EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Architecture (three layers, python never on the hot path):
+//! * L3 (this crate): offline scheduler + runtime buffering + distributed
+//!   training coordination.
+//! * L2 (`python/compile/model.py`): PtychoNN-like surrogate, AOT-lowered
+//!   to HLO text once (`make artifacts`).
+//! * L1 (`python/compile/kernels/`): Pallas matmul kernel inside L2.
+
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod exp;
+pub mod dist;
+pub mod loader;
+pub mod sched;
+pub mod shuffle;
+pub mod storage;
+pub mod train;
+pub mod util;
+
+pub mod runtime;

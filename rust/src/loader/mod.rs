@@ -1,0 +1,183 @@
+//! Data loaders: the SOLAR loader plus the paper's baselines, all realized
+//! by one policy-driven engine (`engine::LoaderEngine`) so that ablations
+//! (Fig 10) are exact single-knob toggles.
+//!
+//! | preset | buffer | epoch order | locality | balance | chunks | remote |
+//! |---|---|---|---|---|---|---|
+//! | `pytorch`      | none   | given | –  | – | – | – |
+//! | `pytorch_lru`  | LRU    | given | –  | – | – | – |
+//! | `deepio`       | local  | given | local-only shuffle | – | ✓(first epoch) | – |
+//! | `nopfs`        | Belady(next epoch) | given | – | – | – | ✓ |
+//! | `solar`        | Belady(plan) | optimized | ✓ | ✓ | ✓ | – |
+
+pub mod engine;
+
+/// Buffer/eviction policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufferPolicy {
+    /// No buffering: every sample is re-read from the PFS (PyTorch
+    /// DataLoader semantics).
+    None,
+    /// Least-recently-used eviction.
+    Lru,
+    /// Clairvoyant (Belady) eviction using the pre-determined shuffle
+    /// lists: evict the sample whose next access is farthest away.
+    Belady,
+}
+
+/// Full loader behaviour description. See the module table for presets.
+#[derive(Debug, Clone)]
+pub struct LoaderPolicy {
+    pub name: String,
+    /// Optimize the epoch visiting order (§4.2.1, "Optim_1a").
+    pub epoch_order_opt: bool,
+    /// Remap node-to-sample assignment within global batches (§4.2.2,
+    /// "Optim_1b" — the paper folds both into "access order optimization").
+    pub locality_remap: bool,
+    /// Even out per-node PFS fetch counts (§4.3, "Optim_2").
+    pub load_balance: bool,
+    /// Aggregate fetches into chunk reads (§4.4, "Optim_3").
+    pub chunk_agg: bool,
+    pub buffer: BufferPolicy,
+    /// Fetch buffered-elsewhere samples from the holder node over the
+    /// network instead of the PFS (NoPFS behaviour).
+    pub remote_fetch: bool,
+    /// DeepIO: shuffle only within each node's resident partition.
+    pub local_shuffle: bool,
+}
+
+impl LoaderPolicy {
+    pub fn pytorch() -> LoaderPolicy {
+        LoaderPolicy {
+            name: "pytorch".into(),
+            epoch_order_opt: false,
+            locality_remap: false,
+            load_balance: false,
+            chunk_agg: false,
+            buffer: BufferPolicy::None,
+            remote_fetch: false,
+            local_shuffle: false,
+        }
+    }
+
+    pub fn pytorch_lru() -> LoaderPolicy {
+        LoaderPolicy { name: "pytorch+lru".into(), buffer: BufferPolicy::Lru, ..Self::pytorch() }
+    }
+
+    pub fn nopfs() -> LoaderPolicy {
+        LoaderPolicy {
+            name: "nopfs".into(),
+            buffer: BufferPolicy::Belady,
+            remote_fetch: true,
+            ..Self::pytorch()
+        }
+    }
+
+    pub fn deepio() -> LoaderPolicy {
+        LoaderPolicy {
+            name: "deepio".into(),
+            buffer: BufferPolicy::Lru,
+            local_shuffle: true,
+            chunk_agg: true,
+            ..Self::pytorch()
+        }
+    }
+
+    pub fn solar() -> LoaderPolicy {
+        LoaderPolicy {
+            name: "solar".into(),
+            epoch_order_opt: true,
+            locality_remap: true,
+            load_balance: true,
+            chunk_agg: true,
+            buffer: BufferPolicy::Belady,
+            remote_fetch: false,
+            local_shuffle: false,
+        }
+    }
+
+    /// Named ablation variants used by Fig 10 / §5.5.
+    pub fn by_name(name: &str) -> Option<LoaderPolicy> {
+        Some(match name {
+            "pytorch" => Self::pytorch(),
+            "pytorch+lru" | "pytorch_lru" => Self::pytorch_lru(),
+            "pytorch+lru+eoo" => LoaderPolicy {
+                name: "pytorch+lru+eoo".into(),
+                epoch_order_opt: true,
+                ..Self::pytorch_lru()
+            },
+            "nopfs" => Self::nopfs(),
+            "deepio" => Self::deepio(),
+            "solar" => Self::solar(),
+            "solar-o1" => LoaderPolicy {
+                // access-order optimization only (EOO + locality + buffer)
+                name: "solar-o1".into(),
+                load_balance: false,
+                chunk_agg: false,
+                ..Self::solar()
+            },
+            "solar-o12" => LoaderPolicy {
+                name: "solar-o12".into(),
+                chunk_agg: false,
+                ..Self::solar()
+            },
+            "solar-noeoo" => LoaderPolicy {
+                name: "solar-noeoo".into(),
+                epoch_order_opt: false,
+                ..Self::solar()
+            },
+            _ => return None,
+        })
+    }
+
+    pub fn known_names() -> [&'static str; 9] {
+        [
+            "pytorch",
+            "pytorch+lru",
+            "pytorch+lru+eoo",
+            "nopfs",
+            "deepio",
+            "solar",
+            "solar-o1",
+            "solar-o12",
+            "solar-noeoo",
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_have_expected_knobs() {
+        let p = LoaderPolicy::pytorch();
+        assert_eq!(p.buffer, BufferPolicy::None);
+        assert!(!p.chunk_agg);
+        let s = LoaderPolicy::solar();
+        assert!(s.epoch_order_opt && s.locality_remap && s.load_balance && s.chunk_agg);
+        assert_eq!(s.buffer, BufferPolicy::Belady);
+        assert!(!s.remote_fetch);
+        let n = LoaderPolicy::nopfs();
+        assert!(n.remote_fetch && !n.locality_remap);
+    }
+
+    #[test]
+    fn by_name_covers_known_names() {
+        for name in LoaderPolicy::known_names() {
+            let p = LoaderPolicy::by_name(name).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(p.name, name);
+        }
+        assert!(LoaderPolicy::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn ablations_differ_by_single_knob() {
+        let o12 = LoaderPolicy::by_name("solar-o12").unwrap();
+        let full = LoaderPolicy::solar();
+        assert!(!o12.chunk_agg && full.chunk_agg);
+        assert_eq!(o12.load_balance, full.load_balance);
+        let o1 = LoaderPolicy::by_name("solar-o1").unwrap();
+        assert!(!o1.load_balance && !o1.chunk_agg && o1.locality_remap);
+    }
+}

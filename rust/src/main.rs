@@ -1,0 +1,249 @@
+//! `solar` CLI — the L3 coordinator's entrypoint. See `cli::USAGE`.
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+use solar::cli::{parse_tier, Args, USAGE};
+use solar::config::RunConfig;
+use solar::data::spec::DatasetSpec;
+use solar::data::synth;
+use solar::dist::sim::simulate;
+use solar::exp::{self, ExpCtx};
+use solar::loader::LoaderPolicy;
+use solar::runtime::executable::DenseImpl;
+use solar::sched::plan::SchedulePlan;
+use solar::storage::pfs::{CostModel, SystemTier};
+use solar::train::driver::{train, TrainConfig};
+use solar::util::{fmt_bytes, fmt_secs};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.cmd.as_str() {
+        "exp" => cmd_exp(&args),
+        "sim" => cmd_sim(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "schedule" => cmd_schedule(&args),
+        "train" => cmd_train(&args),
+        "smoke" => {
+            let path = args.get_or("hlo", "/tmp/fn_hlo.txt");
+            let v = solar::runtime::smoke(&path)?;
+            println!("smoke result = {v:?}");
+            Ok(())
+        }
+        "info" => cmd_info(&args),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args.get("id").context("--id required (or 'all')")?;
+    let mut ctx = ExpCtx::new(!args.flag("full"));
+    ctx.epochs = args.get_usize("epochs", ctx.epochs)?;
+    ctx.seed = args.get_usize("seed", ctx.seed as usize)? as u64;
+    if let Some(out) = args.get_path("out") {
+        ctx.out_dir = out;
+    }
+    exp::run(id, &ctx)
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let dataset = args.get("dataset").context("--dataset required")?;
+    let tier = parse_tier(&args.get_or("tier", "medium"))?;
+    let loader = args.get_or("loader", "solar");
+    let policy = LoaderPolicy::by_name(&loader)
+        .with_context(|| format!("unknown loader '{loader}' ({:?})", LoaderPolicy::known_names()))?;
+    let mut ctx = ExpCtx::new(!args.flag("full"));
+    ctx.epochs = args.get_usize("epochs", 6)?;
+    let mut cfg = ctx.run_config(dataset, tier, args.get_usize("batch", 64)?)?;
+    if let Some(n) = args.get("nodes") {
+        cfg.n_nodes = n.parse().context("--nodes")?;
+    }
+    println!(
+        "dataset {} ({} samples x {}), {} nodes, buffer {}/node, scenario {}",
+        cfg.spec.name,
+        cfg.spec.n_samples,
+        fmt_bytes(cfg.spec.sample_bytes as u64),
+        cfg.n_nodes,
+        cfg.buffer_capacity,
+        cfg.buffer_scenario()
+    );
+    let r = simulate(&cfg, &policy);
+    println!("loader {} | epoch order {:?}", r.loader, r.epoch_order);
+    println!("epoch  load(s)    comp(s)    hits       remote     pfs        reqs       chunk%");
+    for e in &r.epochs {
+        println!(
+            "{:<6} {:<10.3} {:<10.3} {:<10} {:<10} {:<10} {:<10} {:.1}%",
+            e.epoch_pos, e.load_s, e.comp_s, e.hits, e.remote_samples, e.pfs_samples, e.pfs_requests,
+            e.chunked_frac * 100.0
+        );
+    }
+    println!(
+        "avg (excl warmup): load {} comp {} total {}",
+        fmt_secs(r.avg_load_s()),
+        fmt_secs(r.avg_comp_s()),
+        fmt_secs(r.avg_total_s())
+    );
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let dataset = args.get("dataset").context("--dataset required")?;
+    let out = args.get_path("out").context("--out required")?;
+    let scale = args.get_usize("scale", 1000)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let spec = DatasetSpec::paper(dataset)
+        .with_context(|| format!("unknown dataset '{dataset}'"))?
+        .scaled(scale);
+    println!(
+        "generating {} -> {} ({} samples, {})",
+        spec.name,
+        out.display(),
+        spec.n_samples,
+        fmt_bytes(spec.total_bytes())
+    );
+    let h = synth::generate_dataset(&out, &spec, seed)?;
+    println!("wrote {} samples", h.n_samples);
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let dataset = args.get("dataset").context("--dataset required")?;
+    let out = args.get_path("out").context("--out required")?;
+    let tier = parse_tier(&args.get_or("tier", "medium"))?;
+    let scale = args.get_usize("scale", 1000)?;
+    let epochs = args.get_usize("epochs", 8)?;
+    let loader = args.get_or("loader", "solar");
+    let policy = LoaderPolicy::by_name(&loader).context("unknown loader")?;
+    let spec = DatasetSpec::paper(dataset).context("unknown dataset")?.scaled(scale);
+    let mut cfg = RunConfig::for_tier(spec, tier, args.get_usize("batch", 16)?, epochs, args.get_usize("seed", 42)? as u64);
+    cfg.buffer_capacity = (cfg.buffer_capacity / scale).max(1);
+    let t = std::time::Instant::now();
+    let plan = SchedulePlan::compute(&cfg, &policy);
+    println!(
+        "offline schedule: {} epochs x {} steps x {} nodes in {} (order {:?}, cost {:?})",
+        cfg.n_epochs,
+        cfg.steps_per_epoch(),
+        cfg.n_nodes,
+        fmt_secs(t.elapsed().as_secs_f64()),
+        plan.epoch_order,
+        plan.epoch_order_cost
+    );
+    plan.save(&out)?;
+    println!("plan -> {} ({} PFS samples total)", out.display(), plan.total_pfs_samples());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let data = args.get_path("data").context("--data required (see gen-data)")?;
+    let loader = args.get_or("loader", "solar");
+    let policy = LoaderPolicy::by_name(&loader).context("unknown loader")?;
+    let reader = solar::storage::shdf::ShdfReader::open(&data)?;
+    let holdout = args.get_usize("holdout", 32)?;
+    let n_nodes = args.get_usize("nodes", 2)?;
+    let mut spec = DatasetSpec::paper("cd17").unwrap();
+    spec.id = reader.header().name.clone();
+    spec.n_samples = reader.n_samples().saturating_sub(holdout);
+    spec.sample_bytes = reader.sample_bytes();
+    spec.shape = reader.header().shape.clone();
+    drop(reader);
+    let cfg = RunConfig {
+        spec: spec.clone(),
+        n_nodes,
+        local_batch: args.get_usize("batch", 16)?,
+        n_epochs: args.get_usize("epochs", 3)?,
+        seed: args.get_usize("seed", 42)? as u64,
+        buffer_capacity: args.get_usize("buffer", (spec.n_samples * 7 / 10 / n_nodes).max(1))?,
+        cost: CostModel::default(),
+    };
+    let dense = match args.get_or("dense", "pallas").as_str() {
+        "pallas" => DenseImpl::Pallas,
+        "xla" => DenseImpl::Xla,
+        d => bail!("--dense must be pallas|xla, got {d}"),
+    };
+    let tc = TrainConfig {
+        run: cfg,
+        dataset_path: data,
+        artifacts_dir: args.get_path("artifacts").unwrap_or_else(|| PathBuf::from("artifacts")),
+        policy,
+        dense,
+        lr: args.get_f64("lr", 0.08)? as f32,
+        throttle: args.get_f64("throttle", 1.0)?,
+        eval_every: args.get_usize("eval-every", 8)?,
+        max_steps: args.get_usize("max-steps", 0)?,
+        holdout,
+    };
+    println!(
+        "training: {} samples, {} nodes x batch {}, {} epochs, loader {}, throttle x{}",
+        tc.run.spec.n_samples, tc.run.n_nodes, tc.run.local_batch, tc.run.n_epochs, loader, tc.throttle
+    );
+    let report = train(&tc)?;
+    for p in report.points.iter().filter(|p| !p.val_loss.is_nan()) {
+        println!(
+            "step {:<5} epoch {:<3} wall {:<8.1}s train {:.5} val {:.5}",
+            p.step, p.epoch, p.wall_s, p.train_loss, p.val_loss
+        );
+    }
+    println!(
+        "done: {} steps in {} (load {}, compute {}), hits {}, pfs {}",
+        report.steps,
+        fmt_secs(report.total_wall_s),
+        fmt_secs(report.load_wall_s),
+        fmt_secs(report.comp_wall_s),
+        report.hits,
+        report.pfs_samples
+    );
+    if let Some(curve) = args.get_path("curve") {
+        report.write_csv(&curve)?;
+        println!("loss curve -> {}", curve.display());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = args.get_path("artifacts").unwrap_or_else(|| PathBuf::from("artifacts"));
+    println!("SOLAR reproduction — rust {} / xla crate 0.1.6 (PJRT CPU)", env!("CARGO_PKG_VERSION"));
+    match solar::runtime::manifest::Manifest::load(&artifacts) {
+        Ok(m) => {
+            println!(
+                "artifacts: model {} ({} params, batch {}, img {}), {} artifacts",
+                m.model,
+                m.n_params,
+                m.batch,
+                m.img,
+                m.artifacts.len()
+            );
+            for (k, f) in &m.artifacts {
+                println!("  {k:<10} {f}");
+            }
+        }
+        Err(e) => println!("artifacts: not built ({e})"),
+    }
+    println!("\ndatasets:");
+    for id in DatasetSpec::paper_ids() {
+        let s = DatasetSpec::paper(id).unwrap();
+        println!(
+            "  {:<10} {:>12} samples x {:>8} = {:>9}  [{}]",
+            s.id,
+            s.n_samples,
+            fmt_bytes(s.sample_bytes as u64),
+            fmt_bytes(s.total_bytes()),
+            s.model.name()
+        );
+    }
+    println!("\nloaders: {:?}", LoaderPolicy::known_names());
+    println!("tiers: low (8 GB/node) medium (16) high (40)");
+    let _ = SystemTier::Low;
+    Ok(())
+}

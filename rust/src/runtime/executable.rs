@@ -1,0 +1,236 @@
+//! Typed wrappers over the PJRT executables.
+//!
+//! The `xla` crate's handles hold raw pointers (not `Send`), so each worker
+//! thread constructs its own [`TrainRuntime`] *inside* the thread (see
+//! `train::driver`); the coordinator exchanges plain `Vec<f32>` tensors
+//! with workers over channels.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::params::ParamStore;
+
+/// Which dense-layer implementation the loaded executable uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DenseImpl {
+    /// L1 Pallas kernel (interpret-mode lowering) — the default.
+    Pallas,
+    /// Plain-XLA dense layers — the A/B comparison artifact.
+    Xla,
+}
+
+impl DenseImpl {
+    pub fn grads_key(&self) -> &'static str {
+        match self {
+            DenseImpl::Pallas => "grads",
+            DenseImpl::Xla => "grads_xla",
+        }
+    }
+}
+
+/// One worker's compiled training-step (and optional forward) executable.
+pub struct TrainRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    grads_exe: xla::PjRtLoadedExecutable,
+    fwd_exe: Option<xla::PjRtLoadedExecutable>,
+}
+
+/// Result of one training-step execution.
+#[derive(Debug)]
+pub struct StepOut {
+    pub loss_sum: f32,
+    /// Summed gradients, manifest parameter order.
+    pub grads: Vec<Vec<f32>>,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+fn literal_from(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let elems: usize = shape.iter().product();
+    if elems != data.len() {
+        bail!("literal shape {:?} needs {} elems, got {}", shape, elems, data.len());
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() <= 1 {
+        Ok(lit)
+    } else {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+impl TrainRuntime {
+    /// Load + compile the artifacts. `with_fwd` also compiles the inference
+    /// executable (used by evaluation / Fig 15).
+    pub fn load(artifacts_dir: &Path, dense: DenseImpl, with_fwd: bool) -> Result<TrainRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let grads_exe = compile(&client, &manifest.artifact_path(dense.grads_key())?)?;
+        let fwd_exe = if with_fwd {
+            Some(compile(&client, &manifest.artifact_path("fwd")?)?)
+        } else {
+            None
+        };
+        Ok(TrainRuntime { manifest, client, grads_exe, fwd_exe })
+    }
+
+    /// Execute one training step.
+    ///
+    /// `x`: `[B,1,N,N]` flat, `y`: `[B,2,N,N]` flat, `mask`: `[B]` — where
+    /// `B` is the manifest batch (callers pad + mask shorter batches).
+    /// Returns the masked loss SUM and summed gradients.
+    pub fn grads(&self, params: &ParamStore, x: &[f32], y: &[f32], mask: &[f32]) -> Result<StepOut> {
+        let b = self.manifest.batch;
+        let n = self.manifest.img;
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(self.manifest.params.len() + 3);
+        for (spec, tensor) in self.manifest.params.iter().zip(params.tensors.iter()) {
+            args.push(literal_from(tensor, &spec.shape)?);
+        }
+        args.push(literal_from(x, &[b, 1, n, n])?);
+        args.push(literal_from(y, &[b, 2, n, n])?);
+        args.push(literal_from(mask, &[b])?);
+
+        let result = self.grads_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let mut parts = result.to_tuple()?;
+        if parts.len() != 1 + self.manifest.params.len() {
+            bail!("grads returned {} outputs, expected {}", parts.len(), 1 + self.manifest.params.len());
+        }
+        let loss_sum = parts.remove(0).to_vec::<f32>()?[0];
+        let mut grads = Vec::with_capacity(parts.len());
+        for (spec, lit) in self.manifest.params.iter().zip(parts.into_iter()) {
+            let v = lit.to_vec::<f32>()?;
+            if v.len() != spec.elems() {
+                bail!("grad '{}' has {} elems, expected {}", spec.name, v.len(), spec.elems());
+            }
+            grads.push(v);
+        }
+        Ok(StepOut { loss_sum, grads })
+    }
+
+    /// Inference: `x` `[B,1,N,N]` flat → `[B,2,N,N]` flat prediction.
+    pub fn forward(&self, params: &ParamStore, x: &[f32]) -> Result<Vec<f32>> {
+        let exe = self.fwd_exe.as_ref().context("runtime loaded without fwd executable")?;
+        let b = self.manifest.batch;
+        let n = self.manifest.img;
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(self.manifest.params.len() + 1);
+        for (spec, tensor) in self.manifest.params.iter().zip(params.tensors.iter()) {
+            args.push(literal_from(tensor, &spec.shape)?);
+        }
+        args.push(literal_from(x, &[b, 1, n, n])?);
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    /// Full AOT round-trip: python-lowered HLO → rust compile → execute.
+    /// Skipped (with a note) when `make artifacts` hasn't run.
+    #[test]
+    fn grads_execute_and_mask_semantics() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = TrainRuntime::load(&artifacts_dir(), DenseImpl::Xla, false).unwrap();
+        let params = ParamStore::load_init(&rt.manifest).unwrap();
+        let b = rt.manifest.batch;
+        let n = rt.manifest.img;
+        let x: Vec<f32> = (0..b * n * n).map(|i| ((i % 97) as f32) / 97.0).collect();
+        let y: Vec<f32> = (0..b * 2 * n * n).map(|i| ((i % 31) as f32) / 31.0).collect();
+
+        // Full mask vs half mask: the masked loss must shrink and the
+        // half-masked loss must equal the loss of the first half only.
+        let full = rt.grads(&params, &x, &y, &vec![1.0; b]).unwrap();
+        let mut half_mask = vec![0.0f32; b];
+        for m in half_mask.iter_mut().take(b / 2) {
+            *m = 1.0;
+        }
+        let half = rt.grads(&params, &x, &y, &half_mask).unwrap();
+        assert!(half.loss_sum < full.loss_sum);
+        assert_eq!(full.grads.len(), rt.manifest.params.len());
+        // Gradients should be non-trivial.
+        let gnorm: f64 = full.grads.iter().flatten().map(|&g| (g as f64).powi(2)).sum::<f64>();
+        assert!(gnorm > 0.0);
+    }
+
+    #[test]
+    fn pallas_and_xla_artifacts_agree() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt_p = TrainRuntime::load(&artifacts_dir(), DenseImpl::Pallas, false).unwrap();
+        let rt_x = TrainRuntime::load(&artifacts_dir(), DenseImpl::Xla, false).unwrap();
+        let params = ParamStore::load_init(&rt_p.manifest).unwrap();
+        let b = rt_p.manifest.batch;
+        let n = rt_p.manifest.img;
+        let x: Vec<f32> = (0..b * n * n).map(|i| ((i * 7 % 13) as f32) / 13.0).collect();
+        let y: Vec<f32> = vec![0.25; b * 2 * n * n];
+        let mask = vec![1.0f32; b];
+        let a = rt_p.grads(&params, &x, &y, &mask).unwrap();
+        let bb = rt_x.grads(&params, &x, &y, &mask).unwrap();
+        let rel = ((a.loss_sum - bb.loss_sum) / bb.loss_sum).abs();
+        assert!(rel < 1e-3, "pallas loss {} vs xla loss {}", a.loss_sum, bb.loss_sum);
+    }
+
+    #[test]
+    fn sgd_on_real_runtime_reduces_loss() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = TrainRuntime::load(&artifacts_dir(), DenseImpl::Xla, false).unwrap();
+        let mut params = ParamStore::load_init(&rt.manifest).unwrap();
+        let b = rt.manifest.batch;
+        let n = rt.manifest.img;
+        let x: Vec<f32> = (0..b * n * n).map(|i| ((i % 101) as f32) / 101.0).collect();
+        let y: Vec<f32> = (0..b * 2 * n * n).map(|i| ((i % 53) as f32) / 53.0).collect();
+        let mask = vec![1.0f32; b];
+        let first = rt.grads(&params, &x, &y, &mask).unwrap();
+        let mut loss_prev = first.loss_sum;
+        for _ in 0..3 {
+            let out = rt.grads(&params, &x, &y, &mask).unwrap();
+            let mean: Vec<Vec<f32>> =
+                out.grads.iter().map(|g| g.iter().map(|v| v / b as f32).collect()).collect();
+            params.sgd_step(&mean, 0.05);
+            loss_prev = out.loss_sum;
+        }
+        let last = rt.grads(&params, &x, &y, &mask).unwrap();
+        assert!(
+            last.loss_sum < first.loss_sum,
+            "loss should decrease: {} -> {} (prev {})",
+            first.loss_sum,
+            last.loss_sum,
+            loss_prev
+        );
+    }
+
+    #[test]
+    fn literal_shape_validation() {
+        assert!(literal_from(&[1.0, 2.0], &[3]).is_err());
+        let l = literal_from(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap().len(), 4);
+    }
+}

@@ -1,0 +1,172 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime — parameter order/shapes, input signature, artifact file
+//! names. Parsed from `artifacts/manifest.json`.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One named tensor in the flat AOT signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub img: usize,
+    /// Max per-node batch of the compiled executables (mask pads).
+    pub batch: usize,
+    pub seed: u64,
+    pub n_params: usize,
+    pub params: Vec<TensorSpec>,
+    /// Artifact key → file name (e.g. "grads" → "ptychonn_grads_b32.hlo.txt").
+    pub artifacts: Vec<(String, String)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).context("manifest json")?;
+        let mut params = Vec::new();
+        for p in j.req_arr("params")? {
+            params.push(TensorSpec {
+                name: p.req_str("name")?.to_string(),
+                shape: p.get("shape").and_then(Json::arr_as_usize).context("param shape")?,
+            });
+        }
+        let mut artifacts = Vec::new();
+        if let Some(obj) = j.get("artifacts").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                artifacts.push((k.clone(), v.as_str().context("artifact name")?.to_string()));
+            }
+        }
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            model: j.req_str("model")?.to_string(),
+            img: j.req_usize("img")?,
+            batch: j.req_usize("batch")?,
+            seed: j.req_u64("seed")?,
+            n_params: j.req_usize("n_params")?,
+            params,
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let total: usize = self.params.iter().map(TensorSpec::elems).sum();
+        if total != self.n_params {
+            bail!("manifest n_params {} != sum of shapes {}", self.n_params, total);
+        }
+        if self.params.is_empty() {
+            bail!("manifest has no params");
+        }
+        Ok(())
+    }
+
+    /// Absolute path of an artifact by key ("grads", "grads_xla", "fwd").
+    pub fn artifact_path(&self, key: &str) -> Result<PathBuf> {
+        let (_, file) = self
+            .artifacts
+            .iter()
+            .find(|(k, _)| k == key)
+            .with_context(|| format!("artifact '{key}' not in manifest"))?;
+        Ok(self.dir.join(file))
+    }
+
+    /// Total f32 parameter element count.
+    pub fn total_param_elems(&self) -> usize {
+        self.n_params
+    }
+
+    /// Input tensor specs after the params: x, y, mask.
+    pub fn input_specs(&self) -> [TensorSpec; 3] {
+        let b = self.batch;
+        let n = self.img;
+        [
+            TensorSpec { name: "x".into(), shape: vec![b, 1, n, n] },
+            TensorSpec { name: "y".into(), shape: vec![b, 2, n, n] },
+            TensorSpec { name: "mask".into(), shape: vec![b] },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join("solar_manifest_tests").join(name)
+    }
+
+    const GOOD: &str = r#"{
+        "model": "ptychonn", "img": 64, "batch": 8, "seed": 0,
+        "n_params": 10,
+        "params": [
+            {"name": "w", "shape": [2, 4]},
+            {"name": "b", "shape": [2]}
+        ],
+        "artifacts": {"grads": "g.hlo.txt", "fwd": "f.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = tmp("good");
+        write_manifest(&dir, GOOD);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].elems(), 8);
+        assert_eq!(m.artifact_path("grads").unwrap(), dir.join("g.hlo.txt"));
+        assert!(m.artifact_path("nope").is_err());
+        let [x, y, mask] = m.input_specs();
+        assert_eq!(x.shape, vec![8, 1, 64, 64]);
+        assert_eq!(y.shape, vec![8, 2, 64, 64]);
+        assert_eq!(mask.shape, vec![8]);
+    }
+
+    #[test]
+    fn rejects_inconsistent_param_count() {
+        let dir = tmp("bad_count");
+        write_manifest(&dir, &GOOD.replace("\"n_params\": 10", "\"n_params\": 11"));
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_helpful() {
+        let err = Manifest::load(&tmp("missing")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn parses_real_artifacts_if_present() {
+        // Integration check against the actual build output when it exists.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.model, "ptychonn");
+            assert!(m.n_params > 1_000_000);
+            assert!(m.artifact_path("grads").unwrap().exists());
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client.
+//! Python is never on this path — the artifacts are self-contained.
+
+pub mod executable;
+pub mod manifest;
+pub mod params;
+
+use anyhow::Result;
+
+/// Smoke helper (kept for the CLI `smoke` subcommand and integration
+/// tests): load an HLO text file of `fn(x, y) = (x@y + 2,)` over f32[2,2],
+/// compile, run, return the flat result.
+pub fn smoke(path: &str) -> Result<Vec<f32>> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
+    let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2])?;
+    let result = exe.execute::<xla::Literal>(&[x, y])?[0][0].to_literal_sync()?;
+    Ok(result.to_tuple1()?.to_vec::<f32>()?)
+}

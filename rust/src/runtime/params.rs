@@ -1,0 +1,222 @@
+//! Parameter store + optimizer. The rust coordinator owns the model state
+//! (L3 owns state management); parameters flow into each PJRT execution as
+//! literals and gradients flow back as flat f32 buffers.
+
+use anyhow::{bail, Context, Result};
+
+
+use crate::runtime::manifest::Manifest;
+
+/// Flat parameter storage in manifest order.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    /// One flat Vec<f32> per parameter tensor, manifest order.
+    pub tensors: Vec<Vec<f32>>,
+    /// Momentum buffers (allocated lazily on first SGD-momentum step).
+    velocity: Option<Vec<Vec<f32>>>,
+}
+
+impl ParamStore {
+    /// Load `params_init.bin` (f32 little-endian, manifest order).
+    pub fn load_init(manifest: &Manifest) -> Result<ParamStore> {
+        let path = manifest.dir.join("params_init.bin");
+        let bytes = std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+        let expect = manifest.total_param_elems() * 4;
+        if bytes.len() != expect {
+            bail!("params_init.bin is {} bytes, manifest expects {}", bytes.len(), expect);
+        }
+        let mut tensors = Vec::with_capacity(manifest.params.len());
+        let mut off = 0usize;
+        for spec in &manifest.params {
+            let n = spec.elems();
+            let mut t = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                t.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            tensors.push(t);
+        }
+        Ok(ParamStore { tensors, velocity: None })
+    }
+
+    /// Wrap an existing tensor snapshot (used by worker threads, which
+    /// receive parameter copies from the coordinator each step).
+    pub fn from_tensors(tensors: Vec<Vec<f32>>) -> ParamStore {
+        ParamStore { tensors, velocity: None }
+    }
+
+    /// Zero-initialized store with the manifest's shapes (tests).
+    pub fn zeros(manifest: &Manifest) -> ParamStore {
+        ParamStore {
+            tensors: manifest.params.iter().map(|s| vec![0.0; s.elems()]).collect(),
+            velocity: None,
+        }
+    }
+
+    /// Plain SGD: `p -= lr * g` (gradients already averaged).
+    pub fn sgd_step(&mut self, grads: &[Vec<f32>], lr: f32) {
+        assert_eq!(grads.len(), self.tensors.len());
+        for (p, g) in self.tensors.iter_mut().zip(grads.iter()) {
+            debug_assert_eq!(p.len(), g.len());
+            for (pi, gi) in p.iter_mut().zip(g.iter()) {
+                *pi -= lr * gi;
+            }
+        }
+    }
+
+    /// SGD with momentum: `v = mu*v + g; p -= lr*v`.
+    pub fn sgd_momentum_step(&mut self, grads: &[Vec<f32>], lr: f32, mu: f32) {
+        assert_eq!(grads.len(), self.tensors.len());
+        if self.velocity.is_none() {
+            self.velocity = Some(self.tensors.iter().map(|t| vec![0.0; t.len()]).collect());
+        }
+        let vel = self.velocity.as_mut().unwrap();
+        for ((p, g), v) in self.tensors.iter_mut().zip(grads.iter()).zip(vel.iter_mut()) {
+            for ((pi, gi), vi) in p.iter_mut().zip(g.iter()).zip(v.iter_mut()) {
+                *vi = mu * *vi + gi;
+                *pi -= lr * *vi;
+            }
+        }
+    }
+
+    /// Global L2 norm of the parameters (training diagnostics).
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Accumulator for the coordinator's gradient allreduce: workers add their
+/// summed gradients; the coordinator divides by the global valid count.
+#[derive(Debug)]
+pub struct GradAccum {
+    pub grads: Vec<Vec<f32>>,
+    pub loss_sum: f64,
+    pub n_valid: f64,
+}
+
+impl GradAccum {
+    pub fn zeros_like(store: &ParamStore) -> GradAccum {
+        GradAccum {
+            grads: store.tensors.iter().map(|t| vec![0.0; t.len()]).collect(),
+            loss_sum: 0.0,
+            n_valid: 0.0,
+        }
+    }
+
+    /// Add one worker's contribution (summed grads + loss + count).
+    pub fn add(&mut self, grads: &[Vec<f32>], loss_sum: f64, n_valid: f64) {
+        assert_eq!(grads.len(), self.grads.len());
+        for (acc, g) in self.grads.iter_mut().zip(grads.iter()) {
+            for (a, b) in acc.iter_mut().zip(g.iter()) {
+                *a += b;
+            }
+        }
+        self.loss_sum += loss_sum;
+        self.n_valid += n_valid;
+    }
+
+    /// Finalize: divide by the global valid count → mean gradient + mean
+    /// loss, exactly as if the whole global batch ran on one device.
+    pub fn finalize(&mut self) -> f64 {
+        let n = self.n_valid.max(1.0) as f32;
+        for g in self.grads.iter_mut() {
+            for x in g.iter_mut() {
+                *x /= n;
+            }
+        }
+        self.loss_sum / self.n_valid.max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+    use std::path::PathBuf;
+
+    fn fake_manifest(dir: PathBuf) -> Manifest {
+        Manifest {
+            dir,
+            model: "t".into(),
+            img: 4,
+            batch: 2,
+            seed: 0,
+            n_params: 6,
+            params: vec![
+                TensorSpec { name: "w".into(), shape: vec![2, 2] },
+                TensorSpec { name: "b".into(), shape: vec![2] },
+            ],
+            artifacts: vec![],
+        }
+    }
+
+    #[test]
+    fn load_init_roundtrip() {
+        let dir = std::env::temp_dir().join("solar_params_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("params_init.bin"), &bytes).unwrap();
+        let m = fake_manifest(dir);
+        let store = ParamStore::load_init(&m).unwrap();
+        assert_eq!(store.tensors[0], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(store.tensors[1], vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn load_init_rejects_wrong_size() {
+        let dir = std::env::temp_dir().join("solar_params_tests_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("params_init.bin"), [0u8; 12]).unwrap();
+        assert!(ParamStore::load_init(&fake_manifest(dir)).is_err());
+    }
+
+    #[test]
+    fn sgd_step_updates() {
+        let m = fake_manifest(std::env::temp_dir());
+        let mut store = ParamStore::zeros(&m);
+        let grads = vec![vec![1.0; 4], vec![2.0; 2]];
+        store.sgd_step(&grads, 0.1);
+        assert!(store.tensors[0].iter().all(|&x| (x + 0.1).abs() < 1e-7));
+        assert!(store.tensors[1].iter().all(|&x| (x + 0.2).abs() < 1e-7));
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let m = fake_manifest(std::env::temp_dir());
+        let mut store = ParamStore::zeros(&m);
+        let grads = vec![vec![1.0; 4], vec![0.0; 2]];
+        store.sgd_momentum_step(&grads, 1.0, 0.5);
+        store.sgd_momentum_step(&grads, 1.0, 0.5);
+        // v1 = 1, p -= 1 → -1 ; v2 = 1.5, p -= 1.5 → -2.5
+        assert!((store.tensors[0][0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn allreduce_matches_single_device_mean() {
+        let m = fake_manifest(std::env::temp_dir());
+        let store = ParamStore::zeros(&m);
+        let mut acc = GradAccum::zeros_like(&store);
+        // Two workers, batches of 3 and 1 valid samples.
+        acc.add(&[vec![3.0; 4], vec![6.0; 2]], 9.0, 3.0);
+        acc.add(&[vec![1.0; 4], vec![2.0; 2]], 1.0, 1.0);
+        let mean_loss = acc.finalize();
+        assert!((mean_loss - 2.5).abs() < 1e-12);
+        assert!(acc.grads[0].iter().all(|&x| (x - 1.0).abs() < 1e-7));
+        assert!(acc.grads[1].iter().all(|&x| (x - 2.0).abs() < 1e-7));
+    }
+
+    #[test]
+    fn l2_norm_correct() {
+        let m = fake_manifest(std::env::temp_dir());
+        let mut store = ParamStore::zeros(&m);
+        store.tensors[0] = vec![3.0, 4.0, 0.0, 0.0];
+        assert!((store.l2_norm() - 5.0).abs() < 1e-12);
+    }
+}

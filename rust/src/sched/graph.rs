@@ -1,0 +1,156 @@
+//! Epoch graph — §4.2.1.
+//!
+//! Vertices are epochs; the directed edge weight `N_{u,v}` (eq. 1) is the
+//! number of samples that must be (re)loaded when epoch `v` runs right
+//! after epoch `u`:
+//!
+//! ```text
+//! N_{u,v} = card(Buffer_v − Buffer_u)
+//! ```
+//!
+//! where `Buffer_u` is the set of the last `|Buffer|` samples accessed in
+//! epoch `u` and `Buffer_v` the first `|Buffer|` samples of epoch `v`.
+//! Finding the epoch order that minimizes total loading is then a path-TSP
+//! over this graph (solved by `sched::pso` / `sched::greedy`).
+
+use crate::shuffle::ShuffleSchedule;
+use crate::util::bitset::Bitset;
+
+/// Dense directed weight matrix over epochs.
+#[derive(Debug, Clone)]
+pub struct EpochGraph {
+    pub n_epochs: usize,
+    /// `w[u][v] = N_{u,v}`; the diagonal is unused (set to 0).
+    pub w: Vec<Vec<u32>>,
+}
+
+impl EpochGraph {
+    /// Build the graph from the pre-determined shuffle lists. `buffer` is
+    /// the *aggregate* buffer size in samples (the offline scheduler models
+    /// the union of node buffers; per-node placement is handled later by
+    /// the locality pass).
+    pub fn build(shuffle: &ShuffleSchedule, buffer: usize) -> EpochGraph {
+        let e = shuffle.n_epochs;
+        let n = shuffle.n_samples;
+        let k = buffer.min(n);
+        // Materialize first/last windows as bitsets, one pass per epoch.
+        let mut firsts = Vec::with_capacity(e);
+        let mut lasts = Vec::with_capacity(e);
+        for ep in 0..e {
+            let perm = shuffle.epoch_perm(ep);
+            firsts.push(Bitset::from_indices(n, &perm[..k]));
+            lasts.push(Bitset::from_indices(n, &perm[n - k..]));
+        }
+        let mut w = vec![vec![0u32; e]; e];
+        for u in 0..e {
+            for v in 0..e {
+                if u != v {
+                    w[u][v] = firsts[v].difference_count(&lasts[u]) as u32;
+                }
+            }
+        }
+        EpochGraph { n_epochs: e, w }
+    }
+
+    /// Total loading cost (eq. 2) of visiting epochs in `path` order.
+    /// The first epoch loads its entire working set from the PFS; that cost
+    /// is order-independent, so only transition edges are summed.
+    pub fn path_cost(&self, path: &[usize]) -> u64 {
+        path.windows(2).map(|uv| self.w[uv[0]][uv[1]] as u64).sum()
+    }
+
+    /// Check `path` is a permutation of all epochs.
+    pub fn is_valid_path(&self, path: &[usize]) -> bool {
+        if path.len() != self.n_epochs {
+            return false;
+        }
+        let mut seen = vec![false; self.n_epochs];
+        for &p in path {
+            if p >= self.n_epochs || seen[p] {
+                return false;
+            }
+            seen[p] = true;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_graph() -> (ShuffleSchedule, EpochGraph) {
+        let s = ShuffleSchedule::new(256, 6, 11);
+        let g = EpochGraph::build(&s, 64);
+        (s, g)
+    }
+
+    #[test]
+    fn edge_weights_match_naive_set_difference() {
+        let (s, g) = small_graph();
+        for u in 0..s.n_epochs {
+            for v in 0..s.n_epochs {
+                if u == v {
+                    continue;
+                }
+                let last_u: std::collections::HashSet<u32> =
+                    s.epoch_suffix(u, 64).into_iter().collect();
+                let first_v = s.epoch_prefix(v, 64);
+                let naive = first_v.iter().filter(|x| !last_u.contains(x)).count() as u32;
+                assert_eq!(g.w[u][v], naive, "edge ({u},{v})");
+            }
+        }
+    }
+
+    #[test]
+    fn weights_bounded_by_buffer() {
+        let (_, g) = small_graph();
+        for u in 0..g.n_epochs {
+            for v in 0..g.n_epochs {
+                assert!(g.w[u][v] <= 64);
+            }
+        }
+    }
+
+    #[test]
+    fn asymmetry_is_possible() {
+        // N_{u,v} need not equal N_{v,u} (the paper notes this).
+        let (_, g) = small_graph();
+        let any_asym = (0..g.n_epochs).any(|u| {
+            (0..g.n_epochs).any(|v| u != v && g.w[u][v] != g.w[v][u])
+        });
+        assert!(any_asym, "expected at least one asymmetric edge pair");
+    }
+
+    #[test]
+    fn buffer_larger_than_dataset_gives_zero_edges_only_for_reused() {
+        // With buffer == dataset size, every sample is buffered, so
+        // N_{u,v} = 0 for all pairs: nothing needs reloading.
+        let s = ShuffleSchedule::new(128, 3, 5);
+        let g = EpochGraph::build(&s, 128);
+        for u in 0..3 {
+            for v in 0..3 {
+                if u != v {
+                    assert_eq!(g.w[u][v], 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn path_cost_sums_edges() {
+        let (_, g) = small_graph();
+        let path = vec![0, 3, 1];
+        let expect = g.w[0][3] as u64 + g.w[3][1] as u64;
+        assert_eq!(g.path_cost(&path), expect);
+    }
+
+    #[test]
+    fn path_validation() {
+        let (_, g) = small_graph();
+        assert!(g.is_valid_path(&[0, 1, 2, 3, 4, 5]));
+        assert!(!g.is_valid_path(&[0, 1, 2, 3, 4])); // too short
+        assert!(!g.is_valid_path(&[0, 1, 2, 3, 4, 4])); // repeat
+        assert!(!g.is_valid_path(&[0, 1, 2, 3, 4, 6])); // out of range
+    }
+}

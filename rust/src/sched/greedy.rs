@@ -1,0 +1,161 @@
+//! Greedy nearest-neighbor + 2-opt baseline for the epoch-order path-TSP.
+//!
+//! The paper uses PSO; this module provides (a) a cheap deterministic
+//! baseline for the `eoo` ablation and (b) a refinement pass. The offline
+//! scheduler takes whichever of PSO/greedy scores lower — both respect the
+//! same objective (eq. 2), so this is a strict improvement, not a
+//! behavioural change.
+
+use crate::sched::graph::EpochGraph;
+use crate::sched::pso::TspSolution;
+
+/// Nearest-neighbor construction from `start`, then 2-opt improvement.
+pub fn solve(g: &EpochGraph, start: usize) -> TspSolution {
+    let e = g.n_epochs;
+    if e == 0 {
+        return TspSolution { path: vec![], cost: 0, history: vec![] };
+    }
+    assert!(start < e);
+    // Nearest neighbor.
+    let mut visited = vec![false; e];
+    let mut path = Vec::with_capacity(e);
+    let mut cur = start;
+    visited[cur] = true;
+    path.push(cur);
+    for _ in 1..e {
+        let next = (0..e)
+            .filter(|&v| !visited[v])
+            .min_by_key(|&v| g.w[cur][v])
+            .expect("unvisited vertex exists");
+        visited[next] = true;
+        path.push(next);
+        cur = next;
+    }
+    let mut history = vec![g.path_cost(&path)];
+
+    // 2-opt for directed path-TSP: reversing a segment changes its internal
+    // edge directions, so recompute affected costs exactly.
+    let mut improved = true;
+    while improved {
+        improved = false;
+        for i in 0..e.saturating_sub(1) {
+            for j in i + 1..e {
+                let delta = two_opt_delta(g, &path, i, j);
+                if delta < 0 {
+                    path[i..=j].reverse();
+                    improved = true;
+                }
+            }
+        }
+        history.push(g.path_cost(&path));
+    }
+    let cost = g.path_cost(&path);
+    TspSolution { path, cost, history }
+}
+
+/// Exact cost change of reversing `path[i..=j]` (directed edges: inner
+/// segment edges flip direction, so sum both directions explicitly).
+fn two_opt_delta(g: &EpochGraph, path: &[usize], i: usize, j: usize) -> i64 {
+    let e = path.len();
+    let mut before: i64 = 0;
+    let mut after: i64 = 0;
+    // Boundary edge into the segment.
+    if i > 0 {
+        before += g.w[path[i - 1]][path[i]] as i64;
+        after += g.w[path[i - 1]][path[j]] as i64;
+    }
+    // Boundary edge out of the segment.
+    if j + 1 < e {
+        before += g.w[path[j]][path[j + 1]] as i64;
+        after += g.w[path[i]][path[j + 1]] as i64;
+    }
+    // Inner segment edges flip direction.
+    for k in i..j {
+        before += g.w[path[k]][path[k + 1]] as i64;
+        after += g.w[path[k + 1]][path[k]] as i64;
+    }
+    after - before
+}
+
+/// Try all start vertices, return the best (still cheap for E ≤ a few
+/// hundred epochs).
+pub fn solve_best_start(g: &EpochGraph) -> TspSolution {
+    (0..g.n_epochs.max(1).min(g.n_epochs))
+        .map(|s| solve(g, s))
+        .min_by_key(|sol| sol.cost)
+        .unwrap_or(TspSolution { path: vec![], cost: 0, history: vec![] })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shuffle::ShuffleSchedule;
+
+    fn graph(e: usize) -> EpochGraph {
+        let s = ShuffleSchedule::new(512, e, 33);
+        EpochGraph::build(&s, 128)
+    }
+
+    #[test]
+    fn produces_valid_path() {
+        let g = graph(9);
+        let sol = solve(&g, 0);
+        assert!(g.is_valid_path(&sol.path));
+        assert_eq!(sol.cost, g.path_cost(&sol.path));
+    }
+
+    #[test]
+    fn two_opt_delta_is_exact() {
+        use crate::util::rng::Rng;
+        let g = graph(8);
+        let mut rng = Rng::new(3);
+        let mut path: Vec<usize> = (0..8).collect();
+        rng.shuffle(&mut path);
+        for _ in 0..50 {
+            let i = rng.gen_index(7);
+            let j = i + 1 + rng.gen_index(8 - i - 1);
+            let before = g.path_cost(&path) as i64;
+            let delta = two_opt_delta(&g, &path, i, j);
+            let mut p2 = path.clone();
+            p2[i..=j].reverse();
+            assert_eq!(before + delta, g.path_cost(&p2) as i64, "i={i} j={j}");
+        }
+    }
+
+    #[test]
+    fn no_worse_than_identity() {
+        let g = graph(12);
+        let identity: Vec<usize> = (0..12).collect();
+        let sol = solve_best_start(&g);
+        assert!(sol.cost <= g.path_cost(&identity));
+    }
+
+    #[test]
+    fn finds_optimum_on_tiny_instance() {
+        let g = graph(5);
+        let mut best = u64::MAX;
+        let mut perm: Vec<usize> = (0..5).collect();
+        fn permute(k: usize, perm: &mut Vec<usize>, g: &EpochGraph, best: &mut u64) {
+            if k == perm.len() {
+                *best = (*best).min(g.path_cost(perm));
+                return;
+            }
+            for i in k..perm.len() {
+                perm.swap(k, i);
+                permute(k + 1, perm, g, best);
+                perm.swap(k, i);
+            }
+        }
+        permute(0, &mut perm, &g, &mut best);
+        let sol = solve_best_start(&g);
+        assert_eq!(sol.cost, best);
+    }
+
+    #[test]
+    fn empty_graph_ok() {
+        let s = ShuffleSchedule::new(64, 0, 1);
+        let g = EpochGraph::build(&s, 16);
+        let sol = solve_best_start(&g);
+        assert!(sol.path.is_empty());
+    }
+}

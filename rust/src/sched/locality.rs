@@ -1,0 +1,198 @@
+//! Node-to-sample remapping within the global batch — §4.2.2.
+//!
+//! Key observation (paper's Obs. i, proved in Yang & Cong): permuting the
+//! *assignment of samples to devices within one global batch* leaves the
+//! synchronized (averaged) gradient unchanged. SOLAR exploits this to send
+//! each sample to the node that already buffers it, converting remote/PFS
+//! loads into local buffer hits, with zero accuracy impact.
+
+/// Marker for "not resident on any node".
+pub const NO_NODE: i16 = -1;
+
+/// Assign the samples of one global batch to nodes, preferring each
+/// sample's current holder (`loc[x]` = node whose buffer holds x, or
+/// [`NO_NODE`]).
+///
+/// * With `strict_quota = true`, every node receives exactly `local_batch`
+///   samples (classic balanced batches): holders get their samples up to
+///   quota; everything else fills remaining slots in batch order.
+/// * With `strict_quota = false`, holders keep ALL their resident samples
+///   (batch sizes may differ); non-resident samples are left for the load
+///   balancer ([`crate::sched::balance`]) to distribute.
+///
+/// Returns `(assignment, unassigned)`: `assignment[k]` = samples of node k
+/// (all resident unless strict), `unassigned` = samples no node holds
+/// (strict mode returns an empty `unassigned` — they are placed directly).
+pub fn remap_global_batch(
+    global: &[u32],
+    loc: &[i16],
+    n_nodes: usize,
+    local_batch: usize,
+    strict_quota: bool,
+) -> (Vec<Vec<u32>>, Vec<u32>) {
+    assert_eq!(global.len(), n_nodes * local_batch);
+    let mut assign: Vec<Vec<u32>> = (0..n_nodes).map(|_| Vec::with_capacity(local_batch + 8)).collect();
+    let mut overflow: Vec<u32> = Vec::new();
+
+    // Pass 1: route resident samples to their holders.
+    for &x in global {
+        let holder = loc[x as usize];
+        if holder >= 0 && (holder as usize) < n_nodes {
+            let k = holder as usize;
+            if strict_quota && assign[k].len() >= local_batch {
+                overflow.push(x); // holder full: will be placed elsewhere
+            } else {
+                assign[k].push(x);
+            }
+        } else {
+            overflow.push(x);
+        }
+    }
+
+    if strict_quota {
+        // Pass 2: fill every node to exactly local_batch from the overflow.
+        let mut it = overflow.into_iter();
+        for node in assign.iter_mut() {
+            while node.len() < local_batch {
+                node.push(it.next().expect("counts must balance"));
+            }
+        }
+        debug_assert!(it.next().is_none());
+        (assign, Vec::new())
+    } else {
+        (assign, overflow)
+    }
+}
+
+/// Default (pre-SOLAR) mapping: node k takes the k-th contiguous block.
+pub fn default_assignment(global: &[u32], n_nodes: usize, local_batch: usize) -> Vec<Vec<u32>> {
+    assert_eq!(global.len(), n_nodes * local_batch);
+    (0..n_nodes).map(|k| global[k * local_batch..(k + 1) * local_batch].to_vec()).collect()
+}
+
+/// Invariant check used by tests and the property suite: an assignment is a
+/// permutation-preserving partition of the global batch.
+pub fn is_partition_of(global: &[u32], assign: &[Vec<u32>], extra: &[u32]) -> bool {
+    let mut a: Vec<u32> = assign.iter().flatten().copied().chain(extra.iter().copied()).collect();
+    let mut g = global.to_vec();
+    a.sort_unstable();
+    g.sort_unstable();
+    a == g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    fn setup(n_samples: usize, n_nodes: usize, local_batch: usize, seed: u64) -> (Vec<u32>, Vec<i16>) {
+        let mut rng = Rng::new(seed);
+        let global: Vec<u32> =
+            rng.sample_distinct(n_samples, n_nodes * local_batch).into_iter().collect();
+        let loc: Vec<i16> = (0..n_samples)
+            .map(|_| {
+                if rng.gen_f64() < 0.6 {
+                    rng.gen_index(n_nodes) as i16
+                } else {
+                    NO_NODE
+                }
+            })
+            .collect();
+        (global, loc)
+    }
+
+    #[test]
+    fn strict_mode_partitions_exactly() {
+        let (global, loc) = setup(1000, 4, 32, 1);
+        let (assign, rest) = remap_global_batch(&global, &loc, 4, 32, true);
+        assert!(rest.is_empty());
+        for a in &assign {
+            assert_eq!(a.len(), 32);
+        }
+        assert!(is_partition_of(&global, &assign, &rest));
+    }
+
+    #[test]
+    fn relaxed_mode_keeps_all_resident_on_holder() {
+        let (global, loc) = setup(1000, 4, 32, 2);
+        let (assign, rest) = remap_global_batch(&global, &loc, 4, 32, false);
+        assert!(is_partition_of(&global, &assign, &rest));
+        // Every assigned sample is on its holder.
+        for (k, a) in assign.iter().enumerate() {
+            for &x in a {
+                assert_eq!(loc[x as usize], k as i16);
+            }
+        }
+        // Every leftover sample is non-resident.
+        for &x in &rest {
+            assert_eq!(loc[x as usize], NO_NODE);
+        }
+    }
+
+    #[test]
+    fn residency_never_decreases_vs_default() {
+        // The whole point: remap yields at least as many local hits as the
+        // default contiguous-block assignment.
+        for seed in 0..10 {
+            let (global, loc) = setup(2000, 8, 16, seed);
+            let default = default_assignment(&global, 8, 16);
+            let hits_default: usize = default
+                .iter()
+                .enumerate()
+                .map(|(k, a)| a.iter().filter(|&&x| loc[x as usize] == k as i16).count())
+                .sum();
+            let (assign, _) = remap_global_batch(&global, &loc, 8, 16, true);
+            let hits_remap: usize = assign
+                .iter()
+                .enumerate()
+                .map(|(k, a)| a.iter().filter(|&&x| loc[x as usize] == k as i16).count())
+                .sum();
+            assert!(hits_remap >= hits_default, "seed {seed}: {hits_remap} < {hits_default}");
+        }
+    }
+
+    #[test]
+    fn property_partition_invariant() {
+        proptest::check(
+            "remap partitions the global batch",
+            proptest::DEFAULT_CASES,
+            |rng| {
+                let n_nodes = 1 + rng.gen_index(8);
+                let local_batch = 1 + rng.gen_index(24);
+                let n_samples = (n_nodes * local_batch) * (2 + rng.gen_index(4));
+                let global: Vec<u32> = rng.sample_distinct(n_samples, n_nodes * local_batch);
+                let loc: Vec<i16> = (0..n_samples)
+                    .map(|_| if rng.gen_f64() < 0.5 { rng.gen_index(n_nodes) as i16 } else { NO_NODE })
+                    .collect();
+                (global, loc, n_nodes, local_batch)
+            },
+            |(global, loc, n_nodes, local_batch)| {
+                for strict in [true, false] {
+                    let (a, rest) = remap_global_batch(global, loc, *n_nodes, *local_batch, strict);
+                    if !is_partition_of(global, &a, &rest) {
+                        return Err(format!("not a partition (strict={strict})"));
+                    }
+                    if strict && a.iter().any(|x| x.len() != *local_batch) {
+                        return Err("strict quota violated".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn all_resident_on_one_node_overflow_handled() {
+        // Pathological: every sample resident on node 0; strict mode must
+        // still produce exact quotas.
+        let global: Vec<u32> = (0..64).collect();
+        let loc = vec![0i16; 64];
+        let (assign, rest) = remap_global_batch(&global, &loc, 4, 16, true);
+        assert!(rest.is_empty());
+        for a in &assign {
+            assert_eq!(a.len(), 16);
+        }
+        assert!(is_partition_of(&global, &assign, &[]));
+    }
+}

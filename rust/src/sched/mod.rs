@@ -1,0 +1,13 @@
+//! SOLAR's offline scheduler (§4, Fig 4): pre-determined shuffle lists →
+//! epoch-order optimization (graph + PSO/greedy path-TSP), node-to-sample
+//! locality remapping, load balancing, and aggregated chunk loading —
+//! materialized as a [`plan::SchedulePlan`] or streamed by
+//! [`crate::loader::engine::LoaderEngine`].
+
+pub mod balance;
+pub mod chunkagg;
+pub mod graph;
+pub mod greedy;
+pub mod locality;
+pub mod plan;
+pub mod pso;

@@ -1,0 +1,248 @@
+//! The serializable `SchedulePlan` — the artifact SOLAR's offline scheduler
+//! produces (Fig 4): the optimized epoch order plus, per epoch/step/node,
+//! the sample assignment and the source of every sample (buffer hit vs PFS
+//! chunk read). The runtime (`train::driver`) executes plans directly; the
+//! trace simulator recomputes them streamingly and never materializes one.
+
+use anyhow::{Context, Result};
+
+use crate::config::RunConfig;
+use crate::loader::engine::{LoaderEngine, StepLoad};
+use crate::loader::LoaderPolicy;
+use crate::sched::chunkagg::Chunk;
+use crate::util::json::Json;
+
+/// One node's planned work for one step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanNodeStep {
+    /// Samples this node trains on (batch).
+    pub samples: Vec<u32>,
+    /// Subset count served by the local buffer.
+    pub hits: usize,
+    /// Chunked PFS reads: (lo, hi) sample-id ranges.
+    pub chunks: Vec<(u32, u32)>,
+}
+
+/// Fully materialized plan.
+#[derive(Debug, Clone)]
+pub struct SchedulePlan {
+    pub config: Json,
+    pub loader: String,
+    pub epoch_order: Vec<usize>,
+    pub epoch_order_cost: Option<u64>,
+    /// `steps[epoch_pos][step][node]`.
+    pub steps: Vec<Vec<Vec<PlanNodeStep>>>,
+}
+
+impl SchedulePlan {
+    /// Run the offline scheduler (= the deterministic loader engine) and
+    /// materialize the full plan. Intended for real-training scale; a
+    /// full-scale cd1200 plan would be tens of GB — the simulator streams
+    /// instead.
+    pub fn compute(cfg: &RunConfig, policy: &LoaderPolicy) -> SchedulePlan {
+        let mut engine = LoaderEngine::new(cfg.clone(), policy.clone());
+        let mut steps = Vec::with_capacity(cfg.n_epochs);
+        for pos in 0..cfg.n_epochs {
+            let mut epoch_steps: Vec<Vec<PlanNodeStep>> = Vec::new();
+            engine.run_epoch(pos, |_, sl: &StepLoad| {
+                epoch_steps.push(
+                    sl.nodes
+                        .iter()
+                        .map(|nl| PlanNodeStep {
+                            samples: nl.samples.clone(),
+                            hits: nl.hits,
+                            chunks: nl.chunks.iter().map(|c| (c.lo, c.hi)).collect(),
+                        })
+                        .collect(),
+                );
+            });
+            steps.push(epoch_steps);
+        }
+        SchedulePlan {
+            config: cfg.to_json(),
+            loader: policy.name.clone(),
+            epoch_order: engine.epoch_order.clone(),
+            epoch_order_cost: engine.epoch_order_cost,
+            steps,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("config", self.config.clone())
+            .set("loader", Json::Str(self.loader.clone()))
+            .set("epoch_order", Json::arr_usize(&self.epoch_order));
+        if let Some(c) = self.epoch_order_cost {
+            o.set("epoch_order_cost", Json::Num(c as f64));
+        }
+        let epochs: Vec<Json> = self
+            .steps
+            .iter()
+            .map(|epoch| {
+                Json::Arr(
+                    epoch
+                        .iter()
+                        .map(|step| {
+                            Json::Arr(
+                                step.iter()
+                                    .map(|ns| {
+                                        let mut nso = Json::obj();
+                                        nso.set("samples", Json::arr_u32(&ns.samples))
+                                            .set("hits", Json::Num(ns.hits as f64))
+                                            .set(
+                                                "chunks",
+                                                Json::Arr(
+                                                    ns.chunks
+                                                        .iter()
+                                                        .map(|&(lo, hi)| {
+                                                            Json::arr_u32(&[lo, hi])
+                                                        })
+                                                        .collect(),
+                                                ),
+                                            );
+                                        nso
+                                    })
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        o.set("steps", Json::Arr(epochs));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<SchedulePlan> {
+        let epoch_order = j
+            .get("epoch_order")
+            .and_then(Json::arr_as_usize)
+            .context("plan missing epoch_order")?;
+        let mut steps = Vec::new();
+        for epoch in j.req_arr("steps")? {
+            let mut epoch_steps = Vec::new();
+            for step in epoch.as_arr().context("epoch not an array")? {
+                let mut node_steps = Vec::new();
+                for ns in step.as_arr().context("step not an array")? {
+                    let samples = ns.get("samples").and_then(Json::arr_as_u32).context("samples")?;
+                    let hits = ns.req_usize("hits")?;
+                    let mut chunks = Vec::new();
+                    for c in ns.req_arr("chunks")? {
+                        let pair = c.arr_as_u32().context("chunk pair")?;
+                        chunks.push((pair[0], pair[1]));
+                    }
+                    node_steps.push(PlanNodeStep { samples, hits, chunks });
+                }
+                epoch_steps.push(node_steps);
+            }
+            steps.push(epoch_steps);
+        }
+        Ok(SchedulePlan {
+            config: j.get("config").cloned().unwrap_or(Json::Null),
+            loader: j.req_str("loader")?.to_string(),
+            epoch_order,
+            epoch_order_cost: j.get("epoch_order_cost").and_then(Json::as_u64),
+            steps,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_compact())
+            .with_context(|| format!("write plan {}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<SchedulePlan> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        SchedulePlan::from_json(&Json::parse(&text)?)
+    }
+
+    /// Total PFS-fetched (wanted) samples across the plan.
+    pub fn total_pfs_samples(&self) -> usize {
+        self.steps
+            .iter()
+            .flatten()
+            .flatten()
+            .map(|ns| ns.samples.len() - ns.hits)
+            .sum()
+    }
+
+    /// Chunks that SOLAR would read per `Chunk` struct (testing hook).
+    pub fn all_chunks(&self) -> Vec<Chunk> {
+        self.steps
+            .iter()
+            .flatten()
+            .flatten()
+            .flat_map(|ns| ns.chunks.iter().map(|&(lo, hi)| Chunk { lo, hi, wanted: 0 }))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spec::DatasetSpec;
+    use crate::storage::pfs::CostModel;
+
+    fn tiny_cfg() -> RunConfig {
+        let mut spec = DatasetSpec::paper("cd17").unwrap();
+        spec.n_samples = 128;
+        RunConfig {
+            spec,
+            n_nodes: 2,
+            local_batch: 8,
+            n_epochs: 3,
+            seed: 5,
+            buffer_capacity: 32,
+            cost: CostModel::default(),
+        }
+    }
+
+    #[test]
+    fn compute_produces_complete_plan() {
+        let cfg = tiny_cfg();
+        let plan = SchedulePlan::compute(&cfg, &crate::loader::LoaderPolicy::solar());
+        assert_eq!(plan.steps.len(), 3);
+        for epoch in &plan.steps {
+            assert_eq!(epoch.len(), cfg.steps_per_epoch());
+            for step in epoch {
+                assert_eq!(step.len(), 2);
+                let total: usize = step.iter().map(|ns| ns.samples.len()).sum();
+                assert_eq!(total, cfg.global_batch());
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_plan() {
+        let cfg = tiny_cfg();
+        let plan = SchedulePlan::compute(&cfg, &crate::loader::LoaderPolicy::solar());
+        let j = plan.to_json();
+        let plan2 = SchedulePlan::from_json(&j).unwrap();
+        assert_eq!(plan.epoch_order, plan2.epoch_order);
+        assert_eq!(plan.steps.len(), plan2.steps.len());
+        for (a, b) in plan.steps.iter().flatten().flatten().zip(plan2.steps.iter().flatten().flatten()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("solar_plan_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        let plan = SchedulePlan::compute(&tiny_cfg(), &crate::loader::LoaderPolicy::solar());
+        plan.save(&path).unwrap();
+        let plan2 = SchedulePlan::load(&path).unwrap();
+        assert_eq!(plan.epoch_order, plan2.epoch_order);
+        assert_eq!(plan.total_pfs_samples(), plan2.total_pfs_samples());
+    }
+
+    #[test]
+    fn pytorch_plan_has_zero_hits() {
+        let plan = SchedulePlan::compute(&tiny_cfg(), &crate::loader::LoaderPolicy::pytorch());
+        for ns in plan.steps.iter().flatten().flatten() {
+            assert_eq!(ns.hits, 0);
+        }
+        assert_eq!(plan.total_pfs_samples(), 3 * 8 * 16); // epochs × steps × G
+    }
+}

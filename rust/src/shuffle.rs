@@ -1,0 +1,135 @@
+//! Pre-determined shuffle lists — SOLAR's first key observation (§4.2.1):
+//! with a fixed seed, the shuffled index list of *every* epoch can be
+//! generated before training, enabling global offline optimization.
+//!
+//! Epoch permutations are generated lazily and independently
+//! (`perm_e = f(seed, e)`), so full-scale datasets (18.9M samples) never
+//! need all epochs resident at once.
+
+use crate::util::rng::Rng;
+
+/// Generator of per-epoch permutations for a fixed (seed, n_samples).
+#[derive(Debug, Clone)]
+pub struct ShuffleSchedule {
+    pub n_samples: usize,
+    pub n_epochs: usize,
+    pub seed: u64,
+}
+
+impl ShuffleSchedule {
+    pub fn new(n_samples: usize, n_epochs: usize, seed: u64) -> ShuffleSchedule {
+        ShuffleSchedule { n_samples, n_epochs, seed }
+    }
+
+    /// The full shuffled index list of epoch `e` (deterministic; epochs are
+    /// independent streams so they can be generated in any order).
+    pub fn epoch_perm(&self, e: usize) -> Vec<u32> {
+        assert!(e < self.n_epochs, "epoch {e} out of range");
+        let mut rng = Rng::new(self.seed).fork(0x5841_0000 + e as u64);
+        rng.permutation(self.n_samples)
+    }
+
+    /// First `k` samples accessed in epoch `e` ("epoch v's first buffer"
+    /// in eq. 1) without materializing the whole permutation... the
+    /// permutation must still be generated, but only the prefix is kept.
+    pub fn epoch_prefix(&self, e: usize, k: usize) -> Vec<u32> {
+        let mut p = self.epoch_perm(e);
+        p.truncate(k.min(self.n_samples));
+        p
+    }
+
+    /// Last `k` samples accessed in epoch `e` ("epoch u's last buffer").
+    pub fn epoch_suffix(&self, e: usize, k: usize) -> Vec<u32> {
+        let p = self.epoch_perm(e);
+        let k = k.min(self.n_samples);
+        p[self.n_samples - k..].to_vec()
+    }
+}
+
+/// View of one epoch's permutation as global batches and node mini-batches,
+/// using the *default* (pre-SOLAR) node-to-sample mapping: the global batch
+/// at step `s` is `perm[s·G .. (s+1)·G]`, and node `k` takes the `k`-th
+/// contiguous block of `B` samples within it.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchView<'a> {
+    pub perm: &'a [u32],
+    pub n_nodes: usize,
+    pub local_batch: usize,
+}
+
+impl<'a> BatchView<'a> {
+    pub fn global_batch(&self) -> usize {
+        self.n_nodes * self.local_batch
+    }
+
+    /// Steps per epoch (drop-last).
+    pub fn steps(&self) -> usize {
+        self.perm.len() / self.global_batch()
+    }
+
+    /// The whole global batch at step `s`.
+    pub fn global(&self, s: usize) -> &'a [u32] {
+        let g = self.global_batch();
+        &self.perm[s * g..(s + 1) * g]
+    }
+
+    /// Node `k`'s default mini-batch at step `s`.
+    pub fn node(&self, s: usize, k: usize) -> &'a [u32] {
+        let g = self.global(s);
+        &g[k * self.local_batch..(k + 1) * self.local_batch]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perms_are_deterministic_and_distinct_per_epoch() {
+        let s = ShuffleSchedule::new(1000, 4, 9);
+        assert_eq!(s.epoch_perm(0), s.epoch_perm(0));
+        assert_ne!(s.epoch_perm(0), s.epoch_perm(1));
+        assert_ne!(s.epoch_perm(1), s.epoch_perm(2));
+    }
+
+    #[test]
+    fn perms_differ_across_seeds() {
+        let a = ShuffleSchedule::new(100, 1, 1).epoch_perm(0);
+        let b = ShuffleSchedule::new(100, 1, 2).epoch_perm(0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn prefix_suffix_consistent_with_full_perm() {
+        let s = ShuffleSchedule::new(500, 2, 3);
+        let p = s.epoch_perm(1);
+        assert_eq!(s.epoch_prefix(1, 50), p[..50].to_vec());
+        assert_eq!(s.epoch_suffix(1, 50), p[450..].to_vec());
+        // k larger than n clamps.
+        assert_eq!(s.epoch_prefix(1, 10_000).len(), 500);
+    }
+
+    #[test]
+    fn batch_view_partitions_epoch() {
+        let s = ShuffleSchedule::new(1030, 1, 5);
+        let perm = s.epoch_perm(0);
+        let v = BatchView { perm: &perm, n_nodes: 4, local_batch: 16 };
+        assert_eq!(v.steps(), 1030 / 64);
+        let mut seen = std::collections::HashSet::new();
+        for st in 0..v.steps() {
+            let g = v.global(st);
+            assert_eq!(g.len(), 64);
+            // node blocks tile the global batch
+            let mut rebuilt = vec![];
+            for k in 0..4 {
+                rebuilt.extend_from_slice(v.node(st, k));
+            }
+            assert_eq!(rebuilt, g);
+            for &x in g {
+                assert!(seen.insert(x), "duplicate {x}");
+            }
+        }
+        // drop-last: the tail of the permutation is unused
+        assert_eq!(seen.len(), (1030 / 64) * 64);
+    }
+}

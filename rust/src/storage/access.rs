@@ -1,0 +1,274 @@
+//! The four HDF5 access patterns of §4.4 / Table 3, as request-sequence
+//! generators (for the cost model) and as real-file readers (for wall-time
+//! measurement in `examples/io_patterns.rs`).
+//!
+//! Patterns, quoting the paper:
+//! 1. **Random access** — a process reads one sample at a random position
+//!    until all samples have been accessed once.
+//! 2. **Sequential-stride access** — iteratively read samples with a fixed
+//!    stride.
+//! 3. **Chunk-cycle loading** — load samples one by one within the
+//!    process's assigned chunk.
+//! 4. **Full-chunk loading** — load the whole assigned chunk in one go.
+
+use anyhow::Result;
+
+use crate::storage::pfs::{CostModel, ReadReq};
+use crate::storage::shdf::ShdfReader;
+use crate::util::rng::Rng;
+
+/// Which §4.4 access pattern to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessPattern {
+    Random,
+    SequentialStride,
+    ChunkCycle,
+    FullChunk,
+}
+
+impl AccessPattern {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AccessPattern::Random => "Random Access",
+            AccessPattern::SequentialStride => "Sequential Stride Access",
+            AccessPattern::ChunkCycle => "Chunk Cycle Loading",
+            AccessPattern::FullChunk => "Full Chunk Loading",
+        }
+    }
+
+    pub fn all() -> [AccessPattern; 4] {
+        [
+            AccessPattern::Random,
+            AccessPattern::SequentialStride,
+            AccessPattern::ChunkCycle,
+            AccessPattern::FullChunk,
+        ]
+    }
+}
+
+/// Workload description for one reading process.
+#[derive(Debug, Clone)]
+pub struct PatternWorkload {
+    /// Total samples in the container.
+    pub n_samples: usize,
+    /// Bytes per sample.
+    pub sample_bytes: usize,
+    /// Data-region start offset within the file.
+    pub data_start: u64,
+    /// Number of parallel reader processes (each gets 1/nth of the work).
+    pub n_procs: usize,
+    /// This process's rank.
+    pub rank: usize,
+    /// Stride for SequentialStride (in samples); the paper uses the number
+    /// of processes as the stride (round-robin assignment).
+    pub stride: usize,
+}
+
+impl PatternWorkload {
+    /// The sample indices this rank reads, in access order.
+    pub fn indices(&self, pattern: AccessPattern, rng: &mut Rng) -> Vec<usize> {
+        let per = self.n_samples / self.n_procs;
+        match pattern {
+            AccessPattern::Random => {
+                // Round-robin ownership, visited in random order.
+                let mut own: Vec<usize> =
+                    (0..self.n_samples).filter(|i| i % self.n_procs == self.rank).collect();
+                rng.shuffle(&mut own);
+                own
+            }
+            AccessPattern::SequentialStride => {
+                // Round-robin ownership visited in increasing order: the
+                // process touches every `stride`-th sample.
+                (0..self.n_samples).filter(|i| i % self.stride == self.rank % self.stride).collect()
+            }
+            AccessPattern::ChunkCycle | AccessPattern::FullChunk => {
+                // Contiguous chunk ownership.
+                let start = self.rank * per;
+                let end = if self.rank == self.n_procs - 1 { self.n_samples } else { start + per };
+                (start..end).collect()
+            }
+        }
+    }
+
+    /// The PFS request sequence for this rank under `pattern`.
+    pub fn requests(&self, pattern: AccessPattern, rng: &mut Rng) -> Vec<ReadReq> {
+        let idx = self.indices(pattern, rng);
+        let sb = self.sample_bytes as u64;
+        match pattern {
+            AccessPattern::FullChunk => {
+                if idx.is_empty() {
+                    return vec![];
+                }
+                // One request covering the whole assigned chunk.
+                let first = *idx.first().unwrap() as u64;
+                vec![ReadReq { offset: self.data_start + first * sb, len: idx.len() as u64 * sb }]
+            }
+            _ => idx
+                .iter()
+                .map(|&i| ReadReq { offset: self.data_start + i as u64 * sb, len: sb })
+                .collect(),
+        }
+    }
+
+    /// Modeled I/O time for this rank.
+    pub fn modeled_time(&self, pattern: AccessPattern, model: &CostModel, rng: &mut Rng) -> f64 {
+        model.pfs_sequence(&self.requests(pattern, rng))
+    }
+}
+
+/// Modeled I/O time for `n_procs` parallel readers = max over ranks
+/// (the paper reports the slowest process; all must finish).
+pub fn modeled_parallel_time(
+    n_samples: usize,
+    sample_bytes: usize,
+    n_procs: usize,
+    pattern: AccessPattern,
+    model: &CostModel,
+    seed: u64,
+) -> f64 {
+    let mut worst: f64 = 0.0;
+    for rank in 0..n_procs {
+        let w = PatternWorkload {
+            n_samples,
+            sample_bytes,
+            data_start: 4108, // SHDF header size; exact value irrelevant to the model
+            n_procs,
+            rank,
+            stride: n_procs,
+        };
+        let mut rng = Rng::new(seed).fork(rank as u64);
+        worst = worst.max(w.modeled_time(pattern, model, &mut rng));
+    }
+    worst
+}
+
+/// Execute a pattern against a real SHDF file and return (wall seconds,
+/// bytes read, checksum). The checksum forces the reads to really happen.
+pub fn measured_time(
+    reader: &mut ShdfReader,
+    pattern: AccessPattern,
+    n_procs: usize,
+    rank: usize,
+    seed: u64,
+) -> Result<(f64, u64, u64)> {
+    let w = PatternWorkload {
+        n_samples: reader.n_samples(),
+        sample_bytes: reader.sample_bytes(),
+        data_start: 0,
+        n_procs,
+        rank,
+        stride: n_procs,
+    };
+    let mut rng = Rng::new(seed).fork(rank as u64);
+    let idx = w.indices(pattern, &mut rng);
+    let t = std::time::Instant::now();
+    let mut bytes = 0u64;
+    let mut checksum = 0u64;
+    match pattern {
+        AccessPattern::FullChunk => {
+            if let (Some(&first), len) = (idx.first(), idx.len()) {
+                let buf = reader.read_range(first, len)?;
+                bytes += buf.len() as u64;
+                checksum = checksum.wrapping_add(buf.iter().map(|&b| b as u64).sum::<u64>());
+            }
+        }
+        _ => {
+            let mut buf = vec![0u8; reader.sample_bytes()];
+            for &i in &idx {
+                reader.read_sample_into(i, &mut buf)?;
+                bytes += buf.len() as u64;
+                checksum = checksum.wrapping_add(buf[0] as u64).wrapping_add(buf[buf.len() - 1] as u64);
+            }
+        }
+    }
+    Ok((t.elapsed().as_secs_f64(), bytes, checksum))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workload(rank: usize) -> PatternWorkload {
+        PatternWorkload { n_samples: 64, sample_bytes: 100, data_start: 0, n_procs: 4, rank, stride: 4 }
+    }
+
+    #[test]
+    fn every_pattern_covers_all_samples_across_ranks() {
+        for pattern in AccessPattern::all() {
+            let mut seen = vec![false; 64];
+            for rank in 0..4 {
+                let mut rng = Rng::new(9).fork(rank as u64);
+                for i in workload(rank).indices(pattern, &mut rng) {
+                    assert!(!seen[i], "{:?}: duplicate {i}", pattern);
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{:?}: missing samples", pattern);
+        }
+    }
+
+    #[test]
+    fn full_chunk_is_one_request() {
+        let mut rng = Rng::new(1);
+        let reqs = workload(1).requests(AccessPattern::FullChunk, &mut rng);
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].offset, 16 * 100);
+        assert_eq!(reqs[0].len, 16 * 100);
+    }
+
+    #[test]
+    fn chunk_cycle_requests_are_contiguous() {
+        let mut rng = Rng::new(1);
+        let reqs = workload(2).requests(AccessPattern::ChunkCycle, &mut rng);
+        assert_eq!(reqs.len(), 16);
+        for k in 1..reqs.len() {
+            assert_eq!(reqs[k].offset, reqs[k - 1].offset + reqs[k - 1].len);
+        }
+    }
+
+    #[test]
+    fn modeled_ordering_matches_paper_table3() {
+        // random > seq-stride > chunk-cycle > full-chunk
+        let m = CostModel::default();
+        let t = |p| modeled_parallel_time(4096, 65536, 4, p, &m, 7);
+        let rand = t(AccessPattern::Random);
+        let stride = t(AccessPattern::SequentialStride);
+        let cycle = t(AccessPattern::ChunkCycle);
+        let full = t(AccessPattern::FullChunk);
+        assert!(rand > stride, "rand={rand} stride={stride}");
+        assert!(stride > cycle, "stride={stride} cycle={cycle}");
+        assert!(cycle > full, "cycle={cycle} full={full}");
+        // Headline gap should be in the paper's ballpark (203×); accept a
+        // generous band since sample count differs from the paper's run.
+        let gap = rand / full;
+        assert!(gap > 60.0 && gap < 800.0, "random/full gap {gap}");
+    }
+
+    #[test]
+    fn measured_patterns_read_identical_byte_totals() {
+        use crate::storage::shdf::{ShdfHeader, ShdfWriter};
+        let dir = std::env::temp_dir().join("solar_access_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("patterns.shdf");
+        let mut w = ShdfWriter::create(
+            &path,
+            ShdfHeader { n_samples: 0, sample_bytes: 64, shape: vec![16], dtype: "f32".into(), name: "t".into() },
+        )
+        .unwrap();
+        for i in 0..32 {
+            w.append_f32(&vec![i as f32; 16]).unwrap();
+        }
+        w.finish().unwrap();
+        let mut totals = vec![];
+        for pattern in AccessPattern::all() {
+            let mut bytes = 0;
+            for rank in 0..2 {
+                let mut r = ShdfReader::open(&path).unwrap();
+                let (_, b, _) = measured_time(&mut r, pattern, 2, rank, 3).unwrap();
+                bytes += b;
+            }
+            totals.push(bytes);
+        }
+        assert!(totals.iter().all(|&b| b == 32 * 64), "{totals:?}");
+    }
+}

@@ -1,0 +1,6 @@
+//! Storage substrate: the SHDF container format (HDF5 stand-in), the PFS
+//! cost model (Lustre stand-in), and the §4.4 access-pattern machinery.
+
+pub mod access;
+pub mod pfs;
+pub mod shdf;

@@ -1,0 +1,378 @@
+//! SHDF — "Scientific HDF-like" container format.
+//!
+//! The paper stores training samples in HDF5 files; the property SOLAR
+//! exploits (§4.4) is layout-level: *one large contiguous read is far
+//! cheaper than many small random reads*. SHDF reproduces exactly those
+//! semantics in a self-contained format so the repo has no native-library
+//! dependency:
+//!
+//! ```text
+//! [magic "SHDF0001"][u32 header_len][header JSON][sample 0][sample 1]...
+//! ```
+//!
+//! Samples are fixed-size and stored contiguously in index order, so the
+//! byte range of sample `i` is computable without an index lookup — the
+//! same as an HDF5 dataset with contiguous layout. The reader exposes both
+//! per-sample reads and range (chunk) reads; all reads report the byte
+//! ranges they touched so the PFS cost model can charge them.
+
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+pub const MAGIC: &[u8; 8] = b"SHDF0001";
+
+/// Container metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShdfHeader {
+    /// Number of samples in the container.
+    pub n_samples: usize,
+    /// Bytes per sample (fixed-size records).
+    pub sample_bytes: usize,
+    /// Logical tensor shape of one sample (e.g. [1, 64, 64]).
+    pub shape: Vec<usize>,
+    /// Element dtype; only "f32" is produced today.
+    pub dtype: String,
+    /// Free-form dataset name.
+    pub name: String,
+}
+
+impl ShdfHeader {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("n_samples", Json::Num(self.n_samples as f64))
+            .set("sample_bytes", Json::Num(self.sample_bytes as f64))
+            .set("shape", Json::arr_usize(&self.shape))
+            .set("dtype", Json::Str(self.dtype.clone()))
+            .set("name", Json::Str(self.name.clone()));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShdfHeader> {
+        Ok(ShdfHeader {
+            n_samples: j.req_usize("n_samples")?,
+            sample_bytes: j.req_usize("sample_bytes")?,
+            shape: j
+                .get("shape")
+                .and_then(Json::arr_as_usize)
+                .context("header missing 'shape'")?,
+            dtype: j.req_str("dtype")?.to_string(),
+            name: j.req_str("name")?.to_string(),
+        })
+    }
+
+    /// Sanity: shape element count × 4 (f32) must equal sample_bytes.
+    pub fn validate(&self) -> Result<()> {
+        if self.dtype != "f32" {
+            bail!("unsupported dtype {}", self.dtype);
+        }
+        let elems: usize = self.shape.iter().product();
+        if elems * 4 != self.sample_bytes {
+            bail!(
+                "shape {:?} ({} elems × 4B) inconsistent with sample_bytes {}",
+                self.shape,
+                elems,
+                self.sample_bytes
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Streaming writer: create → append samples → finish (patches the count).
+pub struct ShdfWriter {
+    w: BufWriter<File>,
+    header: ShdfHeader,
+    written: usize,
+    data_start: u64,
+    path: PathBuf,
+}
+
+impl ShdfWriter {
+    /// Create a container. `header.n_samples` is advisory; the actual count
+    /// is patched on [`finish`].
+    pub fn create(path: &Path, header: ShdfHeader) -> Result<ShdfWriter> {
+        header.validate()?;
+        let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        let hjson = header.to_json().to_string_compact();
+        // Pad the header region so the patched count can't change its length:
+        // we rewrite the whole header at finish with the same byte length by
+        // padding with spaces to a fixed 4096-byte region.
+        let mut hbytes = hjson.into_bytes();
+        if hbytes.len() > 4096 {
+            bail!("header too large");
+        }
+        hbytes.resize(4096, b' ');
+        w.write_all(MAGIC)?;
+        w.write_all(&(hbytes.len() as u32).to_le_bytes())?;
+        w.write_all(&hbytes)?;
+        let data_start = (MAGIC.len() + 4 + hbytes.len()) as u64;
+        Ok(ShdfWriter { w, header, written: 0, data_start, path: path.to_path_buf() })
+    }
+
+    pub fn data_start(&self) -> u64 {
+        self.data_start
+    }
+
+    /// Append one sample; must be exactly `sample_bytes` long.
+    pub fn append(&mut self, sample: &[u8]) -> Result<()> {
+        if sample.len() != self.header.sample_bytes {
+            bail!("sample is {} bytes, expected {}", sample.len(), self.header.sample_bytes);
+        }
+        self.w.write_all(sample)?;
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Append one f32 sample.
+    pub fn append_f32(&mut self, sample: &[f32]) -> Result<()> {
+        if sample.len() * 4 != self.header.sample_bytes {
+            bail!("sample is {} f32s, expected {}", sample.len(), self.header.sample_bytes / 4);
+        }
+        let mut bytes = Vec::with_capacity(sample.len() * 4);
+        for &x in sample {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        self.append(&bytes)
+    }
+
+    /// Flush and patch the true sample count into the header.
+    pub fn finish(mut self) -> Result<ShdfHeader> {
+        self.w.flush()?;
+        let mut f = self.w.into_inner().context("flush")?;
+        self.header.n_samples = self.written;
+        let mut hbytes = self.header.to_json().to_string_compact().into_bytes();
+        hbytes.resize(4096, b' ');
+        f.seek(SeekFrom::Start((MAGIC.len() + 4) as u64))?;
+        f.write_all(&hbytes)?;
+        f.sync_all().with_context(|| format!("sync {}", self.path.display()))?;
+        Ok(self.header)
+    }
+}
+
+/// Reader with positioned reads; also reports byte ranges for cost charging.
+pub struct ShdfReader {
+    f: File,
+    header: ShdfHeader,
+    data_start: u64,
+}
+
+impl ShdfReader {
+    pub fn open(path: &Path) -> Result<ShdfReader> {
+        let mut f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not an SHDF file", path.display());
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as usize;
+        if hlen > 1 << 20 {
+            bail!("implausible header length {hlen}");
+        }
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let text = String::from_utf8(hbytes).context("header utf-8")?;
+        let header = ShdfHeader::from_json(&Json::parse(text.trim_end()).context("header json")?)?;
+        header.validate()?;
+        let data_start = (8 + 4 + hlen) as u64;
+        Ok(ShdfReader { f, header, data_start })
+    }
+
+    pub fn header(&self) -> &ShdfHeader {
+        &self.header
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.header.n_samples
+    }
+
+    pub fn sample_bytes(&self) -> usize {
+        self.header.sample_bytes
+    }
+
+    /// Byte offset of sample `i` within the file.
+    pub fn offset_of(&self, i: usize) -> u64 {
+        self.data_start + (i as u64) * self.header.sample_bytes as u64
+    }
+
+    /// Read one sample into `buf` (must be `sample_bytes` long).
+    pub fn read_sample_into(&mut self, i: usize, buf: &mut [u8]) -> Result<()> {
+        if i >= self.header.n_samples {
+            bail!("sample index {i} out of range ({} samples)", self.header.n_samples);
+        }
+        assert_eq!(buf.len(), self.header.sample_bytes);
+        self.f.seek(SeekFrom::Start(self.offset_of(i)))?;
+        self.f.read_exact(buf)?;
+        Ok(())
+    }
+
+    /// Read one sample, allocating.
+    pub fn read_sample(&mut self, i: usize) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; self.header.sample_bytes];
+        self.read_sample_into(i, &mut buf)?;
+        Ok(buf)
+    }
+
+    /// Read `count` consecutive samples starting at `start` in ONE request
+    /// (the "full chunk loading" pattern of §4.4).
+    pub fn read_range_into(&mut self, start: usize, count: usize, buf: &mut [u8]) -> Result<()> {
+        if start + count > self.header.n_samples {
+            bail!("range [{start}, {}) out of range", start + count);
+        }
+        assert_eq!(buf.len(), count * self.header.sample_bytes);
+        self.f.seek(SeekFrom::Start(self.offset_of(start)))?;
+        self.f.read_exact(buf)?;
+        Ok(())
+    }
+
+    pub fn read_range(&mut self, start: usize, count: usize) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; count * self.header.sample_bytes];
+        self.read_range_into(start, count, &mut buf)?;
+        Ok(buf)
+    }
+
+    /// Decode a sample byte buffer as f32 (little-endian).
+    pub fn decode_f32(bytes: &[u8]) -> Vec<f32> {
+        bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("solar_shdf_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample(i: usize, n: usize) -> Vec<f32> {
+        (0..n).map(|j| (i * 1000 + j) as f32).collect()
+    }
+
+    fn write_test_file(path: &Path, n_samples: usize, elems: usize) -> ShdfHeader {
+        let header = ShdfHeader {
+            n_samples,
+            sample_bytes: elems * 4,
+            shape: vec![elems],
+            dtype: "f32".into(),
+            name: "test".into(),
+        };
+        let mut w = ShdfWriter::create(path, header).unwrap();
+        for i in 0..n_samples {
+            w.append_f32(&sample(i, elems)).unwrap();
+        }
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn roundtrip_header_and_samples() {
+        let path = tmpfile("roundtrip.shdf");
+        let h = write_test_file(&path, 10, 16);
+        assert_eq!(h.n_samples, 10);
+        let mut r = ShdfReader::open(&path).unwrap();
+        assert_eq!(r.header().shape, vec![16]);
+        for i in 0..10 {
+            let got = ShdfReader::decode_f32(&r.read_sample(i).unwrap());
+            assert_eq!(got, sample(i, 16));
+        }
+    }
+
+    #[test]
+    fn range_read_matches_individual_reads() {
+        let path = tmpfile("range.shdf");
+        write_test_file(&path, 20, 8);
+        let mut r = ShdfReader::open(&path).unwrap();
+        let chunk = r.read_range(5, 10).unwrap();
+        for k in 0..10 {
+            let got = ShdfReader::decode_f32(&chunk[k * 32..(k + 1) * 32]);
+            assert_eq!(got, sample(5 + k, 8));
+        }
+    }
+
+    #[test]
+    fn count_patched_on_finish() {
+        let path = tmpfile("patch.shdf");
+        let header = ShdfHeader {
+            n_samples: 9999, // wrong on purpose
+            sample_bytes: 8,
+            shape: vec![2],
+            dtype: "f32".into(),
+            name: "t".into(),
+        };
+        let mut w = ShdfWriter::create(&path, header).unwrap();
+        w.append_f32(&[1.0, 2.0]).unwrap();
+        w.append_f32(&[3.0, 4.0]).unwrap();
+        let h = w.finish().unwrap();
+        assert_eq!(h.n_samples, 2);
+        let r = ShdfReader::open(&path).unwrap();
+        assert_eq!(r.n_samples(), 2);
+    }
+
+    #[test]
+    fn rejects_wrong_sample_size() {
+        let path = tmpfile("wrongsize.shdf");
+        let header = ShdfHeader {
+            n_samples: 1,
+            sample_bytes: 8,
+            shape: vec![2],
+            dtype: "f32".into(),
+            name: "t".into(),
+        };
+        let mut w = ShdfWriter::create(&path, header).unwrap();
+        assert!(w.append_f32(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_reads() {
+        let path = tmpfile("oob.shdf");
+        write_test_file(&path, 3, 4);
+        let mut r = ShdfReader::open(&path).unwrap();
+        assert!(r.read_sample(3).is_err());
+        assert!(r.read_range(2, 2).is_err());
+    }
+
+    #[test]
+    fn rejects_non_shdf_file() {
+        let path = tmpfile("not_shdf.bin");
+        std::fs::write(&path, b"definitely not an shdf file").unwrap();
+        assert!(ShdfReader::open(&path).is_err());
+    }
+
+    #[test]
+    fn header_validation() {
+        let bad = ShdfHeader {
+            n_samples: 1,
+            sample_bytes: 7, // not 4 × elems
+            shape: vec![2],
+            dtype: "f32".into(),
+            name: "t".into(),
+        };
+        assert!(bad.validate().is_err());
+        let bad_dtype = ShdfHeader {
+            n_samples: 1,
+            sample_bytes: 8,
+            shape: vec![2],
+            dtype: "f64".into(),
+            name: "t".into(),
+        };
+        assert!(bad_dtype.validate().is_err());
+    }
+
+    #[test]
+    fn offsets_are_contiguous() {
+        let path = tmpfile("offsets.shdf");
+        write_test_file(&path, 5, 4);
+        let r = ShdfReader::open(&path).unwrap();
+        for i in 1..5 {
+            assert_eq!(r.offset_of(i) - r.offset_of(i - 1), 16);
+        }
+    }
+}

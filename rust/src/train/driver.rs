@@ -1,0 +1,377 @@
+//! The distributed training driver — real bytes, real gradients.
+//!
+//! Topology: one coordinator (this thread) + `n_nodes` worker threads.
+//! Each worker owns a PJRT CPU client + compiled training-step executable
+//! (the `xla` handles are not `Send`, so they are constructed inside the
+//! worker), its own SHDF file handle, and an in-memory byte buffer that
+//! mirrors the loader engine's buffer decisions exactly (`inserted` /
+//! `evicted` lists in each `NodeStepLoad`).
+//!
+//! Per step: the engine emits the step's `StepLoad`; the coordinator ships
+//! each node its work + a parameter snapshot; workers load bytes (buffer
+//! hits from memory, PFS fetches from the file, optionally throttled by the
+//! cost model to emulate Lustre), execute the AOT'd grads, and return
+//! summed gradients; the coordinator allreduces, divides by the global
+//! valid count, applies SGD — exactly the synchronous data parallelism of
+//! eq. 3, with SOLAR's within-global-batch reshuffles provably invisible to
+//! the final gradient.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::data::synth;
+use crate::loader::engine::{LoaderEngine, NodeStepLoad};
+use crate::loader::LoaderPolicy;
+use crate::runtime::executable::{DenseImpl, TrainRuntime};
+use crate::runtime::params::{GradAccum, ParamStore};
+use crate::storage::shdf::ShdfReader;
+use crate::train::metrics::{LossPoint, TrainReport};
+use crate::util::timer::Stopwatch;
+
+/// Driver configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub run: RunConfig,
+    pub dataset_path: PathBuf,
+    pub artifacts_dir: PathBuf,
+    pub policy: LoaderPolicy,
+    pub dense: DenseImpl,
+    pub lr: f32,
+    /// Inject cost-model PFS delays on real reads (emulates Lustre; makes
+    /// loading dominate like the paper's testbed). 0.0 disables.
+    pub throttle: f64,
+    /// Evaluate the held-out batch every this many steps (0 = never).
+    pub eval_every: usize,
+    /// Cap on total steps (0 = run all epochs).
+    pub max_steps: usize,
+    /// Number of trailing samples held out for validation.
+    pub holdout: usize,
+}
+
+type Params = Arc<Vec<Vec<f32>>>;
+
+enum WorkMsg {
+    Step { step_id: usize, params: Params, load: NodeStepLoad },
+    Eval { params: Params, ids: Vec<u32> },
+    Stop,
+}
+
+struct DoneMsg {
+    #[allow(dead_code)]
+    node: usize,
+    step_id: usize,
+    loss_sum: f64,
+    n_valid: f64,
+    grads: Option<Vec<Vec<f32>>>,
+    load_wall_s: f64,
+    exec_wall_s: f64,
+}
+
+/// Run distributed training; returns the loss curve + timing breakdown.
+pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
+    let n_nodes = tc.run.n_nodes;
+    let mut engine = LoaderEngine::new(tc.run.clone(), tc.policy.clone());
+    {
+        // Align engine request offsets with the real file layout.
+        let reader = ShdfReader::open(&tc.dataset_path)?;
+        if reader.n_samples() < tc.run.spec.n_samples + tc.holdout {
+            bail!(
+                "dataset has {} samples; config wants {} + {} holdout",
+                reader.n_samples(),
+                tc.run.spec.n_samples,
+                tc.holdout
+            );
+        }
+        engine.set_data_start(reader.offset_of(0));
+    }
+
+    // Spawn workers.
+    let mut to_workers: Vec<mpsc::Sender<WorkMsg>> = Vec::with_capacity(n_nodes);
+    let (done_tx, done_rx) = mpsc::channel::<Result<DoneMsg>>();
+    let mut handles = Vec::with_capacity(n_nodes);
+    for k in 0..n_nodes {
+        let (tx, rx) = mpsc::channel::<WorkMsg>();
+        to_workers.push(tx);
+        let done = done_tx.clone();
+        let dataset_path = tc.dataset_path.clone();
+        let artifacts_dir = tc.artifacts_dir.clone();
+        let dense = tc.dense;
+        let throttle = tc.throttle;
+        let cost = tc.run.cost.clone();
+        handles.push(std::thread::spawn(move || {
+            worker_loop(k, rx, done, &dataset_path, &artifacts_dir, dense, throttle, cost)
+        }));
+    }
+    drop(done_tx);
+
+    // Coordinator state.
+    let manifest = crate::runtime::manifest::Manifest::load(&tc.artifacts_dir)?;
+    let mut store = ParamStore::load_init(&manifest)?;
+    let holdout_ids: Vec<u32> = {
+        let reader = ShdfReader::open(&tc.dataset_path)?;
+        let n = reader.n_samples();
+        ((n - tc.holdout.min(n)) as u32..n as u32).collect()
+    };
+
+    let mut report = TrainReport { loader: tc.policy.name.clone(), ..Default::default() };
+    let wall = Stopwatch::start();
+    let mut global_step = 0usize;
+
+
+    'epochs: for pos in 0..tc.run.n_epochs {
+        let mut step_loads: Vec<crate::loader::engine::StepLoad> = Vec::new();
+        engine.run_epoch(pos, |_, sl| step_loads.push(sl.clone()));
+        for sl in step_loads {
+            let params: Params = Arc::new(store.tensors.clone());
+            for (k, nl) in sl.nodes.iter().enumerate() {
+                to_workers[k]
+                    .send(WorkMsg::Step { step_id: global_step, params: params.clone(), load: nl.clone() })
+                    .context("worker channel closed")?;
+                report.pfs_samples += nl.pfs_samples;
+                report.hits += nl.hits;
+            }
+            // Allreduce.
+            let mut acc = GradAccum::zeros_like(&store);
+            let mut max_load = 0.0f64;
+            let mut max_exec = 0.0f64;
+            for _ in 0..n_nodes {
+                let d = done_rx.recv().context("worker died")??;
+                debug_assert_eq!(d.step_id, global_step);
+                if let Some(g) = &d.grads {
+                    acc.add(g, d.loss_sum, d.n_valid);
+                }
+                max_load = max_load.max(d.load_wall_s);
+                max_exec = max_exec.max(d.exec_wall_s);
+            }
+            report.load_wall_s += max_load;
+            report.comp_wall_s += max_exec;
+            let mean_loss = acc.finalize();
+            store.sgd_step(&acc.grads, tc.lr);
+
+            // Validation (worker 0 evaluates the holdout).
+            let mut val_loss = f64::NAN;
+            if tc.eval_every > 0 && global_step % tc.eval_every == 0 && !holdout_ids.is_empty() {
+                let params: Params = Arc::new(store.tensors.clone());
+                to_workers[0]
+                    .send(WorkMsg::Eval { params, ids: holdout_ids.clone() })
+                    .context("worker channel closed")?;
+                let d = done_rx.recv().context("worker died")??;
+                val_loss = d.loss_sum / d.n_valid.max(1.0);
+            }
+            report.points.push(LossPoint {
+                step: global_step,
+                epoch: pos,
+                wall_s: wall.elapsed_s(),
+                train_loss: mean_loss,
+                val_loss,
+            });
+            global_step += 1;
+            if tc.max_steps > 0 && global_step >= tc.max_steps {
+                report.epochs = pos + 1;
+                break 'epochs;
+            }
+        }
+        report.epochs = pos + 1;
+    }
+    report.steps = global_step;
+    report.total_wall_s = wall.elapsed_s();
+    report.final_params = store.tensors.clone();
+
+    for tx in &to_workers {
+        let _ = tx.send(WorkMsg::Stop);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+    }
+    Ok(report)
+}
+
+/// Worker: owns PJRT runtime, file handle, and its byte buffer.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    node: usize,
+    rx: mpsc::Receiver<WorkMsg>,
+    done: mpsc::Sender<Result<DoneMsg>>,
+    dataset_path: &std::path::Path,
+    artifacts_dir: &std::path::Path,
+    dense: DenseImpl,
+    throttle: f64,
+    cost: crate::storage::pfs::CostModel,
+) -> Result<()> {
+    let result = (|| -> Result<()> {
+        let rt = TrainRuntime::load(artifacts_dir, dense, false)?;
+        let mut reader = ShdfReader::open(dataset_path)?;
+        let mut buffer: HashMap<u32, Arc<Vec<f32>>> = HashMap::new();
+        let b = rt.manifest.batch;
+        let img = rt.manifest.img;
+        let rec_elems = synth::RECORD_ELEMS;
+        let sb = reader.sample_bytes() as u64;
+
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                WorkMsg::Stop => break,
+                WorkMsg::Eval { params, ids } => {
+                    let store = ParamStore::from_tensors((*params).clone());
+                    let mut loss_sum = 0.0f64;
+                    let mut n_valid = 0.0f64;
+                    for group in ids.chunks(b) {
+                        let (x, y, mask, nv) = assemble_batch(&mut reader, &buffer, group, b, img, rec_elems)?;
+                        let out = rt.grads(&store, &x, &y, &mask)?;
+                        loss_sum += out.loss_sum as f64;
+                        n_valid += nv;
+                    }
+                    done.send(Ok(DoneMsg {
+                        node,
+                        step_id: usize::MAX,
+                        loss_sum,
+                        n_valid,
+                        grads: None,
+                        load_wall_s: 0.0,
+                        exec_wall_s: 0.0,
+                    }))
+                    .ok();
+                }
+                WorkMsg::Step { step_id, params, load } => {
+                    let store = ParamStore::from_tensors((*params).clone());
+                    // ---- data loading (throttled PFS + buffer hits) ----
+                    let t_load = Stopwatch::start();
+                    // Fetch PFS chunks/samples and stage them.
+                    let mut staged: HashMap<u32, Arc<Vec<f32>>> = HashMap::new();
+                    let mut modeled = 0.0f64;
+                    if !load.chunks.is_empty() {
+                        let mut pos: Option<u64> = None;
+                        for c in &load.chunks {
+                            let bytes = reader.read_range(c.lo as usize, c.span() as usize)?;
+                            let offset = reader.offset_of(c.lo as usize);
+                            let jump = pos.map(|p| p.abs_diff(offset)).unwrap_or(0);
+                            modeled += cost.pfs_read(c.span() as u64 * sb, jump);
+                            pos = Some(offset + c.span() as u64 * sb);
+                            for (i, rec) in bytes.chunks_exact(sb as usize).enumerate() {
+                                staged.insert(c.lo + i as u32, Arc::new(ShdfReader::decode_f32(rec)));
+                            }
+                        }
+                    } else {
+                        let mut pos: Option<u64> = None;
+                        for &x in load.samples.iter().filter(|&&x| !buffer.contains_key(&x)) {
+                            let bytes = reader.read_sample(x as usize)?;
+                            let offset = reader.offset_of(x as usize);
+                            let jump = pos.map(|p| p.abs_diff(offset)).unwrap_or(0);
+                            modeled += cost.pfs_read(sb, jump);
+                            pos = Some(offset + sb);
+                            staged.insert(x, Arc::new(ShdfReader::decode_f32(&bytes)));
+                        }
+                    }
+                    // Throttle: emulate the PFS by sleeping out the modeled
+                    // time not already spent on the real read.
+                    if throttle > 0.0 {
+                        let spent = t_load.elapsed_s();
+                        let want = modeled * throttle;
+                        if want > spent {
+                            std::thread::sleep(std::time::Duration::from_secs_f64(want - spent));
+                        }
+                    }
+                    // Mirror the engine's buffer decisions.
+                    for &x in &load.inserted {
+                        if let Some(v) = staged.get(&x) {
+                            buffer.insert(x, v.clone());
+                        }
+                    }
+                    for &x in &load.evicted {
+                        buffer.remove(&x);
+                    }
+                    // ---- assemble batch (buffer + staged) ----
+                    let mut get = |x: u32| -> Result<Arc<Vec<f32>>> {
+                        if let Some(v) = staged.get(&x) {
+                            return Ok(v.clone());
+                        }
+                        if let Some(v) = buffer.get(&x) {
+                            return Ok(v.clone());
+                        }
+                        // Engine said hit but bytes are gone (shouldn't
+                        // happen): re-read to stay correct.
+                        Ok(Arc::new(ShdfReader::decode_f32(&reader.read_sample(x as usize)?)))
+                    };
+                    let img2 = img * img;
+                    let mut loss_sum = 0.0f64;
+                    let mut n_valid_total = 0.0f64;
+                    let mut grads_total: Option<Vec<Vec<f32>>> = None;
+                    let load_wall_s = t_load.elapsed_s();
+                    let t_exec = Stopwatch::start();
+                    for group in load.samples.chunks(b) {
+                        let mut x = vec![0.0f32; b * img2];
+                        let mut y = vec![0.0f32; b * 2 * img2];
+                        let mut mask = vec![0.0f32; b];
+                        for (i, &sid) in group.iter().enumerate() {
+                            let rec = get(sid)?;
+                            let (xs, ys) = synth::split_record(&rec);
+                            x[i * img2..(i + 1) * img2].copy_from_slice(xs);
+                            y[i * 2 * img2..(i + 1) * 2 * img2].copy_from_slice(ys);
+                            mask[i] = 1.0;
+                            n_valid_total += 1.0;
+                        }
+                        let out = rt.grads(&store, &x, &y, &mask)?;
+                        loss_sum += out.loss_sum as f64;
+                        grads_total = Some(match grads_total.take() {
+                            None => out.grads,
+                            Some(mut acc) => {
+                                for (a, g) in acc.iter_mut().zip(out.grads.iter()) {
+                                    for (ai, gi) in a.iter_mut().zip(g.iter()) {
+                                        *ai += gi;
+                                    }
+                                }
+                                acc
+                            }
+                        });
+                    }
+                    done.send(Ok(DoneMsg {
+                        node,
+                        step_id,
+                        loss_sum,
+                        n_valid: n_valid_total,
+                        grads: Some(grads_total.unwrap_or_default()),
+                        load_wall_s,
+                        exec_wall_s: t_exec.elapsed_s(),
+                    }))
+                    .ok();
+                }
+            }
+        }
+        Ok(())
+    })();
+    if let Err(e) = &result {
+        let _ = done.send(Err(anyhow::anyhow!("worker {node}: {e:#}")));
+    }
+    result
+}
+
+/// Assemble an eval batch straight from the file/buffer (no staging).
+fn assemble_batch(
+    reader: &mut ShdfReader,
+    buffer: &HashMap<u32, Arc<Vec<f32>>>,
+    ids: &[u32],
+    b: usize,
+    img: usize,
+    _rec_elems: usize,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f64)> {
+    let img2 = img * img;
+    let mut x = vec![0.0f32; b * img2];
+    let mut y = vec![0.0f32; b * 2 * img2];
+    let mut mask = vec![0.0f32; b];
+    let mut nv = 0.0;
+    for (i, &sid) in ids.iter().enumerate().take(b) {
+        let rec = match buffer.get(&sid) {
+            Some(v) => v.clone(),
+            None => Arc::new(ShdfReader::decode_f32(&reader.read_sample(sid as usize)?)),
+        };
+        let (xs, ys) = synth::split_record(&rec);
+        x[i * img2..(i + 1) * img2].copy_from_slice(xs);
+        y[i * 2 * img2..(i + 1) * 2 * img2].copy_from_slice(ys);
+        mask[i] = 1.0;
+        nv += 1.0;
+    }
+    Ok((x, y, mask, nv))
+}

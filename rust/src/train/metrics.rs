@@ -1,0 +1,116 @@
+//! Training metrics: loss-curve points and CSV export (Fig 14 data).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One logged point of the training run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LossPoint {
+    pub step: usize,
+    pub epoch: usize,
+    /// Wall-clock seconds since training start.
+    pub wall_s: f64,
+    /// Mean training loss of the global batch at this step.
+    pub train_loss: f64,
+    /// Validation loss (only on eval steps; NaN otherwise).
+    pub val_loss: f64,
+}
+
+/// Full training-run record.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub loader: String,
+    pub points: Vec<LossPoint>,
+    /// Total wall seconds spent waiting for data (max over nodes per step).
+    pub load_wall_s: f64,
+    /// Total wall seconds spent in grads execution + allreduce.
+    pub comp_wall_s: f64,
+    pub total_wall_s: f64,
+    pub steps: usize,
+    pub epochs: usize,
+    /// PFS-fetched samples (wanted) over the whole run.
+    pub pfs_samples: usize,
+    /// Buffer hits over the whole run.
+    pub hits: usize,
+    /// Final parameter tensors (manifest order) — used for post-training
+    /// evaluation (Fig 15 PSNR).
+    pub final_params: Vec<Vec<f32>>,
+}
+
+impl TrainReport {
+    /// Final validation loss (last eval point), or final train loss.
+    pub fn final_loss(&self) -> f64 {
+        self.points
+            .iter()
+            .rev()
+            .find(|p| !p.val_loss.is_nan())
+            .map(|p| p.val_loss)
+            .or_else(|| self.points.last().map(|p| p.train_loss))
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Wall time at which the validation loss first dropped below `target`
+    /// (the Fig 14 "time-to-solution" metric).
+    pub fn time_to_loss(&self, target: f64) -> Option<f64> {
+        self.points.iter().find(|p| !p.val_loss.is_nan() && p.val_loss <= target).map(|p| p.wall_s)
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut out = String::from("step,epoch,wall_s,train_loss,val_loss\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{},{:.4},{:.6},{}\n",
+                p.step,
+                p.epoch,
+                p.wall_s,
+                p.train_loss,
+                if p.val_loss.is_nan() { String::new() } else { format!("{:.6}", p.val_loss) }
+            ));
+        }
+        std::fs::write(path, out).with_context(|| format!("write {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(step: usize, wall: f64, train: f64, val: f64) -> LossPoint {
+        LossPoint { step, epoch: 0, wall_s: wall, train_loss: train, val_loss: val }
+    }
+
+    #[test]
+    fn final_loss_prefers_validation() {
+        let r = TrainReport {
+            points: vec![pt(0, 0.0, 1.0, f64::NAN), pt(1, 1.0, 0.5, 0.6), pt(2, 2.0, 0.4, f64::NAN)],
+            ..Default::default()
+        };
+        assert_eq!(r.final_loss(), 0.6);
+    }
+
+    #[test]
+    fn time_to_loss_finds_first_crossing() {
+        let r = TrainReport {
+            points: vec![pt(0, 1.0, 1.0, 0.9), pt(1, 2.0, 0.5, 0.5), pt(2, 3.0, 0.4, 0.3)],
+            ..Default::default()
+        };
+        assert_eq!(r.time_to_loss(0.5), Some(2.0));
+        assert_eq!(r.time_to_loss(0.1), None);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join("solar_metrics_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("curve.csv");
+        let r = TrainReport {
+            points: vec![pt(0, 0.5, 1.25, f64::NAN), pt(1, 1.0, 1.0, 0.75)],
+            ..Default::default()
+        };
+        r.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.lines().nth(1).unwrap().ends_with(',')); // empty val
+        assert!(text.contains("0.750000"));
+    }
+}

@@ -1,0 +1,2 @@
+pub mod driver;
+pub mod metrics;

@@ -1,0 +1,211 @@
+//! Criterion-less micro-benchmark harness (criterion is not in the offline
+//! crate set — see DESIGN.md substitutions).
+//!
+//! Each `[[bench]]` target with `harness = false` builds a `BenchSuite`,
+//! registers closures, and calls `run()`, which performs warmup, adaptive
+//! iteration-count selection, and prints mean/p50/p90 per benchmark plus a
+//! machine-readable JSON line for tooling.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub std_s: f64,
+    /// Optional throughput unit count per iteration (e.g. samples).
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()))
+            .set("iters", Json::Num(self.iters as f64))
+            .set("mean_s", Json::Num(self.mean_s))
+            .set("p50_s", Json::Num(self.p50_s))
+            .set("p90_s", Json::Num(self.p90_s))
+            .set("std_s", Json::Num(self.std_s));
+        if let Some(u) = self.units_per_iter {
+            o.set("units_per_iter", Json::Num(u));
+            o.set("units_per_s", Json::Num(u / self.mean_s.max(1e-12)));
+        }
+        o
+    }
+}
+
+/// Benchmark suite runner.
+pub struct BenchSuite {
+    pub name: String,
+    /// Target measurement time per benchmark, seconds.
+    pub target_time_s: f64,
+    /// Hard cap on iterations.
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+    /// Filter from argv (substring match), like libtest.
+    filter: Option<String>,
+    quick: bool,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> BenchSuite {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let quick = args.iter().any(|a| a == "--quick") || std::env::var("SOLAR_BENCH_QUICK").is_ok();
+        let filter = args.iter().find(|a| !a.starts_with('-')).cloned();
+        BenchSuite {
+            name: name.to_string(),
+            target_time_s: if quick { 0.2 } else { 1.0 },
+            max_iters: if quick { 20 } else { 1000 },
+            results: vec![],
+            filter,
+            quick,
+        }
+    }
+
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    fn skip(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => !name.contains(f.as_str()),
+            None => false,
+        }
+    }
+
+    /// Benchmark `f`, which performs one iteration and returns a value that
+    /// is black-boxed to prevent dead-code elimination.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) {
+        self.bench_with_units(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput unit (e.g. samples processed per iter).
+    pub fn bench_units<R>(&mut self, name: &str, units_per_iter: f64, mut f: impl FnMut() -> R) {
+        self.bench_with_units(name, Some(units_per_iter), &mut f)
+    }
+
+    fn bench_with_units<R>(&mut self, name: &str, units: Option<f64>, f: &mut dyn FnMut() -> R) {
+        if self.skip(name) {
+            return;
+        }
+        // Warmup + calibration: time a single iteration.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_time_s / once).ceil() as usize).clamp(3, self.max_iters);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let s = Summary::of(&samples);
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_s: s.mean,
+            p50_s: s.p50,
+            p90_s: s.p90,
+            std_s: s.std,
+            units_per_iter: units,
+        };
+        print_result(&result);
+        self.results.push(result);
+    }
+
+    /// Print the footer; call at the end of `main`.
+    pub fn finish(&self) {
+        eprintln!("\n{} done: {} benchmarks", self.name, self.results.len());
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    let (scale, unit) = scale_for(r.mean_s);
+    let mut line = format!(
+        "{:<44} {:>10.3} {unit}/iter  (p50 {:.3}, p90 {:.3}, n={})",
+        r.name,
+        r.mean_s * scale,
+        r.p50_s * scale,
+        r.p90_s * scale,
+        r.iters
+    );
+    if let Some(u) = r.units_per_iter {
+        line.push_str(&format!("  [{:.3e} units/s]", u / r.mean_s.max(1e-12)));
+    }
+    println!("{line}");
+    println!("BENCH_JSON {}", r.to_json().to_string_compact());
+}
+
+fn scale_for(secs: f64) -> (f64, &'static str) {
+    if secs >= 1.0 {
+        (1.0, "s ")
+    } else if secs >= 1e-3 {
+        (1e3, "ms")
+    } else if secs >= 1e-6 {
+        (1e6, "µs")
+    } else {
+        (1e9, "ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut suite = BenchSuite {
+            name: "t".into(),
+            target_time_s: 0.01,
+            max_iters: 10,
+            results: vec![],
+            filter: None,
+            quick: true,
+        };
+        suite.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert_eq!(suite.results().len(), 1);
+        let r = &suite.results()[0];
+        assert!(r.mean_s > 0.0);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut suite = BenchSuite {
+            name: "t".into(),
+            target_time_s: 0.01,
+            max_iters: 5,
+            results: vec![],
+            filter: Some("match-me".into()),
+            quick: true,
+        };
+        suite.bench("other", || 1);
+        assert!(suite.results().is_empty());
+        suite.bench("has match-me inside", || 1);
+        assert_eq!(suite.results().len(), 1);
+    }
+
+    #[test]
+    fn scale_picks_sane_units() {
+        assert_eq!(scale_for(2.0).1, "s ");
+        assert_eq!(scale_for(2e-3).1, "ms");
+        assert_eq!(scale_for(2e-6).1, "µs");
+        assert_eq!(scale_for(2e-9).1, "ns");
+    }
+}

@@ -1,0 +1,140 @@
+//! Fixed-size bitset over `u64` words — the workhorse of the epoch-graph
+//! edge computation (eq. 1 reduces to `popcount(first_v & !last_u)`), and
+//! of buffer-membership tracking at full dataset scale (18.9M samples =
+//! 2.4 MB per set, vs ~600 MB for a HashSet).
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bitset {
+    n: usize,
+    words: Vec<u64>,
+}
+
+impl Bitset {
+    pub fn new(n: usize) -> Bitset {
+        Bitset { n, words: vec![0; n.div_ceil(64)] }
+    }
+
+    pub fn from_indices(n: usize, idx: &[u32]) -> Bitset {
+        let mut b = Bitset::new(n);
+        for &i in idx {
+            b.insert(i as usize);
+        }
+        b
+    }
+
+    pub fn len_bits(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn insert(&mut self, i: usize) {
+        debug_assert!(i < self.n);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, i: usize) {
+        debug_assert!(i < self.n);
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        debug_assert!(i < self.n);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// `|self \ other|` — the cardinality of the set difference, i.e.
+    /// eq. (1)'s `card(Buffer_v − Buffer_u)` when `self` is epoch v's first
+    /// buffer and `other` is epoch u's last buffer.
+    pub fn difference_count(&self, other: &Bitset) -> usize {
+        assert_eq!(self.n, other.n);
+        self.words
+            .iter()
+            .zip(other.words.iter())
+            .map(|(a, b)| (a & !b).count_ones() as usize)
+            .sum()
+    }
+
+    /// `|self ∩ other|`.
+    pub fn intersection_count(&self, other: &Bitset) -> usize {
+        assert_eq!(self.n, other.n);
+        self.words.iter().zip(other.words.iter()).map(|(a, b)| (a & b).count_ones() as usize).sum()
+    }
+
+    /// Iterate set bits in increasing order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_remove() {
+        let mut b = Bitset::new(200);
+        assert!(!b.contains(0));
+        b.insert(0);
+        b.insert(63);
+        b.insert(64);
+        b.insert(199);
+        assert!(b.contains(0) && b.contains(63) && b.contains(64) && b.contains(199));
+        assert_eq!(b.count(), 4);
+        b.remove(64);
+        assert!(!b.contains(64));
+        assert_eq!(b.count(), 3);
+    }
+
+    #[test]
+    fn difference_count_matches_naive() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let n = 300;
+            let a_idx = rng.sample_distinct(n, 80);
+            let b_idx = rng.sample_distinct(n, 120);
+            let a = Bitset::from_indices(n, &a_idx);
+            let b = Bitset::from_indices(n, &b_idx);
+            let naive = a_idx.iter().filter(|x| !b_idx.contains(x)).count();
+            assert_eq!(a.difference_count(&b), naive);
+            let naive_int = a_idx.iter().filter(|x| b_idx.contains(x)).count();
+            assert_eq!(a.intersection_count(&b), naive_int);
+        }
+    }
+
+    #[test]
+    fn iter_yields_sorted_set_bits() {
+        let b = Bitset::from_indices(150, &[3, 77, 64, 149, 0]);
+        let got: Vec<usize> = b.iter().collect();
+        assert_eq!(got, vec![0, 3, 64, 77, 149]);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut b = Bitset::from_indices(100, &[1, 2, 3]);
+        b.clear();
+        assert_eq!(b.count(), 0);
+    }
+}

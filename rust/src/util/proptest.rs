@@ -1,0 +1,149 @@
+//! Hand-rolled property-testing harness.
+//!
+//! The offline crate set has no `proptest`, so coordinator invariants are
+//! checked with this small substitute: a seeded case generator runs a
+//! property over many random inputs; on failure it reports the failing
+//! seed (so the case is reproducible) and attempts a greedy shrink when the
+//! input type supports it.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (kept moderate so `cargo test` stays fast).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` over `cases` random inputs produced by `gen`.
+/// Panics with the failing seed on the first violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but with greedy shrinking: `shrink` proposes smaller
+/// candidates; the smallest still-failing input is reported.
+pub fn check_shrink<T: std::fmt::Debug + Clone>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first shrunk candidate
+            // that still fails, up to a step budget.
+            let mut best = input.clone();
+            let mut msg = first_msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\nshrunk input: {best:?}"
+            );
+        }
+    }
+}
+
+/// Shrinker for `Vec<T>`: drop halves, then single elements.
+pub fn shrink_vec<T: Clone>(v: &Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(v[..n / 2].to_vec());
+    out.push(v[n / 2..].to_vec());
+    if n <= 16 {
+        for i in 0..n {
+            let mut w = v.clone();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "reverse twice is identity",
+            32,
+            |rng| (0..rng.gen_index(20)).map(|_| rng.next_u64()).collect::<Vec<_>>(),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if &w == v {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 4, |rng| rng.next_u64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input")]
+    fn shrinking_reduces_input() {
+        // Property "no vector contains 7" fails; the shrunk input should be
+        // much smaller than the original.
+        check_shrink(
+            "no sevens",
+            8,
+            |rng| (0..50).map(|_| rng.gen_range(10)).collect::<Vec<u64>>(),
+            shrink_vec,
+            |v| {
+                if v.contains(&7) {
+                    Err("contains 7".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller() {
+        let v: Vec<u32> = (0..10).collect();
+        for s in shrink_vec(&v) {
+            assert!(s.len() < v.len());
+        }
+    }
+}

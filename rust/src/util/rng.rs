@@ -1,0 +1,233 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! SOLAR's first key observation is that "the shuffled sample indices for
+//! all epochs can be determined prior to the training" given a fixed seed.
+//! Everything random in this crate flows through [`Rng`] (xoshiro256**,
+//! seeded via splitmix64) so that schedules, datasets, and simulations are
+//! exactly reproducible from a single `u64` seed.
+
+/// splitmix64 step — used to expand a single `u64` seed into a full
+/// xoshiro256** state, per the reference implementation by Vigna.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality, 256-bit-state PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via splitmix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    /// Derive an independent stream for a sub-component (epoch, node, ...).
+    /// Mixing the label through splitmix64 keeps streams uncorrelated.
+    pub fn fork(&self, label: u64) -> Rng {
+        let mut sm = self.s[0] ^ label.wrapping_mul(0xA24B_AED4_963E_E407);
+        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    /// Next raw 64 bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)` via Lemire's multiply-shift with rejection.
+    #[inline]
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "gen_range(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform `usize` in `[0, n)`.
+    #[inline]
+    pub fn gen_index(&mut self, n: usize) -> usize {
+        self.gen_range(n as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gen_normal(&mut self) -> f64 {
+        let u1 = self.gen_f64().max(1e-300);
+        let u2 = self.gen_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A shuffled permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        self.shuffle(&mut v);
+        v
+    }
+
+    /// Sample `k` distinct indices from `0..n` (partial Fisher–Yates).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<u32> {
+        assert!(k <= n);
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        for i in 0..k {
+            let j = i + self.gen_index(n - i);
+            v.swap(i, j);
+        }
+        v.truncate(k);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fork_streams_are_independent_and_stable() {
+        let root = Rng::new(7);
+        let mut f1 = root.fork(0);
+        let mut f1b = root.fork(0);
+        let mut f2 = root.fork(1);
+        assert_eq!(f1.next_u64(), f1b.next_u64());
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut r = Rng::new(3);
+        for n in [1u64, 2, 3, 7, 100, 1 << 40] {
+            for _ in 0..200 {
+                assert!(r.gen_range(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn gen_range_covers_small_domain() {
+        let mut r = Rng::new(5);
+        let mut seen = [false; 5];
+        for _ in 0..500 {
+            seen[r.gen_range(5) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gen_f64_in_unit_interval_and_roughly_uniform() {
+        let mut r = Rng::new(11);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.gen_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_has_unit_variance() {
+        let mut r = Rng::new(13);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.gen_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = Rng::new(17);
+        let p = r.permutation(1000);
+        let mut seen = vec![false; 1000];
+        for &i in &p {
+            assert!(!seen[i as usize]);
+            seen[i as usize] = true;
+        }
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut r = Rng::new(19);
+        let mut v: Vec<u32> = (0..100).map(|i| i % 10).collect();
+        let mut sorted_before = v.clone();
+        sorted_before.sort();
+        r.shuffle(&mut v);
+        v.sort();
+        assert_eq!(v, sorted_before);
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut r = Rng::new(23);
+        let s = r.sample_distinct(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut d = s.clone();
+        d.sort();
+        d.dedup();
+        assert_eq!(d.len(), 20);
+    }
+}

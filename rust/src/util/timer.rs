@@ -1,0 +1,130 @@
+//! Clocks: a wall-clock stopwatch and the *virtual clock* used by the
+//! trace-driven distributed-training simulator.
+//!
+//! The simulator charges modeled costs (PFS reads, buffer copies, compute)
+//! to per-node virtual clocks; a synchronization barrier advances all nodes
+//! to the max — exactly the semantics of synchronous data parallelism that
+//! SOLAR's load balancing (§4.3) exploits.
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Per-node virtual clocks with barrier semantics.
+#[derive(Debug, Clone)]
+pub struct VirtualClocks {
+    t: Vec<f64>,
+    /// Total time spent waiting at barriers, per node (idle/starvation time).
+    idle: Vec<f64>,
+}
+
+impl VirtualClocks {
+    pub fn new(nodes: usize) -> VirtualClocks {
+        VirtualClocks { t: vec![0.0; nodes], idle: vec![0.0; nodes] }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.t.len()
+    }
+
+    /// Charge `dt` seconds of work to `node`.
+    pub fn advance(&mut self, node: usize, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative time charge: {dt}");
+        self.t[node] += dt;
+    }
+
+    /// Current virtual time of `node`.
+    pub fn now(&self, node: usize) -> f64 {
+        self.t[node]
+    }
+
+    /// Synchronization barrier: every node advances to the max clock.
+    /// Returns the barrier time. Waiting time is accounted as idle.
+    pub fn barrier(&mut self) -> f64 {
+        let max = self.t.iter().copied().fold(0.0_f64, f64::max);
+        for (t, idle) in self.t.iter_mut().zip(self.idle.iter_mut()) {
+            *idle += max - *t;
+            *t = max;
+        }
+        max
+    }
+
+    /// Max clock across nodes without synchronizing.
+    pub fn horizon(&self) -> f64 {
+        self.t.iter().copied().fold(0.0_f64, f64::max)
+    }
+
+    pub fn idle(&self, node: usize) -> f64 {
+        self.idle[node]
+    }
+
+    pub fn total_idle(&self) -> f64 {
+        self.idle.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_s();
+        let b = sw.elapsed_s();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn barrier_advances_to_max_and_tracks_idle() {
+        let mut c = VirtualClocks::new(3);
+        c.advance(0, 1.0);
+        c.advance(1, 3.0);
+        c.advance(2, 2.0);
+        let t = c.barrier();
+        assert_eq!(t, 3.0);
+        for n in 0..3 {
+            assert_eq!(c.now(n), 3.0);
+        }
+        assert_eq!(c.idle(0), 2.0);
+        assert_eq!(c.idle(1), 0.0);
+        assert_eq!(c.idle(2), 1.0);
+        assert_eq!(c.total_idle(), 3.0);
+    }
+
+    #[test]
+    fn repeated_barriers_accumulate() {
+        let mut c = VirtualClocks::new(2);
+        c.advance(0, 1.0);
+        c.barrier();
+        c.advance(1, 2.0);
+        let t = c.barrier();
+        assert_eq!(t, 3.0);
+        assert_eq!(c.idle(0), 2.0);
+        assert_eq!(c.idle(1), 1.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Full-stack integration tests over the REAL runtime (PJRT CPU + AOT
+//! artifacts). Each test skips gracefully when `make artifacts` hasn't
+//! been run, so `cargo test` works on a fresh checkout.
+
+use std::path::PathBuf;
+
+use solar::config::RunConfig;
+use solar::data::spec::DatasetSpec;
+use solar::data::synth;
+use solar::loader::LoaderPolicy;
+use solar::runtime::executable::DenseImpl;
+use solar::storage::pfs::CostModel;
+use solar::storage::shdf::ShdfReader;
+use solar::train::driver::{train, TrainConfig};
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("manifest.json").exists()
+}
+
+fn dataset(n: usize, name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("solar_integration_train");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}_{n}.shdf"));
+    let ok = ShdfReader::open(&path).map(|r| r.n_samples() == n).unwrap_or(false);
+    if !ok {
+        let mut spec = DatasetSpec::paper("cd17").unwrap();
+        spec.n_samples = n;
+        spec.id = name.into();
+        synth::generate_dataset(&path, &spec, 77).unwrap();
+    }
+    path
+}
+
+fn tc(path: PathBuf, n_train: usize, loader: &str, n_nodes: usize, epochs: usize, steps: usize) -> TrainConfig {
+    let mut spec = DatasetSpec::paper("cd17").unwrap();
+    spec.n_samples = n_train;
+    spec.id = "itrain".into();
+    TrainConfig {
+        run: RunConfig {
+            spec,
+            n_nodes,
+            local_batch: 8,
+            n_epochs: epochs,
+            seed: 42,
+            buffer_capacity: n_train / 2 / n_nodes.max(1),
+            cost: CostModel::default(),
+        },
+        dataset_path: path,
+        artifacts_dir: artifacts(),
+        policy: LoaderPolicy::by_name(loader).unwrap(),
+        dense: DenseImpl::Xla,
+        lr: 0.08,
+        throttle: 0.0,
+        eval_every: 0,
+        max_steps: steps,
+        holdout: 16,
+    }
+}
+
+#[test]
+fn distributed_training_runs_and_loss_decreases() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let path = dataset(144, "loss");
+    let mut c = tc(path, 128, "solar", 2, 3, 0);
+    c.eval_every = 0;
+    let report = train(&c).unwrap();
+    assert_eq!(report.steps, 3 * (128 / 16));
+    let first = report.points.first().unwrap().train_loss;
+    let last = report.points.last().unwrap().train_loss;
+    assert!(last < first, "train loss should decrease: {first} -> {last}");
+    assert!(report.final_params.iter().all(|t| t.iter().all(|v| v.is_finite())));
+}
+
+#[test]
+fn gradient_equivalence_across_loaders() {
+    // THE paper invariant (eq. 3): whatever the loader does to the
+    // node-to-sample mapping and batch sizes, the parameter trajectory must
+    // match the baseline's, because gradients are averaged over the same
+    // global batch. f32 summation order differs → tiny tolerance.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let path = dataset(80, "gradeq");
+    let steps = 2;
+    let run = |loader: &str| {
+        let c = tc(dataset(80, "gradeq"), 64, loader, 2, 1, steps);
+        train(&c).unwrap()
+    };
+    let _ = path;
+    let base = run("pytorch");
+    for loader in ["solar", "nopfs", "pytorch+lru"] {
+        let other = run(loader);
+        // Losses on the same steps must match almost exactly.
+        for (a, b) in base.points.iter().zip(other.points.iter()) {
+            let rel = (a.train_loss - b.train_loss).abs() / a.train_loss.max(1e-9);
+            assert!(rel < 1e-4, "{loader}: step {} loss {} vs {}", a.step, a.train_loss, b.train_loss);
+        }
+        // Final parameters must agree to float tolerance.
+        let mut max_rel = 0.0f64;
+        for (ta, tb) in base.final_params.iter().zip(other.final_params.iter()) {
+            for (&va, &vb) in ta.iter().zip(tb.iter()) {
+                let denom = va.abs().max(1e-3) as f64;
+                max_rel = max_rel.max(((va - vb).abs() as f64) / denom);
+            }
+        }
+        assert!(max_rel < 5e-3, "{loader}: parameter trajectories diverged ({max_rel})");
+    }
+}
+
+#[test]
+fn solar_loads_fewer_pfs_samples_in_real_training() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let run = |loader: &str| {
+        let c = tc(dataset(144, "pfscmp"), 128, loader, 2, 3, 0);
+        train(&c).unwrap()
+    };
+    let py = run("pytorch");
+    let so = run("solar");
+    assert!(so.pfs_samples < py.pfs_samples, "solar {} < pytorch {}", so.pfs_samples, py.pfs_samples);
+    assert!(so.hits > 0);
+    assert_eq!(py.hits, 0);
+}
+
+#[test]
+fn pallas_dense_variant_trains() {
+    // The L1 Pallas kernel inside the AOT'd step, through the whole stack.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let path = dataset(48, "pallas");
+    let mut c = tc(path, 32, "solar", 1, 1, 2);
+    c.dense = DenseImpl::Pallas;
+    let report = train(&c).unwrap();
+    assert_eq!(report.steps, 2);
+    assert!(report.points.iter().all(|p| p.train_loss.is_finite()));
+}
