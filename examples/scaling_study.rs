@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     let artifacts = PathBuf::from("artifacts");
     let n_train = 512;
 
-    if artifacts.join("manifest.json").exists() {
+    if artifacts.join("manifest.json").exists() && solar::runtime::pjrt_available() {
         // Real-driver strong scaling.
         let dir = PathBuf::from("results/data");
         std::fs::create_dir_all(&dir)?;

@@ -44,6 +44,9 @@ fn main() -> anyhow::Result<()> {
     if !artifacts.join("manifest.json").exists() {
         anyhow::bail!("artifacts missing — run `make artifacts` first");
     }
+    if !solar::runtime::pjrt_available() {
+        anyhow::bail!("training needs real PJRT execution: {}", solar::runtime::PJRT_UNAVAILABLE);
+    }
 
     // Dataset: real diffraction physics (rust FFT), written to SHDF.
     let dir = PathBuf::from("results/data");

@@ -21,6 +21,10 @@ fn main() {
         eprintln!("bench_e2e: artifacts missing — run `make artifacts` first (skipping)");
         return;
     }
+    if !solar::runtime::pjrt_available() {
+        eprintln!("bench_e2e: {} — skipping", solar::runtime::PJRT_UNAVAILABLE);
+        return;
+    }
     let n = 256usize;
     let dir = std::env::temp_dir().join("solar_bench_e2e");
     std::fs::create_dir_all(&dir).unwrap();

@@ -47,4 +47,12 @@ fn main() {
     }
 
     suite.finish();
+    // Baseline for future perf PRs: scheduled samples/second per preset
+    // (units_per_s in each record). Lands at the workspace root when run
+    // via `cargo bench --bench bench_loading`.
+    let out = std::path::Path::new("BENCH_loading.json");
+    match suite.write_json(out) {
+        Ok(()) => eprintln!("baseline -> {}", out.display()),
+        Err(e) => eprintln!("bench_loading: could not write {}: {e}", out.display()),
+    }
 }

@@ -14,6 +14,10 @@ fn main() {
         eprintln!("bench_runtime: artifacts missing — run `make artifacts` first (skipping)");
         return;
     }
+    if !solar::runtime::pjrt_available() {
+        eprintln!("bench_runtime: {} — skipping", solar::runtime::PJRT_UNAVAILABLE);
+        return;
+    }
     for (dense, label) in [(DenseImpl::Xla, "xla"), (DenseImpl::Pallas, "pallas")] {
         let rt = TrainRuntime::load(artifacts, dense, dense == DenseImpl::Xla).unwrap();
         let params = ParamStore::load_init(&rt.manifest).unwrap();

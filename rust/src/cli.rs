@@ -94,7 +94,7 @@ COMMANDS
             --id fig2|fig3|tab1|tab3|fig7|fig9|fig10|fig11|fig12|fig13|fig14|fig16|eoo|all
             [--full] (paper-scale sample counts)  [--epochs N]  [--seed S]
   sim       simulate one loading run
-            --dataset cd17|cd321|cd1200|bcdi|cosmoflow  [--tier medium]
+            [--dataset cd17|cd321|cd1200|bcdi|cosmoflow] [--tier medium]
             [--loader solar] [--epochs 6] [--nodes N] [--batch B] [--full]
   gen-data  materialize a synthetic dataset to SHDF
             --dataset cd17 [--scale 1000] --out PATH [--seed S]

@@ -1,0 +1,20 @@
+//! Distributed-loading simulation layer — the evaluation harness behind
+//! every figure of the paper's loading study.
+//!
+//! The paper's headline numbers (Fig 9–16, Tables 1/3) are trace-driven:
+//! the deterministic [`crate::loader::engine::LoaderEngine`] emits, step by
+//! step, which samples each node trains on and where every byte comes from
+//! (local buffer, remote buffer, PFS requests), and [`sim::simulate`]
+//! charges those movements through [`crate::storage::pfs::CostModel`]
+//! **without materializing any sample bytes**. One simulated epoch of the
+//! 1.2 TB CD dataset therefore costs milliseconds, not hours, which is what
+//! makes the paper's sweep matrices (dataset × tier × loader × ablation)
+//! tractable.
+//!
+//! `simulate` is the hottest loop in the repo — the loading benches
+//! (`benches/bench_loading.rs`) hold it to ≥ 1M scheduled samples/second —
+//! so its cost accounting uses flat scalar accumulators and performs no
+//! per-step heap allocation (see DESIGN.md §Performance).
+
+pub mod report;
+pub mod sim;

@@ -1,0 +1,134 @@
+//! Simulation reports: per-epoch accounting records plus the run-level
+//! summary every experiment and bench consumes.
+
+/// One epoch's simulated accounting.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct EpochSim {
+    /// Position in the (possibly optimized) epoch visiting order.
+    pub epoch_pos: usize,
+    /// Source epoch index into the pre-determined shuffle lists.
+    pub epoch_src: usize,
+    /// Modeled data-loading wall time. Synchronous data parallelism puts
+    /// the barrier at the slowest node, so each step contributes the max
+    /// over nodes.
+    pub load_s: f64,
+    /// Modeled computation wall time (same max-over-nodes barrier).
+    pub comp_s: f64,
+    /// Samples served from local buffers.
+    pub hits: usize,
+    /// Samples fetched from a remote node's buffer (NoPFS behaviour).
+    pub remote_samples: usize,
+    /// Samples fetched from the PFS (wanted samples only — redundant bytes
+    /// read by chunk aggregation are charged in time, not counted here).
+    pub pfs_samples: usize,
+    /// PFS read requests issued.
+    pub pfs_requests: usize,
+    /// Fraction of PFS-fetched samples that traveled inside a multi-sample
+    /// chunk read (the Fig 13 metric; 0 for non-chunking loaders).
+    pub chunked_frac: f64,
+    /// Mean over steps of the per-step max per-node PFS fetch count — the
+    /// paper's "numPFS" as seen by the sync barrier (Fig 11).
+    pub mean_max_numpfs: f64,
+}
+
+impl EpochSim {
+    /// Loading + computation time of this epoch.
+    pub fn total_s(&self) -> f64 {
+        self.load_s + self.comp_s
+    }
+}
+
+/// Full report of one simulated run (`dist::sim::simulate`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimReport {
+    /// Loader preset name (`LoaderPolicy::name`).
+    pub loader: String,
+    /// Epoch visiting order the engine chose (identity unless EOO is on).
+    pub epoch_order: Vec<usize>,
+    /// Modeled transition cost of that order (None when EOO is off).
+    pub epoch_order_cost: Option<u64>,
+    /// Per-epoch records, in visiting order.
+    pub epochs: Vec<EpochSim>,
+    /// Per-node PFS fetch counts at one representative post-warmup step —
+    /// the first step of the probe epoch that fetches at all (Fig 12's
+    /// before/after-balancing bars). All zeros when nothing ever misses.
+    pub sample_step_fetches: Vec<usize>,
+    /// Per-node training batch sizes over the first (up to) 10 steps of
+    /// the probe epoch (Fig 16's batch-size distribution).
+    pub early_batch_sizes: Vec<Vec<usize>>,
+}
+
+impl SimReport {
+    /// Mean over post-warmup epochs (epoch 0 is cold-buffer warmup and is
+    /// excluded whenever more than one epoch was simulated).
+    fn avg(&self, f: fn(&EpochSim) -> f64) -> f64 {
+        let skip = usize::from(self.epochs.len() > 1);
+        let xs = &self.epochs[skip.min(self.epochs.len())..];
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter().map(f).sum::<f64>() / xs.len() as f64
+    }
+
+    /// Average per-epoch loading time, excluding warmup.
+    pub fn avg_load_s(&self) -> f64 {
+        self.avg(|e| e.load_s)
+    }
+
+    /// Average per-epoch computation time, excluding warmup.
+    pub fn avg_comp_s(&self) -> f64 {
+        self.avg(|e| e.comp_s)
+    }
+
+    /// Average per-epoch total (load + compute) time, excluding warmup.
+    pub fn avg_total_s(&self) -> f64 {
+        self.avg(|e| e.total_s())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(loads: &[f64]) -> SimReport {
+        SimReport {
+            loader: "t".into(),
+            epoch_order: (0..loads.len()).collect(),
+            epoch_order_cost: None,
+            epochs: loads
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| EpochSim {
+                    epoch_pos: i,
+                    epoch_src: i,
+                    load_s: l,
+                    comp_s: 2.0 * l,
+                    ..Default::default()
+                })
+                .collect(),
+            sample_step_fetches: vec![],
+            early_batch_sizes: vec![],
+        }
+    }
+
+    #[test]
+    fn averages_exclude_warmup_epoch() {
+        let r = report_with(&[10.0, 1.0, 3.0]);
+        assert!((r.avg_load_s() - 2.0).abs() < 1e-12);
+        assert!((r.avg_comp_s() - 4.0).abs() < 1e-12);
+        assert!((r.avg_total_s() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_epoch_is_its_own_average() {
+        let r = report_with(&[5.0]);
+        assert!((r.avg_load_s() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_averages_to_zero() {
+        let r = report_with(&[]);
+        assert_eq!(r.avg_load_s(), 0.0);
+        assert_eq!(r.avg_total_s(), 0.0);
+    }
+}

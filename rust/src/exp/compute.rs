@@ -15,6 +15,9 @@ pub fn fig7_imbalanced_compute(ctx: &ExpCtx) -> Result<()> {
     if !ctx.artifacts_dir.join("manifest.json").exists() {
         anyhow::bail!("artifacts missing — run `make artifacts` first");
     }
+    if !crate::runtime::pjrt_available() {
+        anyhow::bail!("fig7 needs real PJRT execution: {}", crate::runtime::PJRT_UNAVAILABLE);
+    }
     // XLA dense variant: fig 7 measures *compute-time sensitivity to batch
     // size*, which must not be confounded by interpret-mode Pallas
     // emulation overhead.

@@ -82,14 +82,14 @@ fn run_one(
 /// PSNR of the trained model's reconstructions on held-out samples.
 fn psnr(ctx: &ExpCtx, path: &PathBuf, store: &ParamStore, ids: &[u32]) -> Result<(f64, f64)> {
     let rt = TrainRuntime::load(&ctx.artifacts_dir, DenseImpl::Xla, true)?;
-    let mut reader = ShdfReader::open(path)?;
+    let reader = ShdfReader::open(path)?;
     let b = rt.manifest.batch;
     let img = rt.manifest.img;
     let img2 = img * img;
     let mut x = vec![0.0f32; b * img2];
     let mut y = vec![0.0f32; b * 2 * img2];
     for (i, &sid) in ids.iter().enumerate().take(b) {
-        let rec = ShdfReader::decode_f32(&reader.read_sample(sid as usize)?);
+        let rec = ShdfReader::decode_f32(&reader.read_sample_at(sid as usize)?);
         let (xs, ys) = synth::split_record(&rec);
         x[i * img2..(i + 1) * img2].copy_from_slice(xs);
         y[i * 2 * img2..(i + 1) * 2 * img2].copy_from_slice(ys);
@@ -116,6 +116,9 @@ fn psnr(ctx: &ExpCtx, path: &PathBuf, store: &ParamStore, ids: &[u32]) -> Result
 pub fn fig14_end_to_end(ctx: &ExpCtx) -> Result<()> {
     if !ctx.artifacts_dir.join("manifest.json").exists() {
         anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    if !crate::runtime::pjrt_available() {
+        anyhow::bail!("fig14 needs real PJRT execution: {}", crate::runtime::PJRT_UNAVAILABLE);
     }
     let (n_train, n_holdout) = if ctx.quick { (2048, 32) } else { (8192, 32) };
     // Throttle scaled so load:compute matches the paper's testbed ratio

@@ -10,6 +10,7 @@ use crate::dist::sim::{simulate, SimReport};
 use crate::exp::ExpCtx;
 use crate::loader::LoaderPolicy;
 use crate::storage::pfs::SystemTier;
+use crate::util::pool;
 use crate::util::stats::{mean, std_dev, TextTable};
 
 fn sim(ctx: &ExpCtx, dataset: &str, tier: SystemTier, loader: &str, local_batch: usize) -> Result<SimReport> {
@@ -29,24 +30,36 @@ pub fn fig9_speedups(ctx: &ExpCtx) -> Result<()> {
          Paper shape: SOLAR up to 24.4x over PyTorch, up to 3.5x over NoPFS;\n\
          speedups grow with buffer size (high-end > medium > low).\n\n",
     );
+    // The 5 datasets × 3 tiers are 15 independent table rows (3 loader
+    // simulations each): one pool job per row, results zipped back with
+    // the job list itself, so rendering can never fall out of sync with
+    // job construction.
+    let mut jobs: Vec<(SystemTier, &str)> = Vec::new();
     for tier in SystemTier::all() {
         for ds in DatasetSpec::paper_ids() {
-            let cfg = ctx.run_config(ds, tier, 64)?;
-            let scenario = cfg.buffer_scenario();
-            let py = sim(ctx, ds, tier, "pytorch", 64)?;
-            let no = sim(ctx, ds, tier, "nopfs", 64)?;
-            let so = sim(ctx, ds, tier, "solar", 64)?;
-            t.rowv(vec![
-                tier.name().into(),
-                ds.into(),
-                format!("{scenario}"),
-                format!("{:.3}", py.avg_load_s()),
-                format!("{:.3}", no.avg_load_s()),
-                format!("{:.3}", so.avg_load_s()),
-                format!("{:.2}x", py.avg_load_s() / so.avg_load_s().max(1e-9)),
-                format!("{:.2}x", no.avg_load_s() / so.avg_load_s().max(1e-9)),
-            ]);
+            jobs.push((tier, ds));
         }
+    }
+    let rows = pool::parallel_map(jobs.clone(), |(tier, ds)| -> Result<(f64, f64, f64)> {
+        let py = sim(ctx, ds, tier, "pytorch", 64)?.avg_load_s();
+        let no = sim(ctx, ds, tier, "nopfs", 64)?.avg_load_s();
+        let so = sim(ctx, ds, tier, "solar", 64)?.avg_load_s();
+        Ok((py, no, so))
+    });
+    for (&(tier, ds), row) in jobs.iter().zip(rows) {
+        let (py, no, so) = row?;
+        let cfg = ctx.run_config(ds, tier, 64)?;
+        let scenario = cfg.buffer_scenario();
+        t.rowv(vec![
+            tier.name().into(),
+            ds.into(),
+            format!("{scenario}"),
+            format!("{py:.3}"),
+            format!("{no:.3}"),
+            format!("{so:.3}"),
+            format!("{:.2}x", py / so.max(1e-9)),
+            format!("{:.2}x", no / so.max(1e-9)),
+        ]);
     }
     lines.push_str(&t.render());
     ctx.emit("fig9", &lines)
@@ -64,14 +77,22 @@ pub fn fig10_ablation(ctx: &ExpCtx) -> Result<()> {
     ];
     // Low-end tier: per-node buffers hold ~half the dataset, so the LRU
     // baseline is not saturated and the per-optimization steps separate.
-    let base = sim(ctx, "cd17", SystemTier::Low, "pytorch", 64)?.avg_load_s();
+    // The five variants are independent — simulate them in parallel.
+    let names: Vec<&str> = variants.iter().map(|(name, _)| *name).collect();
+    let loads = pool::parallel_map(names, |name| {
+        sim(ctx, "cd17", SystemTier::Low, name, 64).map(|r| r.avg_load_s())
+    });
+    let mut loads_ok = Vec::with_capacity(loads.len());
+    for l in loads {
+        loads_ok.push(l?);
+    }
+    let base = loads_ok[0]; // variants[0] is the plain PyTorch loader
     let mut t = TextTable::new(&["variant", "load(s)", "cumulative speedup"]);
-    for (name, label) in variants {
-        let r = sim(ctx, "cd17", SystemTier::Low, name, 64)?;
+    for ((_, label), load) in variants.iter().zip(loads_ok.iter()) {
         t.rowv(vec![
-            label.into(),
-            format!("{:.3}", r.avg_load_s()),
-            format!("{:.2}x", base / r.avg_load_s().max(1e-9)),
+            (*label).into(),
+            format!("{load:.3}"),
+            format!("{:.2}x", base / load.max(1e-9)),
         ]);
     }
     let text = format!(
@@ -156,8 +177,8 @@ pub fn fig12_balance(ctx: &ExpCtx) -> Result<()> {
 /// Fig 13: fraction of PFS-fetched samples that travel in multi-sample
 /// chunks, across several runs (seeds).
 pub fn fig13_chunked(ctx: &ExpCtx) -> Result<()> {
-    let mut fracs: Vec<f64> = Vec::new();
-    for seed in 0..8u64 {
+    // Eight independent seeds — one pool job each, deterministic order.
+    let runs = pool::parallel_map((0..8u64).collect(), |seed| -> Result<SimReport> {
         let mut cfg = ctx.run_config("cd17", SystemTier::Low, 64)?;
         cfg.n_nodes = 4;
         // Aggregate buffer ≈ 30% of the dataset: steady-state misses exist
@@ -165,7 +186,11 @@ pub fn fig13_chunked(ctx: &ExpCtx) -> Result<()> {
         cfg.buffer_capacity = (cfg.spec.n_samples * 3 / 10 / cfg.n_nodes).max(1);
         cfg.seed = ctx.seed + seed;
         cfg.n_epochs = 4;
-        let r = simulate(&cfg, &LoaderPolicy::solar());
+        Ok(simulate(&cfg, &LoaderPolicy::solar()))
+    });
+    let mut fracs: Vec<f64> = Vec::new();
+    for r in runs {
+        let r = r?;
         for e in r.epochs.iter().skip(1) {
             if e.pfs_samples > 0 {
                 fracs.push(e.chunked_frac);

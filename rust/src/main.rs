@@ -59,7 +59,8 @@ fn cmd_exp(args: &Args) -> Result<()> {
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {
-    let dataset = args.get("dataset").context("--dataset required")?;
+    let dataset = args.get_or("dataset", "cd17");
+    let dataset = dataset.as_str();
     let tier = parse_tier(&args.get_or("tier", "medium"))?;
     let loader = args.get_or("loader", "solar");
     let policy = LoaderPolicy::by_name(&loader)

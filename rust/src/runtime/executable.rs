@@ -3,13 +3,15 @@
 //! The `xla` crate's handles hold raw pointers (not `Send`), so each worker
 //! thread constructs its own [`TrainRuntime`] *inside* the thread (see
 //! `train::driver`); the coordinator exchanges plain `Vec<f32>` tensors
-//! with workers over channels.
+//! with workers over channels. The offline build aliases the bindings to
+//! [`crate::runtime::xla_stub`] (DESIGN.md §Substitutions).
 
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 use crate::runtime::manifest::Manifest;
 use crate::runtime::params::ParamStore;
+use crate::runtime::xla_stub as xla;
 
 /// Which dense-layer implementation the loaded executable uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -141,8 +143,17 @@ mod tests {
         Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// Artifacts on disk AND a real PJRT runtime linked in (the offline
+    /// xla stub can load manifests but not execute).
     fn have_artifacts() -> bool {
-        artifacts_dir().join("manifest.json").exists()
+        if !artifacts_dir().join("manifest.json").exists() {
+            return false;
+        }
+        if !crate::runtime::pjrt_available() {
+            eprintln!("artifacts present but {}", crate::runtime::PJRT_UNAVAILABLE);
+            return false;
+        }
+        true
     }
 
     /// Full AOT round-trip: python-lowered HLO → rust compile → execute.

@@ -1,12 +1,33 @@
 //! PJRT runtime: load the AOT HLO-text artifacts produced by
 //! `python/compile/aot.py` and execute them on the CPU PJRT client.
 //! Python is never on this path — the artifacts are self-contained.
+//!
+//! In the offline build the PJRT bindings are the [`xla_stub`] stand-in
+//! (see its docs and DESIGN.md §Substitutions); swap the alias below for
+//! the real `xla` crate to enable execution.
 
 pub mod executable;
 pub mod manifest;
 pub mod params;
+pub mod xla_stub;
+
+use crate::runtime::xla_stub as xla;
 
 use anyhow::Result;
+
+/// Whether a usable PJRT runtime is linked in: false under the offline
+/// [`xla_stub`] alias, true when the real `xla` crate backs it. Artifact
+/// presence alone is not enough to execute — every PJRT consumer (tests,
+/// benches, Fig 7/14) should check this too and skip or fail citing
+/// [`PJRT_UNAVAILABLE`].
+pub fn pjrt_available() -> bool {
+    xla::PjRtClient::cpu().is_ok()
+}
+
+/// Canonical explanation for consumers that find artifacts on disk but no
+/// executable runtime behind them.
+pub const PJRT_UNAVAILABLE: &str =
+    "PJRT runtime unavailable (offline xla stub — see DESIGN.md §Substitutions)";
 
 /// Smoke helper (kept for the CLI `smoke` subcommand and integration
 /// tests): load an HLO text file of `fn(x, y) = (x@y + 2,)` over f32[2,2],

@@ -237,6 +237,67 @@ impl ShdfReader {
         Ok(buf)
     }
 
+    // ---- positioned reads (no seek state) ----
+    //
+    // These take `&self`. On unix they are pread-backed, so concurrent
+    // reader threads can share one open handle with no coordination (the
+    // kernel offset is passed per call instead of being stream state) and
+    // each read is one syscall instead of a seek+read pair; the training
+    // driver's worker threads rely on this. On non-unix platforms the
+    // fallback goes through the shared stream offset — same results, but
+    // single-threaded use only (see `pread_exact`).
+
+    /// Positioned read of `len(buf)` bytes at absolute file offset `off`.
+    #[cfg(unix)]
+    fn pread_exact(&self, buf: &mut [u8], off: u64) -> Result<()> {
+        use std::os::unix::fs::FileExt;
+        self.f.read_exact_at(buf, off)?;
+        Ok(())
+    }
+
+    /// Portable fallback: `&File` implements `Seek + Read`, so this stays
+    /// `&self`, but the shared stream offset makes it non-reentrant —
+    /// single-threaded use only on non-unix platforms.
+    #[cfg(not(unix))]
+    fn pread_exact(&self, buf: &mut [u8], off: u64) -> Result<()> {
+        let mut f = &self.f;
+        f.seek(SeekFrom::Start(off))?;
+        f.read_exact(buf)?;
+        Ok(())
+    }
+
+    /// Positioned read of one sample into `buf` (must be `sample_bytes`).
+    pub fn read_sample_into_at(&self, i: usize, buf: &mut [u8]) -> Result<()> {
+        if i >= self.header.n_samples {
+            bail!("sample index {i} out of range ({} samples)", self.header.n_samples);
+        }
+        assert_eq!(buf.len(), self.header.sample_bytes);
+        self.pread_exact(buf, self.offset_of(i))
+    }
+
+    /// Positioned read of one sample, allocating.
+    pub fn read_sample_at(&self, i: usize) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; self.header.sample_bytes];
+        self.read_sample_into_at(i, &mut buf)?;
+        Ok(buf)
+    }
+
+    /// Positioned read of `count` consecutive samples in ONE request.
+    pub fn read_range_into_at(&self, start: usize, count: usize, buf: &mut [u8]) -> Result<()> {
+        if start + count > self.header.n_samples {
+            bail!("range [{start}, {}) out of range", start + count);
+        }
+        assert_eq!(buf.len(), count * self.header.sample_bytes);
+        self.pread_exact(buf, self.offset_of(start))
+    }
+
+    /// Positioned range read, allocating.
+    pub fn read_range_at(&self, start: usize, count: usize) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; count * self.header.sample_bytes];
+        self.read_range_into_at(start, count, &mut buf)?;
+        Ok(buf)
+    }
+
     /// Decode a sample byte buffer as f32 (little-endian).
     pub fn decode_f32(bytes: &[u8]) -> Vec<f32> {
         bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
@@ -364,6 +425,41 @@ mod tests {
             name: "t".into(),
         };
         assert!(bad_dtype.validate().is_err());
+    }
+
+    #[test]
+    fn positioned_reads_match_seek_reads() {
+        let path = tmpfile("positioned.shdf");
+        write_test_file(&path, 12, 8);
+        let mut r = ShdfReader::open(&path).unwrap();
+        for i in 0..12 {
+            assert_eq!(r.read_sample_at(i).unwrap(), r.read_sample(i).unwrap());
+        }
+        assert_eq!(r.read_range_at(3, 5).unwrap(), r.read_range(3, 5).unwrap());
+        assert!(r.read_sample_at(12).is_err());
+        assert!(r.read_range_at(10, 3).is_err());
+    }
+
+    #[test]
+    #[cfg(unix)] // the non-unix fallback shares stream state (see pread_exact)
+    fn positioned_reads_are_concurrent_safe() {
+        // The whole point of pread: many threads, one shared &reader, no
+        // seek state to race on.
+        let path = tmpfile("concurrent.shdf");
+        write_test_file(&path, 64, 16);
+        let r = ShdfReader::open(&path).unwrap();
+        std::thread::scope(|s| {
+            let r = &r;
+            for t in 0..4usize {
+                s.spawn(move || {
+                    for rep in 0..50 {
+                        let i = (t * 17 + rep * 7) % 64;
+                        let got = ShdfReader::decode_f32(&r.read_sample_at(i).unwrap());
+                        assert_eq!(got, sample(i, 16));
+                    }
+                });
+            }
+        });
     }
 
     #[test]

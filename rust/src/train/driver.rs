@@ -204,7 +204,9 @@ fn worker_loop(
 ) -> Result<()> {
     let result = (|| -> Result<()> {
         let rt = TrainRuntime::load(artifacts_dir, dense, false)?;
-        let mut reader = ShdfReader::open(dataset_path)?;
+        // Positioned reads only: the reader carries no seek state, so it
+        // needs no `&mut` plumbing through the batch-assembly closures.
+        let reader = ShdfReader::open(dataset_path)?;
         let mut buffer: HashMap<u32, Arc<Vec<f32>>> = HashMap::new();
         let b = rt.manifest.batch;
         let img = rt.manifest.img;
@@ -219,7 +221,7 @@ fn worker_loop(
                     let mut loss_sum = 0.0f64;
                     let mut n_valid = 0.0f64;
                     for group in ids.chunks(b) {
-                        let (x, y, mask, nv) = assemble_batch(&mut reader, &buffer, group, b, img, rec_elems)?;
+                        let (x, y, mask, nv) = assemble_batch(&reader, &buffer, group, b, img, rec_elems)?;
                         let out = rt.grads(&store, &x, &y, &mask)?;
                         loss_sum += out.loss_sum as f64;
                         n_valid += nv;
@@ -245,7 +247,7 @@ fn worker_loop(
                     if !load.chunks.is_empty() {
                         let mut pos: Option<u64> = None;
                         for c in &load.chunks {
-                            let bytes = reader.read_range(c.lo as usize, c.span() as usize)?;
+                            let bytes = reader.read_range_at(c.lo as usize, c.span() as usize)?;
                             let offset = reader.offset_of(c.lo as usize);
                             let jump = pos.map(|p| p.abs_diff(offset)).unwrap_or(0);
                             modeled += cost.pfs_read(c.span() as u64 * sb, jump);
@@ -257,7 +259,7 @@ fn worker_loop(
                     } else {
                         let mut pos: Option<u64> = None;
                         for &x in load.samples.iter().filter(|&&x| !buffer.contains_key(&x)) {
-                            let bytes = reader.read_sample(x as usize)?;
+                            let bytes = reader.read_sample_at(x as usize)?;
                             let offset = reader.offset_of(x as usize);
                             let jump = pos.map(|p| p.abs_diff(offset)).unwrap_or(0);
                             modeled += cost.pfs_read(sb, jump);
@@ -284,7 +286,7 @@ fn worker_loop(
                         buffer.remove(&x);
                     }
                     // ---- assemble batch (buffer + staged) ----
-                    let mut get = |x: u32| -> Result<Arc<Vec<f32>>> {
+                    let get = |x: u32| -> Result<Arc<Vec<f32>>> {
                         if let Some(v) = staged.get(&x) {
                             return Ok(v.clone());
                         }
@@ -293,7 +295,7 @@ fn worker_loop(
                         }
                         // Engine said hit but bytes are gone (shouldn't
                         // happen): re-read to stay correct.
-                        Ok(Arc::new(ShdfReader::decode_f32(&reader.read_sample(x as usize)?)))
+                        Ok(Arc::new(ShdfReader::decode_f32(&reader.read_sample_at(x as usize)?)))
                     };
                     let img2 = img * img;
                     let mut loss_sum = 0.0f64;
@@ -350,7 +352,7 @@ fn worker_loop(
 
 /// Assemble an eval batch straight from the file/buffer (no staging).
 fn assemble_batch(
-    reader: &mut ShdfReader,
+    reader: &ShdfReader,
     buffer: &HashMap<u32, Arc<Vec<f32>>>,
     ids: &[u32],
     b: usize,
@@ -365,7 +367,7 @@ fn assemble_batch(
     for (i, &sid) in ids.iter().enumerate().take(b) {
         let rec = match buffer.get(&sid) {
             Some(v) => v.clone(),
-            None => Arc::new(ShdfReader::decode_f32(&reader.read_sample(sid as usize)?)),
+            None => Arc::new(ShdfReader::decode_f32(&reader.read_sample_at(sid as usize)?)),
         };
         let (xs, ys) = synth::split_record(&rec);
         x[i * img2..(i + 1) * img2].copy_from_slice(xs);

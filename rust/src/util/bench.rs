@@ -127,6 +127,16 @@ impl BenchSuite {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Persist all results as a JSON baseline document (e.g.
+    /// `BENCH_loading.json`) so future perf work has a trajectory to beat.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut o = Json::obj();
+        o.set("suite", Json::Str(self.name.clone()))
+            .set("quick", Json::Bool(self.quick))
+            .set("results", Json::Arr(self.results.iter().map(|r| r.to_json()).collect()));
+        std::fs::write(path, o.to_string_pretty())
+    }
 }
 
 fn print_result(r: &BenchResult) {

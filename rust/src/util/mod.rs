@@ -1,9 +1,10 @@
 //! Shared substrates: deterministic RNG, JSON, statistics, clocks, the
-//! property-test harness, and the bench harness.
+//! property-test harness, the bench harness, and the scoped worker pool.
 
 pub mod bench;
 pub mod bitset;
 pub mod json;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,126 @@
+//! Minimal scoped-thread worker pool for the embarrassingly-parallel
+//! simulation sweeps in `exp/` (rayon is not in the offline crate set —
+//! DESIGN.md §Substitutions).
+//!
+//! Work is handed out through an atomic cursor, so long jobs (cd1200-scale
+//! simulations) don't serialize behind short ones, and every result lands
+//! in its input slot — the output order is the input order regardless of
+//! scheduling, which keeps experiment tables and tests deterministic.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count for [`parallel_map`]: the `SOLAR_THREADS` environment
+/// variable when set (min 1 — `SOLAR_THREADS=1` forces a serial run for
+/// timing baselines), otherwise the machine's available parallelism.
+pub fn threads() -> usize {
+    if let Ok(v) = std::env::var("SOLAR_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item on [`threads()`] workers; results come back in
+/// input order.
+pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    parallel_map_workers(threads(), items, f)
+}
+
+/// [`parallel_map`] with an explicit worker count. `workers <= 1` runs
+/// inline on the caller's thread with no pool at all.
+pub fn parallel_map_workers<T, R, F>(workers: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = workers.min(n);
+    if workers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    // Each slot is taken exactly once (the cursor hands out unique
+    // indices); the Mutex just makes the hand-off Sync.
+    let tasks: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let cursor = AtomicUsize::new(0);
+    let f = &f;
+    let mut indexed: Vec<(usize, R)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut out: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let item =
+                            tasks[i].lock().expect("pool task lock").take().expect("task taken twice");
+                        out.push((i, f(item)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    });
+    indexed.sort_unstable_by_key(|&(i, _)| i);
+    indexed.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        for workers in [1usize, 2, 4, 16] {
+            let out = parallel_map_workers(workers, (0..100u64).collect(), |x| x * x);
+            assert_eq!(out, (0..100u64).map(|x| x * x).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_single_item() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map_workers(8, empty, |x: u32| x).is_empty());
+        assert_eq!(parallel_map_workers(8, vec![7u32], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn more_workers_than_items_is_fine() {
+        let out = parallel_map_workers(32, vec![1, 2, 3], |x| x * 10);
+        assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn propagates_result_values() {
+        // Fallible jobs travel as plain values; callers decide what to do.
+        let out: Vec<Result<u32, String>> =
+            parallel_map_workers(4, vec![1u32, 0, 3], |x| {
+                if x == 0 {
+                    Err("zero".into())
+                } else {
+                    Ok(x)
+                }
+            });
+        assert_eq!(out[0], Ok(1));
+        assert!(out[1].is_err());
+        assert_eq!(out[2], Ok(3));
+    }
+
+    #[test]
+    fn threads_is_at_least_one() {
+        assert!(threads() >= 1);
+    }
+}

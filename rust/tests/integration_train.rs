@@ -17,8 +17,17 @@ fn artifacts() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Artifacts on disk AND a real PJRT runtime linked in — with the offline
+/// xla stub the manifest may exist but nothing can execute.
 fn have_artifacts() -> bool {
-    artifacts().join("manifest.json").exists()
+    if !artifacts().join("manifest.json").exists() {
+        return false;
+    }
+    if !solar::runtime::pjrt_available() {
+        eprintln!("artifacts present but {}", solar::runtime::PJRT_UNAVAILABLE);
+        return false;
+    }
+    true
 }
 
 fn dataset(n: usize, name: &str) -> PathBuf {
