@@ -60,6 +60,7 @@ fn main() -> anyhow::Result<()> {
                 eval_every: 0,
                 max_steps: 0,
                 holdout: 0,
+                prefetch: 1,
             };
             let r = train(&tc)?;
             let b = *base.get_or_insert(r.total_wall_s);

@@ -85,6 +85,7 @@ fn main() -> anyhow::Result<()> {
             eval_every: 8,
             max_steps: 0,
             holdout,
+            prefetch: 1, // double-buffered: fetch t+1 overlaps compute t
         };
         println!(
             "\n=== training with {loader} loader ({} samples, {} nodes, {} epochs, throttled PFS) ===",

@@ -37,7 +37,12 @@ fn main() {
         synth::generate_dataset(&path, &spec, 21).unwrap();
     }
     let steps = 4usize;
-    for (loader, throttle) in [("solar", 0.0), ("solar", 1.0), ("pytorch", 1.0)] {
+    // Serial (prefetch=0) vs pipelined (prefetch=1) under throttle shows
+    // the load-hiding win end to end; the unthrottled run is the compute
+    // baseline.
+    for (loader, throttle, prefetch) in
+        [("solar", 0.0, 1), ("solar", 1.0, 0), ("solar", 1.0, 1), ("pytorch", 1.0, 1)]
+    {
         let cfg = RunConfig {
             spec: spec.clone(),
             n_nodes: 2,
@@ -58,9 +63,12 @@ fn main() {
             eval_every: 0,
             max_steps: steps,
             holdout: 0,
+            prefetch,
         };
         suite.bench_units(
-            &format!("train {steps}steps 2workers loader={loader} throttle={throttle}"),
+            &format!(
+                "train {steps}steps 2workers loader={loader} throttle={throttle} prefetch={prefetch}"
+            ),
             (steps * 32) as f64,
             || train(&tc).unwrap().steps,
         );

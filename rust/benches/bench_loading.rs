@@ -49,10 +49,17 @@ fn main() {
     suite.finish();
     // Baseline for future perf PRs: scheduled samples/second per preset
     // (units_per_s in each record). Lands at the workspace root when run
-    // via `cargo bench --bench bench_loading`.
-    let out = std::path::Path::new("BENCH_loading.json");
-    match suite.write_json(out) {
-        Ok(()) => eprintln!("baseline -> {}", out.display()),
-        Err(e) => eprintln!("bench_loading: could not write {}: {e}", out.display()),
+    // via `cargo bench --bench bench_loading`. A silently-empty baseline
+    // must never pass CI: exit non-zero instead of leaving the committed
+    // schema-only placeholder in place.
+    if suite.results().is_empty() {
+        eprintln!("bench_loading: zero benchmark results recorded — refusing to write an empty baseline");
+        std::process::exit(1);
     }
+    let out = std::path::Path::new("BENCH_loading.json");
+    if let Err(e) = suite.write_json(out) {
+        eprintln!("bench_loading: could not write {}: {e}", out.display());
+        std::process::exit(1);
+    }
+    eprintln!("baseline -> {}", out.display());
 }

@@ -105,6 +105,7 @@ COMMANDS
             --data PATH [--loader solar] [--nodes 2] [--epochs 3]
             [--batch 16] [--throttle 1.0] [--holdout 32] [--lr 0.08]
             [--dense pallas|xla] [--curve out.csv]
+            [--prefetch 1] (fetch-ahead depth; 0 = serial loading)
   smoke     PJRT round-trip check   [--hlo PATH]
   info      print manifest + environment info
 ";

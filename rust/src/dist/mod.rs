@@ -9,7 +9,11 @@
 //! **without materializing any sample bytes**. One simulated epoch of the
 //! 1.2 TB CD dataset therefore costs milliseconds, not hours, which is what
 //! makes the paper's sweep matrices (dataset × tier × loader × ablation)
-//! tractable.
+//! tractable. Every epoch is accounted under both the serial schedule
+//! (load + compute) and the training driver's prefetch pipeline
+//! (`overlapped_s`: per-step `max(fetch, exec)` — only the PFS/remote
+//! fetch share of load can hide behind compute — plus the un-hideable
+//! fill/drain) — see [`report::EpochSim`].
 //!
 //! `simulate` is the hottest loop in the repo — the loading benches
 //! (`benches/bench_loading.rs`) hold it to ≥ 1M scheduled samples/second —

@@ -12,8 +12,21 @@ pub struct EpochSim {
     /// the barrier at the slowest node, so each step contributes the max
     /// over nodes.
     pub load_s: f64,
+    /// The fetch-stage share of `load_s`: byte movement the driver's
+    /// fetch thread performs (PFS streams incl. contention, remote
+    /// fetches). The remainder (`load_s − load_pfs_s`: hit
+    /// materialization + delivery/assembly) runs on the exec thread and
+    /// cannot be hidden behind compute.
+    pub load_pfs_s: f64,
     /// Modeled computation wall time (same max-over-nodes barrier).
     pub comp_s: f64,
+    /// Modeled wall time under the driver's prefetch pipeline: step t's
+    /// FETCH stage overlaps step t-1's exec stage (hit/assembly +
+    /// compute), so each steady-state step costs max(fetch, exec); the
+    /// first step's fetch (pipeline fill) and the last step's exec
+    /// (drain) are un-hideable. Always within
+    /// [max(load_pfs_s, load_s − load_pfs_s + comp_s), load_s + comp_s].
+    pub overlapped_s: f64,
     /// Samples served from local buffers.
     pub hits: usize,
     /// Samples fetched from a remote node's buffer (NoPFS behaviour).
@@ -32,9 +45,24 @@ pub struct EpochSim {
 }
 
 impl EpochSim {
-    /// Loading + computation time of this epoch.
+    /// Loading + computation time of this epoch (the serial schedule).
     pub fn total_s(&self) -> f64 {
         self.load_s + self.comp_s
+    }
+
+    /// Loading time hidden behind compute under the pipelined schedule.
+    pub fn hidden_s(&self) -> f64 {
+        (self.total_s() - self.overlapped_s).max(0.0)
+    }
+
+    /// Fraction of this epoch's loading time the pipeline hides (0 when
+    /// the epoch loads nothing).
+    pub fn hidden_frac(&self) -> f64 {
+        if self.load_s > 0.0 {
+            self.hidden_s() / self.load_s
+        } else {
+            0.0
+        }
     }
 }
 
@@ -84,6 +112,11 @@ impl SimReport {
     pub fn avg_total_s(&self) -> f64 {
         self.avg(|e| e.total_s())
     }
+
+    /// Average per-epoch pipelined (overlapped) time, excluding warmup.
+    pub fn avg_overlapped_s(&self) -> f64 {
+        self.avg(|e| e.overlapped_s)
+    }
 }
 
 #[cfg(test)]
@@ -102,7 +135,9 @@ mod tests {
                     epoch_pos: i,
                     epoch_src: i,
                     load_s: l,
+                    load_pfs_s: 0.75 * l,
                     comp_s: 2.0 * l,
+                    overlapped_s: 2.5 * l,
                     ..Default::default()
                 })
                 .collect(),
@@ -117,6 +152,23 @@ mod tests {
         assert!((r.avg_load_s() - 2.0).abs() < 1e-12);
         assert!((r.avg_comp_s() - 4.0).abs() < 1e-12);
         assert!((r.avg_total_s() - 6.0).abs() < 1e-12);
+        assert!((r.avg_overlapped_s() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hidden_time_is_serial_minus_overlapped() {
+        let e = EpochSim {
+            load_s: 4.0,
+            load_pfs_s: 3.0,
+            comp_s: 3.0,
+            overlapped_s: 5.0,
+            ..Default::default()
+        };
+        assert!((e.hidden_s() - 2.0).abs() < 1e-12);
+        assert!((e.hidden_frac() - 0.5).abs() < 1e-12);
+        // No loading → nothing to hide.
+        let idle = EpochSim::default();
+        assert_eq!(idle.hidden_frac(), 0.0);
     }
 
     #[test]

@@ -20,6 +20,14 @@
 //!   sample; every delivered sample pays the decode/collate overhead.
 //! * The synchronous step barrier sits at the slowest node, so each step
 //!   contributes max-over-nodes to both load and compute time.
+//! * Both schedules are reported per epoch: the serial breakdown
+//!   (`load_s` + `comp_s`, every byte lands before its step computes) and
+//!   the pipelined time (`overlapped_s`, the driver's prefetch mode where
+//!   only the FETCH share of step t's load — PFS streams and remote
+//!   fetches, `load_pfs_s` — hides behind step t-1's exec stage; hit
+//!   materialization and delivery/assembly stay on the exec thread, so a
+//!   steady-state step costs max(fetch, exec) plus the un-hideable first
+//!   fetch and last exec).
 //!
 //! The accounting loop runs once per (step × node) at full paper scale —
 //! tens of millions of iterations — and therefore keeps to flat scalar
@@ -64,7 +72,10 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
         let epoch_src = report.epoch_order[pos];
         // Flat per-epoch accumulators — the hot loop writes only these.
         let mut load_s = 0.0f64;
+        let mut load_pfs_s = 0.0f64;
         let mut comp_s = 0.0f64;
+        let mut overlapped_s = 0.0f64;
+        let mut prev_exec = 0.0f64;
         let mut hits = 0usize;
         let mut remote_samples = 0usize;
         let mut pfs_samples = 0usize;
@@ -75,6 +86,7 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
 
         engine.run_epoch(pos, |step, sl| {
             let mut step_load = 0.0f64;
+            let mut step_hide = 0.0f64;
             let mut step_comp = 0.0f64;
             let mut step_max_pfs = 0usize;
             for nl in &sl.nodes {
@@ -90,11 +102,16 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
                     pfs_t += cost.pfs_read(r.len, jump);
                     stream_pos = Some(r.offset + r.len);
                 }
-                let node_load = pfs_t * contention
-                    + nl.remote as f64 * cost.remote_fetch(sample_bytes)
+                // Hideable share: byte movement the driver's fetch thread
+                // performs (PFS streams, remote fetches). Hit
+                // materialization and delivery/assembly stay on the exec
+                // thread's critical path and cannot overlap compute.
+                let node_hide = pfs_t * contention + nl.remote as f64 * cost.remote_fetch(sample_bytes);
+                let node_load = node_hide
                     + nl.hits as f64 * cost.buffer_hit(sample_bytes)
                     + cost.delivery_overhead(nl.samples.len());
                 step_load = step_load.max(node_load);
+                step_hide = step_hide.max(node_hide);
                 step_comp = step_comp.max(nl.samples.len() as f64 * comp_per_sample);
                 step_max_pfs = step_max_pfs.max(nl.pfs_samples);
 
@@ -109,7 +126,30 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
                 }
             }
             load_s += step_load;
+            load_pfs_s += step_hide;
             comp_s += step_comp;
+            // Pipelined accounting (the driver's prefetch mode): only the
+            // FETCH share of step t's load overlaps the exec stage of
+            // step t-1 (exec = hit materialization + assembly + compute),
+            //   overlapped = hide_0 + Σ_{t≥1} max(hide_t, exec_{t-1})
+            //                + exec_last,  exec_t = (load_t − hide_t) + comp_t
+            // — the first fetch (pipeline fill) is the un-hideable cold
+            // start; exec_last is added after the epoch completes.
+            // The exec share is derived from the barrier aggregates
+            // (max-over-nodes load minus max-over-nodes fetch), not
+            // per-node maxima: that keeps overlapped provably within
+            // [stage floors, load_s + comp_s] (per-node maxima can exceed
+            // the serial barrier when the slowest fetcher and the slowest
+            // assembler are different nodes). Under balanced batches the
+            // delivery-dominated exec shares are near-equal across nodes,
+            // so the difference is negligible; an exact per-node-clock
+            // model is a ROADMAP item.
+            if steps == 0 {
+                overlapped_s += step_hide;
+            } else {
+                overlapped_s += step_hide.max(prev_exec);
+            }
+            prev_exec = (step_load - step_hide) + step_comp;
             max_numpfs_sum += step_max_pfs as u64;
             steps += 1;
 
@@ -128,11 +168,16 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
             }
         });
 
+        // Drain the pipeline: the last step's exec stage overlaps nothing.
+        overlapped_s += prev_exec;
+
         report.epochs.push(EpochSim {
             epoch_pos: pos,
             epoch_src,
             load_s,
+            load_pfs_s,
             comp_s,
+            overlapped_s,
             hits,
             remote_samples,
             pfs_samples,
@@ -223,6 +268,72 @@ mod tests {
         }
         // Tight buffers: the probe step must actually record fetches.
         assert!(r.sample_step_fetches.iter().sum::<usize>() > 0);
+    }
+
+    #[test]
+    fn overlapped_time_bounded_by_stages_and_serial() {
+        // For every loader and epoch the pipelined time sits between its
+        // two stage totals (fetch; exec = serial-load-share + compute)
+        // and the serial schedule.
+        let c = cfg(512, 4, 8, 3, 64);
+        for name in LoaderPolicy::known_names() {
+            let r = simulate(&c, &LoaderPolicy::by_name(name).unwrap());
+            for e in &r.epochs {
+                assert!(
+                    e.load_pfs_s <= e.load_s + 1e-12,
+                    "{name} epoch {}: fetch share exceeds load",
+                    e.epoch_pos
+                );
+                let floor = e.load_pfs_s.max(e.load_s - e.load_pfs_s + e.comp_s);
+                assert!(
+                    e.overlapped_s >= floor - 1e-12,
+                    "{name} epoch {}: overlapped {} < floor {}",
+                    e.epoch_pos,
+                    e.overlapped_s,
+                    floor
+                );
+                assert!(
+                    e.overlapped_s <= e.total_s() + 1e-9,
+                    "{name} epoch {}: overlapped {} > serial {}",
+                    e.epoch_pos,
+                    e.overlapped_s,
+                    e.total_s()
+                );
+                assert!(e.hidden_frac() >= 0.0 && e.hidden_s() >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_strictly_hides_fetch_when_every_step_fetches() {
+        // pytorch reads every sample from the PFS each step, so every
+        // steady-state step has fetch time to hide behind the previous
+        // step's exec stage: overlapped < serial strictly.
+        let c = cfg(512, 4, 8, 3, 0);
+        let r = simulate(&c, &LoaderPolicy::pytorch());
+        for e in &r.epochs {
+            assert!(e.load_pfs_s > 0.0);
+            assert!(
+                e.overlapped_s < e.total_s(),
+                "epoch {}: pipeline should hide fetch time ({} vs {})",
+                e.epoch_pos,
+                e.overlapped_s,
+                e.total_s()
+            );
+            assert!(e.hidden_s() > 0.0);
+        }
+    }
+
+    #[test]
+    fn single_step_epoch_cannot_hide_anything() {
+        // One step per epoch: fill + drain only — overlapped == serial.
+        let c = cfg(16, 2, 8, 2, 0);
+        assert_eq!(c.steps_per_epoch(), 1);
+        let r = simulate(&c, &LoaderPolicy::pytorch());
+        for e in &r.epochs {
+            assert!((e.overlapped_s - e.total_s()).abs() < 1e-12);
+            assert!(e.hidden_s() < 1e-12);
+        }
     }
 
     #[test]

@@ -223,7 +223,7 @@ pub fn fig16_batch_sizes(ctx: &ExpCtx) -> Result<()> {
     for (s, sizes) in r.early_batch_sizes.iter().enumerate() {
         let v: Vec<f64> = sizes.iter().map(|&x| x as f64).collect();
         let mut sorted = v.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp); // NaN-safe: never panics
         t.rowv(vec![
             format!("{s}"),
             format!("{:.0}", sorted[0]),

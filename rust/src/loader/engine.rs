@@ -395,17 +395,41 @@ impl LoaderEngine {
     }
 
     /// Run one epoch (position `pos` in the optimized order), invoking
-    /// `on_step(step, &StepLoad)` for every step.
+    /// `on_step(step, &StepLoad)` for every step. Implemented on top of
+    /// [`plan_steps`](Self::plan_steps); the borrowed `StepLoad` lets
+    /// callers (the simulator) account costs without cloning anything.
     pub fn run_epoch(&mut self, pos: usize, mut on_step: impl FnMut(usize, &StepLoad)) {
+        for (s, sl) in self.plan_steps(pos).enumerate() {
+            on_step(s, &sl);
+        }
+    }
+
+    /// Pull-based plan cursor: yields one epoch's [`StepLoad`]s on demand,
+    /// so consumers (the training coordinator's prefetch pipeline) hold
+    /// O(lookahead) plans in memory instead of materializing — or cloning —
+    /// the whole epoch up front. Buffer state evolves as steps are pulled,
+    /// exactly as under [`run_epoch`](Self::run_epoch); at paper scale an
+    /// epoch is tens of thousands of steps, which is why the coordinator
+    /// must stream.
+    pub fn plan_steps(&mut self, pos: usize) -> PlanSteps<'_> {
         assert!(pos < self.cfg.n_epochs);
         let epoch_src = self.epoch_order[pos];
-        let next_src = self.epoch_order.get(pos + 1).copied();
+        let steps = self.steps_per_epoch();
 
         if self.policy.local_shuffle {
-            self.run_epoch_deepio(pos, &mut on_step);
-            return;
+            let local_perm = self.deepio_local_perms(pos);
+            return PlanSteps {
+                engine: self,
+                epoch_src,
+                perm: Vec::new(),
+                local_perm,
+                deepio: true,
+                step: 0,
+                steps,
+            };
         }
 
+        let next_src = self.epoch_order.get(pos + 1).copied();
         // Per-epoch step maps for Belady keys.
         self.step_this = self.step_map(epoch_src);
         self.step_next = match next_src {
@@ -413,133 +437,62 @@ impl LoaderEngine {
             None => vec![UNUSED; self.cfg.spec.n_samples],
         };
         self.rebuild_heaps();
-
+        // The permutation moves into the cursor for the epoch (nothing in
+        // the per-step path touches the cache) and is restored on drop.
         let pi = self.cached_perm(epoch_src);
         let perm = std::mem::take(&mut self.perm_cache[pi].1);
-        let steps = self.steps_per_epoch();
-        let g = self.cfg.global_batch();
+        PlanSteps { engine: self, epoch_src, perm, local_perm: Vec::new(), deepio: false, step: 0, steps }
+    }
+
+    /// Plan one step given its global batch; the engine's buffer state
+    /// advances as a side effect.
+    fn plan_step_global(&mut self, global: &[u32]) -> StepLoad {
         let n_nodes = self.cfg.n_nodes;
         let local_batch = self.cfg.local_batch;
         let max_batch = local_batch * 2; // AOT executable's padded max
 
-        for s in 0..steps {
-            let global = &perm[s * g..(s + 1) * g];
-
-            // --- assignment (locality remap / default blocks) ---
-            let (mut assign, pending) = if self.policy.locality_remap {
-                if self.policy.load_balance {
-                    remap_global_batch(global, &self.loc, n_nodes, local_batch, false)
-                } else {
-                    (remap_global_batch(global, &self.loc, n_nodes, local_batch, true).0, vec![])
-                }
-            } else {
-                (default_assignment(global, n_nodes, local_batch), vec![])
-            };
-
-            // --- balance: distribute non-resident samples evenly ---
+        // --- assignment (locality remap / default blocks) ---
+        let (mut assign, pending) = if self.policy.locality_remap {
             if self.policy.load_balance {
-                balance_fetches(&mut assign, pending, max_batch);
-            } else if !pending.is_empty() {
-                fill_to_quota(&mut assign, pending, local_batch);
+                remap_global_batch(global, &self.loc, n_nodes, local_batch, false)
+            } else {
+                (remap_global_batch(global, &self.loc, n_nodes, local_batch, true).0, vec![])
             }
+        } else {
+            (default_assignment(global, n_nodes, local_batch), vec![])
+        };
 
-            // --- classify sources + update buffers ---
-            let mut step_load = StepLoad { nodes: Vec::with_capacity(n_nodes) };
-            for (k, batch) in assign.into_iter().enumerate() {
-                let mut nl = NodeStepLoad { samples: batch, ..Default::default() };
-                let mut fetch_ids: Vec<u32> = Vec::new();
-                let mut remote_ids: Vec<u32> = Vec::new();
-                for &x in &nl.samples {
-                    if self.resident[k].contains(x as usize) {
-                        nl.hits += 1;
-                        let key = match self.policy.buffer {
-                            BufferPolicy::Lru => self.lru_key(),
-                            _ => self.belady_key(x, true),
-                        };
-                        self.buffer_touch(k, x, key);
-                    } else if self.loc[x as usize] >= 0 && self.policy.remote_fetch {
-                        nl.remote += 1;
-                        remote_ids.push(x);
-                    } else {
-                        fetch_ids.push(x);
-                    }
-                }
-                // --- PFS requests (chunked or per-sample) ---
-                nl.pfs_samples = fetch_ids.len();
-                if self.policy.chunk_agg {
-                    fetch_ids.sort_unstable();
-                    let chunks = aggregate(&fetch_ids, self.gap_thresh);
-                    for c in &chunks {
-                        nl.pfs_reqs.push(ReadReq {
-                            offset: self.offset_of(c.lo),
-                            len: c.span() as u64 * self.cfg.spec.sample_bytes as u64,
-                        });
-                    }
-                    nl.chunks = chunks;
+        // --- balance: distribute non-resident samples evenly ---
+        if self.policy.load_balance {
+            balance_fetches(&mut assign, pending, max_batch);
+        } else if !pending.is_empty() {
+            fill_to_quota(&mut assign, pending, local_batch);
+        }
+
+        // --- classify sources + update buffers ---
+        let mut step_load = StepLoad { nodes: Vec::with_capacity(n_nodes) };
+        for (k, batch) in assign.into_iter().enumerate() {
+            let mut nl = NodeStepLoad { samples: batch, ..Default::default() };
+            let mut fetch_ids: Vec<u32> = Vec::new();
+            let mut remote_ids: Vec<u32> = Vec::new();
+            for &x in &nl.samples {
+                if self.resident[k].contains(x as usize) {
+                    nl.hits += 1;
+                    let key = match self.policy.buffer {
+                        BufferPolicy::Lru => self.lru_key(),
+                        _ => self.belady_key(x, true),
+                    };
+                    self.buffer_touch(k, x, key);
+                } else if self.loc[x as usize] >= 0 && self.policy.remote_fetch {
+                    nl.remote += 1;
+                    remote_ids.push(x);
                 } else {
-                    for &x in &fetch_ids {
-                        nl.pfs_reqs.push(ReadReq {
-                            offset: self.offset_of(x),
-                            len: self.cfg.spec.sample_bytes as u64,
-                        });
-                    }
+                    fetch_ids.push(x);
                 }
-                // --- insert fetched (and remote-cached) samples ---
-                for &x in fetch_ids.iter().chain(remote_ids.iter()) {
-                    if !self.resident[k].contains(x as usize) {
-                        let key = match self.policy.buffer {
-                            BufferPolicy::Lru => self.lru_key(),
-                            _ => self.belady_key(x, true),
-                        };
-                        let (ins, ev) = self.buffer_insert(k, x, key);
-                        if ins {
-                            nl.inserted.push(x);
-                        }
-                        if let Some(e) = ev {
-                            nl.evicted.push(e);
-                        }
-                    }
-                }
-                step_load.nodes.push(nl);
             }
-            on_step(s, &step_load);
-        }
-        self.perm_cache[pi].1 = perm;
-    }
-
-    /// DeepIO path: node-local shuffling over a static partition.
-    fn run_epoch_deepio(&mut self, pos: usize, on_step: &mut impl FnMut(usize, &StepLoad)) {
-        let n = self.cfg.spec.n_samples;
-        let n_nodes = self.cfg.n_nodes;
-        let steps = self.steps_per_epoch();
-        let local_batch = self.cfg.local_batch;
-        // Per-node local permutation of its partition for this epoch.
-        let mut local_perm: Vec<Vec<u32>> = (0..n_nodes).map(|_| Vec::new()).collect();
-        for x in 0..n {
-            local_perm[self.partition[x] as usize].push(x as u32);
-        }
-        for (k, p) in local_perm.iter_mut().enumerate() {
-            let mut rng = self.rng.fork((pos * n_nodes + k) as u64);
-            rng.shuffle(p);
-        }
-        for s in 0..steps {
-            let mut step_load = StepLoad { nodes: Vec::with_capacity(n_nodes) };
-            for (k, perm_k) in local_perm.iter().enumerate() {
-                let lo = s * local_batch;
-                let hi = ((s + 1) * local_batch).min(perm_k.len());
-                let batch: Vec<u32> = perm_k[lo.min(perm_k.len())..hi].to_vec();
-                let mut nl = NodeStepLoad { samples: batch.clone(), ..Default::default() };
-                let mut fetch_ids: Vec<u32> = Vec::new();
-                for &x in &batch {
-                    if self.resident[k].contains(x as usize) {
-                        nl.hits += 1;
-                        let key = self.lru_key();
-                        self.buffer_touch(k, x, key);
-                    } else {
-                        fetch_ids.push(x);
-                    }
-                }
-                nl.pfs_samples = fetch_ids.len();
+            // --- PFS requests (chunked or per-sample) ---
+            nl.pfs_samples = fetch_ids.len();
+            if self.policy.chunk_agg {
                 fetch_ids.sort_unstable();
                 let chunks = aggregate(&fetch_ids, self.gap_thresh);
                 for c in &chunks {
@@ -549,22 +502,96 @@ impl LoaderEngine {
                     });
                 }
                 nl.chunks = chunks;
+            } else {
                 for &x in &fetch_ids {
-                    if !self.resident[k].contains(x as usize) {
-                        let key = self.lru_key();
-                        let (ins, ev) = self.buffer_insert(k, x, key);
-                        if ins {
-                            nl.inserted.push(x);
-                        }
-                        if let Some(e) = ev {
-                            nl.evicted.push(e);
-                        }
+                    nl.pfs_reqs.push(ReadReq {
+                        offset: self.offset_of(x),
+                        len: self.cfg.spec.sample_bytes as u64,
+                    });
+                }
+            }
+            // --- insert fetched (and remote-cached) samples ---
+            for &x in fetch_ids.iter().chain(remote_ids.iter()) {
+                if !self.resident[k].contains(x as usize) {
+                    let key = match self.policy.buffer {
+                        BufferPolicy::Lru => self.lru_key(),
+                        _ => self.belady_key(x, true),
+                    };
+                    let (ins, ev) = self.buffer_insert(k, x, key);
+                    if ins {
+                        nl.inserted.push(x);
+                    }
+                    if let Some(e) = ev {
+                        nl.evicted.push(e);
                     }
                 }
-                step_load.nodes.push(nl);
             }
-            on_step(s, &step_load);
+            step_load.nodes.push(nl);
         }
+        step_load
+    }
+
+    /// DeepIO: per-node local permutation of each static partition for
+    /// epoch position `pos`.
+    fn deepio_local_perms(&mut self, pos: usize) -> Vec<Vec<u32>> {
+        let n = self.cfg.spec.n_samples;
+        let n_nodes = self.cfg.n_nodes;
+        let mut local_perm: Vec<Vec<u32>> = (0..n_nodes).map(|_| Vec::new()).collect();
+        for x in 0..n {
+            local_perm[self.partition[x] as usize].push(x as u32);
+        }
+        for (k, p) in local_perm.iter_mut().enumerate() {
+            let mut rng = self.rng.fork((pos * n_nodes + k) as u64);
+            rng.shuffle(p);
+        }
+        local_perm
+    }
+
+    /// Plan one DeepIO step: node-local shuffling over a static partition.
+    fn plan_step_deepio(&mut self, s: usize, local_perm: &[Vec<u32>]) -> StepLoad {
+        let n_nodes = self.cfg.n_nodes;
+        let local_batch = self.cfg.local_batch;
+        let mut step_load = StepLoad { nodes: Vec::with_capacity(n_nodes) };
+        for (k, perm_k) in local_perm.iter().enumerate() {
+            let lo = s * local_batch;
+            let hi = ((s + 1) * local_batch).min(perm_k.len());
+            let batch: Vec<u32> = perm_k[lo.min(perm_k.len())..hi].to_vec();
+            let mut nl = NodeStepLoad { samples: batch, ..Default::default() };
+            let mut fetch_ids: Vec<u32> = Vec::new();
+            for &x in &nl.samples {
+                if self.resident[k].contains(x as usize) {
+                    nl.hits += 1;
+                    let key = self.lru_key();
+                    self.buffer_touch(k, x, key);
+                } else {
+                    fetch_ids.push(x);
+                }
+            }
+            nl.pfs_samples = fetch_ids.len();
+            fetch_ids.sort_unstable();
+            let chunks = aggregate(&fetch_ids, self.gap_thresh);
+            for c in &chunks {
+                nl.pfs_reqs.push(ReadReq {
+                    offset: self.offset_of(c.lo),
+                    len: c.span() as u64 * self.cfg.spec.sample_bytes as u64,
+                });
+            }
+            nl.chunks = chunks;
+            for &x in &fetch_ids {
+                if !self.resident[k].contains(x as usize) {
+                    let key = self.lru_key();
+                    let (ins, ev) = self.buffer_insert(k, x, key);
+                    if ins {
+                        nl.inserted.push(x);
+                    }
+                    if let Some(e) = ev {
+                        nl.evicted.push(e);
+                    }
+                }
+            }
+            step_load.nodes.push(nl);
+        }
+        step_load
     }
 
     /// Total buffered samples (testing hook).
@@ -575,6 +602,67 @@ impl LoaderEngine {
     /// Per-node buffered counts (testing hook).
     pub fn buffered_per_node(&self) -> &[usize] {
         &self.count
+    }
+}
+
+/// Streaming cursor over one epoch's step plans (see
+/// [`LoaderEngine::plan_steps`]). Dropping the cursor mid-epoch leaves the
+/// buffer state wherever the last pulled step left it — exactly like
+/// breaking out of `run_epoch` early — and restores the epoch permutation
+/// to the engine's cache.
+pub struct PlanSteps<'e> {
+    engine: &'e mut LoaderEngine,
+    epoch_src: usize,
+    /// The epoch permutation, moved out of the engine's cache for the
+    /// cursor's lifetime (non-DeepIO path).
+    perm: Vec<u32>,
+    /// DeepIO's per-node local permutations.
+    local_perm: Vec<Vec<u32>>,
+    deepio: bool,
+    step: usize,
+    steps: usize,
+}
+
+impl Iterator for PlanSteps<'_> {
+    type Item = StepLoad;
+
+    fn next(&mut self) -> Option<StepLoad> {
+        if self.step >= self.steps {
+            return None;
+        }
+        let s = self.step;
+        self.step += 1;
+        if self.deepio {
+            Some(self.engine.plan_step_deepio(s, &self.local_perm))
+        } else {
+            let g = self.engine.cfg.global_batch();
+            Some(self.engine.plan_step_global(&self.perm[s * g..(s + 1) * g]))
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.steps - self.step;
+        (left, Some(left))
+    }
+}
+
+impl ExactSizeIterator for PlanSteps<'_> {}
+
+impl Drop for PlanSteps<'_> {
+    fn drop(&mut self) {
+        if !self.deepio {
+            // Give the permutation back to the cache slot it was taken
+            // from (identified by epoch + the emptied vec it left behind).
+            let perm = std::mem::take(&mut self.perm);
+            if let Some(slot) = self
+                .engine
+                .perm_cache
+                .iter_mut()
+                .find(|(e, p)| *e == self.epoch_src && p.is_empty())
+            {
+                slot.1 = perm;
+            }
+        }
     }
 }
 
@@ -823,6 +911,67 @@ mod tests {
         let a = summarize(LoaderEngine::new(cfg.clone(), LoaderPolicy::solar()));
         let b = summarize(LoaderEngine::new(cfg, LoaderPolicy::solar()));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn plan_steps_cursor_matches_run_epoch() {
+        // The pull-based cursor and the callback path are the same plan.
+        for name in ["pytorch", "pytorch+lru", "nopfs", "solar", "deepio"] {
+            let cfg = tiny_cfg(256, 4, 8, 3, 32);
+            let policy = LoaderPolicy::by_name(name).unwrap();
+            let mut a = LoaderEngine::new(cfg.clone(), policy.clone());
+            let mut b = LoaderEngine::new(cfg, policy);
+            for pos in 0..3 {
+                let mut via_cb: Vec<StepLoad> = vec![];
+                a.run_epoch(pos, |_, sl| via_cb.push(sl.clone()));
+                let via_cursor: Vec<StepLoad> = b.plan_steps(pos).collect();
+                assert_eq!(via_cb.len(), via_cursor.len(), "{name} epoch {pos}");
+                for (s, (x, y)) in via_cb.iter().zip(via_cursor.iter()).enumerate() {
+                    for (nx, ny) in x.nodes.iter().zip(y.nodes.iter()) {
+                        assert_eq!(nx.samples, ny.samples, "{name} e{pos} s{s}");
+                        assert_eq!(nx.hits, ny.hits, "{name} e{pos} s{s}");
+                        assert_eq!(nx.pfs_reqs, ny.pfs_reqs, "{name} e{pos} s{s}");
+                        assert_eq!(nx.inserted, ny.inserted, "{name} e{pos} s{s}");
+                        assert_eq!(nx.evicted, ny.evicted, "{name} e{pos} s{s}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_steps_reports_exact_length() {
+        let cfg = tiny_cfg(256, 4, 8, 2, 32);
+        let mut engine = LoaderEngine::new(cfg, LoaderPolicy::solar());
+        let spe = engine.steps_per_epoch();
+        let mut cursor = engine.plan_steps(0);
+        assert_eq!(cursor.len(), spe);
+        let _ = cursor.next();
+        assert_eq!(cursor.len(), spe - 1);
+    }
+
+    #[test]
+    fn dropping_cursor_mid_epoch_restores_perm_cache() {
+        // A consumer that bails mid-epoch (max_steps) must not poison the
+        // next epoch's shuffle: the permutation goes back to the cache.
+        let cfg = tiny_cfg(256, 2, 8, 3, 32);
+        let mut engine = LoaderEngine::new(cfg.clone(), LoaderPolicy::solar());
+        {
+            let mut cursor = engine.plan_steps(0);
+            let first = cursor.next().unwrap();
+            assert!(!first.nodes.is_empty());
+        } // dropped after one step
+        // Replaying the same epoch must still see the full permutation.
+        let mut batches = 0usize;
+        engine.run_epoch(0, |_, sl| {
+            batches += sl.nodes.iter().map(|n| n.samples.len()).sum::<usize>();
+        });
+        let mut fresh = LoaderEngine::new(cfg, LoaderPolicy::solar());
+        let mut expect = 0usize;
+        fresh.run_epoch(0, |_, sl| {
+            expect += sl.nodes.iter().map(|n| n.samples.len()).sum::<usize>();
+        });
+        assert_eq!(batches, expect);
     }
 
     #[test]

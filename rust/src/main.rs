@@ -82,19 +82,28 @@ fn cmd_sim(args: &Args) -> Result<()> {
     );
     let r = simulate(&cfg, &policy);
     println!("loader {} | epoch order {:?}", r.loader, r.epoch_order);
-    println!("epoch  load(s)    comp(s)    hits       remote     pfs        reqs       chunk%");
+    println!("epoch  load(s)    comp(s)    pipe(s)    hidden%  hits       remote     pfs        reqs       chunk%");
     for e in &r.epochs {
         println!(
-            "{:<6} {:<10.3} {:<10.3} {:<10} {:<10} {:<10} {:<10} {:.1}%",
-            e.epoch_pos, e.load_s, e.comp_s, e.hits, e.remote_samples, e.pfs_samples, e.pfs_requests,
+            "{:<6} {:<10.3} {:<10.3} {:<10.3} {:<8.1} {:<10} {:<10} {:<10} {:<10} {:.1}%",
+            e.epoch_pos,
+            e.load_s,
+            e.comp_s,
+            e.overlapped_s,
+            100.0 * e.hidden_frac(),
+            e.hits,
+            e.remote_samples,
+            e.pfs_samples,
+            e.pfs_requests,
             e.chunked_frac * 100.0
         );
     }
     println!(
-        "avg (excl warmup): load {} comp {} total {}",
+        "avg (excl warmup): load {} comp {} total {} | pipelined {}",
         fmt_secs(r.avg_load_s()),
         fmt_secs(r.avg_comp_s()),
-        fmt_secs(r.avg_total_s())
+        fmt_secs(r.avg_total_s()),
+        fmt_secs(r.avg_overlapped_s())
     );
     Ok(())
 }
@@ -184,10 +193,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_every: args.get_usize("eval-every", 8)?,
         max_steps: args.get_usize("max-steps", 0)?,
         holdout,
+        prefetch: args.get_usize("prefetch", 1)?,
     };
     println!(
-        "training: {} samples, {} nodes x batch {}, {} epochs, loader {}, throttle x{}",
-        tc.run.spec.n_samples, tc.run.n_nodes, tc.run.local_batch, tc.run.n_epochs, loader, tc.throttle
+        "training: {} samples, {} nodes x batch {}, {} epochs, loader {}, throttle x{}, prefetch {}",
+        tc.run.spec.n_samples,
+        tc.run.n_nodes,
+        tc.run.local_batch,
+        tc.run.n_epochs,
+        loader,
+        tc.throttle,
+        tc.prefetch
     );
     let report = train(&tc)?;
     for p in report.points.iter().filter(|p| !p.val_loss.is_nan()) {
@@ -197,11 +213,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "done: {} steps in {} (load {}, compute {}), hits {}, pfs {}",
+        "done: {} steps in {} (load {}, compute {}, hidden by prefetch {}), hits {}, pfs {}",
         report.steps,
         fmt_secs(report.total_wall_s),
         fmt_secs(report.load_wall_s),
         fmt_secs(report.comp_wall_s),
+        fmt_secs(report.hidden_load_s()),
         report.hits,
         report.pfs_samples
     );

@@ -1,23 +1,41 @@
-//! The distributed training driver — real bytes, real gradients.
+//! The distributed training driver — real bytes, real gradients, with a
+//! double-buffered prefetch pipeline.
 //!
-//! Topology: one coordinator (this thread) + `n_nodes` worker threads.
-//! Each worker owns a PJRT CPU client + compiled training-step executable
-//! (the `xla` handles are not `Send`, so they are constructed inside the
-//! worker), its own SHDF file handle, and an in-memory byte buffer that
-//! mirrors the loader engine's buffer decisions exactly (`inserted` /
-//! `evicted` lists in each `NodeStepLoad`).
+//! Topology: one coordinator (this thread) + `n_nodes` workers, each a
+//! PAIR of threads:
 //!
-//! Per step: the engine emits the step's `StepLoad`; the coordinator ships
-//! each node its work + a parameter snapshot; workers load bytes (buffer
-//! hits from memory, PFS fetches from the file, optionally throttled by the
-//! cost model to emulate Lustre), execute the AOT'd grads, and return
-//! summed gradients; the coordinator allreduces, divides by the global
-//! valid count, applies SGD — exactly the synchronous data parallelism of
-//! eq. 3, with SOLAR's within-global-batch reshuffles provably invisible to
-//! the final gradient.
+//! * a **fetch thread** that owns its own SHDF handle and stages the PFS
+//!   bytes for upcoming steps (the engine's deterministic plan says
+//!   exactly which bytes each step needs), charging the throttle model as
+//!   it goes — so the emulated Lustre delay runs here, off the compute
+//!   path;
+//! * an **exec thread** that owns the PJRT CPU client + compiled
+//!   training-step executable (the `xla` handles are not `Send`) and the
+//!   in-memory byte buffer that mirrors the loader engine's buffer
+//!   decisions exactly (`inserted` / `evicted` lists in each
+//!   [`NodeStepLoad`]).
+//!
+//! The coordinator streams step plans straight off the engine's
+//! [`LoaderEngine::plan_steps`] cursor — O(prefetch) plans in memory, not
+//! O(epoch) — and dispatches each step's fetch up to `prefetch` steps
+//! ahead of its execution: while step *t* runs grads, step *t+1*'s PFS
+//! bytes move. SOLAR's offline determinism is what makes this safe: the
+//! plan for *t+1* is fully known before *t* runs, and prefetching changes
+//! WHEN bytes move, never WHICH samples feed which gradient —
+//! `prefetch: 0` (the strictly serial pre-pipeline schedule) produces
+//! bit-identical parameters (tested in `driver_pipeline_parity.rs`).
+//!
+//! Per step: the exec worker assembles the batch (staged bytes + buffer
+//! hits), executes the AOT'd grads, and returns summed gradients; the
+//! coordinator allreduces, divides by the global valid count, applies
+//! SGD — exactly the synchronous data parallelism of eq. 3, with SOLAR's
+//! within-global-batch reshuffles provably invisible to the final
+//! gradient. Batch assembly (decode + collate) is charged to the LOAD
+//! bucket, mirroring `dist::sim`'s `delivery_overhead`, so Fig 14's
+//! load/compute breakdown is directly comparable to the simulator's.
 
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -28,8 +46,9 @@ use crate::loader::engine::{LoaderEngine, NodeStepLoad};
 use crate::loader::LoaderPolicy;
 use crate::runtime::executable::{DenseImpl, TrainRuntime};
 use crate::runtime::params::{GradAccum, ParamStore};
+use crate::storage::pfs::CostModel;
 use crate::storage::shdf::ShdfReader;
-use crate::train::metrics::{LossPoint, TrainReport};
+use crate::train::metrics::{EpochLoadStat, LossPoint, TrainReport};
 use crate::util::timer::Stopwatch;
 
 /// Driver configuration.
@@ -50,24 +69,51 @@ pub struct TrainConfig {
     pub max_steps: usize,
     /// Number of trailing samples held out for validation.
     pub holdout: usize,
+    /// Fetch-ahead depth of the worker pipeline: each node's fetch stage
+    /// runs up to this many steps ahead of execution, hiding PFS time
+    /// behind compute. 0 = strictly serial (every step's bytes land
+    /// before its grads start). Affects only WHEN bytes move — the
+    /// trained parameters are bit-identical across depths.
+    pub prefetch: usize,
 }
 
 type Params = Arc<Vec<Vec<f32>>>;
 
+/// Work for a node's fetch stage: stage one step's PFS bytes.
+struct FetchMsg {
+    step_id: usize,
+    load: NodeStepLoad,
+}
+
 enum WorkMsg {
-    Step { step_id: usize, params: Params, load: NodeStepLoad },
+    Exec { step_id: usize, params: Params },
     Eval { params: Params, ids: Vec<u32> },
     Stop,
 }
 
+/// One step's staged bytes, handed from a node's fetch thread to its exec
+/// thread in strict step order.
+struct StagedStep {
+    step_id: usize,
+    load: NodeStepLoad,
+    /// Decoded samples fetched from the file for this step, keyed by id.
+    staged: HashMap<u32, Arc<Vec<f32>>>,
+    /// Wall seconds the fetch stage spent on this step (real reads +
+    /// decode + throttle sleep; excludes handoff backpressure).
+    fetch_wall_s: f64,
+}
+
 struct DoneMsg {
-    #[allow(dead_code)]
+    /// Worker index — the allreduce sums gradients in node order so the
+    /// result is independent of reply arrival order.
     node: usize,
     step_id: usize,
     loss_sum: f64,
     n_valid: f64,
     grads: Option<Vec<Vec<f32>>>,
+    /// Fetch-stage + batch-assembly wall seconds (the LOAD bucket).
     load_wall_s: f64,
+    /// Pure grads-execution wall seconds (the COMPUTE bucket).
     exec_wall_s: f64,
 }
 
@@ -89,12 +135,15 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
         engine.set_data_start(reader.offset_of(0));
     }
 
-    // Spawn workers.
+    // Spawn workers (a fetch + exec thread pair per node).
+    let mut to_fetch: Vec<mpsc::Sender<FetchMsg>> = Vec::with_capacity(n_nodes);
     let mut to_workers: Vec<mpsc::Sender<WorkMsg>> = Vec::with_capacity(n_nodes);
     let (done_tx, done_rx) = mpsc::channel::<Result<DoneMsg>>();
     let mut handles = Vec::with_capacity(n_nodes);
     for k in 0..n_nodes {
+        let (ftx, frx) = mpsc::channel::<FetchMsg>();
         let (tx, rx) = mpsc::channel::<WorkMsg>();
+        to_fetch.push(ftx);
         to_workers.push(tx);
         let done = done_tx.clone();
         let dataset_path = tc.dataset_path.clone();
@@ -102,8 +151,9 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
         let dense = tc.dense;
         let throttle = tc.throttle;
         let cost = tc.run.cost.clone();
+        let depth = tc.prefetch;
         handles.push(std::thread::spawn(move || {
-            worker_loop(k, rx, done, &dataset_path, &artifacts_dir, dense, throttle, cost)
+            worker_loop(k, frx, rx, done, &dataset_path, &artifacts_dir, dense, throttle, cost, depth)
         }));
     }
     drop(done_tx);
@@ -117,30 +167,84 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
         ((n - tc.holdout.min(n)) as u32..n as u32).collect()
     };
 
-    let mut report = TrainReport { loader: tc.policy.name.clone(), ..Default::default() };
+    let mut report = TrainReport {
+        loader: tc.policy.name.clone(),
+        prefetch: tc.prefetch,
+        ..Default::default()
+    };
     let wall = Stopwatch::start();
     let mut global_step = 0usize;
-
+    let mut fetch_step = 0usize;
 
     'epochs: for pos in 0..tc.run.n_epochs {
-        let mut step_loads: Vec<crate::loader::engine::StepLoad> = Vec::new();
-        engine.run_epoch(pos, |_, sl| step_loads.push(sl.clone()));
-        for sl in step_loads {
-            let params: Params = Arc::new(store.tensors.clone());
-            for (k, nl) in sl.nodes.iter().enumerate() {
-                to_workers[k]
-                    .send(WorkMsg::Step { step_id: global_step, params: params.clone(), load: nl.clone() })
-                    .context("worker channel closed")?;
-                report.pfs_samples += nl.pfs_samples;
-                report.hits += nl.hits;
+        let mut cursor = engine.plan_steps(pos);
+        // Per-step (hits, pfs) of plans whose fetch has been dispatched
+        // but whose exec hasn't run — counted into the report at exec
+        // time so totals match the serial schedule under max_steps cuts.
+        let mut inflight: VecDeque<(usize, usize)> = VecDeque::new();
+        let mut epoch_stat = EpochLoadStat::default();
+        // Set when a fetch thread is gone: its root-cause error travels
+        // through the exec half's poisoned staged slot to done_rx, so we
+        // stop dispatching and keep executing in-flight steps to surface
+        // it instead of masking it with a channel-closed error here.
+        let mut fetch_down = false;
+        loop {
+            // Keep the fetch stages `prefetch` steps ahead of execution.
+            while !fetch_down && inflight.len() <= tc.prefetch {
+                let Some(sl) = cursor.next() else { break };
+                let mut hits = 0usize;
+                let mut pfs = 0usize;
+                for (k, nl) in sl.nodes.into_iter().enumerate() {
+                    hits += nl.hits;
+                    pfs += nl.pfs_samples;
+                    if to_fetch[k].send(FetchMsg { step_id: fetch_step, load: nl }).is_err() {
+                        fetch_down = true;
+                        // Don't hand the rest of this doomed step to the
+                        // healthy nodes — it will never execute.
+                        break;
+                    }
+                }
+                if fetch_down {
+                    break; // partially-dispatched step: never executed
+                }
+                inflight.push_back((hits, pfs));
+                fetch_step += 1;
             }
-            // Allreduce.
-            let mut acc = GradAccum::zeros_like(&store);
-            let mut max_load = 0.0f64;
-            let mut max_exec = 0.0f64;
+            let Some((hits, pfs)) = inflight.pop_front() else {
+                if fetch_down {
+                    // The dead fetch half forwards its root cause straight
+                    // to done_rx; drain for it so the real error surfaces.
+                    while let Ok(d) = done_rx.recv_timeout(std::time::Duration::from_secs(5)) {
+                        d?;
+                    }
+                    bail!("worker fetch stage died without reporting a cause");
+                }
+                break;
+            };
+            report.hits += hits;
+            report.pfs_samples += pfs;
+            epoch_stat.hits += hits;
+            epoch_stat.pfs_samples += pfs;
+
+            let params: Params = Arc::new(store.tensors.clone());
+            for tx in &to_workers {
+                tx.send(WorkMsg::Exec { step_id: global_step, params: params.clone() })
+                    .context("worker channel closed")?;
+            }
+            // Allreduce: buffer the replies and accumulate in NODE order,
+            // not arrival order — float addition is non-associative, and
+            // a scheduling-dependent sum order would break the pipeline's
+            // bit-identical-across-prefetch-depths guarantee at ≥3 nodes.
+            let mut dones: Vec<Option<DoneMsg>> = (0..n_nodes).map(|_| None).collect();
             for _ in 0..n_nodes {
                 let d = done_rx.recv().context("worker died")??;
                 debug_assert_eq!(d.step_id, global_step);
+                dones[d.node] = Some(d);
+            }
+            let mut acc = GradAccum::zeros_like(&store);
+            let mut max_load = 0.0f64;
+            let mut max_exec = 0.0f64;
+            for d in dones.iter().flatten() {
                 if let Some(g) = &d.grads {
                     acc.add(g, d.loss_sum, d.n_valid);
                 }
@@ -172,9 +276,11 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             global_step += 1;
             if tc.max_steps > 0 && global_step >= tc.max_steps {
                 report.epochs = pos + 1;
+                report.epoch_stats.push(epoch_stat);
                 break 'epochs;
             }
         }
+        report.epoch_stats.push(epoch_stat);
         report.epochs = pos + 1;
     }
     report.steps = global_step;
@@ -184,24 +290,41 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     for tx in &to_workers {
         let _ = tx.send(WorkMsg::Stop);
     }
+    // Closing the fetch channels lets each worker's fetch thread exit; it
+    // may be blocked on recv, or on a staged slot the exec thread will
+    // never drain after Stop (the exec side joins its fetch half).
+    drop(to_fetch);
     for h in handles {
         h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
     }
     Ok(report)
 }
 
-/// Worker: owns PJRT runtime, file handle, and its byte buffer.
+/// Exec half of a worker: owns the PJRT runtime and the byte buffer;
+/// spawns (and joins) the node's fetch half.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     node: usize,
+    fetch_rx: mpsc::Receiver<FetchMsg>,
     rx: mpsc::Receiver<WorkMsg>,
     done: mpsc::Sender<Result<DoneMsg>>,
     dataset_path: &std::path::Path,
     artifacts_dir: &std::path::Path,
     dense: DenseImpl,
     throttle: f64,
-    cost: crate::storage::pfs::CostModel,
+    cost: CostModel,
+    prefetch: usize,
 ) -> Result<()> {
+    // Stage slots between the two halves: up to `prefetch` steps can sit
+    // fully staged awaiting execution; the bound gives backpressure so
+    // staged bytes stay O(prefetch), not O(epoch).
+    let (staged_tx, staged_rx) = mpsc::sync_channel::<StagedStep>(prefetch.max(1));
+    let fetch_path = dataset_path.to_path_buf();
+    let fetch_done = done.clone();
+    let fetch_handle = std::thread::spawn(move || {
+        fetch_loop(node, fetch_rx, staged_tx, &fetch_path, throttle, cost, fetch_done)
+    });
+
     let result = (|| -> Result<()> {
         let rt = TrainRuntime::load(artifacts_dir, dense, false)?;
         // Positioned reads only: the reader carries no seek state, so it
@@ -210,8 +333,6 @@ fn worker_loop(
         let mut buffer: HashMap<u32, Arc<Vec<f32>>> = HashMap::new();
         let b = rt.manifest.batch;
         let img = rt.manifest.img;
-        let rec_elems = synth::RECORD_ELEMS;
-        let sb = reader.sample_bytes() as u64;
 
         while let Ok(msg) = rx.recv() {
             match msg {
@@ -221,7 +342,7 @@ fn worker_loop(
                     let mut loss_sum = 0.0f64;
                     let mut n_valid = 0.0f64;
                     for group in ids.chunks(b) {
-                        let (x, y, mask, nv) = assemble_batch(&reader, &buffer, group, b, img, rec_elems)?;
+                        let (x, y, mask, nv) = assemble_batch(&reader, &buffer, group, b, img)?;
                         let out = rt.grads(&store, &x, &y, &mask)?;
                         loss_sum += out.loss_sum as f64;
                         n_valid += nv;
@@ -237,45 +358,19 @@ fn worker_loop(
                     }))
                     .ok();
                 }
-                WorkMsg::Step { step_id, params, load } => {
+                WorkMsg::Exec { step_id, params } => {
                     let store = ParamStore::from_tensors((*params).clone());
-                    // ---- data loading (throttled PFS + buffer hits) ----
-                    let t_load = Stopwatch::start();
-                    // Fetch PFS chunks/samples and stage them.
-                    let mut staged: HashMap<u32, Arc<Vec<f32>>> = HashMap::new();
-                    let mut modeled = 0.0f64;
-                    if !load.chunks.is_empty() {
-                        let mut pos: Option<u64> = None;
-                        for c in &load.chunks {
-                            let bytes = reader.read_range_at(c.lo as usize, c.span() as usize)?;
-                            let offset = reader.offset_of(c.lo as usize);
-                            let jump = pos.map(|p| p.abs_diff(offset)).unwrap_or(0);
-                            modeled += cost.pfs_read(c.span() as u64 * sb, jump);
-                            pos = Some(offset + c.span() as u64 * sb);
-                            for (i, rec) in bytes.chunks_exact(sb as usize).enumerate() {
-                                staged.insert(c.lo + i as u32, Arc::new(ShdfReader::decode_f32(rec)));
-                            }
-                        }
-                    } else {
-                        let mut pos: Option<u64> = None;
-                        for &x in load.samples.iter().filter(|&&x| !buffer.contains_key(&x)) {
-                            let bytes = reader.read_sample_at(x as usize)?;
-                            let offset = reader.offset_of(x as usize);
-                            let jump = pos.map(|p| p.abs_diff(offset)).unwrap_or(0);
-                            modeled += cost.pfs_read(sb, jump);
-                            pos = Some(offset + sb);
-                            staged.insert(x, Arc::new(ShdfReader::decode_f32(&bytes)));
-                        }
-                    }
-                    // Throttle: emulate the PFS by sleeping out the modeled
-                    // time not already spent on the real read.
-                    if throttle > 0.0 {
-                        let spent = t_load.elapsed_s();
-                        let want = modeled * throttle;
-                        if want > spent {
-                            std::thread::sleep(std::time::Duration::from_secs_f64(want - spent));
-                        }
-                    }
+                    // Pull this step's staged bytes (blocks until the
+                    // fetch stage catches up; in pipelined mode they are
+                    // usually already waiting). A dead fetch half closes
+                    // the channel — it reports its root cause to the
+                    // coordinator itself.
+                    let staged_step = staged_rx.recv().context("fetch stage died")?;
+                    debug_assert_eq!(staged_step.step_id, step_id);
+                    let StagedStep { load, staged, fetch_wall_s, .. } = staged_step;
+
+                    // ---- LOAD bucket: buffer mirror + batch assembly ----
+                    let t_mirror = Stopwatch::start();
                     // Mirror the engine's buffer decisions.
                     for &x in &load.inserted {
                         if let Some(v) = staged.get(&x) {
@@ -285,7 +380,6 @@ fn worker_loop(
                     for &x in &load.evicted {
                         buffer.remove(&x);
                     }
-                    // ---- assemble batch (buffer + staged) ----
                     let get = |x: u32| -> Result<Arc<Vec<f32>>> {
                         if let Some(v) = staged.get(&x) {
                             return Ok(v.clone());
@@ -301,9 +395,10 @@ fn worker_loop(
                     let mut loss_sum = 0.0f64;
                     let mut n_valid_total = 0.0f64;
                     let mut grads_total: Option<Vec<Vec<f32>>> = None;
-                    let load_wall_s = t_load.elapsed_s();
-                    let t_exec = Stopwatch::start();
+                    let mut assemble_s = t_mirror.elapsed_s();
+                    let mut exec_s = 0.0f64;
                     for group in load.samples.chunks(b) {
+                        let t_assemble = Stopwatch::start();
                         let mut x = vec![0.0f32; b * img2];
                         let mut y = vec![0.0f32; b * 2 * img2];
                         let mut mask = vec![0.0f32; b];
@@ -315,7 +410,10 @@ fn worker_loop(
                             mask[i] = 1.0;
                             n_valid_total += 1.0;
                         }
+                        assemble_s += t_assemble.elapsed_s();
+                        let t_exec = Stopwatch::start();
                         let out = rt.grads(&store, &x, &y, &mask)?;
+                        exec_s += t_exec.elapsed_s();
                         loss_sum += out.loss_sum as f64;
                         grads_total = Some(match grads_total.take() {
                             None => out.grads,
@@ -335,8 +433,10 @@ fn worker_loop(
                         loss_sum,
                         n_valid: n_valid_total,
                         grads: Some(grads_total.unwrap_or_default()),
-                        load_wall_s,
-                        exec_wall_s: t_exec.elapsed_s(),
+                        // Assembly belongs to LOAD, matching the
+                        // simulator's delivery_overhead accounting.
+                        load_wall_s: fetch_wall_s + assemble_s,
+                        exec_wall_s: exec_s,
                     }))
                     .ok();
                 }
@@ -347,7 +447,114 @@ fn worker_loop(
     if let Err(e) = &result {
         let _ = done.send(Err(anyhow::anyhow!("worker {node}: {e:#}")));
     }
+    // Unblock the fetch half before joining: it may be parked in a
+    // staged-slot send (steps fetched but never executed, e.g. under
+    // max_steps); dropping the receiver turns that send into an error.
+    // Its inbound channel is closed by the coordinator.
+    drop(staged_rx);
+    let _ = fetch_handle.join();
     result
+}
+
+/// Fetch half of a worker: stages each planned step's PFS bytes in strict
+/// step order, throttled by the cost model, and hands `StagedStep`s to
+/// the exec thread through a bounded channel. On error it reports the
+/// root cause straight to the coordinator (`done`) and exits, closing the
+/// staged channel — which the exec half and coordinator treat as fatal.
+#[allow(clippy::too_many_arguments)]
+fn fetch_loop(
+    node: usize,
+    rx: mpsc::Receiver<FetchMsg>,
+    out: mpsc::SyncSender<StagedStep>,
+    dataset_path: &std::path::Path,
+    throttle: f64,
+    cost: CostModel,
+    done: mpsc::Sender<Result<DoneMsg>>,
+) {
+    let reader = match ShdfReader::open(dataset_path) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = done.send(Err(anyhow::anyhow!("worker {node} fetch: {e:#}")));
+            return;
+        }
+    };
+    let sb = reader.sample_bytes() as u64;
+    // Mirror of the exec thread's buffer KEYS, advanced in step order:
+    // only staged-and-inserted ids enter, evicted ids leave — identical
+    // to the exec side's value map, so "already buffered" decisions match
+    // the serial schedule exactly.
+    let mut resident: HashSet<u32> = HashSet::new();
+    while let Ok(FetchMsg { step_id, load }) = rx.recv() {
+        let t = Stopwatch::start();
+        match stage_step(&reader, &resident, &load, &cost, sb) {
+            Err(e) => {
+                let _ = done.send(Err(anyhow::anyhow!("worker {node} fetch: {e:#}")));
+                return;
+            }
+            Ok((staged, modeled)) => {
+                // Throttle: emulate the PFS by sleeping out the modeled
+                // time not already spent on the real reads. Running here,
+                // it overlaps the exec thread's compute.
+                if throttle > 0.0 {
+                    let spent = t.elapsed_s();
+                    let want = modeled * throttle;
+                    if want > spent {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(want - spent));
+                    }
+                }
+                for &x in &load.inserted {
+                    if staged.contains_key(&x) {
+                        resident.insert(x);
+                    }
+                }
+                for &x in &load.evicted {
+                    resident.remove(&x);
+                }
+                let fetch_wall_s = t.elapsed_s();
+                if out.send(StagedStep { step_id, load, staged, fetch_wall_s }).is_err() {
+                    return; // exec side gone
+                }
+            }
+        }
+    }
+}
+
+/// Read and decode one step's PFS bytes — chunked reads when the plan has
+/// them, per-sample reads otherwise — returning the staged samples plus
+/// the cost-model time those reads represent (for the throttle).
+fn stage_step(
+    reader: &ShdfReader,
+    resident: &HashSet<u32>,
+    load: &NodeStepLoad,
+    cost: &CostModel,
+    sb: u64,
+) -> Result<(HashMap<u32, Arc<Vec<f32>>>, f64)> {
+    let mut staged: HashMap<u32, Arc<Vec<f32>>> = HashMap::new();
+    let mut modeled = 0.0f64;
+    if !load.chunks.is_empty() {
+        let mut pos: Option<u64> = None;
+        for c in &load.chunks {
+            let bytes = reader.read_range_at(c.lo as usize, c.span() as usize)?;
+            let offset = reader.offset_of(c.lo as usize);
+            let jump = pos.map(|p| p.abs_diff(offset)).unwrap_or(0);
+            modeled += cost.pfs_read(c.span() as u64 * sb, jump);
+            pos = Some(offset + c.span() as u64 * sb);
+            for (i, rec) in bytes.chunks_exact(sb as usize).enumerate() {
+                staged.insert(c.lo + i as u32, Arc::new(ShdfReader::decode_f32(rec)));
+            }
+        }
+    } else {
+        let mut pos: Option<u64> = None;
+        for &x in load.samples.iter().filter(|&&x| !resident.contains(&x)) {
+            let bytes = reader.read_sample_at(x as usize)?;
+            let offset = reader.offset_of(x as usize);
+            let jump = pos.map(|p| p.abs_diff(offset)).unwrap_or(0);
+            modeled += cost.pfs_read(sb, jump);
+            pos = Some(offset + sb);
+            staged.insert(x, Arc::new(ShdfReader::decode_f32(&bytes)));
+        }
+    }
+    Ok((staged, modeled))
 }
 
 /// Assemble an eval batch straight from the file/buffer (no staging).
@@ -357,7 +564,6 @@ fn assemble_batch(
     ids: &[u32],
     b: usize,
     img: usize,
-    _rec_elems: usize,
 ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f64)> {
     let img2 = img * img;
     let mut x = vec![0.0f32; b * img2];

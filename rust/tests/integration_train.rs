@@ -67,6 +67,7 @@ fn tc(path: PathBuf, n_train: usize, loader: &str, n_nodes: usize, epochs: usize
         eval_every: 0,
         max_steps: steps,
         holdout: 16,
+        prefetch: 1,
     }
 }
 

@@ -44,6 +44,33 @@ fn different_seeds_change_the_report() {
 }
 
 #[test]
+fn overlapped_accounting_is_deterministic_and_bounded() {
+    // The pipelined (overlapped) schedule is a pure function of the same
+    // deterministic plan: bit-identical across runs, and always between
+    // the per-epoch stage floor (fetch; exec-side load + compute) and
+    // the serial load + comp.
+    for loader in LoaderPolicy::known_names() {
+        let policy = LoaderPolicy::by_name(loader).unwrap();
+        let a = simulate(&cfg(7), &policy);
+        let b = simulate(&cfg(7), &policy);
+        assert_eq!(a.avg_overlapped_s().to_bits(), b.avg_overlapped_s().to_bits(), "{loader}");
+        for e in &a.epochs {
+            let floor = e.load_pfs_s.max(e.load_s - e.load_pfs_s + e.comp_s);
+            assert!(
+                e.overlapped_s >= floor - 1e-12,
+                "{loader} epoch {}: overlapped below stage floor",
+                e.epoch_pos
+            );
+            assert!(
+                e.overlapped_s <= e.load_s + e.comp_s + 1e-9,
+                "{loader} epoch {}: overlapped above serial",
+                e.epoch_pos
+            );
+        }
+    }
+}
+
+#[test]
 fn paper_ordering_solar_le_nopfs_le_pytorch() {
     let t = |name: &str| simulate(&cfg(42), &LoaderPolicy::by_name(name).unwrap()).avg_load_s();
     let (py, no, so) = (t("pytorch"), t("nopfs"), t("solar"));
