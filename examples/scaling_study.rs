@@ -61,6 +61,8 @@ fn main() -> anyhow::Result<()> {
                 max_steps: 0,
                 holdout: 0,
                 prefetch: 1,
+                epoch_drain: false,
+                fetch_fault: None,
             };
             let r = train(&tc)?;
             let b = *base.get_or_insert(r.total_wall_s);

@@ -85,7 +85,9 @@ fn main() -> anyhow::Result<()> {
             eval_every: 8,
             max_steps: 0,
             holdout,
-            prefetch: 1, // double-buffered: fetch t+1 overlaps compute t
+            prefetch: 1, // double-buffered: fetch t+1 overlaps compute t, across epochs
+            epoch_drain: false,
+            fetch_fault: None,
         };
         println!(
             "\n=== training with {loader} loader ({} samples, {} nodes, {} epochs, throttled PFS) ===",

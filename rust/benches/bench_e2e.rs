@@ -64,6 +64,8 @@ fn main() {
             max_steps: steps,
             holdout: 0,
             prefetch,
+            epoch_drain: false,
+            fetch_fault: None,
         };
         suite.bench_units(
             &format!(

@@ -91,7 +91,7 @@ USAGE: solar <command> [options]
 
 COMMANDS
   exp       regenerate a paper table/figure
-            --id fig2|fig3|tab1|tab3|fig7|fig9|fig10|fig11|fig12|fig13|fig14|fig16|eoo|all
+            --id fig2|fig3|tab1|tab3|fig7|fig9|fig10|fig11|fig12|fig13|fig14|fig14sweep|fig16|eoo|all
             [--full] (paper-scale sample counts)  [--epochs N]  [--seed S]
   sim       simulate one loading run
             [--dataset cd17|cd321|cd1200|bcdi|cosmoflow] [--tier medium]
@@ -106,6 +106,8 @@ COMMANDS
             [--batch 16] [--throttle 1.0] [--holdout 32] [--lr 0.08]
             [--dense pallas|xla] [--curve out.csv]
             [--prefetch 1] (fetch-ahead depth; 0 = serial loading)
+            [--epoch-drain] (drain the pipeline at epoch boundaries
+            instead of prefetching across them; A/B the boundary bubble)
   smoke     PJRT round-trip check   [--hlo PATH]
   info      print manifest + environment info
 ";

@@ -10,10 +10,11 @@
 //! 1.2 TB CD dataset therefore costs milliseconds, not hours, which is what
 //! makes the paper's sweep matrices (dataset × tier × loader × ablation)
 //! tractable. Every epoch is accounted under both the serial schedule
-//! (load + compute) and the training driver's prefetch pipeline
-//! (`overlapped_s`: per-step `max(fetch, exec)` — only the PFS/remote
-//! fetch share of load can hide behind compute — plus the un-hideable
-//! fill/drain) — see [`report::EpochSim`].
+//! (load + compute) and the training driver's cross-epoch prefetch
+//! pipeline (`overlapped_s`: exact per-node fetch/exec clocks that run
+//! across epoch boundaries — only the PFS/remote fetch share of load can
+//! hide behind compute, and fill/drain is paid once per run, not per
+//! epoch) — see [`report::EpochSim`].
 //!
 //! `simulate` is the hottest loop in the repo — the loading benches
 //! (`benches/bench_loading.rs`) hold it to ≥ 1M scheduled samples/second —

@@ -94,7 +94,7 @@ impl ExpCtx {
 pub fn known_ids() -> Vec<&'static str> {
     vec![
         "fig2", "fig3", "tab1", "tab3", "fig7", "fig9", "fig10", "fig11", "fig12", "fig13",
-        "fig14", "fig16", "eoo",
+        "fig14", "fig14sweep", "fig16", "eoo",
     ]
 }
 
@@ -112,6 +112,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "fig12" => loading::fig12_balance(ctx),
         "fig13" => loading::fig13_chunked(ctx),
         "fig14" => e2e::fig14_end_to_end(ctx),
+        "fig14sweep" => e2e::fig14sweep_throttle(ctx),
         "fig16" => loading::fig16_batch_sizes(ctx),
         "eoo" => loading::eoo_ablation(ctx),
         "all" => {

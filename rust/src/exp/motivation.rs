@@ -90,10 +90,11 @@ pub fn fig3_breakdown(ctx: &ExpCtx) -> Result<()> {
         "Fig 3 — time breakdown with the PyTorch-style loader (prefetch on).\n\
          Paper: loading takes 83.1%/77.3%/43.2% at 4 GPUs for\n\
          PtychoNN/AutoPhaseNN/CosmoFlow and GROWS with more nodes.\n\
-         'pipelined' overlaps each step's PFS fetch with the previous\n\
-         step's exec stage (hit/assembly + compute), charging\n\
-         max(fetch, exec) per steady-state step; 'hidden %' is the slice\n\
-         of loading overlap alone can hide — small when loading dominates.\n\n{}\n{}",
+         'pipelined' is the exact per-node-clock prefetch model: each\n\
+         node's fetch stage runs ahead — across epoch boundaries — while\n\
+         exec stages (hit/assembly + compute) serialize at the allreduce\n\
+         barrier; 'hidden %' is the slice of loading overlap alone can\n\
+         hide — small when loading dominates.\n\n{}\n{}",
         t.render(),
         check_lines
     );

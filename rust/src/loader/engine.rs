@@ -404,22 +404,18 @@ impl LoaderEngine {
         }
     }
 
-    /// Pull-based plan cursor: yields one epoch's [`StepLoad`]s on demand,
-    /// so consumers (the training coordinator's prefetch pipeline) hold
-    /// O(lookahead) plans in memory instead of materializing — or cloning —
-    /// the whole epoch up front. Buffer state evolves as steps are pulled,
-    /// exactly as under [`run_epoch`](Self::run_epoch); at paper scale an
-    /// epoch is tens of thousands of steps, which is why the coordinator
-    /// must stream.
-    pub fn plan_steps(&mut self, pos: usize) -> PlanSteps<'_> {
+    /// Set up the streaming state for epoch position `pos` (step maps,
+    /// eviction heaps, and the epoch permutation, which moves out of the
+    /// cache for the cursor's lifetime). Shared by the per-epoch
+    /// [`PlanSteps`] and the run-long [`PlanRun`] cursors.
+    fn begin_epoch(&mut self, pos: usize) -> EpochCursor {
         assert!(pos < self.cfg.n_epochs);
         let epoch_src = self.epoch_order[pos];
         let steps = self.steps_per_epoch();
 
         if self.policy.local_shuffle {
             let local_perm = self.deepio_local_perms(pos);
-            return PlanSteps {
-                engine: self,
+            return EpochCursor {
                 epoch_src,
                 perm: Vec::new(),
                 local_perm,
@@ -438,10 +434,64 @@ impl LoaderEngine {
         };
         self.rebuild_heaps();
         // The permutation moves into the cursor for the epoch (nothing in
-        // the per-step path touches the cache) and is restored on drop.
+        // the per-step path touches the cache) and is restored by
+        // `end_epoch`.
         let pi = self.cached_perm(epoch_src);
         let perm = std::mem::take(&mut self.perm_cache[pi].1);
-        PlanSteps { engine: self, epoch_src, perm, local_perm: Vec::new(), deepio: false, step: 0, steps }
+        EpochCursor { epoch_src, perm, local_perm: Vec::new(), deepio: false, step: 0, steps }
+    }
+
+    /// Plan the next step of `cur`'s epoch (None when exhausted); the
+    /// engine's buffer state advances as a side effect.
+    fn next_epoch_step(&mut self, cur: &mut EpochCursor) -> Option<StepLoad> {
+        if cur.step >= cur.steps {
+            return None;
+        }
+        let s = cur.step;
+        cur.step += 1;
+        Some(if cur.deepio {
+            self.plan_step_deepio(s, &cur.local_perm)
+        } else {
+            let g = self.cfg.global_batch();
+            self.plan_step_global(&cur.perm[s * g..(s + 1) * g])
+        })
+    }
+
+    /// Return `cur`'s epoch permutation to the cache slot it was taken
+    /// from (identified by epoch + the emptied vec it left behind).
+    fn end_epoch(&mut self, cur: &mut EpochCursor) {
+        if !cur.deepio {
+            let perm = std::mem::take(&mut cur.perm);
+            if let Some(slot) =
+                self.perm_cache.iter_mut().find(|(e, p)| *e == cur.epoch_src && p.is_empty())
+            {
+                slot.1 = perm;
+            }
+        }
+    }
+
+    /// Pull-based plan cursor: yields one epoch's [`StepLoad`]s on demand,
+    /// so consumers (the simulator's per-epoch accounting) hold
+    /// O(lookahead) plans in memory instead of materializing — or cloning —
+    /// the whole epoch up front. Buffer state evolves as steps are pulled,
+    /// exactly as under [`run_epoch`](Self::run_epoch); at paper scale an
+    /// epoch is tens of thousands of steps, which is why consumers must
+    /// stream. Consumers that span epochs (the training coordinator, the
+    /// streamed plan writer) use [`plan_run`](Self::plan_run) instead.
+    pub fn plan_steps(&mut self, pos: usize) -> PlanSteps<'_> {
+        let cur = self.begin_epoch(pos);
+        PlanSteps { engine: self, cur }
+    }
+
+    /// Run-long plan cursor: chains [`plan_steps`](Self::plan_steps)
+    /// across every epoch position `0..n_epochs`, yielding [`RunStep`]s
+    /// with explicit epoch-boundary markers (`epoch_pos`, `epoch_end`).
+    /// This is what lets the training coordinator stage epoch *e+1*'s
+    /// first fetches during epoch *e*'s tail — the plan is deterministic,
+    /// so the boundary is just another step — and what lets the offline
+    /// scheduler stream a whole multi-epoch plan in O(1) memory.
+    pub fn plan_run(&mut self) -> PlanRun<'_> {
+        PlanRun { engine: self, pos: 0, cur: None }
     }
 
     /// Plan one step given its global batch; the engine's buffer state
@@ -605,16 +655,14 @@ impl LoaderEngine {
     }
 }
 
-/// Streaming cursor over one epoch's step plans (see
-/// [`LoaderEngine::plan_steps`]). Dropping the cursor mid-epoch leaves the
-/// buffer state wherever the last pulled step left it — exactly like
-/// breaking out of `run_epoch` early — and restores the epoch permutation
-/// to the engine's cache.
-pub struct PlanSteps<'e> {
-    engine: &'e mut LoaderEngine,
+/// State of one epoch's streaming cursor: the source epoch, its
+/// permutation (moved out of the engine's cache for the cursor's
+/// lifetime), and the step position. Plain data — the engine methods
+/// `begin_epoch` / `next_epoch_step` / `end_epoch` drive it, which is
+/// what lets the per-epoch and run-long cursors share one implementation.
+struct EpochCursor {
     epoch_src: usize,
-    /// The epoch permutation, moved out of the engine's cache for the
-    /// cursor's lifetime (non-DeepIO path).
+    /// The epoch permutation (non-DeepIO path).
     perm: Vec<u32>,
     /// DeepIO's per-node local permutations.
     local_perm: Vec<Vec<u32>>,
@@ -623,25 +671,25 @@ pub struct PlanSteps<'e> {
     steps: usize,
 }
 
+/// Streaming cursor over one epoch's step plans (see
+/// [`LoaderEngine::plan_steps`]). Dropping the cursor mid-epoch leaves the
+/// buffer state wherever the last pulled step left it — exactly like
+/// breaking out of `run_epoch` early — and restores the epoch permutation
+/// to the engine's cache.
+pub struct PlanSteps<'e> {
+    engine: &'e mut LoaderEngine,
+    cur: EpochCursor,
+}
+
 impl Iterator for PlanSteps<'_> {
     type Item = StepLoad;
 
     fn next(&mut self) -> Option<StepLoad> {
-        if self.step >= self.steps {
-            return None;
-        }
-        let s = self.step;
-        self.step += 1;
-        if self.deepio {
-            Some(self.engine.plan_step_deepio(s, &self.local_perm))
-        } else {
-            let g = self.engine.cfg.global_batch();
-            Some(self.engine.plan_step_global(&self.perm[s * g..(s + 1) * g]))
-        }
+        self.engine.next_epoch_step(&mut self.cur)
     }
 
     fn size_hint(&self) -> (usize, Option<usize>) {
-        let left = self.steps - self.step;
+        let left = self.cur.steps - self.cur.step;
         (left, Some(left))
     }
 }
@@ -650,18 +698,85 @@ impl ExactSizeIterator for PlanSteps<'_> {}
 
 impl Drop for PlanSteps<'_> {
     fn drop(&mut self) {
-        if !self.deepio {
-            // Give the permutation back to the cache slot it was taken
-            // from (identified by epoch + the emptied vec it left behind).
-            let perm = std::mem::take(&mut self.perm);
-            if let Some(slot) = self
-                .engine
-                .perm_cache
-                .iter_mut()
-                .find(|(e, p)| *e == self.epoch_src && p.is_empty())
-            {
-                slot.1 = perm;
+        self.engine.end_epoch(&mut self.cur);
+    }
+}
+
+/// One step of a run-long plan (see [`LoaderEngine::plan_run`]): the
+/// [`StepLoad`] plus where it sits in the run, with an explicit boundary
+/// marker so streaming consumers can close out per-epoch accounting
+/// without materializing epochs.
+#[derive(Debug, Clone)]
+pub struct RunStep {
+    /// Position of this step's epoch in the optimized visiting order.
+    pub epoch_pos: usize,
+    /// Step index within the epoch.
+    pub step: usize,
+    /// True for the last step of its epoch — the epoch-boundary marker.
+    pub epoch_end: bool,
+    pub load: StepLoad,
+}
+
+/// Run-long streaming cursor over every epoch's step plans, in visiting
+/// order (see [`LoaderEngine::plan_run`]). Epoch transitions (step maps,
+/// heap rebuilds, permutation swaps) happen lazily between the last step
+/// of epoch *e* and the first step of *e+1*, exactly as under repeated
+/// [`LoaderEngine::plan_steps`] calls — the two paths produce identical
+/// plans (tested). Dropping mid-run restores the in-flight epoch's
+/// permutation to the engine's cache, like [`PlanSteps`].
+pub struct PlanRun<'e> {
+    engine: &'e mut LoaderEngine,
+    /// Next epoch position to begin (the in-flight epoch when `cur` is
+    /// Some).
+    pos: usize,
+    cur: Option<EpochCursor>,
+}
+
+impl Iterator for PlanRun<'_> {
+    type Item = RunStep;
+
+    fn next(&mut self) -> Option<RunStep> {
+        loop {
+            if self.cur.is_none() {
+                if self.pos >= self.engine.cfg.n_epochs {
+                    return None;
+                }
+                self.cur = Some(self.engine.begin_epoch(self.pos));
             }
+            let cur = self.cur.as_mut().expect("cursor just ensured");
+            match self.engine.next_epoch_step(cur) {
+                Some(load) => {
+                    return Some(RunStep {
+                        epoch_pos: self.pos,
+                        step: cur.step - 1,
+                        epoch_end: cur.step >= cur.steps,
+                        load,
+                    });
+                }
+                None => {
+                    let mut done = self.cur.take().expect("cursor present");
+                    self.engine.end_epoch(&mut done);
+                    self.pos += 1;
+                }
+            }
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let spe = self.engine.steps_per_epoch();
+        let epochs_left = self.engine.cfg.n_epochs.saturating_sub(self.pos);
+        let consumed = self.cur.as_ref().map_or(0, |c| c.step);
+        let left = (spe * epochs_left).saturating_sub(consumed);
+        (left, Some(left))
+    }
+}
+
+impl ExactSizeIterator for PlanRun<'_> {}
+
+impl Drop for PlanRun<'_> {
+    fn drop(&mut self) {
+        if let Some(mut cur) = self.cur.take() {
+            self.engine.end_epoch(&mut cur);
         }
     }
 }
@@ -962,6 +1077,80 @@ mod tests {
             assert!(!first.nodes.is_empty());
         } // dropped after one step
         // Replaying the same epoch must still see the full permutation.
+        let mut batches = 0usize;
+        engine.run_epoch(0, |_, sl| {
+            batches += sl.nodes.iter().map(|n| n.samples.len()).sum::<usize>();
+        });
+        let mut fresh = LoaderEngine::new(cfg, LoaderPolicy::solar());
+        let mut expect = 0usize;
+        fresh.run_epoch(0, |_, sl| {
+            expect += sl.nodes.iter().map(|n| n.samples.len()).sum::<usize>();
+        });
+        assert_eq!(batches, expect);
+    }
+
+    #[test]
+    fn plan_run_matches_per_epoch_cursors() {
+        // The run-long cursor must produce the exact per-epoch plans, with
+        // correct epoch positions, step indices, and boundary markers.
+        for name in ["pytorch", "pytorch+lru", "nopfs", "solar", "deepio"] {
+            let cfg = tiny_cfg(256, 4, 8, 3, 32);
+            let policy = LoaderPolicy::by_name(name).unwrap();
+            let mut a = LoaderEngine::new(cfg.clone(), policy.clone());
+            let mut b = LoaderEngine::new(cfg, policy);
+            let spe = a.steps_per_epoch();
+            let mut per_epoch: Vec<StepLoad> = vec![];
+            for pos in 0..3 {
+                per_epoch.extend(b.plan_steps(pos));
+            }
+            let run: Vec<RunStep> = a.plan_run().collect();
+            assert_eq!(run.len(), per_epoch.len(), "{name}");
+            for (i, (rs, expect)) in run.iter().zip(per_epoch.iter()).enumerate() {
+                assert_eq!(rs.epoch_pos, i / spe, "{name} flat step {i}");
+                assert_eq!(rs.step, i % spe, "{name} flat step {i}");
+                assert_eq!(rs.epoch_end, i % spe == spe - 1, "{name} flat step {i}");
+                for (nx, ny) in rs.load.nodes.iter().zip(expect.nodes.iter()) {
+                    assert_eq!(nx.samples, ny.samples, "{name} flat step {i}");
+                    assert_eq!(nx.hits, ny.hits, "{name} flat step {i}");
+                    assert_eq!(nx.pfs_reqs, ny.pfs_reqs, "{name} flat step {i}");
+                    assert_eq!(nx.inserted, ny.inserted, "{name} flat step {i}");
+                    assert_eq!(nx.evicted, ny.evicted, "{name} flat step {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_run_reports_exact_length() {
+        let cfg = tiny_cfg(256, 4, 8, 3, 32);
+        let mut engine = LoaderEngine::new(cfg, LoaderPolicy::solar());
+        let spe = engine.steps_per_epoch();
+        let mut cursor = engine.plan_run();
+        assert_eq!(cursor.len(), 3 * spe);
+        let _ = cursor.next();
+        assert_eq!(cursor.len(), 3 * spe - 1);
+        // Drain one full epoch: the length accounting must survive the
+        // internal epoch transition.
+        for _ in 1..spe {
+            let _ = cursor.next();
+        }
+        assert_eq!(cursor.len(), 2 * spe);
+        let boundary = cursor.next().unwrap();
+        assert_eq!(boundary.epoch_pos, 1);
+        assert_eq!(boundary.step, 0);
+    }
+
+    #[test]
+    fn dropping_plan_run_mid_run_restores_perm_cache() {
+        // Bailing mid-run (max_steps, errors) must not poison later
+        // epochs' shuffles: the in-flight permutation goes back.
+        let cfg = tiny_cfg(256, 2, 8, 3, 32);
+        let mut engine = LoaderEngine::new(cfg.clone(), LoaderPolicy::solar());
+        {
+            let mut cursor = engine.plan_run();
+            let first = cursor.next().unwrap();
+            assert!(!first.load.nodes.is_empty());
+        } // dropped after one step, mid-epoch-0
         let mut batches = 0usize;
         engine.run_epoch(0, |_, sl| {
             batches += sl.nodes.iter().map(|n| n.samples.len()).sum::<usize>();

@@ -105,6 +105,14 @@ fn cmd_sim(args: &Args) -> Result<()> {
         fmt_secs(r.avg_total_s()),
         fmt_secs(r.avg_overlapped_s())
     );
+    let total_load: f64 = r.epochs.iter().map(|e| e.load_s).sum();
+    println!(
+        "run: serial {} | pipelined {} (cross-epoch prefetch hides {} = {:.1}% of load)",
+        fmt_secs(r.serial_total_s()),
+        fmt_secs(r.pipelined_total_s()),
+        fmt_secs(r.hidden_total_s()),
+        100.0 * r.hidden_total_s() / total_load.max(1e-12)
+    );
     Ok(())
 }
 
@@ -140,18 +148,20 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     let mut cfg = RunConfig::for_tier(spec, tier, args.get_usize("batch", 16)?, epochs, args.get_usize("seed", 42)? as u64);
     cfg.buffer_capacity = (cfg.buffer_capacity / scale).max(1);
     let t = std::time::Instant::now();
-    let plan = SchedulePlan::compute(&cfg, &policy);
+    // Streamed: the plan JSON goes straight to the file, one step at a
+    // time — O(1) plan memory, so full-scale multi-epoch plans (tens of
+    // GB) schedule without materializing an epoch.
+    let summary = SchedulePlan::compute_to_file(&cfg, &policy, &out)?;
     println!(
-        "offline schedule: {} epochs x {} steps x {} nodes in {} (order {:?}, cost {:?})",
+        "offline schedule (streamed): {} epochs x {} steps x {} nodes in {} (order {:?}, cost {:?})",
         cfg.n_epochs,
         cfg.steps_per_epoch(),
         cfg.n_nodes,
         fmt_secs(t.elapsed().as_secs_f64()),
-        plan.epoch_order,
-        plan.epoch_order_cost
+        summary.epoch_order,
+        summary.epoch_order_cost
     );
-    plan.save(&out)?;
-    println!("plan -> {} ({} PFS samples total)", out.display(), plan.total_pfs_samples());
+    println!("plan -> {} ({} PFS samples total)", out.display(), summary.total_pfs_samples);
     Ok(())
 }
 
@@ -194,6 +204,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         max_steps: args.get_usize("max-steps", 0)?,
         holdout,
         prefetch: args.get_usize("prefetch", 1)?,
+        epoch_drain: args.flag("epoch-drain"),
+        fetch_fault: None,
     };
     println!(
         "training: {} samples, {} nodes x batch {}, {} epochs, loader {}, throttle x{}, prefetch {}",

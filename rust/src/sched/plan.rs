@@ -3,11 +3,20 @@
 //! the sample assignment and the source of every sample (buffer hit vs PFS
 //! chunk read). The runtime (`train::driver`) executes plans directly; the
 //! trace simulator recomputes them streamingly and never materializes one.
+//!
+//! Two production paths:
+//! * [`SchedulePlan::compute`] materializes the whole plan in memory (for
+//!   tests and in-process consumers at small scale);
+//! * [`SchedulePlan::compute_to_writer`] streams the engine's run-long
+//!   cursor straight into an incremental JSON writer — O(1) plan memory,
+//!   byte-identical output — which is the only viable path at paper
+//!   scale, where a full cd1200 plan is tens of GB.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
 
 use crate::config::RunConfig;
-use crate::loader::engine::{LoaderEngine, StepLoad};
+use crate::loader::engine::LoaderEngine;
 use crate::loader::LoaderPolicy;
 use crate::sched::chunkagg::Chunk;
 use crate::util::json::Json;
@@ -23,6 +32,33 @@ pub struct PlanNodeStep {
     pub chunks: Vec<(u32, u32)>,
 }
 
+/// What the streaming scheduler returns in memory — the plan itself goes
+/// straight to the writer.
+#[derive(Debug, Clone)]
+pub struct PlanSummary {
+    pub epoch_order: Vec<usize>,
+    pub epoch_order_cost: Option<u64>,
+    pub epochs: usize,
+    /// Total steps written across all epochs.
+    pub steps: usize,
+    /// Total PFS-fetched (non-hit) samples across the plan.
+    pub total_pfs_samples: usize,
+}
+
+/// JSON object for one node's step — the single source of truth for the
+/// node-step schema, shared by the materialized and the streamed writers
+/// so the two artifacts cannot drift.
+fn node_step_json(samples: &[u32], hits: usize, chunks: impl Iterator<Item = (u32, u32)>) -> Json {
+    let mut o = Json::obj();
+    o.set("samples", Json::arr_u32(samples))
+        .set("hits", Json::Num(hits as f64))
+        .set(
+            "chunks",
+            Json::Arr(chunks.map(|(lo, hi)| Json::arr_u32(&[lo, hi])).collect()),
+        );
+    o
+}
+
 /// Fully materialized plan.
 #[derive(Debug, Clone)]
 pub struct SchedulePlan {
@@ -36,35 +72,159 @@ pub struct SchedulePlan {
 
 impl SchedulePlan {
     /// Run the offline scheduler (= the deterministic loader engine) and
-    /// materialize the full plan. Intended for real-training scale; a
-    /// full-scale cd1200 plan would be tens of GB — the simulator streams
-    /// instead.
+    /// materialize the full plan. Small-scale / test use only; writing a
+    /// plan artifact goes through the streaming
+    /// [`compute_to_writer`](Self::compute_to_writer) instead, because a
+    /// full-scale cd1200 plan would be tens of GB.
     pub fn compute(cfg: &RunConfig, policy: &LoaderPolicy) -> SchedulePlan {
         let mut engine = LoaderEngine::new(cfg.clone(), policy.clone());
-        let mut steps = Vec::with_capacity(cfg.n_epochs);
-        for pos in 0..cfg.n_epochs {
-            let mut epoch_steps: Vec<Vec<PlanNodeStep>> = Vec::new();
-            engine.run_epoch(pos, |_, sl: &StepLoad| {
-                epoch_steps.push(
-                    sl.nodes
-                        .iter()
-                        .map(|nl| PlanNodeStep {
-                            samples: nl.samples.clone(),
-                            hits: nl.hits,
-                            chunks: nl.chunks.iter().map(|c| (c.lo, c.hi)).collect(),
-                        })
-                        .collect(),
-                );
-            });
-            steps.push(epoch_steps);
+        let epoch_order = engine.epoch_order.clone();
+        let epoch_order_cost = engine.epoch_order_cost;
+        let mut steps: Vec<Vec<Vec<PlanNodeStep>>> = vec![Vec::new(); cfg.n_epochs];
+        // The run-long cursor yields owned StepLoads, so sample/chunk
+        // buffers MOVE into the plan — no per-epoch cloning.
+        for rs in engine.plan_run() {
+            steps[rs.epoch_pos].push(
+                rs.load
+                    .nodes
+                    .into_iter()
+                    .map(|nl| PlanNodeStep {
+                        samples: nl.samples,
+                        hits: nl.hits,
+                        chunks: nl.chunks.iter().map(|c| (c.lo, c.hi)).collect(),
+                    })
+                    .collect(),
+            );
         }
         SchedulePlan {
             config: cfg.to_json(),
             loader: policy.name.clone(),
-            epoch_order: engine.epoch_order.clone(),
-            epoch_order_cost: engine.epoch_order_cost,
+            epoch_order,
+            epoch_order_cost,
             steps,
         }
+    }
+
+    /// Run the offline scheduler and stream the plan's JSON to `out` one
+    /// step at a time, holding O(1) plan state in memory. The bytes are
+    /// identical to `compute(..).to_json().to_string_compact()` (tested),
+    /// so [`load`](Self::load)/[`from_json`](Self::from_json) read either
+    /// producer's artifact.
+    pub fn compute_to_writer(
+        cfg: &RunConfig,
+        policy: &LoaderPolicy,
+        out: &mut dyn Write,
+    ) -> Result<PlanSummary> {
+        let mut engine = LoaderEngine::new(cfg.clone(), policy.clone());
+        let epoch_order = engine.epoch_order.clone();
+        let epoch_order_cost = engine.epoch_order_cost;
+        // Top-level keys in the compact Json writer's (BTreeMap) order:
+        // config < epoch_order < epoch_order_cost < loader < steps.
+        write!(
+            out,
+            "{{\"config\":{},\"epoch_order\":{}",
+            cfg.to_json().to_string_compact(),
+            Json::arr_usize(&epoch_order).to_string_compact()
+        )?;
+        if let Some(c) = epoch_order_cost {
+            write!(out, ",\"epoch_order_cost\":{}", Json::Num(c as f64).to_string_compact())?;
+        }
+        write!(
+            out,
+            ",\"loader\":{},\"steps\":[",
+            Json::Str(policy.name.clone()).to_string_compact()
+        )?;
+        let mut total_pfs = 0usize;
+        let mut steps = 0usize;
+        let mut first_epoch = true;
+        for rs in engine.plan_run() {
+            if rs.step == 0 {
+                if !first_epoch {
+                    out.write_all(b",")?;
+                }
+                first_epoch = false;
+                out.write_all(b"[")?;
+            } else {
+                out.write_all(b",")?;
+            }
+            out.write_all(b"[")?;
+            for (k, nl) in rs.load.nodes.iter().enumerate() {
+                if k > 0 {
+                    out.write_all(b",")?;
+                }
+                total_pfs += nl.samples.len() - nl.hits;
+                // Direct byte emission, no per-step Json tree or String:
+                // at full scale this loop runs tens of millions of times.
+                // Key order matches the BTreeMap-backed [`node_step_json`]
+                // (chunks < hits < samples); drift between the two writers
+                // is caught by the byte-identity test.
+                write!(out, "{{\"chunks\":[")?;
+                for (i, c) in nl.chunks.iter().enumerate() {
+                    if i > 0 {
+                        out.write_all(b",")?;
+                    }
+                    write!(out, "[{},{}]", c.lo, c.hi)?;
+                }
+                write!(out, "],\"hits\":{},\"samples\":[", nl.hits)?;
+                for (i, &x) in nl.samples.iter().enumerate() {
+                    if i > 0 {
+                        out.write_all(b",")?;
+                    }
+                    write!(out, "{x}")?;
+                }
+                out.write_all(b"]}")?;
+            }
+            out.write_all(b"]")?;
+            if rs.epoch_end {
+                out.write_all(b"]")?;
+            }
+            steps += 1;
+        }
+        if cfg.steps_per_epoch() == 0 {
+            // Degenerate config (global batch > dataset): the materialized
+            // plan still carries one empty array per epoch.
+            for i in 0..cfg.n_epochs {
+                if i > 0 {
+                    out.write_all(b",")?;
+                }
+                out.write_all(b"[]")?;
+            }
+        }
+        out.write_all(b"]}")?;
+        Ok(PlanSummary {
+            epoch_order,
+            epoch_order_cost,
+            epochs: cfg.n_epochs,
+            steps,
+            total_pfs_samples: total_pfs,
+        })
+    }
+
+    /// Stream the offline schedule to a file (see
+    /// [`compute_to_writer`](Self::compute_to_writer)). Written via a
+    /// sibling `.tmp` file and renamed on success: full-scale plans take
+    /// minutes to stream, and a crash/disk-full mid-write must not leave
+    /// a truncated artifact at `path` (or clobber a valid one already
+    /// there).
+    pub fn compute_to_file(
+        cfg: &RunConfig,
+        policy: &LoaderPolicy,
+        path: &std::path::Path,
+    ) -> Result<PlanSummary> {
+        let file_name = path
+            .file_name()
+            .with_context(|| format!("plan path {} has no file name", path.display()))?;
+        let tmp = path.with_file_name(format!("{}.tmp", file_name.to_string_lossy()));
+        let f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create plan {}", tmp.display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        let summary = Self::compute_to_writer(cfg, policy, &mut w)
+            .with_context(|| format!("write plan {}", tmp.display()))?;
+        w.flush().with_context(|| format!("flush plan {}", tmp.display()))?;
+        drop(w);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+        Ok(summary)
     }
 
     pub fn to_json(&self) -> Json {
@@ -86,21 +246,11 @@ impl SchedulePlan {
                             Json::Arr(
                                 step.iter()
                                     .map(|ns| {
-                                        let mut nso = Json::obj();
-                                        nso.set("samples", Json::arr_u32(&ns.samples))
-                                            .set("hits", Json::Num(ns.hits as f64))
-                                            .set(
-                                                "chunks",
-                                                Json::Arr(
-                                                    ns.chunks
-                                                        .iter()
-                                                        .map(|&(lo, hi)| {
-                                                            Json::arr_u32(&[lo, hi])
-                                                        })
-                                                        .collect(),
-                                                ),
-                                            );
-                                        nso
+                                        node_step_json(
+                                            &ns.samples,
+                                            ns.hits,
+                                            ns.chunks.iter().copied(),
+                                        )
                                     })
                                     .collect(),
                             )
@@ -126,9 +276,27 @@ impl SchedulePlan {
                 for ns in step.as_arr().context("step not an array")? {
                     let samples = ns.get("samples").and_then(Json::arr_as_u32).context("samples")?;
                     let hits = ns.req_usize("hits")?;
+                    // Shape guard: hits beyond the batch would underflow
+                    // total_pfs_samples() (samples.len() - hits).
+                    if hits > samples.len() {
+                        bail!(
+                            "malformed node step: hits ({hits}) exceeds batch size ({})",
+                            samples.len()
+                        );
+                    }
                     let mut chunks = Vec::new();
                     for c in ns.req_arr("chunks")? {
-                        let pair = c.arr_as_u32().context("chunk pair")?;
+                        let pair = c
+                            .arr_as_u32()
+                            .context("chunk pair is not an array of non-negative integers")?;
+                        // Guard the shape: a malformed artifact must error,
+                        // not index out of bounds.
+                        if pair.len() != 2 {
+                            bail!(
+                                "malformed chunk pair: expected [lo, hi], got {} element(s)",
+                                pair.len()
+                            );
+                        }
                         chunks.push((pair[0], pair[1]));
                     }
                     node_steps.push(PlanNodeStep { samples, hits, chunks });
@@ -235,6 +403,103 @@ mod tests {
         let plan2 = SchedulePlan::load(&path).unwrap();
         assert_eq!(plan.epoch_order, plan2.epoch_order);
         assert_eq!(plan.total_pfs_samples(), plan2.total_pfs_samples());
+    }
+
+    #[test]
+    fn streamed_writer_is_byte_identical_to_materialized() {
+        // The streaming path must be a drop-in producer of the same
+        // artifact: compare raw bytes, not just parsed equality. solar
+        // covers the epoch_order_cost branch (EOO on, 3 epochs);
+        // pytorch covers its absence.
+        for name in ["solar", "pytorch"] {
+            let cfg = tiny_cfg();
+            let policy = crate::loader::LoaderPolicy::by_name(name).unwrap();
+            let materialized =
+                SchedulePlan::compute(&cfg, &policy).to_json().to_string_compact();
+            let mut streamed: Vec<u8> = Vec::new();
+            let summary = SchedulePlan::compute_to_writer(&cfg, &policy, &mut streamed).unwrap();
+            assert_eq!(String::from_utf8(streamed).unwrap(), materialized, "{name}");
+            assert_eq!(summary.epochs, 3, "{name}");
+            assert_eq!(summary.steps, 3 * cfg.steps_per_epoch(), "{name}");
+        }
+    }
+
+    #[test]
+    fn streamed_summary_matches_plan_totals() {
+        let cfg = tiny_cfg();
+        let policy = crate::loader::LoaderPolicy::solar();
+        let plan = SchedulePlan::compute(&cfg, &policy);
+        let mut out: Vec<u8> = Vec::new();
+        let summary = SchedulePlan::compute_to_writer(&cfg, &policy, &mut out).unwrap();
+        assert_eq!(summary.epoch_order, plan.epoch_order);
+        assert_eq!(summary.epoch_order_cost, plan.epoch_order_cost);
+        assert_eq!(summary.total_pfs_samples, plan.total_pfs_samples());
+        // And the streamed artifact loads back through the normal reader.
+        let reparsed = SchedulePlan::from_json(&Json::parse(
+            std::str::from_utf8(&out).unwrap(),
+        ).unwrap())
+        .unwrap();
+        assert_eq!(reparsed.total_pfs_samples(), plan.total_pfs_samples());
+    }
+
+    #[test]
+    fn compute_to_file_writes_loadable_plan_and_cleans_tmp() {
+        let dir = std::env::temp_dir().join("solar_plan_stream_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("streamed_plan.json");
+        let cfg = tiny_cfg();
+        let policy = crate::loader::LoaderPolicy::solar();
+        let summary = SchedulePlan::compute_to_file(&cfg, &policy, &path).unwrap();
+        let plan = SchedulePlan::load(&path).unwrap();
+        assert_eq!(plan.total_pfs_samples(), summary.total_pfs_samples);
+        assert_eq!(plan.epoch_order, summary.epoch_order);
+        // The atomic-write staging file must be gone after success.
+        assert!(!dir.join("streamed_plan.json.tmp").exists());
+    }
+
+    fn plan_json_with_chunks(chunks: &str) -> String {
+        format!(
+            r#"{{"config":null,"epoch_order":[0],"loader":"solar","steps":[[[{{"chunks":{chunks},"hits":0,"samples":[1,2]}}]]]}}"#
+        )
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_length_chunk_pairs() {
+        // Regression: pair[0]/pair[1] used to index without checking the
+        // pair length — a malformed artifact panicked instead of erroring.
+        for chunks in ["[[1]]", "[[]]", "[[1,2,3]]"] {
+            let j = Json::parse(&plan_json_with_chunks(chunks)).unwrap();
+            let err = SchedulePlan::from_json(&j).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("chunk pair"),
+                "chunks={chunks}: unexpected error {err:#}"
+            );
+        }
+        // Well-formed pairs still load.
+        let j = Json::parse(&plan_json_with_chunks("[[1,2]]")).unwrap();
+        let plan = SchedulePlan::from_json(&j).unwrap();
+        assert_eq!(plan.steps[0][0][0].chunks, vec![(1, 2)]);
+    }
+
+    #[test]
+    fn from_json_rejects_hits_beyond_batch() {
+        // hits > samples.len() would underflow total_pfs_samples().
+        let src = r#"{"config":null,"epoch_order":[0],"loader":"solar","steps":[[[{"chunks":[],"hits":999,"samples":[1,2]}]]]}"#;
+        let j = Json::parse(src).unwrap();
+        let err = SchedulePlan::from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("hits"), "unexpected error {err:#}");
+    }
+
+    #[test]
+    fn from_json_rejects_non_array_chunks() {
+        for chunks in ["[5]", "[null]", "[\"x\"]", "[{}]"] {
+            let j = Json::parse(&plan_json_with_chunks(chunks)).unwrap();
+            let err = SchedulePlan::from_json(&j).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("chunk pair"),
+                "chunks={chunks}: unexpected error {err:#}"
+            );
+        }
     }
 
     #[test]

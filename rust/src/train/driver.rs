@@ -15,15 +15,19 @@
 //!   decisions exactly (`inserted` / `evicted` lists in each
 //!   [`NodeStepLoad`]).
 //!
-//! The coordinator streams step plans straight off the engine's
-//! [`LoaderEngine::plan_steps`] cursor — O(prefetch) plans in memory, not
+//! The coordinator streams step plans straight off the engine's run-long
+//! [`LoaderEngine::plan_run`] cursor — O(prefetch) plans in memory, not
 //! O(epoch) — and dispatches each step's fetch up to `prefetch` steps
 //! ahead of its execution: while step *t* runs grads, step *t+1*'s PFS
-//! bytes move. SOLAR's offline determinism is what makes this safe: the
-//! plan for *t+1* is fully known before *t* runs, and prefetching changes
-//! WHEN bytes move, never WHICH samples feed which gradient —
-//! `prefetch: 0` (the strictly serial pre-pipeline schedule) produces
-//! bit-identical parameters (tested in `driver_pipeline_parity.rs`).
+//! bytes move. The cursor spans epoch boundaries, so epoch *e+1*'s first
+//! fetches stage during epoch *e*'s tail — no fill/drain bubble at the
+//! boundary (`epoch_drain: true` restores the old per-epoch drain for
+//! A/B measurement). SOLAR's offline determinism is what makes this
+//! safe: the plan for *t+1* is fully known before *t* runs, and
+//! prefetching changes WHEN bytes move, never WHICH samples feed which
+//! gradient — `prefetch: 0` (the strictly serial pre-pipeline schedule)
+//! produces bit-identical parameters (tested in
+//! `driver_pipeline_parity.rs`).
 //!
 //! Per step: the exec worker assembles the batch (staged bytes + buffer
 //! hits), executes the AOT'd grads, and returns summed gradients; the
@@ -42,7 +46,7 @@ use std::sync::Arc;
 
 use crate::config::RunConfig;
 use crate::data::synth;
-use crate::loader::engine::{LoaderEngine, NodeStepLoad};
+use crate::loader::engine::{LoaderEngine, NodeStepLoad, RunStep};
 use crate::loader::LoaderPolicy;
 use crate::runtime::executable::{DenseImpl, TrainRuntime};
 use crate::runtime::params::{GradAccum, ParamStore};
@@ -75,6 +79,16 @@ pub struct TrainConfig {
     /// before its grads start). Affects only WHEN bytes move — the
     /// trained parameters are bit-identical across depths.
     pub prefetch: usize,
+    /// Drain the pipeline at every epoch boundary instead of letting the
+    /// fetch stages run across it (the pre-cross-epoch behaviour). The
+    /// schedule — and therefore parameters, losses, and per-epoch stats —
+    /// is identical either way; only the boundary fill/drain bubble
+    /// returns. Kept for A/B measurement of that bubble.
+    pub epoch_drain: bool,
+    /// Test hook: node `.0`'s fetch stage reports an injected error
+    /// instead of staging step `.1` — exercises the fetch-death shutdown
+    /// path (regression-tested in `driver_pipeline_parity.rs`).
+    pub fetch_fault: Option<(usize, usize)>,
 }
 
 type Params = Arc<Vec<Vec<f32>>>;
@@ -152,8 +166,9 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
         let throttle = tc.throttle;
         let cost = tc.run.cost.clone();
         let depth = tc.prefetch;
+        let fault = tc.fetch_fault.and_then(|(node, step)| (node == k).then_some(step));
         handles.push(std::thread::spawn(move || {
-            worker_loop(k, frx, rx, done, &dataset_path, &artifacts_dir, dense, throttle, cost, depth)
+            worker_loop(k, frx, rx, done, &dataset_path, &artifacts_dir, dense, throttle, cost, depth, fault)
         }));
     }
     drop(done_tx);
@@ -176,112 +191,141 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     let mut global_step = 0usize;
     let mut fetch_step = 0usize;
 
-    'epochs: for pos in 0..tc.run.n_epochs {
-        let mut cursor = engine.plan_steps(pos);
-        // Per-step (hits, pfs) of plans whose fetch has been dispatched
-        // but whose exec hasn't run — counted into the report at exec
-        // time so totals match the serial schedule under max_steps cuts.
-        let mut inflight: VecDeque<(usize, usize)> = VecDeque::new();
-        let mut epoch_stat = EpochLoadStat::default();
-        // Set when a fetch thread is gone: its root-cause error travels
-        // through the exec half's poisoned staged slot to done_rx, so we
-        // stop dispatching and keep executing in-flight steps to surface
-        // it instead of masking it with a channel-closed error here.
-        let mut fetch_down = false;
-        loop {
-            // Keep the fetch stages `prefetch` steps ahead of execution.
-            while !fetch_down && inflight.len() <= tc.prefetch {
-                let Some(sl) = cursor.next() else { break };
-                let mut hits = 0usize;
-                let mut pfs = 0usize;
-                for (k, nl) in sl.nodes.into_iter().enumerate() {
-                    hits += nl.hits;
-                    pfs += nl.pfs_samples;
-                    if to_fetch[k].send(FetchMsg { step_id: fetch_step, load: nl }).is_err() {
-                        fetch_down = true;
-                        // Don't hand the rest of this doomed step to the
-                        // healthy nodes — it will never execute.
-                        break;
-                    }
-                }
-                if fetch_down {
-                    break; // partially-dispatched step: never executed
-                }
-                inflight.push_back((hits, pfs));
-                fetch_step += 1;
-            }
-            let Some((hits, pfs)) = inflight.pop_front() else {
-                if fetch_down {
-                    // The dead fetch half forwards its root cause straight
-                    // to done_rx; drain for it so the real error surfaces.
-                    while let Ok(d) = done_rx.recv_timeout(std::time::Duration::from_secs(5)) {
-                        d?;
-                    }
-                    bail!("worker fetch stage died without reporting a cause");
-                }
+    // One run-long cursor: the plan stream crosses epoch boundaries, so
+    // the dispatch loop below stages epoch e+1's first steps while epoch
+    // e's tail is still executing — the boundary is just another step.
+    let mut cursor = engine.plan_run();
+    // Per-step (epoch, hits, pfs) of plans whose fetch has been
+    // dispatched but whose exec hasn't run — counted into the report at
+    // exec time so totals match the serial schedule under max_steps cuts.
+    let mut inflight: VecDeque<(usize, usize, usize)> = VecDeque::new();
+    // One-slot lookahead for `epoch_drain`: a next-epoch step held back
+    // until the current epoch's in-flight steps have all executed.
+    let mut pending: Option<RunStep> = None;
+    let mut dispatch_epoch = 0usize;
+    // Epoch of the most recently executed step; stats close out when the
+    // executed stream crosses a boundary.
+    let mut cur_epoch = 0usize;
+    let mut epoch_stat = EpochLoadStat::default();
+    // Set when a fetch thread is gone: its root-cause error travels
+    // through the exec half's poisoned staged slot to done_rx, so we
+    // stop dispatching and keep executing in-flight steps to surface
+    // it instead of masking it with a channel-closed error here.
+    let mut fetch_down = false;
+    loop {
+        // Keep the fetch stages `prefetch` steps ahead of execution.
+        while !fetch_down && inflight.len() <= tc.prefetch {
+            let Some(rs) = pending.take().or_else(|| cursor.next()) else { break };
+            if tc.epoch_drain && rs.epoch_pos != dispatch_epoch && !inflight.is_empty() {
+                // Old per-epoch behaviour: hold the next epoch's first
+                // step until the pipeline drains at the boundary.
+                pending = Some(rs);
                 break;
-            };
-            report.hits += hits;
-            report.pfs_samples += pfs;
-            epoch_stat.hits += hits;
-            epoch_stat.pfs_samples += pfs;
-
-            let params: Params = Arc::new(store.tensors.clone());
-            for tx in &to_workers {
-                tx.send(WorkMsg::Exec { step_id: global_step, params: params.clone() })
-                    .context("worker channel closed")?;
             }
-            // Allreduce: buffer the replies and accumulate in NODE order,
-            // not arrival order — float addition is non-associative, and
-            // a scheduling-dependent sum order would break the pipeline's
-            // bit-identical-across-prefetch-depths guarantee at ≥3 nodes.
-            let mut dones: Vec<Option<DoneMsg>> = (0..n_nodes).map(|_| None).collect();
-            for _ in 0..n_nodes {
-                let d = done_rx.recv().context("worker died")??;
-                debug_assert_eq!(d.step_id, global_step);
-                dones[d.node] = Some(d);
-            }
-            let mut acc = GradAccum::zeros_like(&store);
-            let mut max_load = 0.0f64;
-            let mut max_exec = 0.0f64;
-            for d in dones.iter().flatten() {
-                if let Some(g) = &d.grads {
-                    acc.add(g, d.loss_sum, d.n_valid);
+            dispatch_epoch = rs.epoch_pos;
+            let mut hits = 0usize;
+            let mut pfs = 0usize;
+            for (k, nl) in rs.load.nodes.into_iter().enumerate() {
+                hits += nl.hits;
+                pfs += nl.pfs_samples;
+                if to_fetch[k].send(FetchMsg { step_id: fetch_step, load: nl }).is_err() {
+                    fetch_down = true;
+                    // Don't hand the rest of this doomed step to the
+                    // healthy nodes — it will never execute. (Their fetch
+                    // stages may already hold it staged; shutdown below
+                    // unblocks them by dropping the staged receivers.)
+                    break;
                 }
-                max_load = max_load.max(d.load_wall_s);
-                max_exec = max_exec.max(d.exec_wall_s);
             }
-            report.load_wall_s += max_load;
-            report.comp_wall_s += max_exec;
-            let mean_loss = acc.finalize();
-            store.sgd_step(&acc.grads, tc.lr);
-
-            // Validation (worker 0 evaluates the holdout).
-            let mut val_loss = f64::NAN;
-            if tc.eval_every > 0 && global_step % tc.eval_every == 0 && !holdout_ids.is_empty() {
-                let params: Params = Arc::new(store.tensors.clone());
-                to_workers[0]
-                    .send(WorkMsg::Eval { params, ids: holdout_ids.clone() })
-                    .context("worker channel closed")?;
-                let d = done_rx.recv().context("worker died")??;
-                val_loss = d.loss_sum / d.n_valid.max(1.0);
+            if fetch_down {
+                break; // partially-dispatched step: never executed
             }
-            report.points.push(LossPoint {
-                step: global_step,
-                epoch: pos,
-                wall_s: wall.elapsed_s(),
-                train_loss: mean_loss,
-                val_loss,
-            });
-            global_step += 1;
-            if tc.max_steps > 0 && global_step >= tc.max_steps {
-                report.epochs = pos + 1;
-                report.epoch_stats.push(epoch_stat);
-                break 'epochs;
-            }
+            inflight.push_back((rs.epoch_pos, hits, pfs));
+            fetch_step += 1;
         }
+        let Some((step_epoch, hits, pfs)) = inflight.pop_front() else {
+            if fetch_down {
+                // The dead fetch half forwards its root cause straight
+                // to done_rx; drain for it so the real error surfaces.
+                while let Ok(d) = done_rx.recv_timeout(std::time::Duration::from_secs(5)) {
+                    d?;
+                }
+                bail!("worker fetch stage died without reporting a cause");
+            }
+            break; // plan exhausted: run complete
+        };
+        if step_epoch != cur_epoch {
+            // Executed past an epoch boundary: close the finished epoch.
+            report.epoch_stats.push(epoch_stat);
+            epoch_stat = EpochLoadStat::default();
+            cur_epoch = step_epoch;
+        }
+        report.hits += hits;
+        report.pfs_samples += pfs;
+        epoch_stat.hits += hits;
+        epoch_stat.pfs_samples += pfs;
+
+        let params: Params = Arc::new(store.tensors.clone());
+        for tx in &to_workers {
+            tx.send(WorkMsg::Exec { step_id: global_step, params: params.clone() })
+                .context("worker channel closed")?;
+        }
+        // Allreduce: buffer the replies and accumulate in NODE order,
+        // not arrival order — float addition is non-associative, and
+        // a scheduling-dependent sum order would break the pipeline's
+        // bit-identical-across-prefetch-depths guarantee at ≥3 nodes.
+        let mut dones: Vec<Option<DoneMsg>> = (0..n_nodes).map(|_| None).collect();
+        for _ in 0..n_nodes {
+            let d = done_rx.recv().context("worker died")??;
+            debug_assert_eq!(d.step_id, global_step);
+            dones[d.node] = Some(d);
+        }
+        let mut acc = GradAccum::zeros_like(&store);
+        let mut max_load = 0.0f64;
+        let mut max_exec = 0.0f64;
+        for d in dones.iter().flatten() {
+            if let Some(g) = &d.grads {
+                acc.add(g, d.loss_sum, d.n_valid);
+            }
+            max_load = max_load.max(d.load_wall_s);
+            max_exec = max_exec.max(d.exec_wall_s);
+        }
+        report.load_wall_s += max_load;
+        report.comp_wall_s += max_exec;
+        let mean_loss = acc.finalize();
+        store.sgd_step(&acc.grads, tc.lr);
+
+        // Validation (worker 0 evaluates the holdout).
+        let mut val_loss = f64::NAN;
+        if tc.eval_every > 0 && global_step % tc.eval_every == 0 && !holdout_ids.is_empty() {
+            let params: Params = Arc::new(store.tensors.clone());
+            to_workers[0]
+                .send(WorkMsg::Eval { params, ids: holdout_ids.clone() })
+                .context("worker channel closed")?;
+            let d = done_rx.recv().context("worker died")??;
+            val_loss = d.loss_sum / d.n_valid.max(1.0);
+        }
+        report.points.push(LossPoint {
+            step: global_step,
+            epoch: cur_epoch,
+            wall_s: wall.elapsed_s(),
+            train_loss: mean_loss,
+            val_loss,
+        });
+        global_step += 1;
+        if tc.max_steps > 0 && global_step >= tc.max_steps {
+            break;
+        }
+    }
+    drop(cursor);
+    if global_step == 0 {
+        // Nothing executed (zero epochs, or zero steps per epoch): one
+        // empty stat per configured epoch, matching the serial schedule.
+        report.epoch_stats = vec![EpochLoadStat::default(); tc.run.n_epochs];
+        report.epochs = tc.run.n_epochs;
+    } else {
         report.epoch_stats.push(epoch_stat);
-        report.epochs = pos + 1;
+        report.epochs = cur_epoch + 1;
     }
     report.steps = global_step;
     report.total_wall_s = wall.elapsed_s();
@@ -314,15 +358,18 @@ fn worker_loop(
     throttle: f64,
     cost: CostModel,
     prefetch: usize,
+    fetch_fault: Option<usize>,
 ) -> Result<()> {
     // Stage slots between the two halves: up to `prefetch` steps can sit
     // fully staged awaiting execution; the bound gives backpressure so
-    // staged bytes stay O(prefetch), not O(epoch).
+    // staged bytes stay O(prefetch), not O(epoch) — and, with the
+    // cross-epoch cursor, lets steps of the NEXT epoch sit staged while
+    // this epoch's tail executes.
     let (staged_tx, staged_rx) = mpsc::sync_channel::<StagedStep>(prefetch.max(1));
     let fetch_path = dataset_path.to_path_buf();
     let fetch_done = done.clone();
     let fetch_handle = std::thread::spawn(move || {
-        fetch_loop(node, fetch_rx, staged_tx, &fetch_path, throttle, cost, fetch_done)
+        fetch_loop(node, fetch_rx, staged_tx, &fetch_path, throttle, cost, fetch_done, fetch_fault)
     });
 
     let result = (|| -> Result<()> {
@@ -461,6 +508,18 @@ fn worker_loop(
 /// the exec thread through a bounded channel. On error it reports the
 /// root cause straight to the coordinator (`done`) and exits, closing the
 /// staged channel — which the exec half and coordinator treat as fatal.
+///
+/// Shutdown audit (the fetch-death path): the root cause is sent to
+/// `done` BEFORE this thread returns (i.e. before the staged channel
+/// closes), and `done` is an unbounded FIFO — so the coordinator always
+/// receives the root cause ahead of any derived "fetch stage died" error
+/// from the exec half, whether it notices via a failed dispatch
+/// (`fetch_down`) or via a poisoned exec reply. A step this thread staged
+/// that never gets executed (partially-dispatched step on a healthy
+/// node, or a max_steps cut) cannot wedge shutdown: the exec half drops
+/// `staged_rx` before joining, which turns this thread's parked
+/// bounded-channel send into an error, and the coordinator closing
+/// `to_fetch` unblocks the `rx.recv` park.
 #[allow(clippy::too_many_arguments)]
 fn fetch_loop(
     node: usize,
@@ -470,6 +529,7 @@ fn fetch_loop(
     throttle: f64,
     cost: CostModel,
     done: mpsc::Sender<Result<DoneMsg>>,
+    fault_at: Option<usize>,
 ) {
     let reader = match ShdfReader::open(dataset_path) {
         Ok(r) => r,
@@ -485,6 +545,12 @@ fn fetch_loop(
     // the serial schedule exactly.
     let mut resident: HashSet<u32> = HashSet::new();
     while let Ok(FetchMsg { step_id, load }) = rx.recv() {
+        if fault_at == Some(step_id) {
+            let _ = done.send(Err(anyhow::anyhow!(
+                "worker {node} fetch: injected fetch fault at step {step_id}"
+            )));
+            return;
+        }
         let t = Stopwatch::start();
         match stage_step(&reader, &resident, &load, &cost, sb) {
             Err(e) => {

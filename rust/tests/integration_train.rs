@@ -68,6 +68,8 @@ fn tc(path: PathBuf, n_train: usize, loader: &str, n_nodes: usize, epochs: usize
         max_steps: steps,
         holdout: 16,
         prefetch: 1,
+        epoch_drain: false,
+        fetch_fault: None,
     }
 }
 
