@@ -16,8 +16,8 @@ use solar::exp::ExpCtx;
 use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
 use solar::storage::pfs::CostModel;
-use solar::storage::shdf::ShdfReader;
-use solar::train::driver::{train, TrainConfig};
+use solar::storage::store::{open_store, SampleStore};
+use solar::train::driver::{train, PrefetchMode, TrainConfig};
 use solar::util::fmt_secs;
 use solar::util::stats::TextTable;
 
@@ -33,10 +33,11 @@ fn main() -> anyhow::Result<()> {
         let mut spec = DatasetSpec::paper("cd17").unwrap();
         spec.id = format!("cd_scaling_{n_train}");
         spec.n_samples = n_train;
-        let ok = ShdfReader::open(&path).map(|r| r.n_samples() == n_train).unwrap_or(false);
+        let ok = open_store(&path).map(|s| s.n_samples() == n_train).unwrap_or(false);
         if !ok {
             synth::generate_dataset(&path, &spec, 99)?;
         }
+        let store = open_store(&path)?;
         let mut t = TextTable::new(&["#workers", "epoch wall", "compute", "load", "speedup"]);
         let mut base = None;
         for n_nodes in [1usize, 2, 4] {
@@ -51,7 +52,7 @@ fn main() -> anyhow::Result<()> {
             };
             let tc = TrainConfig {
                 run: cfg,
-                dataset_path: path.clone(),
+                store: store.clone(),
                 artifacts_dir: artifacts.clone(),
                 policy: LoaderPolicy::pytorch(),
                 dense: DenseImpl::Xla,
@@ -60,9 +61,10 @@ fn main() -> anyhow::Result<()> {
                 eval_every: 0,
                 max_steps: 0,
                 holdout: 0,
-                prefetch: 1,
+                prefetch: PrefetchMode::Fixed(1),
                 epoch_drain: false,
                 fetch_fault: None,
+                load_only: false,
             };
             let r = train(&tc)?;
             let b = *base.get_or_insert(r.total_wall_s);

@@ -22,8 +22,8 @@ use solar::data::synth;
 use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
 use solar::storage::pfs::CostModel;
-use solar::storage::shdf::ShdfReader;
-use solar::train::driver::{train, TrainConfig};
+use solar::storage::store::{open_store, SampleStore};
+use solar::train::driver::{train, PrefetchMode, TrainConfig};
 use solar::util::fmt_secs;
 
 fn arg(args: &[String], name: &str, default: usize) -> usize {
@@ -55,11 +55,12 @@ fn main() -> anyhow::Result<()> {
     let mut spec = DatasetSpec::paper("cd17").unwrap();
     spec.id = format!("cd_train_{}", n_train + holdout);
     spec.n_samples = n_train + holdout;
-    let ok = ShdfReader::open(&path).map(|r| r.n_samples() == spec.n_samples).unwrap_or(false);
+    let ok = open_store(&path).map(|s| s.n_samples() == spec.n_samples).unwrap_or(false);
     if !ok {
         println!("generating {} diffraction samples -> {} ...", spec.n_samples, path.display());
         synth::generate_dataset(&path, &spec, 0xDA7A)?;
     }
+    let store = open_store(&path)?;
     let mut train_spec = spec.clone();
     train_spec.n_samples = n_train;
 
@@ -76,7 +77,7 @@ fn main() -> anyhow::Result<()> {
         };
         let tc = TrainConfig {
             run: cfg,
-            dataset_path: path.clone(),
+            store: store.clone(),
             artifacts_dir: artifacts.clone(),
             policy: LoaderPolicy::by_name(loader).unwrap(),
             dense: DenseImpl::Xla,
@@ -85,9 +86,11 @@ fn main() -> anyhow::Result<()> {
             eval_every: 8,
             max_steps: 0,
             holdout,
-            prefetch: 1, // double-buffered: fetch t+1 overlaps compute t, across epochs
+            // double-buffered: fetch t+1 overlaps compute t, across epochs
+            prefetch: PrefetchMode::Fixed(1),
             epoch_drain: false,
             fetch_fault: None,
+            load_only: false,
         };
         println!(
             "\n=== training with {loader} loader ({} samples, {} nodes, {} epochs, throttled PFS) ===",

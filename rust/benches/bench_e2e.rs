@@ -10,8 +10,8 @@ use solar::data::synth;
 use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
 use solar::storage::pfs::CostModel;
-use solar::storage::shdf::ShdfReader;
-use solar::train::driver::{train, TrainConfig};
+use solar::storage::store::{open_store, SampleStore};
+use solar::train::driver::{train, PrefetchMode, TrainConfig};
 use solar::util::bench::BenchSuite;
 
 fn main() {
@@ -32,10 +32,11 @@ fn main() {
     let mut spec = DatasetSpec::paper("cd17").unwrap();
     spec.n_samples = n;
     spec.id = "e2e".into();
-    let ok = ShdfReader::open(&path).map(|r| r.n_samples() == n).unwrap_or(false);
+    let ok = open_store(&path).map(|s| s.n_samples() == n).unwrap_or(false);
     if !ok {
         synth::generate_dataset(&path, &spec, 21).unwrap();
     }
+    let store = open_store(&path).unwrap();
     let steps = 4usize;
     // Serial (prefetch=0) vs pipelined (prefetch=1) under throttle shows
     // the load-hiding win end to end; the unthrottled run is the compute
@@ -54,7 +55,7 @@ fn main() {
         };
         let tc = TrainConfig {
             run: cfg,
-            dataset_path: path.clone(),
+            store: store.clone(),
             artifacts_dir: artifacts.clone(),
             policy: LoaderPolicy::by_name(loader).unwrap(),
             dense: DenseImpl::Xla,
@@ -63,9 +64,10 @@ fn main() {
             eval_every: 0,
             max_steps: steps,
             holdout: 0,
-            prefetch,
+            prefetch: PrefetchMode::Fixed(prefetch),
             epoch_drain: false,
             fetch_fault: None,
+            load_only: false,
         };
         suite.bench_units(
             &format!(

@@ -83,6 +83,19 @@ pub fn parse_tier(s: &str) -> Result<crate::storage::pfs::SystemTier> {
     })
 }
 
+/// `--prefetch` values: a fixed depth (`0` = serial) or `auto` (pick the
+/// depth from the first epoch's measured load:compute ratio).
+pub fn parse_prefetch(s: &str) -> Result<crate::train::driver::PrefetchMode> {
+    use crate::train::driver::PrefetchMode;
+    if s == "auto" {
+        return Ok(PrefetchMode::Auto);
+    }
+    let d: usize = s
+        .parse()
+        .with_context(|| format!("--prefetch must be a depth or 'auto', got '{s}'"))?;
+    Ok(PrefetchMode::Fixed(d))
+}
+
 pub const USAGE: &str = "\
 SOLAR — data-loading framework for distributed surrogate training
 (rust + JAX + Pallas reproduction of PVLDB'22 SOLAR)
@@ -98,16 +111,27 @@ COMMANDS
             [--loader solar] [--epochs 6] [--nodes N] [--batch B] [--full]
   gen-data  materialize a synthetic dataset to SHDF
             --dataset cd17 [--scale 1000] --out PATH [--seed S]
+            [--shards N] (write a sharded dataset: a directory of N SHDF
+            shards + manifest.json, byte-identical samples to the single
+            file; --out is the directory)
+  verify-store  read-check a dataset (single-file or sharded)
+            --data PATH [--ref PATH] (byte-compare against a second
+            store; non-zero exit on mismatch)
   schedule  run the offline scheduler, write the plan artifact
             --dataset cd17 [--tier medium] [--epochs 8] [--loader solar]
             [--scale 1000] --out plan.json
   train     end-to-end distributed training on real bytes
-            --data PATH [--loader solar] [--nodes 2] [--epochs 3]
+            --data PATH (single SHDF file or sharded dataset directory;
+            the trained model is bit-identical across layouts)
+            [--loader solar] [--nodes 2] [--epochs 3]
             [--batch 16] [--throttle 1.0] [--holdout 32] [--lr 0.08]
             [--dense pallas|xla] [--curve out.csv]
-            [--prefetch 1] (fetch-ahead depth; 0 = serial loading)
+            [--prefetch 1|auto] (fetch-ahead depth; 0 = serial loading;
+            auto = pick the depth from epoch 0's load:compute ratio)
             [--epoch-drain] (drain the pipeline at epoch boundaries
             instead of prefetching across them; A/B the boundary bubble)
+            [--load-only] (run the loading pipeline without PJRT/grads —
+            storage/loader smoke mode, needs no artifacts)
   smoke     PJRT round-trip check   [--hlo PATH]
   info      print manifest + environment info
 ";
@@ -149,5 +173,15 @@ mod tests {
         assert!(parse_tier("medium").is_ok());
         assert!(parse_tier("mid").is_ok());
         assert!(parse_tier("ultra").is_err());
+    }
+
+    #[test]
+    fn prefetch_parsing() {
+        use crate::train::driver::PrefetchMode;
+        assert_eq!(parse_prefetch("0").unwrap(), PrefetchMode::Fixed(0));
+        assert_eq!(parse_prefetch("3").unwrap(), PrefetchMode::Fixed(3));
+        assert_eq!(parse_prefetch("auto").unwrap(), PrefetchMode::Auto);
+        assert!(parse_prefetch("deep").is_err());
+        assert!(parse_prefetch("-1").is_err());
     }
 }

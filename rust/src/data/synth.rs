@@ -17,7 +17,9 @@ use std::path::Path;
 
 use crate::data::fft::{fft2_inplace, fftshift2, Cpx};
 use crate::data::spec::DatasetSpec;
+use crate::storage::shard::{ShardManifest, ShardedWriter};
 use crate::storage::shdf::{ShdfHeader, ShdfWriter};
+use crate::storage::store::MemStore;
 use crate::util::rng::Rng;
 
 /// Image side length (power of two for the FFT).
@@ -125,35 +127,79 @@ pub fn split_record(rec: &[f32]) -> (&[f32], &[f32]) {
     (&rec[..N * N], &rec[N * N..3 * N * N])
 }
 
-/// Materialize a scaled dataset to an SHDF container. Only CD-shaped
-/// records ([4,64,64]) are generated with real physics; other specs get
-/// shape-correct smooth-field records (their loading behaviour is
-/// byte-identical, which is all the loaders see).
-pub fn generate_dataset(path: &Path, spec: &DatasetSpec, seed: u64) -> Result<ShdfHeader> {
-    let header = ShdfHeader {
+/// Stream a spec's records (record `i` = deterministic `fork(i)` off the
+/// seed) into `emit`. Only CD-shaped records ([4,64,64]) are generated
+/// with real physics; other specs get shape-correct smooth-field records
+/// (their loading behaviour is byte-identical, which is all the loaders
+/// see). Every dataset materializer — single-file, sharded, in-memory —
+/// goes through this one generator, so the three layouts hold
+/// byte-identical samples by construction.
+fn for_each_record(
+    spec: &DatasetSpec,
+    seed: u64,
+    mut emit: impl FnMut(&[f32]) -> Result<()>,
+) -> Result<()> {
+    let root = Rng::new(seed);
+    let elems = spec.sample_bytes / 4;
+    let cd = spec.shape == vec![CHANNELS, N, N];
+    for i in 0..spec.n_samples {
+        let mut rng = root.fork(i as u64);
+        if cd {
+            emit(&generate_record(&mut rng))?;
+        } else {
+            // Non-CD specs: volumetric smooth noise, correct byte size.
+            let field: Vec<f32> = (0..elems).map(|_| rng.gen_f32()).collect();
+            emit(&field)?;
+        }
+    }
+    Ok(())
+}
+
+fn spec_header(spec: &DatasetSpec) -> ShdfHeader {
+    ShdfHeader {
         n_samples: spec.n_samples,
         sample_bytes: spec.sample_bytes,
         shape: spec.shape.clone(),
         dtype: "f32".into(),
         name: spec.id.clone(),
-    };
-    let mut w = ShdfWriter::create(path, header)?;
-    let root = Rng::new(seed);
-    let elems = spec.sample_bytes / 4;
-    if spec.shape == vec![CHANNELS, N, N] {
-        for i in 0..spec.n_samples {
-            let mut rng = root.fork(i as u64);
-            w.append_f32(&generate_record(&mut rng))?;
-        }
-    } else {
-        // Non-CD specs: volumetric smooth noise, correct byte size.
-        for i in 0..spec.n_samples {
-            let mut rng = root.fork(i as u64);
-            let field: Vec<f32> = (0..elems).map(|_| rng.gen_f32()).collect();
-            w.append_f32(&field)?;
-        }
     }
+}
+
+/// Materialize a scaled dataset to a single-file SHDF container.
+pub fn generate_dataset(path: &Path, spec: &DatasetSpec, seed: u64) -> Result<ShdfHeader> {
+    let mut w = ShdfWriter::create(path, spec_header(spec))?;
+    for_each_record(spec, seed, |rec| w.append_f32(rec))?;
     Ok(w.finish()?)
+}
+
+/// Materialize the same dataset as a sharded directory (`n_shards` SHDF
+/// shards + manifest): sample-for-sample byte-identical to
+/// [`generate_dataset`] with the same spec/seed.
+pub fn generate_dataset_sharded(
+    dir: &Path,
+    spec: &DatasetSpec,
+    seed: u64,
+    n_shards: usize,
+) -> Result<ShardManifest> {
+    // Balanced split: exactly n_shards shards (capped at one sample per
+    // shard), sizes differing by at most one.
+    let mut w = ShardedWriter::create_balanced(dir, spec_header(spec), spec.n_samples, n_shards)?;
+    for_each_record(spec, seed, |rec| w.append_f32(rec))?;
+    w.finish()
+}
+
+/// Materialize the same dataset in memory: sample-for-sample
+/// byte-identical to [`generate_dataset`] with the same spec/seed. For
+/// tests and tiny runs — no temp-file fixtures.
+pub fn generate_dataset_mem(spec: &DatasetSpec, seed: u64) -> MemStore {
+    let mut bytes: Vec<u8> = Vec::with_capacity(spec.n_samples * spec.sample_bytes);
+    for_each_record(spec, seed, |rec| {
+        bytes.extend_from_slice(&crate::storage::store::encode_f32(rec));
+        Ok(())
+    })
+    .expect("in-memory generation cannot fail");
+    MemStore::new(&spec.id, spec.shape.clone(), bytes)
+        .expect("spec-shaped records are whole samples")
 }
 
 #[cfg(test)]

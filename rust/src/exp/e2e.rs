@@ -13,6 +13,7 @@
 
 use anyhow::{Context, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::config::RunConfig;
 use crate::data::spec::DatasetSpec;
@@ -22,8 +23,8 @@ use crate::loader::LoaderPolicy;
 use crate::runtime::executable::{DenseImpl, TrainRuntime};
 use crate::runtime::params::ParamStore;
 use crate::storage::pfs::CostModel;
-use crate::storage::shdf::ShdfReader;
-use crate::train::driver::{train, TrainConfig};
+use crate::storage::store::{decode_f32, open_store, SampleStore};
+use crate::train::driver::{train, PrefetchMode, TrainConfig};
 use crate::train::metrics::TrainReport;
 
 /// Ensure the scaled CD dataset exists on disk; returns its path.
@@ -34,8 +35,8 @@ pub fn ensure_dataset(ctx: &ExpCtx, n_train: usize, n_holdout: usize) -> Result<
     spec.id = format!("cd_e2e_{total}");
     spec.n_samples = total;
     let path = ctx.data_dir.join(format!("{}.shdf", spec.id));
-    let ok = match ShdfReader::open(&path) {
-        Ok(r) => r.n_samples() == total,
+    let ok = match open_store(&path) {
+        Ok(s) => s.n_samples() == total,
         Err(_) => false,
     };
     if !ok {
@@ -50,7 +51,7 @@ pub fn ensure_dataset(ctx: &ExpCtx, n_train: usize, n_holdout: usize) -> Result<
 fn run_one(
     ctx: &ExpCtx,
     loader: &str,
-    path: &PathBuf,
+    store: &Arc<dyn SampleStore>,
     spec: &DatasetSpec,
     n_holdout: usize,
     throttle: f64,
@@ -68,7 +69,7 @@ fn run_one(
     };
     let tc = TrainConfig {
         run: cfg,
-        dataset_path: path.clone(),
+        store: store.clone(),
         artifacts_dir: ctx.artifacts_dir.clone(),
         policy: LoaderPolicy::by_name(loader).context("loader")?,
         dense: DenseImpl::Xla,
@@ -81,9 +82,10 @@ fn run_one(
         // and straight across epoch boundaries, as a production loader
         // would (the serial baseline and the boundary-bubble A/B are
         // covered by driver_pipeline_parity.rs).
-        prefetch: 1,
+        prefetch: PrefetchMode::Fixed(1),
         epoch_drain: false,
         fetch_fault: None,
+        load_only: false,
     };
     let report = train(&tc)?;
     std::fs::create_dir_all(&ctx.out_dir)?;
@@ -92,16 +94,20 @@ fn run_one(
 }
 
 /// PSNR of the trained model's reconstructions on held-out samples.
-fn psnr(ctx: &ExpCtx, path: &PathBuf, store: &ParamStore, ids: &[u32]) -> Result<(f64, f64)> {
+fn psnr(
+    ctx: &ExpCtx,
+    data: &dyn SampleStore,
+    store: &ParamStore,
+    ids: &[u32],
+) -> Result<(f64, f64)> {
     let rt = TrainRuntime::load(&ctx.artifacts_dir, DenseImpl::Xla, true)?;
-    let reader = ShdfReader::open(path)?;
     let b = rt.manifest.batch;
     let img = rt.manifest.img;
     let img2 = img * img;
     let mut x = vec![0.0f32; b * img2];
     let mut y = vec![0.0f32; b * 2 * img2];
     for (i, &sid) in ids.iter().enumerate().take(b) {
-        let rec = ShdfReader::decode_f32(&reader.read_sample_at(sid as usize)?);
+        let rec = decode_f32(&data.read_sample_at(sid as usize)?);
         let (xs, ys) = synth::split_record(&rec);
         x[i * img2..(i + 1) * img2].copy_from_slice(xs);
         y[i * 2 * img2..(i + 1) * 2 * img2].copy_from_slice(ys);
@@ -138,9 +144,12 @@ pub fn fig14_end_to_end(ctx: &ExpCtx) -> Result<()> {
     // than an A100, so the emulated Lustre must slow down accordingly.
     let throttle = 300.0;
     let (path, spec) = ensure_dataset(ctx, n_train, n_holdout)?;
+    // One store handle for both runs and the PSNR pass — everything below
+    // the experiment speaks the backend-agnostic SampleStore API.
+    let store = open_store(&path)?;
 
-    let py = run_one(ctx, "pytorch", &path, &spec, n_holdout, throttle)?;
-    let so = run_one(ctx, "solar", &path, &spec, n_holdout, throttle)?;
+    let py = run_one(ctx, "pytorch", &store, &spec, n_holdout, throttle)?;
+    let so = run_one(ctx, "solar", &store, &spec, n_holdout, throttle)?;
 
     // Time-to-solution: first wall time at which the validation loss
     // reaches the worst of the two final losses (both runs get there).
@@ -180,8 +189,8 @@ pub fn fig14_end_to_end(ctx: &ExpCtx) -> Result<()> {
     let init = ParamStore::load_init(&manifest)?;
     let trained = ParamStore::from_tensors(so.final_params.clone());
     let holdout_ids: Vec<u32> = (n_train as u32..(n_train + n_holdout.min(16)) as u32).collect();
-    let (i_amp, i_phi) = psnr(ctx, &path, &init, &holdout_ids)?;
-    let (t_amp, t_phi) = psnr(ctx, &path, &trained, &holdout_ids)?;
+    let (i_amp, i_phi) = psnr(ctx, store.as_ref(), &init, &holdout_ids)?;
+    let (t_amp, t_phi) = psnr(ctx, store.as_ref(), &trained, &holdout_ids)?;
     let fig15 = format!(
         "Fig 15 — reconstruction PSNR on held-out samples (higher is better).\n\
          Paper: SOLAR-trained PtychoNN produces clear amplitude/phase shapes,\n\

@@ -22,6 +22,7 @@ use crate::sched::locality::{default_assignment, remap_global_batch, NO_NODE};
 use crate::sched::{greedy, pso};
 use crate::shuffle::ShuffleSchedule;
 use crate::storage::pfs::ReadReq;
+use crate::storage::store::{Contiguity, SampleStore};
 use crate::util::bitset::Bitset;
 use crate::util::rng::Rng;
 
@@ -164,7 +165,11 @@ pub struct LoaderEngine {
     partition: Vec<i16>,
 
     gap_thresh: u32,
-    data_start: u64,
+    /// Storage-layout map: which sample ranges are byte-contiguous, and at
+    /// which (virtual) byte offsets. Chunk aggregation never bridges a
+    /// region boundary — a "single request" spanning two shard files would
+    /// be a lie the cost model (and the real reader) can't honor.
+    contig: Contiguity,
     rng: Rng,
     /// Cache of (epoch_src, permutation) — avoids regenerating the O(n)
     /// shuffle three times per epoch (batches + both step maps) (§Perf).
@@ -217,7 +222,10 @@ impl LoaderEngine {
             step_next: Vec::new(),
             partition,
             gap_thresh,
-            data_start: 4108, // SHDF header region; used for request offsets
+            // Default: one flat file with the SHDF header region before
+            // sample 0 (what the simulator charges); binding a real store
+            // replaces this with the store's own layout.
+            contig: Contiguity::single(4108, cfg.spec.sample_bytes),
             rng,
             perm_cache: Vec::new(),
             cfg,
@@ -242,13 +250,55 @@ impl LoaderEngine {
         self.cfg.steps_per_epoch()
     }
 
-    /// Override the byte offset of sample 0 (for real SHDF files).
-    pub fn set_data_start(&mut self, off: u64) {
-        self.data_start = off;
+    /// Adopt a store's layout: request offsets and chunk-aggregation
+    /// boundaries follow the store's contiguity map from here on. The
+    /// store must hold at least the configured samples at the configured
+    /// record size.
+    pub fn bind_store(&mut self, store: &dyn SampleStore) -> anyhow::Result<()> {
+        if store.sample_bytes() != self.cfg.spec.sample_bytes {
+            anyhow::bail!(
+                "store records are {} bytes, config expects {}",
+                store.sample_bytes(),
+                self.cfg.spec.sample_bytes
+            );
+        }
+        if store.n_samples() < self.cfg.spec.n_samples {
+            anyhow::bail!(
+                "store holds {} samples, config schedules {}",
+                store.n_samples(),
+                self.cfg.spec.n_samples
+            );
+        }
+        self.set_contiguity(store.chunk_contiguity());
+        Ok(())
+    }
+
+    /// Set the storage contiguity map directly (tests, simulators).
+    pub fn set_contiguity(&mut self, contig: Contiguity) {
+        self.contig = contig;
     }
 
     fn offset_of(&self, x: u32) -> u64 {
-        self.data_start + x as u64 * self.cfg.spec.sample_bytes as u64
+        self.contig.offset_of(x)
+    }
+
+    /// Chunk-aggregate a sorted list of wanted sample ids, never merging
+    /// across a contiguity-region (shard) boundary: within a region the
+    /// gap-threshold rule of §4.4 applies unchanged; across regions there
+    /// is no contiguous byte range to read in one request.
+    fn aggregate_contig(&self, sorted_ids: &[u32]) -> Vec<Chunk> {
+        if self.contig.is_single() {
+            return aggregate(sorted_ids, self.gap_thresh);
+        }
+        let mut out = Vec::new();
+        let mut i = 0usize;
+        while i < sorted_ids.len() {
+            let end = self.contig.region_end(sorted_ids[i]);
+            let j = i + sorted_ids[i..].partition_point(|&x| x < end);
+            out.extend(aggregate(&sorted_ids[i..j], self.gap_thresh));
+            i = j;
+        }
+        out
     }
 
     /// step-index map of one epoch's permutation (UNUSED for dropped tail).
@@ -544,7 +594,7 @@ impl LoaderEngine {
             nl.pfs_samples = fetch_ids.len();
             if self.policy.chunk_agg {
                 fetch_ids.sort_unstable();
-                let chunks = aggregate(&fetch_ids, self.gap_thresh);
+                let chunks = self.aggregate_contig(&fetch_ids);
                 for c in &chunks {
                     nl.pfs_reqs.push(ReadReq {
                         offset: self.offset_of(c.lo),
@@ -619,7 +669,7 @@ impl LoaderEngine {
             }
             nl.pfs_samples = fetch_ids.len();
             fetch_ids.sort_unstable();
-            let chunks = aggregate(&fetch_ids, self.gap_thresh);
+            let chunks = self.aggregate_contig(&fetch_ids);
             for c in &chunks {
                 nl.pfs_reqs.push(ReadReq {
                     offset: self.offset_of(c.lo),
@@ -1161,6 +1211,70 @@ mod tests {
             expect += sl.nodes.iter().map(|n| n.samples.len()).sum::<usize>();
         });
         assert_eq!(batches, expect);
+    }
+
+    #[test]
+    fn chunks_never_cross_contiguity_regions() {
+        // 1 node, batch = dataset, no buffer: every step fetches ALL 64
+        // ids, so the flat layout aggregates them into ONE chunk. With a
+        // 4-region (sharded) layout the same plan must split into exactly
+        // one chunk per region, at the right virtual offsets.
+        let cfg = tiny_cfg(64, 1, 64, 1, 0);
+        let sb = cfg.spec.sample_bytes as u64;
+        let mut flat = LoaderEngine::new(cfg.clone(), LoaderPolicy::solar());
+        let mut sharded = LoaderEngine::new(cfg, LoaderPolicy::solar());
+        let shard_virtual = 4108 + 16 * sb; // header + 16 samples per shard file
+        let regions: Vec<(u32, u64)> =
+            (0..4u32).map(|k| (k * 16, k as u64 * shard_virtual + 4108)).collect();
+        sharded.set_contiguity(Contiguity::from_regions(regions, sb as usize));
+
+        let a: Vec<StepLoad> = flat.plan_steps(0).collect();
+        let b: Vec<StepLoad> = sharded.plan_steps(0).collect();
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].nodes[0].chunks, vec![Chunk { lo: 0, hi: 64, wanted: 64 }]);
+        assert_eq!(
+            b[0].nodes[0].chunks,
+            (0..4u32).map(|k| Chunk { lo: k * 16, hi: (k + 1) * 16, wanted: 16 }).collect::<Vec<_>>()
+        );
+        // Requests carry each region's own virtual offsets.
+        let offsets: Vec<u64> = b[0].nodes[0].pfs_reqs.iter().map(|r| r.offset).collect();
+        assert_eq!(offsets, (0..4).map(|k| k as u64 * shard_virtual + 4108).collect::<Vec<_>>());
+        assert!(b[0].nodes[0].pfs_reqs.iter().all(|r| r.len == 16 * sb));
+    }
+
+    #[test]
+    fn contiguity_changes_requests_but_never_the_schedule() {
+        // Multi-region layout vs flat file: samples, hits, buffer
+        // decisions, and per-sample fetch counts must be identical —
+        // contiguity may only change HOW the bytes are requested.
+        let cfg = tiny_cfg(256, 2, 16, 3, 24);
+        let sb = cfg.spec.sample_bytes;
+        let mut flat = LoaderEngine::new(cfg.clone(), LoaderPolicy::solar());
+        let mut sharded = LoaderEngine::new(cfg, LoaderPolicy::solar());
+        let regions: Vec<(u32, u64)> =
+            (0..4u32).map(|k| (k * 64, k as u64 * (4108 + 64 * sb as u64) + 4108)).collect();
+        sharded.set_contiguity(Contiguity::from_regions(regions, sb));
+        for pos in 0..3 {
+            let a: Vec<StepLoad> = flat.plan_steps(pos).collect();
+            let b: Vec<StepLoad> = sharded.plan_steps(pos).collect();
+            for (s, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                for (nx, ny) in x.nodes.iter().zip(y.nodes.iter()) {
+                    assert_eq!(nx.samples, ny.samples, "step {s}");
+                    assert_eq!(nx.hits, ny.hits, "step {s}");
+                    assert_eq!(nx.pfs_samples, ny.pfs_samples, "step {s}");
+                    assert_eq!(nx.inserted, ny.inserted, "step {s}");
+                    assert_eq!(nx.evicted, ny.evicted, "step {s}");
+                    // Chunk lists may differ, but they cover the same
+                    // wanted samples, and none bridges a region boundary.
+                    let wa: u32 = nx.chunks.iter().map(|c| c.wanted).sum();
+                    let wb: u32 = ny.chunks.iter().map(|c| c.wanted).sum();
+                    assert_eq!(wa, wb, "step {s}");
+                    for c in &ny.chunks {
+                        assert_eq!(c.lo / 64, (c.hi - 1) / 64, "chunk {c:?} spans a boundary");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -3,7 +3,7 @@
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 
-use solar::cli::{parse_tier, Args, USAGE};
+use solar::cli::{parse_prefetch, parse_tier, Args, USAGE};
 use solar::config::RunConfig;
 use solar::data::spec::DatasetSpec;
 use solar::data::synth;
@@ -13,6 +13,7 @@ use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
 use solar::sched::plan::SchedulePlan;
 use solar::storage::pfs::{CostModel, SystemTier};
+use solar::storage::store::{open_store, SampleStore};
 use solar::train::driver::{train, TrainConfig};
 use solar::util::{fmt_bytes, fmt_secs};
 
@@ -34,6 +35,7 @@ fn run(argv: &[String]) -> Result<()> {
         "exp" => cmd_exp(&args),
         "sim" => cmd_sim(&args),
         "gen-data" => cmd_gen_data(&args),
+        "verify-store" => cmd_verify_store(&args),
         "schedule" => cmd_schedule(&args),
         "train" => cmd_train(&args),
         "smoke" => {
@@ -121,18 +123,83 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     let out = args.get_path("out").context("--out required")?;
     let scale = args.get_usize("scale", 1000)?;
     let seed = args.get_usize("seed", 42)? as u64;
+    let shards = args.get_usize("shards", 0)?;
     let spec = DatasetSpec::paper(dataset)
         .with_context(|| format!("unknown dataset '{dataset}'"))?
         .scaled(scale);
     println!(
-        "generating {} -> {} ({} samples, {})",
+        "generating {} -> {} ({} samples, {}{})",
         spec.name,
         out.display(),
         spec.n_samples,
-        fmt_bytes(spec.total_bytes())
+        fmt_bytes(spec.total_bytes()),
+        if shards > 0 { format!(", {shards} shards") } else { String::new() }
     );
-    let h = synth::generate_dataset(&out, &spec, seed)?;
-    println!("wrote {} samples", h.n_samples);
+    if shards > 0 {
+        // Sharded layout: `out` becomes a directory of SHDF shards plus a
+        // manifest — byte-identical samples to the single-file layout.
+        let m = synth::generate_dataset_sharded(&out, &spec, seed, shards)?;
+        println!("wrote {} samples across {} shards", m.n_samples, m.shards.len());
+    } else {
+        let h = synth::generate_dataset(&out, &spec, seed)?;
+        println!("wrote {} samples", h.n_samples);
+    }
+    Ok(())
+}
+
+/// Read-check a dataset behind the SampleStore API; with `--ref`, byte-
+/// compare every sample against a second store (e.g. sharded vs single
+/// file). Exits non-zero on any mismatch — CI's backend-parity check.
+fn cmd_verify_store(args: &Args) -> Result<()> {
+    let data = args.get_path("data").context("--data required")?;
+    let store = open_store(&data)?;
+    let n = store.n_samples();
+    let contig = store.chunk_contiguity();
+    println!(
+        "store {} ({}): {} samples x {} = {}, shape {:?}, {} contiguous region(s)",
+        data.display(),
+        if data.is_dir() { "sharded" } else { "single-file" },
+        n,
+        fmt_bytes(store.sample_bytes() as u64),
+        fmt_bytes((n * store.sample_bytes()) as u64),
+        store.shape(),
+        contig.n_regions()
+    );
+    let reference = match args.get_path("ref") {
+        Some(p) => {
+            let r = open_store(&p)?;
+            if r.n_samples() != n || r.sample_bytes() != store.sample_bytes() {
+                bail!(
+                    "shape mismatch vs {}: {} x {} B there, {} x {} B here",
+                    p.display(),
+                    r.n_samples(),
+                    r.sample_bytes(),
+                    n,
+                    store.sample_bytes()
+                );
+            }
+            Some((p, r))
+        }
+        None => None,
+    };
+    // Every sample readable (and equal to the reference, if given); plus
+    // one multi-sample range read across the widest span to exercise the
+    // range path (it crosses every shard boundary on a sharded store).
+    for i in 0..n {
+        let bytes = store.read_sample_at(i)?;
+        if let Some((p, r)) = &reference {
+            if bytes != r.read_sample_at(i)? {
+                bail!("sample {i} differs from {}", p.display());
+            }
+        }
+    }
+    if n > 0 {
+        let _ = store.read_range_at(0, n.min(4096))?;
+    }
+    match &reference {
+        Some((p, _)) => println!("verify-store: OK ({n} samples, bit-identical to {})", p.display()),
+        None => println!("verify-store: OK ({n} samples readable)"),
+    }
     Ok(())
 }
 
@@ -169,15 +236,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     let data = args.get_path("data").context("--data required (see gen-data)")?;
     let loader = args.get_or("loader", "solar");
     let policy = LoaderPolicy::by_name(&loader).context("unknown loader")?;
-    let reader = solar::storage::shdf::ShdfReader::open(&data)?;
+    // Any SampleStore backend: single SHDF file or sharded directory.
+    let store = open_store(&data)?;
     let holdout = args.get_usize("holdout", 32)?;
     let n_nodes = args.get_usize("nodes", 2)?;
     let mut spec = DatasetSpec::paper("cd17").unwrap();
-    spec.id = reader.header().name.clone();
-    spec.n_samples = reader.n_samples().saturating_sub(holdout);
-    spec.sample_bytes = reader.sample_bytes();
-    spec.shape = reader.header().shape.clone();
-    drop(reader);
+    spec.id = store.dataset_name().to_string();
+    spec.n_samples = store.n_samples().saturating_sub(holdout);
+    spec.sample_bytes = store.sample_bytes();
+    spec.shape = store.shape().to_vec();
     let cfg = RunConfig {
         spec: spec.clone(),
         n_nodes,
@@ -194,7 +261,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let tc = TrainConfig {
         run: cfg,
-        dataset_path: data,
+        store,
         artifacts_dir: args.get_path("artifacts").unwrap_or_else(|| PathBuf::from("artifacts")),
         policy,
         dense,
@@ -203,19 +270,21 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_every: args.get_usize("eval-every", 8)?,
         max_steps: args.get_usize("max-steps", 0)?,
         holdout,
-        prefetch: args.get_usize("prefetch", 1)?,
+        prefetch: parse_prefetch(&args.get_or("prefetch", "1"))?,
         epoch_drain: args.flag("epoch-drain"),
         fetch_fault: None,
+        load_only: args.flag("load-only"),
     };
     println!(
-        "training: {} samples, {} nodes x batch {}, {} epochs, loader {}, throttle x{}, prefetch {}",
+        "training: {} samples, {} nodes x batch {}, {} epochs, loader {}, throttle x{}, prefetch {}{}",
         tc.run.spec.n_samples,
         tc.run.n_nodes,
         tc.run.local_batch,
         tc.run.n_epochs,
         loader,
         tc.throttle,
-        tc.prefetch
+        tc.prefetch,
+        if tc.load_only { " (load-only: no PJRT, no gradients)" } else { "" }
     );
     let report = train(&tc)?;
     for p in report.points.iter().filter(|p| !p.val_loss.is_nan()) {
@@ -234,6 +303,22 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.hits,
         report.pfs_samples
     );
+    // Wall-clock-free schedule fingerprint: identical across storage
+    // backends and prefetch depths for the same config/seed (CI diffs it
+    // between the single-file and sharded runs).
+    println!(
+        "schedule: steps={} epochs={} hits={} pfs={}",
+        report.steps, report.epochs, report.hits, report.pfs_samples
+    );
+    if matches!(tc.prefetch, solar::train::driver::PrefetchMode::Auto) {
+        if report.epochs > 1 {
+            println!("prefetch auto picked depth {} after epoch 0", report.prefetch);
+        } else {
+            // The re-pick happens at the epoch-0→1 boundary; a run that
+            // never crossed it stayed at the initial measuring depth.
+            println!("prefetch auto: run ended within epoch 0, stayed at depth {}", report.prefetch);
+        }
+    }
     if let Some(curve) = args.get_path("curve") {
         report.write_csv(&curve)?;
         println!("loss curve -> {}", curve.display());

@@ -10,4 +10,5 @@ pub mod graph;
 pub mod greedy;
 pub mod locality;
 pub mod plan;
+pub mod planio;
 pub mod pso;

@@ -45,6 +45,36 @@ pub struct PlanSummary {
     pub total_pfs_samples: usize,
 }
 
+/// Parse + validate one step's node plans. The single source of truth for
+/// node-step *reading*, shared by [`SchedulePlan::from_json`] and the
+/// streaming reader (`planio`) so both reject malformed artifacts with
+/// the same errors.
+pub(crate) fn node_steps_from_json(step: &Json) -> Result<Vec<PlanNodeStep>> {
+    let mut node_steps = Vec::new();
+    for ns in step.as_arr().context("step not an array")? {
+        let samples = ns.get("samples").and_then(Json::arr_as_u32).context("samples")?;
+        let hits = ns.req_usize("hits")?;
+        // Shape guard: hits beyond the batch would underflow
+        // total_pfs_samples() (samples.len() - hits).
+        if hits > samples.len() {
+            bail!("malformed node step: hits ({hits}) exceeds batch size ({})", samples.len());
+        }
+        let mut chunks = Vec::new();
+        for c in ns.req_arr("chunks")? {
+            let pair =
+                c.arr_as_u32().context("chunk pair is not an array of non-negative integers")?;
+            // Guard the shape: a malformed artifact must error, not index
+            // out of bounds.
+            if pair.len() != 2 {
+                bail!("malformed chunk pair: expected [lo, hi], got {} element(s)", pair.len());
+            }
+            chunks.push((pair[0], pair[1]));
+        }
+        node_steps.push(PlanNodeStep { samples, hits, chunks });
+    }
+    Ok(node_steps)
+}
+
 /// JSON object for one node's step — the single source of truth for the
 /// node-step schema, shared by the materialized and the streamed writers
 /// so the two artifacts cannot drift.
@@ -272,36 +302,7 @@ impl SchedulePlan {
         for epoch in j.req_arr("steps")? {
             let mut epoch_steps = Vec::new();
             for step in epoch.as_arr().context("epoch not an array")? {
-                let mut node_steps = Vec::new();
-                for ns in step.as_arr().context("step not an array")? {
-                    let samples = ns.get("samples").and_then(Json::arr_as_u32).context("samples")?;
-                    let hits = ns.req_usize("hits")?;
-                    // Shape guard: hits beyond the batch would underflow
-                    // total_pfs_samples() (samples.len() - hits).
-                    if hits > samples.len() {
-                        bail!(
-                            "malformed node step: hits ({hits}) exceeds batch size ({})",
-                            samples.len()
-                        );
-                    }
-                    let mut chunks = Vec::new();
-                    for c in ns.req_arr("chunks")? {
-                        let pair = c
-                            .arr_as_u32()
-                            .context("chunk pair is not an array of non-negative integers")?;
-                        // Guard the shape: a malformed artifact must error,
-                        // not index out of bounds.
-                        if pair.len() != 2 {
-                            bail!(
-                                "malformed chunk pair: expected [lo, hi], got {} element(s)",
-                                pair.len()
-                            );
-                        }
-                        chunks.push((pair[0], pair[1]));
-                    }
-                    node_steps.push(PlanNodeStep { samples, hits, chunks });
-                }
-                epoch_steps.push(node_steps);
+                epoch_steps.push(node_steps_from_json(step)?);
             }
             steps.push(epoch_steps);
         }
@@ -319,9 +320,45 @@ impl SchedulePlan {
             .with_context(|| format!("write plan {}", path.display()))
     }
 
+    /// Stream a plan artifact from disk, invoking `on_step(epoch_pos,
+    /// step_idx, node_steps)` for every step in order — O(one step) plan
+    /// memory, the reader-side mirror of
+    /// [`compute_to_writer`](Self::compute_to_writer). Validation matches
+    /// [`from_json`](Self::from_json) exactly (shared per-step parser).
+    /// Returns the plan's header fields and the same summary the
+    /// streaming writer reports.
+    pub fn load_streaming(
+        path: &std::path::Path,
+        on_step: &mut dyn FnMut(usize, usize, Vec<PlanNodeStep>) -> Result<()>,
+    ) -> Result<(crate::sched::planio::PlanHeader, PlanSummary)> {
+        let f = std::fs::File::open(path).with_context(|| format!("read {}", path.display()))?;
+        crate::sched::planio::stream_plan(std::io::BufReader::new(f), on_step)
+            .with_context(|| format!("parse plan {}", path.display()))
+    }
+
+    /// Load a plan artifact, materializing it. Built on the streaming
+    /// reader, so even here the JSON text is never held in memory whole —
+    /// only the decoded plan is.
     pub fn load(path: &std::path::Path) -> Result<SchedulePlan> {
-        let text = std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
-        SchedulePlan::from_json(&Json::parse(&text)?)
+        let mut steps: Vec<Vec<Vec<PlanNodeStep>>> = Vec::new();
+        let (header, summary) = Self::load_streaming(path, &mut |epoch_pos, _step, nodes| {
+            if steps.len() <= epoch_pos {
+                steps.resize_with(epoch_pos + 1, Vec::new);
+            }
+            steps[epoch_pos].push(nodes);
+            Ok(())
+        })?;
+        // Epochs with zero steps never fire the callback but still count.
+        if steps.len() < summary.epochs {
+            steps.resize_with(summary.epochs, Vec::new);
+        }
+        Ok(SchedulePlan {
+            config: header.config,
+            loader: header.loader,
+            epoch_order: header.epoch_order,
+            epoch_order_cost: header.epoch_order_cost,
+            steps,
+        })
     }
 
     /// Total PFS-fetched (wanted) samples across the plan.
@@ -500,6 +537,78 @@ mod tests {
                 "chunks={chunks}: unexpected error {err:#}"
             );
         }
+    }
+
+    #[test]
+    fn streamed_writer_roundtrips_through_streamed_reader() {
+        // Full loop closure: streamed writer → file → streamed reader,
+        // step for step identical to the materialized plan, summaries
+        // agreeing on both sides.
+        let dir = std::env::temp_dir().join("solar_plan_streamread_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip_plan.json");
+        for name in ["solar", "pytorch"] {
+            let cfg = tiny_cfg();
+            let policy = crate::loader::LoaderPolicy::by_name(name).unwrap();
+            let wrote = SchedulePlan::compute_to_file(&cfg, &policy, &path).unwrap();
+            let materialized = SchedulePlan::compute(&cfg, &policy);
+            let mut streamed: Vec<(usize, usize, Vec<PlanNodeStep>)> = Vec::new();
+            let (header, read) = SchedulePlan::load_streaming(&path, &mut |e, s, n| {
+                streamed.push((e, s, n));
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(header.loader, name);
+            assert_eq!(header.epoch_order, wrote.epoch_order, "{name}");
+            assert_eq!(read.epoch_order_cost, wrote.epoch_order_cost, "{name}");
+            assert_eq!(read.steps, wrote.steps, "{name}");
+            assert_eq!(read.epochs, wrote.epochs, "{name}");
+            assert_eq!(read.total_pfs_samples, wrote.total_pfs_samples, "{name}");
+            let mut i = 0;
+            for (e, epoch) in materialized.steps.iter().enumerate() {
+                for (s, step) in epoch.iter().enumerate() {
+                    assert_eq!(streamed[i].0, e, "{name} step {i}");
+                    assert_eq!(streamed[i].1, s, "{name} step {i}");
+                    assert_eq!(&streamed[i].2, step, "{name} step {i}");
+                    i += 1;
+                }
+            }
+            assert_eq!(i, streamed.len(), "{name}");
+        }
+    }
+
+    #[test]
+    fn load_handles_zero_step_epochs() {
+        // Degenerate config (global batch > dataset): epochs exist but
+        // hold no steps; the streaming load must still materialize one
+        // empty epoch each.
+        let mut cfg = tiny_cfg();
+        cfg.local_batch = 100; // 2 × 100 > 128 samples → 0 steps/epoch
+        let dir = std::env::temp_dir().join("solar_plan_streamread_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty_epochs.json");
+        SchedulePlan::compute_to_file(&cfg, &crate::loader::LoaderPolicy::solar(), &path).unwrap();
+        let plan = SchedulePlan::load(&path).unwrap();
+        assert_eq!(plan.steps.len(), 3);
+        assert!(plan.steps.iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn load_rejects_malformed_files_like_from_json() {
+        let dir = std::env::temp_dir().join("solar_plan_streamread_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("malformed_plan.json");
+        for chunks in ["[[1]]", "[[1,2,3]]", "[5]"] {
+            std::fs::write(&path, plan_json_with_chunks(chunks)).unwrap();
+            let err = SchedulePlan::load(&path).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("chunk pair"),
+                "chunks={chunks}: unexpected error {err:#}"
+            );
+        }
+        // Truncation errors instead of panicking.
+        std::fs::write(&path, &plan_json_with_chunks("[[1,2]]")[..30]).unwrap();
+        assert!(SchedulePlan::load(&path).is_err());
     }
 
     #[test]

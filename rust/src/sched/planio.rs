@@ -1,0 +1,427 @@
+//! Incremental plan-artifact reader — the read-side mirror of
+//! `SchedulePlan::compute_to_writer`.
+//!
+//! A full-scale multi-epoch plan is tens of GB of JSON; the streamed
+//! writer produces it in O(1) memory, and this module consumes it the
+//! same way: a byte-level scanner walks the top-level object, captures
+//! each *step* (the innermost `[{...}, ...]` array) as balanced text, and
+//! parses/validates it with the exact same per-step parser `from_json`
+//! uses (`plan::node_steps_from_json`) — so the streaming and
+//! materialized readers reject malformed artifacts identically. Only one
+//! step's text + decoded form is ever held in memory.
+//!
+//! The scanner accepts any standard-JSON layout of the plan object (key
+//! order, whitespace), not just the canonical writer's — a plan edited or
+//! pretty-printed by another tool still streams.
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+
+use crate::sched::plan::{node_steps_from_json, PlanNodeStep, PlanSummary};
+use crate::util::json::Json;
+
+/// Top-level plan fields other than the steps array.
+#[derive(Debug, Clone)]
+pub struct PlanHeader {
+    pub config: Json,
+    pub loader: String,
+    pub epoch_order: Vec<usize>,
+    pub epoch_order_cost: Option<u64>,
+}
+
+/// Byte-level JSON scanner with one byte of lookahead. Reads through any
+/// `Read` (wrap files in a `BufReader`); tracks the byte offset for error
+/// context.
+struct Scanner<R: Read> {
+    r: R,
+    peeked: Option<u8>,
+    offset: usize,
+}
+
+impl<R: Read> Scanner<R> {
+    fn new(r: R) -> Scanner<R> {
+        Scanner { r, peeked: None, offset: 0 }
+    }
+
+    fn err(&self, msg: &str) -> anyhow::Error {
+        anyhow::anyhow!("plan stream error at byte {}: {msg}", self.offset)
+    }
+
+    fn next_byte(&mut self) -> Result<Option<u8>> {
+        if let Some(b) = self.peeked.take() {
+            self.offset += 1;
+            return Ok(Some(b));
+        }
+        let mut one = [0u8; 1];
+        loop {
+            match self.r.read(&mut one) {
+                Ok(0) => return Ok(None),
+                Ok(_) => {
+                    self.offset += 1;
+                    return Ok(Some(one[0]));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("read plan stream"),
+            }
+        }
+    }
+
+    fn peek_byte(&mut self) -> Result<Option<u8>> {
+        if self.peeked.is_none() {
+            self.peeked = self.next_byte()?;
+            if self.peeked.is_some() {
+                self.offset -= 1; // un-count: still unconsumed
+            }
+        }
+        Ok(self.peeked)
+    }
+
+    fn skip_ws(&mut self) -> Result<()> {
+        while let Some(b) = self.peek_byte()? {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.next_byte()?;
+            } else {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Next non-whitespace byte, consumed.
+    fn next_token(&mut self) -> Result<Option<u8>> {
+        self.skip_ws()?;
+        self.next_byte()
+    }
+
+    /// Next non-whitespace byte, not consumed.
+    fn peek_token(&mut self) -> Result<Option<u8>> {
+        self.skip_ws()?;
+        self.peek_byte()
+    }
+
+    fn expect(&mut self, want: u8) -> Result<()> {
+        match self.next_token()? {
+            Some(b) if b == want => Ok(()),
+            Some(b) => Err(self.err(&format!(
+                "expected '{}', found '{}'",
+                want as char, b as char
+            ))),
+            None => Err(self.err(&format!("expected '{}', found end of input", want as char))),
+        }
+    }
+
+    /// Append one complete JSON string's raw bytes (quotes + escapes
+    /// included) to `out`. The opening quote must be next.
+    fn capture_string(&mut self, out: &mut Vec<u8>) -> Result<()> {
+        self.expect(b'"')?;
+        out.push(b'"');
+        loop {
+            match self.next_byte()? {
+                None => return Err(self.err("unterminated string")),
+                Some(b'\\') => {
+                    out.push(b'\\');
+                    match self.next_byte()? {
+                        None => return Err(self.err("unterminated string escape")),
+                        Some(e) => out.push(e),
+                    }
+                }
+                Some(b'"') => {
+                    out.push(b'"');
+                    return Ok(());
+                }
+                Some(b) => out.push(b),
+            }
+        }
+    }
+
+    /// Append one complete, balanced JSON value's raw bytes to `out`:
+    /// a string, an object/array (to matching close), or a scalar (to the
+    /// next delimiter).
+    fn capture_value(&mut self, out: &mut Vec<u8>) -> Result<()> {
+        match self.peek_token()? {
+            None => Err(self.err("expected a value, found end of input")),
+            Some(b'"') => self.capture_string(out),
+            Some(open @ (b'{' | b'[')) => {
+                self.next_byte()?;
+                out.push(open);
+                let mut depth = 1usize;
+                while depth > 0 {
+                    match self.peek_byte()? {
+                        None => return Err(self.err("unbalanced value: end of input")),
+                        Some(b'"') => self.capture_string(out)?,
+                        Some(b) => {
+                            self.next_byte()?;
+                            out.push(b);
+                            match b {
+                                b'{' | b'[' => depth += 1,
+                                b'}' | b']' => depth -= 1,
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            }
+            Some(_) => {
+                // Scalar: number / true / false / null.
+                while let Some(b) = self.peek_byte()? {
+                    if matches!(b, b',' | b']' | b'}' | b' ' | b'\t' | b'\n' | b'\r') {
+                        break;
+                    }
+                    self.next_byte()?;
+                    out.push(b);
+                }
+                if out.is_empty() {
+                    return Err(self.err("expected a value"));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Capture one value and parse it into a [`Json`] tree.
+    fn parse_value(&mut self) -> Result<Json> {
+        let mut buf = Vec::new();
+        self.capture_value(&mut buf)?;
+        let text = std::str::from_utf8(&buf).map_err(|_| self.err("value is not UTF-8"))?;
+        Json::parse(text).map_err(|e| self.err(&format!("invalid JSON value: {e}")))
+    }
+}
+
+/// Stream one plan artifact, firing `on_step(epoch_pos, step_idx, nodes)`
+/// for each step in order. See the module docs; `SchedulePlan::load` and
+/// `SchedulePlan::load_streaming` are the public entry points.
+pub(crate) fn stream_plan<R: Read>(
+    r: R,
+    on_step: &mut dyn FnMut(usize, usize, Vec<PlanNodeStep>) -> Result<()>,
+) -> Result<(PlanHeader, PlanSummary)> {
+    let mut s = Scanner::new(r);
+    s.expect(b'{')?;
+
+    let mut config: Option<Json> = None;
+    let mut loader: Option<String> = None;
+    let mut epoch_order: Option<Vec<usize>> = None;
+    let mut epoch_order_cost: Option<u64> = None;
+    let mut steps_seen = false;
+    let mut epochs = 0usize;
+    let mut steps_count = 0usize;
+    let mut total_pfs = 0usize;
+
+    if s.peek_token()? == Some(b'}') {
+        s.next_token()?;
+    } else {
+        loop {
+            // One "key": value pair.
+            let key_json = {
+                let mut buf = Vec::new();
+                s.skip_ws()?;
+                s.capture_string(&mut buf)?;
+                let text = std::str::from_utf8(&buf).map_err(|_| s.err("key is not UTF-8"))?;
+                Json::parse(text).map_err(|e| s.err(&format!("invalid key: {e}")))?
+            };
+            let key = key_json.as_str().map(str::to_string).unwrap_or_default();
+            s.expect(b':')?;
+            if key == "steps" {
+                steps_seen = true;
+                s.expect(b'[')?;
+                if s.peek_token()? == Some(b']') {
+                    s.next_token()?;
+                } else {
+                    'epochs: loop {
+                        s.expect(b'[')?;
+                        let mut step_idx = 0usize;
+                        if s.peek_token()? == Some(b']') {
+                            s.next_token()?;
+                        } else {
+                            loop {
+                                // One step, parsed + validated with the
+                                // same code path as from_json.
+                                let step = s.parse_value()?;
+                                let nodes = node_steps_from_json(&step)?;
+                                total_pfs +=
+                                    nodes.iter().map(|ns| ns.samples.len() - ns.hits).sum::<usize>();
+                                on_step(epochs, step_idx, nodes)?;
+                                step_idx += 1;
+                                steps_count += 1;
+                                match s.next_token()? {
+                                    Some(b',') => continue,
+                                    Some(b']') => break,
+                                    _ => return Err(s.err("expected ',' or ']' after a step")),
+                                }
+                            }
+                        }
+                        epochs += 1;
+                        match s.next_token()? {
+                            Some(b',') => continue 'epochs,
+                            Some(b']') => break 'epochs,
+                            _ => return Err(s.err("expected ',' or ']' after an epoch")),
+                        }
+                    }
+                }
+            } else {
+                let v = s.parse_value()?;
+                match key.as_str() {
+                    "config" => config = Some(v),
+                    "loader" => loader = v.as_str().map(str::to_string),
+                    "epoch_order" => epoch_order = v.arr_as_usize(),
+                    "epoch_order_cost" => epoch_order_cost = v.as_u64(),
+                    _ => {} // unknown top-level keys are ignored, like from_json
+                }
+            }
+            match s.next_token()? {
+                Some(b',') => continue,
+                Some(b'}') => break,
+                _ => return Err(s.err("expected ',' or '}' after a field")),
+            }
+        }
+    }
+    if s.next_token()?.is_some() {
+        return Err(s.err("trailing data after the plan object"));
+    }
+
+    let epoch_order = epoch_order.context("plan missing epoch_order")?;
+    let loader = loader.context("missing or invalid field 'loader' (expected string)")?;
+    if !steps_seen {
+        bail!("missing or invalid field 'steps' (expected array)");
+    }
+    let header = PlanHeader {
+        config: config.unwrap_or(Json::Null),
+        loader,
+        epoch_order: epoch_order.clone(),
+        epoch_order_cost,
+    };
+    let summary = PlanSummary {
+        epoch_order,
+        epoch_order_cost,
+        epochs,
+        steps: steps_count,
+        total_pfs_samples: total_pfs,
+    };
+    Ok((header, summary))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream_str(
+        text: &str,
+    ) -> Result<(PlanHeader, PlanSummary, Vec<(usize, usize, Vec<PlanNodeStep>)>)> {
+        let mut seen = Vec::new();
+        let (h, sm) = stream_plan(text.as_bytes(), &mut |e, s, n| {
+            seen.push((e, s, n));
+            Ok(())
+        })?;
+        Ok((h, sm, seen))
+    }
+
+    const TINY: &str = r#"{"config":{"k":1},"epoch_order":[1,0],"epoch_order_cost":7,"loader":"solar","steps":[[[{"chunks":[[1,3]],"hits":1,"samples":[1,2,9]}],[{"chunks":[],"hits":0,"samples":[4]}]],[[{"chunks":[],"hits":0,"samples":[5]}]]]}"#;
+
+    #[test]
+    fn streams_canonical_layout() {
+        let (h, sm, seen) = stream_str(TINY).unwrap();
+        assert_eq!(h.loader, "solar");
+        assert_eq!(h.epoch_order, vec![1, 0]);
+        assert_eq!(h.epoch_order_cost, Some(7));
+        assert_eq!(h.config.req_usize("k").unwrap(), 1);
+        assert_eq!(sm.epochs, 2);
+        assert_eq!(sm.steps, 3);
+        assert_eq!(sm.total_pfs_samples, 2 + 1 + 1);
+        assert_eq!(seen.len(), 3);
+        assert_eq!((seen[0].0, seen[0].1), (0, 0));
+        assert_eq!((seen[1].0, seen[1].1), (0, 1));
+        assert_eq!((seen[2].0, seen[2].1), (1, 0));
+        assert_eq!(seen[0].2[0].samples, vec![1, 2, 9]);
+        assert_eq!(seen[0].2[0].chunks, vec![(1, 3)]);
+    }
+
+    #[test]
+    fn streams_reordered_keys_and_whitespace() {
+        // Pretty-printed, steps first, loader last: still standard JSON.
+        let text = "{\n  \"steps\": [ [ [ { \"chunks\": [],\n \"hits\": 0, \"samples\": [3] } ] ] ],\n  \"epoch_order\": [0],\n  \"loader\": \"pytorch\"\n}\n";
+        let (h, sm, seen) = stream_str(text).unwrap();
+        assert_eq!(h.loader, "pytorch");
+        assert_eq!(sm.steps, 1);
+        assert_eq!(seen[0].2[0].samples, vec![3]);
+    }
+
+    #[test]
+    fn counts_empty_epochs() {
+        let text = r#"{"epoch_order":[0,1],"loader":"solar","steps":[[],[]]}"#;
+        let (_, sm, seen) = stream_str(text).unwrap();
+        assert_eq!(sm.epochs, 2);
+        assert_eq!(sm.steps, 0);
+        assert!(seen.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_node_steps_like_from_json() {
+        // Same validation path as from_json: wrong-length chunk pairs and
+        // hits > batch are rejected with the same messages.
+        for (chunks, hits, needle) in [
+            ("[[1]]", "0", "chunk pair"),
+            ("[[]]", "0", "chunk pair"),
+            ("[[1,2,3]]", "0", "chunk pair"),
+            ("[5]", "0", "chunk pair"),
+            ("[]", "999", "hits"),
+        ] {
+            let text = format!(
+                r#"{{"epoch_order":[0],"loader":"solar","steps":[[[{{"chunks":{chunks},"hits":{hits},"samples":[1,2]}}]]]}}"#
+            );
+            let err = stream_str(&text).unwrap_err();
+            assert!(
+                format!("{err:#}").contains(needle),
+                "chunks={chunks} hits={hits}: unexpected error {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_missing_required_fields() {
+        let no_order = r#"{"loader":"solar","steps":[]}"#;
+        assert!(format!("{:#}", stream_str(no_order).unwrap_err()).contains("epoch_order"));
+        let no_loader = r#"{"epoch_order":[0],"steps":[]}"#;
+        assert!(format!("{:#}", stream_str(no_loader).unwrap_err()).contains("loader"));
+        let no_steps = r#"{"epoch_order":[0],"loader":"solar"}"#;
+        assert!(format!("{:#}", stream_str(no_steps).unwrap_err()).contains("steps"));
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing_garbage() {
+        // Truncate the canonical artifact at several byte lengths: every
+        // prefix must error, never panic or falsely succeed.
+        for cut in [1, 10, 40, TINY.len() / 2, TINY.len() - 1] {
+            assert!(stream_str(&TINY[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        let trailing = format!("{TINY} extra");
+        let err = stream_str(&trailing).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_unterminated_strings_and_bad_values() {
+        assert!(stream_str(r#"{"loader":"so"#).is_err());
+        assert!(stream_str(r#"{"epoch_order":[0],"loader":17,"steps":[]}"#).is_err());
+        assert!(stream_str("nonsense").is_err());
+        assert!(stream_str("").is_err());
+    }
+
+    #[test]
+    fn empty_object_is_rejected_for_missing_fields() {
+        assert!(stream_str("{}").is_err());
+        // ...but parses as an object (the error is about required fields).
+        assert!(format!("{:#}", stream_str("{}").unwrap_err()).contains("epoch_order"));
+    }
+
+    #[test]
+    fn callback_errors_propagate() {
+        let mut calls = 0;
+        let err = stream_plan(TINY.as_bytes(), &mut |_, _, _| {
+            calls += 1;
+            bail!("stop here")
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1);
+        assert!(format!("{err:#}").contains("stop here"));
+    }
+}

@@ -1,6 +1,11 @@
-//! Storage substrate: the SHDF container format (HDF5 stand-in), the PFS
-//! cost model (Lustre stand-in), and the §4.4 access-pattern machinery.
+//! Storage substrate: the pluggable [`store::SampleStore`] API and its
+//! backends — the single-file SHDF container (HDF5 stand-in), the sharded
+//! dataset (directory of shards + manifest), the in-memory store — plus
+//! the PFS cost model (Lustre stand-in) and the §4.4 access-pattern
+//! machinery.
 
 pub mod access;
 pub mod pfs;
+pub mod shard;
 pub mod shdf;
+pub mod store;

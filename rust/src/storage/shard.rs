@@ -1,0 +1,559 @@
+//! Sharded dataset backend: a directory of SHDF shard files plus a
+//! `manifest.json`.
+//!
+//! Scientific datasets rarely arrive as one giant file — ensemble runs
+//! produce one file per simulation (arXiv:2309.16743), and HPC ingest
+//! pipelines shard for parallel writes. This backend keeps SOLAR's global
+//! sample-id space (shard k holds a consecutive id range; prefix sums map
+//! global id → (shard, local id)) while being honest about layout: the
+//! [`Contiguity`] it reports has one region per shard, so the chunk
+//! aggregator never plans a "single request" spanning two files.
+//!
+//! Manifest format (`manifest.json`, keys sorted):
+//!
+//! ```json
+//! {
+//!   "dtype": "f32",
+//!   "format": "shdf-shards-v1",
+//!   "n_samples": 1000,
+//!   "name": "cd17_s1000",
+//!   "sample_bytes": 65536,
+//!   "shape": [4, 64, 64],
+//!   "shards": [
+//!     {"file": "shard_00000.shdf", "n_samples": 250},
+//!     {"file": "shard_00001.shdf", "n_samples": 250}
+//!   ]
+//! }
+//! ```
+//!
+//! Every shard is a self-describing SHDF container; `open` cross-checks
+//! each shard header against the manifest so a swapped or truncated shard
+//! fails loudly instead of serving wrong bytes.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::storage::shdf::{ShdfHeader, ShdfReader, ShdfWriter};
+use crate::storage::store::{Contiguity, SampleStore};
+use crate::util::json::Json;
+
+pub const FORMAT: &str = "shdf-shards-v1";
+pub const MANIFEST: &str = "manifest.json";
+
+/// Parsed sharded-dataset manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardManifest {
+    pub name: String,
+    pub sample_bytes: usize,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    /// Total samples across shards.
+    pub n_samples: usize,
+    /// `(file name, sample count)` per shard, in global-id order.
+    pub shards: Vec<(String, usize)>,
+}
+
+impl ShardManifest {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("format", Json::Str(FORMAT.into()))
+            .set("name", Json::Str(self.name.clone()))
+            .set("sample_bytes", Json::Num(self.sample_bytes as f64))
+            .set("shape", Json::arr_usize(&self.shape))
+            .set("dtype", Json::Str(self.dtype.clone()))
+            .set("n_samples", Json::Num(self.n_samples as f64))
+            .set(
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|(file, n)| {
+                            let mut s = Json::obj();
+                            s.set("file", Json::Str(file.clone()))
+                                .set("n_samples", Json::Num(*n as f64));
+                            s
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardManifest> {
+        let format = j.req_str("format")?;
+        if format != FORMAT {
+            bail!("unsupported sharded-dataset format '{format}' (expected '{FORMAT}')");
+        }
+        let mut shards = Vec::new();
+        for s in j.req_arr("shards")? {
+            shards.push((s.req_str("file")?.to_string(), s.req_usize("n_samples")?));
+        }
+        let m = ShardManifest {
+            name: j.req_str("name")?.to_string(),
+            sample_bytes: j.req_usize("sample_bytes")?,
+            shape: j.get("shape").and_then(Json::arr_as_usize).context("manifest missing 'shape'")?,
+            dtype: j.req_str("dtype")?.to_string(),
+            n_samples: j.req_usize("n_samples")?,
+            shards,
+        };
+        let total: usize = m.shards.iter().map(|(_, n)| n).sum();
+        if total != m.n_samples {
+            bail!("manifest n_samples {} != sum of shard counts {}", m.n_samples, total);
+        }
+        Ok(m)
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let path = dir.join(MANIFEST);
+        let tmp = dir.join(format!("{MANIFEST}.tmp"));
+        std::fs::write(&tmp, self.to_json().to_string_pretty())
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<ShardManifest> {
+        let path = dir.join(MANIFEST);
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("read {}", path.display()))?;
+        ShardManifest::from_json(&Json::parse(&text).context("manifest json")?)
+    }
+}
+
+/// Streaming writer for a sharded dataset: appends samples, rolling to a
+/// new shard file when the current shard reaches its capacity; `finish`
+/// closes the last shard and writes the manifest.
+pub struct ShardedWriter {
+    dir: PathBuf,
+    header: ShdfHeader,
+    /// Per-shard capacities; the last entry repeats for any further
+    /// shards (a single entry = the fixed-capacity rolling mode).
+    caps: Vec<usize>,
+    cur: Option<ShdfWriter>,
+    cur_count: usize,
+    shards: Vec<(String, usize)>,
+    total: usize,
+}
+
+impl ShardedWriter {
+    /// Fixed-capacity mode: roll to a new shard every `shard_capacity`
+    /// samples (the shard count follows from how many samples arrive).
+    pub fn create(dir: &Path, header: ShdfHeader, shard_capacity: usize) -> Result<ShardedWriter> {
+        if shard_capacity == 0 {
+            bail!("shard_capacity must be > 0");
+        }
+        Self::with_caps(dir, header, vec![shard_capacity])
+    }
+
+    /// Balanced mode for a known total: exactly `n_shards` shards (capped
+    /// at one sample per shard) whose sizes differ by at most one —
+    /// `total = 6, n_shards = 4` gives 2+2+1+1, never a collapsed tail.
+    pub fn create_balanced(
+        dir: &Path,
+        header: ShdfHeader,
+        total: usize,
+        n_shards: usize,
+    ) -> Result<ShardedWriter> {
+        let n_shards = n_shards.clamp(1, total.max(1));
+        let q = total / n_shards;
+        let r = total % n_shards;
+        let caps = (0..n_shards).map(|k| if k < r { q + 1 } else { q.max(1) }).collect();
+        Self::with_caps(dir, header, caps)
+    }
+
+    fn with_caps(dir: &Path, header: ShdfHeader, caps: Vec<usize>) -> Result<ShardedWriter> {
+        header.validate()?;
+        std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+        Ok(ShardedWriter {
+            dir: dir.to_path_buf(),
+            header,
+            caps,
+            cur: None,
+            cur_count: 0,
+            shards: Vec::new(),
+            total: 0,
+        })
+    }
+
+    fn shard_file(idx: usize) -> String {
+        format!("shard_{idx:05}.shdf")
+    }
+
+    /// Capacity of the shard currently being written (index =
+    /// `shards.len()`); past the planned list, the last capacity repeats.
+    fn cur_capacity(&self) -> usize {
+        let idx = self.shards.len().min(self.caps.len() - 1);
+        self.caps[idx]
+    }
+
+    fn roll(&mut self) -> Result<()> {
+        if let Some(w) = self.cur.take() {
+            let h = w.finish()?;
+            self.shards.push((Self::shard_file(self.shards.len()), h.n_samples));
+        }
+        self.cur_count = 0;
+        Ok(())
+    }
+
+    pub fn append(&mut self, sample: &[u8]) -> Result<()> {
+        if self.cur_count >= self.cur_capacity() {
+            self.roll()?;
+        }
+        if self.cur.is_none() {
+            let path = self.dir.join(Self::shard_file(self.shards.len()));
+            self.cur = Some(ShdfWriter::create(&path, self.header.clone())?);
+        }
+        self.cur.as_mut().expect("shard writer just ensured").append(sample)?;
+        self.cur_count += 1;
+        self.total += 1;
+        Ok(())
+    }
+
+    pub fn append_f32(&mut self, sample: &[f32]) -> Result<()> {
+        if sample.len() * 4 != self.header.sample_bytes {
+            bail!("sample is {} f32s, expected {}", sample.len(), self.header.sample_bytes / 4);
+        }
+        self.append(&crate::storage::store::encode_f32(sample))
+    }
+
+    /// Close the open shard and write the manifest. Returns the manifest.
+    pub fn finish(mut self) -> Result<ShardManifest> {
+        self.roll()?;
+        let manifest = ShardManifest {
+            name: self.header.name.clone(),
+            sample_bytes: self.header.sample_bytes,
+            shape: self.header.shape.clone(),
+            dtype: self.header.dtype.clone(),
+            n_samples: self.total,
+            shards: self.shards.clone(),
+        };
+        manifest.save(&self.dir)?;
+        Ok(manifest)
+    }
+}
+
+/// Read side of a sharded dataset: one open [`ShdfReader`] per shard,
+/// global id → (shard, local id) via prefix sums.
+#[derive(Debug)]
+pub struct ShardedStore {
+    name: String,
+    shape: Vec<usize>,
+    sample_bytes: usize,
+    shards: Vec<ShdfReader>,
+    /// Prefix sums: `starts[k]` = global id of shard k's first sample;
+    /// `starts[len] = n_samples`.
+    starts: Vec<usize>,
+    /// Virtual byte address of each shard's byte 0 in the notional
+    /// concatenation of the shard files (for the contiguity map).
+    bases: Vec<u64>,
+}
+
+impl ShardedStore {
+    pub fn open(dir: &Path) -> Result<ShardedStore> {
+        let m = ShardManifest::load(dir)?;
+        let mut shards = Vec::with_capacity(m.shards.len());
+        let mut starts = vec![0usize];
+        let mut bases = Vec::with_capacity(m.shards.len());
+        let mut base = 0u64;
+        for (file, n) in &m.shards {
+            let path = dir.join(file);
+            let r = ShdfReader::open(&path)?;
+            let h = r.header();
+            if h.n_samples != *n {
+                bail!(
+                    "shard {} holds {} samples, manifest says {n}",
+                    path.display(),
+                    h.n_samples
+                );
+            }
+            if h.sample_bytes != m.sample_bytes || h.shape != m.shape || h.dtype != m.dtype {
+                bail!(
+                    "shard {} layout ({} B, {:?}, {}) disagrees with manifest ({} B, {:?}, {})",
+                    path.display(),
+                    h.sample_bytes,
+                    h.shape,
+                    h.dtype,
+                    m.sample_bytes,
+                    m.shape,
+                    m.dtype
+                );
+            }
+            if h.name != m.name {
+                // A same-shaped shard from a DIFFERENT dataset must not
+                // open cleanly — it would silently serve wrong bytes.
+                bail!(
+                    "shard {} belongs to dataset '{}', manifest is for '{}'",
+                    path.display(),
+                    h.name,
+                    m.name
+                );
+            }
+            starts.push(starts.last().unwrap() + n);
+            bases.push(base);
+            base += r.offset_of(0) + *n as u64 * m.sample_bytes as u64;
+            shards.push(r);
+        }
+        Ok(ShardedStore {
+            name: m.name,
+            shape: m.shape,
+            sample_bytes: m.sample_bytes,
+            shards,
+            starts,
+            bases,
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard index holding global sample `i` (the last shard whose start
+    /// is ≤ i — empty shards are skipped naturally).
+    fn shard_of(&self, i: usize) -> usize {
+        debug_assert!(i < *self.starts.last().unwrap());
+        self.starts.partition_point(|&s| s <= i) - 1
+    }
+}
+
+impl SampleStore for ShardedStore {
+    fn n_samples(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+
+    fn sample_bytes(&self) -> usize {
+        self.sample_bytes
+    }
+
+    fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    fn dataset_name(&self) -> &str {
+        &self.name
+    }
+
+    fn read_sample_into_at(&self, i: usize, buf: &mut [u8]) -> Result<()> {
+        let n = SampleStore::n_samples(self);
+        if i >= n {
+            bail!("sample index {i} out of range ({n} samples)");
+        }
+        let k = self.shard_of(i);
+        self.shards[k].read_sample_into_at(i - self.starts[k], buf)
+    }
+
+    fn read_range_into_at(&self, start: usize, count: usize, buf: &mut [u8]) -> Result<()> {
+        if start + count > SampleStore::n_samples(self) {
+            bail!("range [{start}, {}) out of range", start + count);
+        }
+        assert_eq!(buf.len(), count * self.sample_bytes);
+        if count == 0 {
+            return Ok(());
+        }
+        // A range may span shard boundaries (callers that follow the
+        // contiguity hint never ask for one, but the read stays correct
+        // regardless): split into per-shard sub-ranges.
+        let mut pos = start;
+        let mut done = 0usize;
+        while done < count {
+            let k = self.shard_of(pos);
+            let shard_end = self.starts[k + 1];
+            let take = (count - done).min(shard_end - pos);
+            let lo = done * self.sample_bytes;
+            let hi = (done + take) * self.sample_bytes;
+            self.shards[k].read_range_into_at(pos - self.starts[k], take, &mut buf[lo..hi])?;
+            pos += take;
+            done += take;
+        }
+        Ok(())
+    }
+
+    fn chunk_contiguity(&self) -> Contiguity {
+        let mut regions = Vec::with_capacity(self.shards.len());
+        for (k, r) in self.shards.iter().enumerate() {
+            if ShdfReader::n_samples(r) == 0 {
+                continue; // empty shard: no addressable region
+            }
+            regions.push((self.starts[k] as u32, self.bases[k] + r.offset_of(0)));
+        }
+        Contiguity::from_regions(regions, self.sample_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::store::decode_f32;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("solar_shard_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn header(elems: usize) -> ShdfHeader {
+        ShdfHeader {
+            n_samples: 0,
+            sample_bytes: elems * 4,
+            shape: vec![elems],
+            dtype: "f32".into(),
+            name: "sharded-test".into(),
+        }
+    }
+
+    fn sample(i: usize, elems: usize) -> Vec<f32> {
+        (0..elems).map(|j| (i * 1000 + j) as f32).collect()
+    }
+
+    fn write_sharded(dir: &Path, n: usize, elems: usize, cap: usize) -> ShardManifest {
+        let mut w = ShardedWriter::create(dir, header(elems), cap).unwrap();
+        for i in 0..n {
+            w.append_f32(&sample(i, elems)).unwrap();
+        }
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn writer_rolls_shards_and_manifest_adds_up() {
+        let dir = tmpdir("roll");
+        let m = write_sharded(&dir, 23, 4, 10);
+        assert_eq!(m.n_samples, 23);
+        assert_eq!(
+            m.shards,
+            vec![
+                ("shard_00000.shdf".into(), 10),
+                ("shard_00001.shdf".into(), 10),
+                ("shard_00002.shdf".into(), 3)
+            ]
+        );
+        // Manifest round-trips through JSON.
+        let m2 = ShardManifest::load(&dir).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn balanced_writer_produces_exactly_n_shards() {
+        let dir = tmpdir("balanced");
+        let mut w = ShardedWriter::create_balanced(&dir, header(4), 6, 4).unwrap();
+        for i in 0..6 {
+            w.append_f32(&sample(i, 4)).unwrap();
+        }
+        let m = w.finish().unwrap();
+        assert_eq!(
+            m.shards.iter().map(|(_, n)| *n).collect::<Vec<_>>(),
+            vec![2, 2, 1, 1],
+            "sizes differ by at most one, tail never collapses"
+        );
+        // More shards than samples: capped at one sample per shard.
+        let dir2 = tmpdir("balanced_tiny");
+        let mut w = ShardedWriter::create_balanced(&dir2, header(4), 2, 8).unwrap();
+        for i in 0..2 {
+            w.append_f32(&sample(i, 4)).unwrap();
+        }
+        assert_eq!(w.finish().unwrap().shards.len(), 2);
+    }
+
+    #[test]
+    fn global_reads_match_generation() {
+        let dir = tmpdir("reads");
+        write_sharded(&dir, 23, 4, 10);
+        let s = ShardedStore::open(&dir).unwrap();
+        assert_eq!(SampleStore::n_samples(&s), 23);
+        assert_eq!(s.n_shards(), 3);
+        for i in [0usize, 9, 10, 19, 20, 22] {
+            assert_eq!(decode_f32(&s.read_sample_at(i).unwrap()), sample(i, 4), "sample {i}");
+        }
+        assert!(s.read_sample_at(23).is_err());
+    }
+
+    #[test]
+    fn range_reads_span_shard_boundaries() {
+        let dir = tmpdir("range");
+        write_sharded(&dir, 23, 4, 10);
+        let s = ShardedStore::open(&dir).unwrap();
+        // [8, 13): crosses the shard 0 → 1 boundary.
+        let bytes = s.read_range_at(8, 5).unwrap();
+        for (k, i) in (8..13).enumerate() {
+            assert_eq!(decode_f32(&bytes[k * 16..(k + 1) * 16]), sample(i, 4), "sample {i}");
+        }
+        // Whole dataset in one call (crosses both boundaries).
+        let all = s.read_range_at(0, 23).unwrap();
+        assert_eq!(decode_f32(&all[22 * 16..]), sample(22, 4));
+        assert!(s.read_range_at(20, 4).is_err());
+        assert!(s.read_range_into_at(23, 0, &mut []).is_ok());
+    }
+
+    #[test]
+    fn contiguity_has_one_region_per_shard() {
+        let dir = tmpdir("contig");
+        write_sharded(&dir, 23, 4, 10);
+        let s = ShardedStore::open(&dir).unwrap();
+        let c = s.chunk_contiguity();
+        assert_eq!(c.n_regions(), 3);
+        assert_eq!(c.region_end(0), 10);
+        assert_eq!(c.region_end(10), 20);
+        assert_eq!(c.region_end(20), u32::MAX);
+        // Within a region offsets advance by sample_bytes; across the
+        // boundary they jump by more (the next file's header region).
+        assert_eq!(c.offset_of(1) - c.offset_of(0), 16);
+        assert!(c.offset_of(10) - c.offset_of(9) > 16);
+    }
+
+    #[test]
+    fn open_rejects_manifest_shard_mismatch() {
+        let dir = tmpdir("mismatch");
+        write_sharded(&dir, 23, 4, 10);
+        // Tamper: manifest claims a different count for shard 1.
+        let mut m = ShardManifest::load(&dir).unwrap();
+        m.shards[1].1 = 9;
+        m.n_samples = 22;
+        m.save(&dir).unwrap();
+        assert!(ShardedStore::open(&dir).is_err());
+    }
+
+    #[test]
+    fn open_rejects_shard_from_another_dataset() {
+        // Same shape/dtype/count, different dataset name: a swapped-in
+        // shard must fail loudly, not silently serve wrong bytes.
+        let dir = tmpdir("swapname");
+        write_sharded(&dir, 23, 4, 10);
+        let other = tmpdir("swapname_other");
+        let mut h = header(4);
+        h.name = "some-other-dataset".into();
+        let mut w = ShardedWriter::create(&other, h, 10).unwrap();
+        for i in 0..10 {
+            w.append_f32(&sample(i, 4)).unwrap();
+        }
+        w.finish().unwrap();
+        std::fs::copy(other.join("shard_00000.shdf"), dir.join("shard_00001.shdf")).unwrap();
+        let err = ShardedStore::open(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("belongs to dataset"), "{err:#}");
+    }
+
+    #[test]
+    fn open_rejects_missing_shard_file() {
+        let dir = tmpdir("missing");
+        write_sharded(&dir, 23, 4, 10);
+        std::fs::remove_file(dir.join("shard_00001.shdf")).unwrap();
+        assert!(ShardedStore::open(&dir).is_err());
+    }
+
+    #[test]
+    fn open_rejects_missing_manifest() {
+        let dir = tmpdir("nomanifest");
+        assert!(ShardedStore::open(&dir).is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_bad_totals_and_format() {
+        let dir = tmpdir("badmanifest");
+        let mut m = write_sharded(&dir, 5, 4, 5);
+        m.n_samples = 99;
+        let j = m.to_json();
+        assert!(ShardManifest::from_json(&j).is_err());
+        let mut j2 = write_sharded(&tmpdir("badfmt"), 5, 4, 5).to_json();
+        j2.set("format", Json::Str("something-else".into()));
+        assert!(ShardManifest::from_json(&j2).is_err());
+    }
+}

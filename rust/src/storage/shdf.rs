@@ -133,11 +133,7 @@ impl ShdfWriter {
         if sample.len() * 4 != self.header.sample_bytes {
             bail!("sample is {} f32s, expected {}", sample.len(), self.header.sample_bytes / 4);
         }
-        let mut bytes = Vec::with_capacity(sample.len() * 4);
-        for &x in sample {
-            bytes.extend_from_slice(&x.to_le_bytes());
-        }
-        self.append(&bytes)
+        self.append(&crate::storage::store::encode_f32(sample))
     }
 
     /// Flush and patch the true sample count into the header.
@@ -155,10 +151,21 @@ impl ShdfWriter {
 }
 
 /// Reader with positioned reads; also reports byte ranges for cost charging.
+/// Implements [`crate::storage::store::SampleStore`] (the single-file
+/// backend) — consumers above the storage layer use the trait, not this
+/// concrete type.
+#[derive(Debug)]
 pub struct ShdfReader {
     f: File,
     header: ShdfHeader,
     data_start: u64,
+    /// Serializes the non-unix positioned-read fallback, which must go
+    /// through the shared stream offset — training workers share ONE
+    /// reader handle across threads, so the fallback's seek+read pair
+    /// must not interleave. Unix preads carry the offset per call and
+    /// need no lock.
+    #[cfg(not(unix))]
+    seek_lock: std::sync::Mutex<()>,
 }
 
 impl ShdfReader {
@@ -181,7 +188,13 @@ impl ShdfReader {
         let header = ShdfHeader::from_json(&Json::parse(text.trim_end()).context("header json")?)?;
         header.validate()?;
         let data_start = (8 + 4 + hlen) as u64;
-        Ok(ShdfReader { f, header, data_start })
+        Ok(ShdfReader {
+            f,
+            header,
+            data_start,
+            #[cfg(not(unix))]
+            seek_lock: std::sync::Mutex::new(()),
+        })
     }
 
     pub fn header(&self) -> &ShdfHeader {
@@ -239,13 +252,12 @@ impl ShdfReader {
 
     // ---- positioned reads (no seek state) ----
     //
-    // These take `&self`. On unix they are pread-backed, so concurrent
-    // reader threads can share one open handle with no coordination (the
-    // kernel offset is passed per call instead of being stream state) and
-    // each read is one syscall instead of a seek+read pair; the training
-    // driver's worker threads rely on this. On non-unix platforms the
-    // fallback goes through the shared stream offset — same results, but
-    // single-threaded use only (see `pread_exact`).
+    // These take `&self` and are safe to call from many threads sharing
+    // one handle — the training driver's workers rely on this. On unix
+    // they are pread-backed (the kernel offset is passed per call instead
+    // of being stream state) and each read is one syscall; on non-unix
+    // platforms the fallback goes through the shared stream offset under
+    // `seek_lock`, so reads serialize but stay correct.
 
     /// Positioned read of `len(buf)` bytes at absolute file offset `off`.
     #[cfg(unix)]
@@ -256,10 +268,11 @@ impl ShdfReader {
     }
 
     /// Portable fallback: `&File` implements `Seek + Read`, so this stays
-    /// `&self`, but the shared stream offset makes it non-reentrant —
-    /// single-threaded use only on non-unix platforms.
+    /// `&self`; the seek+read pair mutates the shared stream offset, so
+    /// it runs under `seek_lock` to stay safe for concurrent callers.
     #[cfg(not(unix))]
     fn pread_exact(&self, buf: &mut [u8], off: u64) -> Result<()> {
+        let _serialized = self.seek_lock.lock().expect("seek lock poisoned");
         let mut f = &self.f;
         f.seek(SeekFrom::Start(off))?;
         f.read_exact(buf)?;
@@ -298,9 +311,10 @@ impl ShdfReader {
         Ok(buf)
     }
 
-    /// Decode a sample byte buffer as f32 (little-endian).
+    /// Decode a sample byte buffer as f32 (little-endian). Alias of
+    /// [`crate::storage::store::decode_f32`], kept for existing callers.
     pub fn decode_f32(bytes: &[u8]) -> Vec<f32> {
-        bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+        crate::storage::store::decode_f32(bytes)
     }
 }
 
@@ -441,10 +455,10 @@ mod tests {
     }
 
     #[test]
-    #[cfg(unix)] // the non-unix fallback shares stream state (see pread_exact)
     fn positioned_reads_are_concurrent_safe() {
-        // The whole point of pread: many threads, one shared &reader, no
-        // seek state to race on.
+        // The whole point of the positioned API: many threads, one shared
+        // &reader, no seek state to race on (pread on unix, a serialized
+        // fallback elsewhere).
         let path = tmpfile("concurrent.shdf");
         write_test_file(&path, 64, 16);
         let r = ShdfReader::open(&path).unwrap();

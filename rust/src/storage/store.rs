@@ -1,0 +1,380 @@
+//! The pluggable sample-storage API.
+//!
+//! SOLAR's Optim_3 is a storage-layer optimization (chunked reads against
+//! a parallel file system), but nothing above the storage layer should
+//! care *where* the bytes live. [`SampleStore`] is the seam: an
+//! object-safe trait of positioned, `&self`-concurrent reads over a
+//! fixed-size-record dataset, plus a [`Contiguity`] hint that tells the
+//! chunk-aggregation cost path which sample ranges are byte-contiguous on
+//! storage (so it never plans a "single request" that would actually span
+//! two files).
+//!
+//! Three backends ship behind the trait:
+//! * the single-file SHDF container ([`ShdfReader`], this module's impl);
+//! * a sharded dataset — a directory of SHDF shards plus a manifest
+//!   ([`super::shard::ShardedStore`]), the realistic layout when
+//!   scientific data arrives as one file per simulation run;
+//! * an in-memory store ([`MemStore`]) so driver and engine tests need no
+//!   temp-file fixtures.
+//!
+//! All backends must be byte-for-byte interchangeable: `train()` produces
+//! bit-identical `TrainReport`s whether the same samples live in one file
+//! or N shards (see `tests/store_conformance.rs` and
+//! `tests/driver_pipeline_parity.rs`).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::storage::shdf::ShdfReader;
+
+/// Abstract read-only store of fixed-size samples.
+///
+/// Contract (enforced by the shared conformance suite):
+/// * reads are positioned and take `&self` — many threads may read through
+///   one shared handle concurrently with no coordination;
+/// * `read_sample_into_at(i, buf)` requires `buf.len() == sample_bytes()`
+///   and errors (never panics) for `i >= n_samples()`;
+/// * `read_range_into_at(start, count, buf)` requires
+///   `buf.len() == count * sample_bytes()`, errors when
+///   `start + count > n_samples()`, and a zero-length read
+///   (`count == 0`, `start <= n_samples()`) is an Ok no-op;
+/// * `chunk_contiguity()` describes which sample ranges are
+///   byte-contiguous on the underlying storage (one region per file/shard)
+///   — the scheduler only aggregates chunk reads within a region.
+pub trait SampleStore: Send + Sync + std::fmt::Debug {
+    /// Number of samples in the store.
+    fn n_samples(&self) -> usize;
+
+    /// Bytes per (fixed-size) sample.
+    fn sample_bytes(&self) -> usize;
+
+    /// Logical tensor shape of one sample (e.g. `[4, 64, 64]`).
+    fn shape(&self) -> &[usize];
+
+    /// Free-form dataset name.
+    fn dataset_name(&self) -> &str;
+
+    /// Positioned read of one sample into `buf` (`sample_bytes` long).
+    fn read_sample_into_at(&self, i: usize, buf: &mut [u8]) -> Result<()>;
+
+    /// Positioned read of `count` consecutive samples starting at `start`.
+    /// Backends issue as few underlying requests as the layout allows (one
+    /// for a range inside a contiguous region).
+    fn read_range_into_at(&self, start: usize, count: usize, buf: &mut [u8]) -> Result<()>;
+
+    /// Layout hint for the chunk-aggregation cost path.
+    fn chunk_contiguity(&self) -> Contiguity;
+
+    /// Positioned read of one sample, allocating.
+    fn read_sample_at(&self, i: usize) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; self.sample_bytes()];
+        self.read_sample_into_at(i, &mut buf)?;
+        Ok(buf)
+    }
+
+    /// Positioned range read, allocating.
+    fn read_range_at(&self, start: usize, count: usize) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; count * self.sample_bytes()];
+        self.read_range_into_at(start, count, &mut buf)?;
+        Ok(buf)
+    }
+}
+
+/// Decode a sample byte buffer as f32 (little-endian) — the one record
+/// encoding every backend shares.
+pub fn decode_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+/// Encode f32 samples as little-endian bytes — `decode_f32`'s inverse,
+/// shared by every writer/backend so the record encoding lives in one
+/// place.
+pub fn encode_f32(sample: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(sample.len() * 4);
+    for &x in sample {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    bytes
+}
+
+/// Contiguity map of a store: its samples form a sequence of regions;
+/// within a region, sample `i + 1` directly follows sample `i` on storage
+/// (so a range read is ONE request), while across regions there is no
+/// byte adjacency (a different shard file, or a header gap).
+///
+/// Offsets are *per-store virtual addresses*: absolute file offsets for a
+/// single-file store, and offsets into the notional concatenation of the
+/// shard files for a sharded store. Only deltas within a region are
+/// physically meaningful — exactly what the PFS cost model charges — but
+/// offsets stay monotone across regions so cross-region jumps still model
+/// as long seeks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Contiguity {
+    /// `(first sample id of the region, virtual byte offset of that
+    /// sample)`, ascending by sample id; the first region starts at 0.
+    regions: Vec<(u32, u64)>,
+    sample_bytes: u64,
+}
+
+impl Contiguity {
+    /// Single contiguous region (one flat file) with sample 0 at
+    /// `data_start`.
+    pub fn single(data_start: u64, sample_bytes: usize) -> Contiguity {
+        Contiguity { regions: vec![(0, data_start)], sample_bytes: sample_bytes as u64 }
+    }
+
+    /// Multi-region map. Regions must be ascending and start at sample 0;
+    /// an empty list degenerates to one region at offset 0.
+    pub fn from_regions(regions: Vec<(u32, u64)>, sample_bytes: usize) -> Contiguity {
+        if regions.is_empty() {
+            return Contiguity::single(0, sample_bytes);
+        }
+        assert_eq!(regions[0].0, 0, "first contiguity region must start at sample 0");
+        for w in regions.windows(2) {
+            assert!(w[0].0 < w[1].0, "contiguity regions must be strictly ascending");
+        }
+        Contiguity { regions, sample_bytes: sample_bytes as u64 }
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn is_single(&self) -> bool {
+        self.regions.len() == 1
+    }
+
+    fn region_index(&self, x: u32) -> usize {
+        // First region starts at 0, so partition_point ≥ 1.
+        self.regions.partition_point(|&(start, _)| start <= x) - 1
+    }
+
+    /// Virtual byte offset of sample `x`.
+    pub fn offset_of(&self, x: u32) -> u64 {
+        let (start, base) = self.regions[self.region_index(x)];
+        base + (x - start) as u64 * self.sample_bytes
+    }
+
+    /// First sample id past `x`'s contiguous region (`u32::MAX` for the
+    /// last region).
+    pub fn region_end(&self, x: u32) -> u32 {
+        self.regions.get(self.region_index(x) + 1).map_or(u32::MAX, |&(start, _)| start)
+    }
+}
+
+// ---- backend: the single-file SHDF container ----
+
+impl SampleStore for ShdfReader {
+    fn n_samples(&self) -> usize {
+        ShdfReader::n_samples(self)
+    }
+
+    fn sample_bytes(&self) -> usize {
+        ShdfReader::sample_bytes(self)
+    }
+
+    fn shape(&self) -> &[usize] {
+        &self.header().shape
+    }
+
+    fn dataset_name(&self) -> &str {
+        &self.header().name
+    }
+
+    fn read_sample_into_at(&self, i: usize, buf: &mut [u8]) -> Result<()> {
+        ShdfReader::read_sample_into_at(self, i, buf)
+    }
+
+    fn read_range_into_at(&self, start: usize, count: usize, buf: &mut [u8]) -> Result<()> {
+        ShdfReader::read_range_into_at(self, start, count, buf)
+    }
+
+    fn chunk_contiguity(&self) -> Contiguity {
+        Contiguity::single(self.offset_of(0), ShdfReader::sample_bytes(self))
+    }
+}
+
+// ---- backend: in-memory synthetic store ----
+
+/// In-memory store: all samples in one `Vec<u8>`. For tests and tiny
+/// synthetic runs — no filesystem, no fixtures, same read semantics.
+#[derive(Clone)]
+pub struct MemStore {
+    name: String,
+    shape: Vec<usize>,
+    sample_bytes: usize,
+    data: Vec<u8>,
+}
+
+// Manual Debug: the derive would dump every data byte, and a MemStore
+// rides inside TrainConfig (Debug) — a printed config must not flood the
+// log with megabytes of sample bytes.
+impl std::fmt::Debug for MemStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MemStore")
+            .field("name", &self.name)
+            .field("shape", &self.shape)
+            .field("sample_bytes", &self.sample_bytes)
+            .field("data_len", &self.data.len())
+            .finish()
+    }
+}
+
+impl MemStore {
+    /// Wrap raw sample bytes. `data.len()` must be a whole number of
+    /// samples of the shape's f32 size.
+    pub fn new(name: &str, shape: Vec<usize>, data: Vec<u8>) -> Result<MemStore> {
+        let sample_bytes = shape.iter().product::<usize>() * 4;
+        if shape.is_empty() || sample_bytes == 0 {
+            bail!("sample shape {shape:?} has zero elements");
+        }
+        if data.len() % sample_bytes != 0 {
+            bail!(
+                "{} data bytes is not a whole number of {sample_bytes}-byte samples",
+                data.len()
+            );
+        }
+        Ok(MemStore { name: name.to_string(), shape, sample_bytes, data })
+    }
+
+    /// Append one f32 sample (builder-style convenience for tests).
+    pub fn push_f32(&mut self, sample: &[f32]) -> Result<()> {
+        if sample.len() * 4 != self.sample_bytes {
+            bail!("sample is {} f32s, expected {}", sample.len(), self.sample_bytes / 4);
+        }
+        self.data.extend_from_slice(&encode_f32(sample));
+        Ok(())
+    }
+}
+
+impl SampleStore for MemStore {
+    fn n_samples(&self) -> usize {
+        self.data.len() / self.sample_bytes
+    }
+
+    fn sample_bytes(&self) -> usize {
+        self.sample_bytes
+    }
+
+    fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    fn dataset_name(&self) -> &str {
+        &self.name
+    }
+
+    fn read_sample_into_at(&self, i: usize, buf: &mut [u8]) -> Result<()> {
+        let n = SampleStore::n_samples(self);
+        if i >= n {
+            bail!("sample index {i} out of range ({n} samples)");
+        }
+        assert_eq!(buf.len(), self.sample_bytes);
+        let lo = i * self.sample_bytes;
+        buf.copy_from_slice(&self.data[lo..lo + self.sample_bytes]);
+        Ok(())
+    }
+
+    fn read_range_into_at(&self, start: usize, count: usize, buf: &mut [u8]) -> Result<()> {
+        if start + count > SampleStore::n_samples(self) {
+            bail!("range [{start}, {}) out of range", start + count);
+        }
+        assert_eq!(buf.len(), count * self.sample_bytes);
+        let lo = start * self.sample_bytes;
+        buf.copy_from_slice(&self.data[lo..lo + count * self.sample_bytes]);
+        Ok(())
+    }
+
+    fn chunk_contiguity(&self) -> Contiguity {
+        Contiguity::single(0, self.sample_bytes)
+    }
+}
+
+/// Open a dataset at `path` behind the trait: a directory is a sharded
+/// dataset (manifest + shard files), anything else a single SHDF file.
+pub fn open_store(path: &Path) -> Result<Arc<dyn SampleStore>> {
+    if path.is_dir() {
+        Ok(Arc::new(
+            super::shard::ShardedStore::open(path)
+                .with_context(|| format!("open sharded dataset {}", path.display()))?,
+        ))
+    } else {
+        Ok(Arc::new(
+            ShdfReader::open(path).with_context(|| format!("open dataset {}", path.display()))?,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem(n: usize, elems: usize) -> MemStore {
+        let mut m = MemStore::new("t", vec![elems], Vec::new()).unwrap();
+        for i in 0..n {
+            let s: Vec<f32> = (0..elems).map(|j| (i * 100 + j) as f32).collect();
+            m.push_f32(&s).unwrap();
+        }
+        m
+    }
+
+    #[test]
+    fn mem_store_reads_and_bounds() {
+        let m = mem(6, 4);
+        assert_eq!(SampleStore::n_samples(&m), 6);
+        assert_eq!(SampleStore::sample_bytes(&m), 16);
+        let s3 = decode_f32(&m.read_sample_at(3).unwrap());
+        assert_eq!(s3, vec![300.0, 301.0, 302.0, 303.0]);
+        let r = m.read_range_at(2, 3).unwrap();
+        assert_eq!(decode_f32(&r[..16]), vec![200.0, 201.0, 202.0, 203.0]);
+        assert!(SampleStore::read_sample_at(&m, 6).is_err());
+        assert!(m.read_range_at(5, 2).is_err());
+        // Zero-length reads are Ok up to (and at) the end.
+        assert!(m.read_range_into_at(6, 0, &mut []).is_ok());
+        assert!(m.read_range_into_at(7, 0, &mut []).is_err());
+    }
+
+    #[test]
+    fn mem_store_rejects_ragged_data() {
+        assert!(MemStore::new("t", vec![4], vec![0u8; 17]).is_err());
+        assert!(MemStore::new("t", vec![], vec![]).is_err());
+        let mut m = mem(1, 4);
+        assert!(m.push_f32(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn contiguity_single_region() {
+        let c = Contiguity::single(4108, 16);
+        assert!(c.is_single());
+        assert_eq!(c.offset_of(0), 4108);
+        assert_eq!(c.offset_of(10), 4108 + 160);
+        assert_eq!(c.region_end(5), u32::MAX);
+    }
+
+    #[test]
+    fn contiguity_multi_region_offsets_and_ends() {
+        // Two shards of 10 samples (16 B each), second file based at 5000.
+        let c = Contiguity::from_regions(vec![(0, 100), (10, 5000)], 16);
+        assert_eq!(c.n_regions(), 2);
+        assert_eq!(c.offset_of(9), 100 + 9 * 16);
+        assert_eq!(c.offset_of(10), 5000);
+        assert_eq!(c.offset_of(14), 5000 + 4 * 16);
+        assert_eq!(c.region_end(0), 10);
+        assert_eq!(c.region_end(9), 10);
+        assert_eq!(c.region_end(10), u32::MAX);
+    }
+
+    #[test]
+    fn contiguity_empty_degenerates_to_single() {
+        let c = Contiguity::from_regions(vec![], 8);
+        assert!(c.is_single());
+        assert_eq!(c.offset_of(3), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn contiguity_rejects_nonzero_first_region() {
+        let _ = Contiguity::from_regions(vec![(5, 0)], 8);
+    }
+}

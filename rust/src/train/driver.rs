@@ -1,14 +1,22 @@
 //! The distributed training driver — real bytes, real gradients, with a
-//! double-buffered prefetch pipeline.
+//! double-buffered prefetch pipeline over a pluggable sample store.
+//!
+//! The driver never names a concrete storage backend: all bytes come
+//! through the [`SampleStore`] trait (`&self`-concurrent positioned
+//! reads), so the same run executes against a single SHDF file, a sharded
+//! dataset directory, or an in-memory store — bit-identically (tested in
+//! `driver_pipeline_parity.rs` / `store_conformance.rs`).
 //!
 //! Topology: one coordinator (this thread) + `n_nodes` workers, each a
 //! PAIR of threads:
 //!
-//! * a **fetch thread** that owns its own SHDF handle and stages the PFS
-//!   bytes for upcoming steps (the engine's deterministic plan says
-//!   exactly which bytes each step needs), charging the throttle model as
-//!   it goes — so the emulated Lustre delay runs here, off the compute
-//!   path;
+//! * a **fetch thread** that reads through a shared store handle and
+//!   stages the PFS bytes for upcoming steps (the engine's deterministic
+//!   plan says exactly which bytes each step needs), charging the
+//!   throttle model as it goes — so the emulated Lustre delay runs here,
+//!   off the compute path. The same thread stages the holdout eval
+//!   batches (read once, cached, re-sent per eval), so evals never read
+//!   storage on the compute path;
 //! * an **exec thread** that owns the PJRT CPU client + compiled
 //!   training-step executable (the `xla` handles are not `Send`) and the
 //!   in-memory byte buffer that mirrors the loader engine's buffer
@@ -17,17 +25,19 @@
 //!
 //! The coordinator streams step plans straight off the engine's run-long
 //! [`LoaderEngine::plan_run`] cursor — O(prefetch) plans in memory, not
-//! O(epoch) — and dispatches each step's fetch up to `prefetch` steps
+//! O(epoch) — and dispatches each step's fetch up to the prefetch depth
 //! ahead of its execution: while step *t* runs grads, step *t+1*'s PFS
 //! bytes move. The cursor spans epoch boundaries, so epoch *e+1*'s first
 //! fetches stage during epoch *e*'s tail — no fill/drain bubble at the
 //! boundary (`epoch_drain: true` restores the old per-epoch drain for
-//! A/B measurement). SOLAR's offline determinism is what makes this
-//! safe: the plan for *t+1* is fully known before *t* runs, and
+//! A/B measurement). The depth comes from [`PrefetchMode`]: a fixed
+//! number (0 = the strictly serial pre-pipeline schedule), or `Auto`,
+//! which runs the first epoch at depth 1 and then picks
+//! ⌈load/compute⌉ from that epoch's measured wall-time ratio (clamped to
+//! [`MAX_AUTO_PREFETCH`]). SOLAR's offline determinism is what makes all
+//! of this safe: the plan for *t+1* is fully known before *t* runs, and
 //! prefetching changes WHEN bytes move, never WHICH samples feed which
-//! gradient — `prefetch: 0` (the strictly serial pre-pipeline schedule)
-//! produces bit-identical parameters (tested in
-//! `driver_pipeline_parity.rs`).
+//! gradient — every depth produces bit-identical parameters (tested).
 //!
 //! Per step: the exec worker assembles the batch (staged bytes + buffer
 //! hits), executes the AOT'd grads, and returns summed gradients; the
@@ -37,6 +47,11 @@
 //! gradient. Batch assembly (decode + collate) is charged to the LOAD
 //! bucket, mirroring `dist::sim`'s `delivery_overhead`, so Fig 14's
 //! load/compute breakdown is directly comparable to the simulator's.
+//!
+//! `load_only: true` drops the PJRT stages (no artifacts needed): the
+//! full plan → fetch → stage → assemble pipeline runs with real threads
+//! and real bytes, but no gradients — the storage/loader smoke mode CI
+//! uses to compare backends end-to-end on machines without artifacts.
 
 use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -51,15 +66,66 @@ use crate::loader::LoaderPolicy;
 use crate::runtime::executable::{DenseImpl, TrainRuntime};
 use crate::runtime::params::{GradAccum, ParamStore};
 use crate::storage::pfs::CostModel;
-use crate::storage::shdf::ShdfReader;
+use crate::storage::store::{decode_f32, Contiguity, SampleStore};
 use crate::train::metrics::{EpochLoadStat, LossPoint, TrainReport};
 use crate::util::timer::Stopwatch;
+
+/// Depth cap for [`PrefetchMode::Auto`] (and the staged-channel bound it
+/// pre-allocates): beyond ⌈load/compute⌉ extra depth only buffers more
+/// bytes without hiding more time.
+pub const MAX_AUTO_PREFETCH: usize = 8;
+
+/// Fetch-ahead policy of the worker pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchMode {
+    /// Fixed depth: each node's fetch stage runs up to this many steps
+    /// ahead of execution. 0 = strictly serial (every step's bytes land
+    /// before its grads start).
+    Fixed(usize),
+    /// Pick the depth from the measured load:compute wall-time ratio of
+    /// the first epoch (run at depth 1), then use ⌈load/compute⌉ clamped
+    /// to `[1, MAX_AUTO_PREFETCH]` for the rest of the run. Affects only
+    /// WHEN bytes move — trained parameters are bit-identical to any
+    /// fixed depth.
+    Auto,
+}
+
+impl PrefetchMode {
+    /// Depth the run starts at (epoch 0 under `Auto` measures at depth 1).
+    pub fn initial_depth(self) -> usize {
+        match self {
+            PrefetchMode::Fixed(d) => d,
+            PrefetchMode::Auto => 1,
+        }
+    }
+
+    /// Bound of the fetch→exec staged channel: must cover the largest
+    /// depth the run may ever use.
+    fn stage_bound(self) -> usize {
+        match self {
+            PrefetchMode::Fixed(d) => d.max(1),
+            PrefetchMode::Auto => MAX_AUTO_PREFETCH,
+        }
+    }
+}
+
+impl std::fmt::Display for PrefetchMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PrefetchMode::Fixed(d) => write!(f, "{d}"),
+            PrefetchMode::Auto => write!(f, "auto"),
+        }
+    }
+}
 
 /// Driver configuration.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub run: RunConfig,
-    pub dataset_path: PathBuf,
+    /// Where the sample bytes live. Any [`SampleStore`] backend: single
+    /// SHDF file, sharded directory, in-memory — the trained model is
+    /// bit-identical across layouts holding the same bytes.
+    pub store: Arc<dyn SampleStore>,
     pub artifacts_dir: PathBuf,
     pub policy: LoaderPolicy,
     pub dense: DenseImpl,
@@ -73,12 +139,8 @@ pub struct TrainConfig {
     pub max_steps: usize,
     /// Number of trailing samples held out for validation.
     pub holdout: usize,
-    /// Fetch-ahead depth of the worker pipeline: each node's fetch stage
-    /// runs up to this many steps ahead of execution, hiding PFS time
-    /// behind compute. 0 = strictly serial (every step's bytes land
-    /// before its grads start). Affects only WHEN bytes move — the
-    /// trained parameters are bit-identical across depths.
-    pub prefetch: usize,
+    /// Fetch-ahead policy (see [`PrefetchMode`]).
+    pub prefetch: PrefetchMode,
     /// Drain the pipeline at every epoch boundary instead of letting the
     /// fetch stages run across it (the pre-cross-epoch behaviour). The
     /// schedule — and therefore parameters, losses, and per-epoch stats —
@@ -89,32 +151,46 @@ pub struct TrainConfig {
     /// instead of staging step `.1` — exercises the fetch-death shutdown
     /// path (regression-tested in `driver_pipeline_parity.rs`).
     pub fetch_fault: Option<(usize, usize)>,
+    /// Run the loading pipeline without PJRT: no artifacts, no gradients,
+    /// losses report 0. The schedule accounting (steps, hits, PFS counts,
+    /// epoch_stats) is identical to a real run — the backend-parity smoke
+    /// mode for machines without AOT artifacts (CI).
+    pub load_only: bool,
 }
 
 type Params = Arc<Vec<Vec<f32>>>;
 
-/// Work for a node's fetch stage: stage one step's PFS bytes.
-struct FetchMsg {
-    step_id: usize,
-    load: NodeStepLoad,
+/// Work for a node's fetch stage.
+enum FetchMsg {
+    /// Stage one step's PFS bytes.
+    Step { step_id: usize, load: NodeStepLoad },
+    /// Stage the holdout eval batch that runs right after `after_step`'s
+    /// execution (worker 0 only).
+    Eval { after_step: usize, ids: Arc<Vec<u32>> },
 }
 
 enum WorkMsg {
     Exec { step_id: usize, params: Params },
-    Eval { params: Params, ids: Vec<u32> },
+    Eval { after_step: usize, params: Params, ids: Arc<Vec<u32>> },
     Stop,
 }
 
 /// One step's staged bytes, handed from a node's fetch thread to its exec
-/// thread in strict step order.
+/// thread in strict dispatch order.
 struct StagedStep {
     step_id: usize,
     load: NodeStepLoad,
-    /// Decoded samples fetched from the file for this step, keyed by id.
+    /// Decoded samples fetched from the store for this step, keyed by id.
     staged: HashMap<u32, Arc<Vec<f32>>>,
     /// Wall seconds the fetch stage spent on this step (real reads +
     /// decode + throttle sleep; excludes handoff backpressure).
     fetch_wall_s: f64,
+}
+
+/// A fetch-stage handoff: a training step's bytes, or an eval batch's.
+enum Staged {
+    Step(StagedStep),
+    Eval { after_step: usize, staged: HashMap<u32, Arc<Vec<f32>>> },
 }
 
 struct DoneMsg {
@@ -131,65 +207,108 @@ struct DoneMsg {
     exec_wall_s: f64,
 }
 
+/// Everything one worker (fetch + exec thread pair) needs, bundled so the
+/// spawn site stays readable.
+struct WorkerCtx {
+    node: usize,
+    store: Arc<dyn SampleStore>,
+    artifacts_dir: PathBuf,
+    dense: DenseImpl,
+    throttle: f64,
+    cost: CostModel,
+    /// Staged-channel bound (the largest depth the coordinator may use).
+    stage_bound: usize,
+    fetch_fault: Option<usize>,
+    load_only: bool,
+    /// Batch/img when no manifest is available (`load_only`).
+    fallback_batch: usize,
+    fallback_img: usize,
+}
+
+/// Depth for [`PrefetchMode::Auto`] after the measured first epoch: deep
+/// enough fetch-ahead to hide the observed load behind compute.
+fn auto_depth(load_s: f64, comp_s: f64) -> usize {
+    if load_s <= 0.0 || comp_s <= 0.0 {
+        return 1;
+    }
+    ((load_s / comp_s).ceil() as usize).clamp(1, MAX_AUTO_PREFETCH)
+}
+
 /// Run distributed training; returns the loss curve + timing breakdown.
 pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     let n_nodes = tc.run.n_nodes;
-    let mut engine = LoaderEngine::new(tc.run.clone(), tc.policy.clone());
-    {
-        // Align engine request offsets with the real file layout.
-        let reader = ShdfReader::open(&tc.dataset_path)?;
-        if reader.n_samples() < tc.run.spec.n_samples + tc.holdout {
-            bail!(
-                "dataset has {} samples; config wants {} + {} holdout",
-                reader.n_samples(),
-                tc.run.spec.n_samples,
-                tc.holdout
-            );
-        }
-        engine.set_data_start(reader.offset_of(0));
+    if tc.store.n_samples() < tc.run.spec.n_samples + tc.holdout {
+        bail!(
+            "dataset has {} samples; config wants {} + {} holdout",
+            tc.store.n_samples(),
+            tc.run.spec.n_samples,
+            tc.holdout
+        );
     }
+    let mut engine = LoaderEngine::new(tc.run.clone(), tc.policy.clone());
+    // Align engine request offsets + chunk boundaries with the store's
+    // real layout (single region for a flat file, one per shard else).
+    engine.bind_store(tc.store.as_ref())?;
 
     // Spawn workers (a fetch + exec thread pair per node).
     let mut to_fetch: Vec<mpsc::Sender<FetchMsg>> = Vec::with_capacity(n_nodes);
     let mut to_workers: Vec<mpsc::Sender<WorkMsg>> = Vec::with_capacity(n_nodes);
     let (done_tx, done_rx) = mpsc::channel::<Result<DoneMsg>>();
     let mut handles = Vec::with_capacity(n_nodes);
+    let fallback_img = tc.run.spec.shape.last().copied().unwrap_or(1);
     for k in 0..n_nodes {
         let (ftx, frx) = mpsc::channel::<FetchMsg>();
         let (tx, rx) = mpsc::channel::<WorkMsg>();
         to_fetch.push(ftx);
         to_workers.push(tx);
         let done = done_tx.clone();
-        let dataset_path = tc.dataset_path.clone();
-        let artifacts_dir = tc.artifacts_dir.clone();
-        let dense = tc.dense;
-        let throttle = tc.throttle;
-        let cost = tc.run.cost.clone();
-        let depth = tc.prefetch;
-        let fault = tc.fetch_fault.and_then(|(node, step)| (node == k).then_some(step));
-        handles.push(std::thread::spawn(move || {
-            worker_loop(k, frx, rx, done, &dataset_path, &artifacts_dir, dense, throttle, cost, depth, fault)
-        }));
+        let ctx = WorkerCtx {
+            node: k,
+            store: tc.store.clone(),
+            artifacts_dir: tc.artifacts_dir.clone(),
+            dense: tc.dense,
+            throttle: tc.throttle,
+            cost: tc.run.cost.clone(),
+            stage_bound: tc.prefetch.stage_bound(),
+            fetch_fault: tc.fetch_fault.and_then(|(node, step)| (node == k).then_some(step)),
+            load_only: tc.load_only,
+            fallback_batch: tc.run.local_batch.max(1),
+            fallback_img,
+        };
+        handles.push(std::thread::spawn(move || worker_loop(ctx, frx, rx, done)));
     }
     drop(done_tx);
 
-    // Coordinator state.
-    let manifest = crate::runtime::manifest::Manifest::load(&tc.artifacts_dir)?;
-    let mut store = ParamStore::load_init(&manifest)?;
-    let holdout_ids: Vec<u32> = {
-        let reader = ShdfReader::open(&tc.dataset_path)?;
-        let n = reader.n_samples();
-        ((n - tc.holdout.min(n)) as u32..n as u32).collect()
+    // Coordinator state. `load_only` runs without artifacts: an empty
+    // parameter store (SGD over zero tensors is a no-op).
+    let mut pstore = if tc.load_only {
+        ParamStore::from_tensors(Vec::new())
+    } else {
+        let manifest = crate::runtime::manifest::Manifest::load(&tc.artifacts_dir)?;
+        ParamStore::load_init(&manifest)?
+    };
+    let holdout_ids: Arc<Vec<u32>> = {
+        let n = tc.store.n_samples();
+        Arc::new(((n - tc.holdout.min(n)) as u32..n as u32).collect())
+    };
+    // Whether an eval follows step `step`'s execution — used both by the
+    // dispatch loop (to stage the eval bytes ahead of time) and by the
+    // exec loop (to run it); the two MUST agree or the staged channel
+    // desyncs.
+    let do_eval = |step: usize| {
+        !tc.load_only && tc.eval_every > 0 && step % tc.eval_every == 0 && !holdout_ids.is_empty()
     };
 
     let mut report = TrainReport {
         loader: tc.policy.name.clone(),
-        prefetch: tc.prefetch,
+        prefetch: tc.prefetch.initial_depth(),
         ..Default::default()
     };
     let wall = Stopwatch::start();
     let mut global_step = 0usize;
     let mut fetch_step = 0usize;
+    // Effective fetch-ahead depth; `Auto` re-picks it after epoch 0.
+    let mut depth = tc.prefetch.initial_depth();
 
     // One run-long cursor: the plan stream crosses epoch boundaries, so
     // the dispatch loop below stages epoch e+1's first steps while epoch
@@ -213,8 +332,8 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     // it instead of masking it with a channel-closed error here.
     let mut fetch_down = false;
     loop {
-        // Keep the fetch stages `prefetch` steps ahead of execution.
-        while !fetch_down && inflight.len() <= tc.prefetch {
+        // Keep the fetch stages `depth` steps ahead of execution.
+        while !fetch_down && inflight.len() <= depth {
             let Some(rs) = pending.take().or_else(|| cursor.next()) else { break };
             if tc.epoch_drain && rs.epoch_pos != dispatch_epoch && !inflight.is_empty() {
                 // Old per-epoch behaviour: hold the next epoch's first
@@ -228,7 +347,7 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             for (k, nl) in rs.load.nodes.into_iter().enumerate() {
                 hits += nl.hits;
                 pfs += nl.pfs_samples;
-                if to_fetch[k].send(FetchMsg { step_id: fetch_step, load: nl }).is_err() {
+                if to_fetch[k].send(FetchMsg::Step { step_id: fetch_step, load: nl }).is_err() {
                     fetch_down = true;
                     // Don't hand the rest of this doomed step to the
                     // healthy nodes — it will never execute. (Their fetch
@@ -239,6 +358,18 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             }
             if fetch_down {
                 break; // partially-dispatched step: never executed
+            }
+            // Stage the eval bytes for this step alongside it, so the
+            // batch is already waiting (read-ahead) when the exec side
+            // reaches the eval — the staged channel is FIFO, so the exec
+            // loop's step/eval pulls stay in lockstep with dispatch.
+            if do_eval(fetch_step)
+                && to_fetch[0]
+                    .send(FetchMsg::Eval { after_step: fetch_step, ids: holdout_ids.clone() })
+                    .is_err()
+            {
+                fetch_down = true;
+                break;
             }
             inflight.push_back((rs.epoch_pos, hits, pfs));
             fetch_step += 1;
@@ -258,6 +389,13 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             // Executed past an epoch boundary: close the finished epoch.
             report.epoch_stats.push(epoch_stat);
             epoch_stat = EpochLoadStat::default();
+            if cur_epoch == 0 && tc.prefetch == PrefetchMode::Auto {
+                // Lookahead autotuning: epoch 0 ran (and was measured) at
+                // depth 1; hide the observed load behind compute from
+                // here on. Changes only WHEN bytes move, never the
+                // schedule, so parameters stay bit-identical.
+                depth = auto_depth(report.load_wall_s, report.comp_wall_s);
+            }
             cur_epoch = step_epoch;
         }
         report.hits += hits;
@@ -265,7 +403,7 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
         epoch_stat.hits += hits;
         epoch_stat.pfs_samples += pfs;
 
-        let params: Params = Arc::new(store.tensors.clone());
+        let params: Params = Arc::new(pstore.tensors.clone());
         for tx in &to_workers {
             tx.send(WorkMsg::Exec { step_id: global_step, params: params.clone() })
                 .context("worker channel closed")?;
@@ -280,7 +418,7 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             debug_assert_eq!(d.step_id, global_step);
             dones[d.node] = Some(d);
         }
-        let mut acc = GradAccum::zeros_like(&store);
+        let mut acc = GradAccum::zeros_like(&pstore);
         let mut max_load = 0.0f64;
         let mut max_exec = 0.0f64;
         for d in dones.iter().flatten() {
@@ -293,14 +431,19 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
         report.load_wall_s += max_load;
         report.comp_wall_s += max_exec;
         let mean_loss = acc.finalize();
-        store.sgd_step(&acc.grads, tc.lr);
+        pstore.sgd_step(&acc.grads, tc.lr);
 
-        // Validation (worker 0 evaluates the holdout).
+        // Validation (worker 0 evaluates the holdout; its bytes were
+        // staged by the fetch pipeline alongside this step's fetch).
         let mut val_loss = f64::NAN;
-        if tc.eval_every > 0 && global_step % tc.eval_every == 0 && !holdout_ids.is_empty() {
-            let params: Params = Arc::new(store.tensors.clone());
+        if do_eval(global_step) {
+            let params: Params = Arc::new(pstore.tensors.clone());
             to_workers[0]
-                .send(WorkMsg::Eval { params, ids: holdout_ids.clone() })
+                .send(WorkMsg::Eval {
+                    after_step: global_step,
+                    params,
+                    ids: holdout_ids.clone(),
+                })
                 .context("worker channel closed")?;
             let d = done_rx.recv().context("worker died")??;
             val_loss = d.loss_sum / d.n_valid.max(1.0);
@@ -328,8 +471,9 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
         report.epochs = cur_epoch + 1;
     }
     report.steps = global_step;
+    report.prefetch = depth;
     report.total_wall_s = wall.elapsed_s();
-    report.final_params = store.tensors.clone();
+    report.final_params = pstore.tensors.clone();
 
     for tx in &to_workers {
         let _ = tx.send(WorkMsg::Stop);
@@ -344,59 +488,76 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     Ok(report)
 }
 
-/// Exec half of a worker: owns the PJRT runtime and the byte buffer;
-/// spawns (and joins) the node's fetch half.
-#[allow(clippy::too_many_arguments)]
+/// Exec half of a worker: owns the PJRT runtime (unless `load_only`) and
+/// the byte buffer; spawns (and joins) the node's fetch half.
 fn worker_loop(
-    node: usize,
+    ctx: WorkerCtx,
     fetch_rx: mpsc::Receiver<FetchMsg>,
     rx: mpsc::Receiver<WorkMsg>,
     done: mpsc::Sender<Result<DoneMsg>>,
-    dataset_path: &std::path::Path,
-    artifacts_dir: &std::path::Path,
-    dense: DenseImpl,
-    throttle: f64,
-    cost: CostModel,
-    prefetch: usize,
-    fetch_fault: Option<usize>,
 ) -> Result<()> {
-    // Stage slots between the two halves: up to `prefetch` steps can sit
-    // fully staged awaiting execution; the bound gives backpressure so
-    // staged bytes stay O(prefetch), not O(epoch) — and, with the
+    // Stage slots between the two halves: up to `stage_bound` steps can
+    // sit fully staged awaiting execution; the bound gives backpressure
+    // so staged bytes stay O(depth), not O(epoch) — and, with the
     // cross-epoch cursor, lets steps of the NEXT epoch sit staged while
     // this epoch's tail executes.
-    let (staged_tx, staged_rx) = mpsc::sync_channel::<StagedStep>(prefetch.max(1));
-    let fetch_path = dataset_path.to_path_buf();
+    let (staged_tx, staged_rx) = mpsc::sync_channel::<Staged>(ctx.stage_bound.max(1));
+    let node = ctx.node;
+    let fetch_store = ctx.store.clone();
     let fetch_done = done.clone();
+    let throttle = ctx.throttle;
+    let cost = ctx.cost.clone();
+    let fault = ctx.fetch_fault;
     let fetch_handle = std::thread::spawn(move || {
-        fetch_loop(node, fetch_rx, staged_tx, &fetch_path, throttle, cost, fetch_done, fetch_fault)
+        fetch_loop(node, fetch_rx, staged_tx, fetch_store, throttle, cost, fetch_done, fault)
     });
 
     let result = (|| -> Result<()> {
-        let rt = TrainRuntime::load(artifacts_dir, dense, false)?;
-        // Positioned reads only: the reader carries no seek state, so it
+        let rt = if ctx.load_only {
+            None
+        } else {
+            Some(TrainRuntime::load(&ctx.artifacts_dir, ctx.dense, false)?)
+        };
+        // Positioned reads only: the store carries no seek state, so it
         // needs no `&mut` plumbing through the batch-assembly closures.
-        let reader = ShdfReader::open(dataset_path)?;
+        let store: &dyn SampleStore = ctx.store.as_ref();
         let mut buffer: HashMap<u32, Arc<Vec<f32>>> = HashMap::new();
-        let b = rt.manifest.batch;
-        let img = rt.manifest.img;
+        let (b, img) = match &rt {
+            Some(rt) => (rt.manifest.batch, rt.manifest.img),
+            None => (ctx.fallback_batch, ctx.fallback_img),
+        };
 
         while let Ok(msg) = rx.recv() {
             match msg {
                 WorkMsg::Stop => break,
-                WorkMsg::Eval { params, ids } => {
-                    let store = ParamStore::from_tensors((*params).clone());
+                WorkMsg::Eval { after_step, params, ids } => {
+                    let Some(rt) = rt.as_ref() else {
+                        bail!("eval dispatched in load-only mode");
+                    };
+                    let pstore = ParamStore::from_tensors((*params).clone());
+                    // The eval batch was staged by the fetch pipeline in
+                    // dispatch order — this pull matches that slot.
+                    let staged = match staged_rx.recv().context("fetch stage died")? {
+                        Staged::Eval { after_step: got, staged } => {
+                            debug_assert_eq!(got, after_step);
+                            staged
+                        }
+                        Staged::Step(s) => bail!(
+                            "pipeline desync: staged step {} where the eval after step {after_step} was expected",
+                            s.step_id
+                        ),
+                    };
                     let mut loss_sum = 0.0f64;
                     let mut n_valid = 0.0f64;
                     for group in ids.chunks(b) {
-                        let (x, y, mask, nv) = assemble_batch(&reader, &buffer, group, b, img)?;
-                        let out = rt.grads(&store, &x, &y, &mask)?;
+                        let (x, y, mask, nv) = assemble_batch(store, &staged, group, b, img)?;
+                        let out = rt.grads(&pstore, &x, &y, &mask)?;
                         loss_sum += out.loss_sum as f64;
                         n_valid += nv;
                     }
                     done.send(Ok(DoneMsg {
-                        node,
-                        step_id: usize::MAX,
+                        node: ctx.node,
+                        step_id: after_step,
                         loss_sum,
                         n_valid,
                         grads: None,
@@ -406,13 +567,18 @@ fn worker_loop(
                     .ok();
                 }
                 WorkMsg::Exec { step_id, params } => {
-                    let store = ParamStore::from_tensors((*params).clone());
+                    let pstore = ParamStore::from_tensors((*params).clone());
                     // Pull this step's staged bytes (blocks until the
                     // fetch stage catches up; in pipelined mode they are
                     // usually already waiting). A dead fetch half closes
                     // the channel — it reports its root cause to the
                     // coordinator itself.
-                    let staged_step = staged_rx.recv().context("fetch stage died")?;
+                    let staged_step = match staged_rx.recv().context("fetch stage died")? {
+                        Staged::Step(s) => s,
+                        Staged::Eval { after_step, .. } => bail!(
+                            "pipeline desync: staged eval after step {after_step} where step {step_id} was expected"
+                        ),
+                    };
                     debug_assert_eq!(staged_step.step_id, step_id);
                     let StagedStep { load, staged, fetch_wall_s, .. } = staged_step;
 
@@ -436,7 +602,7 @@ fn worker_loop(
                         }
                         // Engine said hit but bytes are gone (shouldn't
                         // happen): re-read to stay correct.
-                        Ok(Arc::new(ShdfReader::decode_f32(&reader.read_sample_at(x as usize)?)))
+                        Ok(Arc::new(decode_f32(&store.read_sample_at(x as usize)?)))
                     };
                     let img2 = img * img;
                     let mut loss_sum = 0.0f64;
@@ -458,27 +624,31 @@ fn worker_loop(
                             n_valid_total += 1.0;
                         }
                         assemble_s += t_assemble.elapsed_s();
-                        let t_exec = Stopwatch::start();
-                        let out = rt.grads(&store, &x, &y, &mask)?;
-                        exec_s += t_exec.elapsed_s();
-                        loss_sum += out.loss_sum as f64;
-                        grads_total = Some(match grads_total.take() {
-                            None => out.grads,
-                            Some(mut acc) => {
-                                for (a, g) in acc.iter_mut().zip(out.grads.iter()) {
-                                    for (ai, gi) in a.iter_mut().zip(g.iter()) {
-                                        *ai += gi;
+                        if let Some(rt) = &rt {
+                            let t_exec = Stopwatch::start();
+                            let out = rt.grads(&pstore, &x, &y, &mask)?;
+                            exec_s += t_exec.elapsed_s();
+                            loss_sum += out.loss_sum as f64;
+                            grads_total = Some(match grads_total.take() {
+                                None => out.grads,
+                                Some(mut acc) => {
+                                    for (a, g) in acc.iter_mut().zip(out.grads.iter()) {
+                                        for (ai, gi) in a.iter_mut().zip(g.iter()) {
+                                            *ai += gi;
+                                        }
                                     }
+                                    acc
                                 }
-                                acc
-                            }
-                        });
+                            });
+                        }
                     }
                     done.send(Ok(DoneMsg {
-                        node,
+                        node: ctx.node,
                         step_id,
                         loss_sum,
                         n_valid: n_valid_total,
+                        // In load-only mode this stays the empty tensor
+                        // list, matching the coordinator's empty store.
                         grads: Some(grads_total.unwrap_or_default()),
                         // Assembly belongs to LOAD, matching the
                         // simulator's delivery_overhead accounting.
@@ -504,80 +674,105 @@ fn worker_loop(
 }
 
 /// Fetch half of a worker: stages each planned step's PFS bytes in strict
-/// step order, throttled by the cost model, and hands `StagedStep`s to
-/// the exec thread through a bounded channel. On error it reports the
-/// root cause straight to the coordinator (`done`) and exits, closing the
-/// staged channel — which the exec half and coordinator treat as fatal.
+/// dispatch order, throttled by the cost model, and hands [`Staged`]
+/// entries to the exec thread through a bounded channel. Holdout eval
+/// batches ride the same pipeline: read once on the first eval request,
+/// cached, and re-sent (Arc clones) for every later eval — repeat evals
+/// never touch storage. On error it reports the root cause straight to
+/// the coordinator (`done`) and exits, closing the staged channel — which
+/// the exec half and coordinator treat as fatal.
 ///
 /// Shutdown audit (the fetch-death path): the root cause is sent to
 /// `done` BEFORE this thread returns (i.e. before the staged channel
 /// closes), and `done` is an unbounded FIFO — so the coordinator always
 /// receives the root cause ahead of any derived "fetch stage died" error
 /// from the exec half, whether it notices via a failed dispatch
-/// (`fetch_down`) or via a poisoned exec reply. A step this thread staged
-/// that never gets executed (partially-dispatched step on a healthy
-/// node, or a max_steps cut) cannot wedge shutdown: the exec half drops
-/// `staged_rx` before joining, which turns this thread's parked
-/// bounded-channel send into an error, and the coordinator closing
-/// `to_fetch` unblocks the `rx.recv` park.
+/// (`fetch_down`) or via a poisoned exec reply. A staged entry that never
+/// gets executed (partially-dispatched step on a healthy node, or a
+/// max_steps cut) cannot wedge shutdown: the exec half drops `staged_rx`
+/// before joining, which turns this thread's parked bounded-channel send
+/// into an error, and the coordinator closing `to_fetch` unblocks the
+/// `rx.recv` park.
 #[allow(clippy::too_many_arguments)]
 fn fetch_loop(
     node: usize,
     rx: mpsc::Receiver<FetchMsg>,
-    out: mpsc::SyncSender<StagedStep>,
-    dataset_path: &std::path::Path,
+    out: mpsc::SyncSender<Staged>,
+    store: Arc<dyn SampleStore>,
     throttle: f64,
     cost: CostModel,
     done: mpsc::Sender<Result<DoneMsg>>,
     fault_at: Option<usize>,
 ) {
-    let reader = match ShdfReader::open(dataset_path) {
-        Ok(r) => r,
-        Err(e) => {
-            let _ = done.send(Err(anyhow::anyhow!("worker {node} fetch: {e:#}")));
-            return;
-        }
-    };
-    let sb = reader.sample_bytes() as u64;
+    let store: &dyn SampleStore = store.as_ref();
+    let contig = store.chunk_contiguity();
+    let sb = store.sample_bytes() as u64;
     // Mirror of the exec thread's buffer KEYS, advanced in step order:
     // only staged-and-inserted ids enter, evicted ids leave — identical
     // to the exec side's value map, so "already buffered" decisions match
     // the serial schedule exactly.
     let mut resident: HashSet<u32> = HashSet::new();
-    while let Ok(FetchMsg { step_id, load }) = rx.recv() {
-        if fault_at == Some(step_id) {
-            let _ = done.send(Err(anyhow::anyhow!(
-                "worker {node} fetch: injected fetch fault at step {step_id}"
-            )));
-            return;
-        }
-        let t = Stopwatch::start();
-        match stage_step(&reader, &resident, &load, &cost, sb) {
-            Err(e) => {
-                let _ = done.send(Err(anyhow::anyhow!("worker {node} fetch: {e:#}")));
-                return;
+    // Holdout eval bytes, filled on the first eval request (read-ahead).
+    let mut holdout: Option<HashMap<u32, Arc<Vec<f32>>>> = None;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            FetchMsg::Step { step_id, load } => {
+                if fault_at == Some(step_id) {
+                    let _ = done.send(Err(anyhow::anyhow!(
+                        "worker {node} fetch: injected fetch fault at step {step_id}"
+                    )));
+                    return;
+                }
+                let t = Stopwatch::start();
+                match stage_step(store, &contig, &resident, &load, &cost, sb) {
+                    Err(e) => {
+                        let _ = done.send(Err(anyhow::anyhow!("worker {node} fetch: {e:#}")));
+                        return;
+                    }
+                    Ok((staged, modeled)) => {
+                        // Throttle: emulate the PFS by sleeping out the
+                        // modeled time not already spent on the real
+                        // reads. Running here, it overlaps the exec
+                        // thread's compute.
+                        if throttle > 0.0 {
+                            let spent = t.elapsed_s();
+                            let want = modeled * throttle;
+                            if want > spent {
+                                std::thread::sleep(std::time::Duration::from_secs_f64(
+                                    want - spent,
+                                ));
+                            }
+                        }
+                        for &x in &load.inserted {
+                            if staged.contains_key(&x) {
+                                resident.insert(x);
+                            }
+                        }
+                        for &x in &load.evicted {
+                            resident.remove(&x);
+                        }
+                        let fetch_wall_s = t.elapsed_s();
+                        let msg = Staged::Step(StagedStep { step_id, load, staged, fetch_wall_s });
+                        if out.send(msg).is_err() {
+                            return; // exec side gone
+                        }
+                    }
+                }
             }
-            Ok((staged, modeled)) => {
-                // Throttle: emulate the PFS by sleeping out the modeled
-                // time not already spent on the real reads. Running here,
-                // it overlaps the exec thread's compute.
-                if throttle > 0.0 {
-                    let spent = t.elapsed_s();
-                    let want = modeled * throttle;
-                    if want > spent {
-                        std::thread::sleep(std::time::Duration::from_secs_f64(want - spent));
+            FetchMsg::Eval { after_step, ids } => {
+                if holdout.is_none() {
+                    match stage_eval(store, &ids, sb as usize) {
+                        Ok(m) => holdout = Some(m),
+                        Err(e) => {
+                            let _ = done.send(Err(anyhow::anyhow!(
+                                "worker {node} fetch (eval batch): {e:#}"
+                            )));
+                            return;
+                        }
                     }
                 }
-                for &x in &load.inserted {
-                    if staged.contains_key(&x) {
-                        resident.insert(x);
-                    }
-                }
-                for &x in &load.evicted {
-                    resident.remove(&x);
-                }
-                let fetch_wall_s = t.elapsed_s();
-                if out.send(StagedStep { step_id, load, staged, fetch_wall_s }).is_err() {
+                let staged = holdout.as_ref().expect("holdout cache just filled").clone();
+                if out.send(Staged::Eval { after_step, staged }).is_err() {
                     return; // exec side gone
                 }
             }
@@ -585,11 +780,38 @@ fn fetch_loop(
     }
 }
 
+/// Read and decode the holdout eval batch. The holdout is the dataset's
+/// contiguous tail, so the common case is ONE range read (one request per
+/// shard on a sharded store); non-contiguous id lists fall back to
+/// per-sample reads.
+fn stage_eval(
+    store: &dyn SampleStore,
+    ids: &[u32],
+    sb: usize,
+) -> Result<HashMap<u32, Arc<Vec<f32>>>> {
+    let mut m = HashMap::with_capacity(ids.len());
+    let contiguous = ids.windows(2).all(|w| w[1] == w[0] + 1);
+    if contiguous && !ids.is_empty() {
+        let bytes = store.read_range_at(ids[0] as usize, ids.len())?;
+        for (k, rec) in bytes.chunks_exact(sb).enumerate() {
+            m.insert(ids[0] + k as u32, Arc::new(decode_f32(rec)));
+        }
+    } else {
+        for &x in ids {
+            m.insert(x, Arc::new(decode_f32(&store.read_sample_at(x as usize)?)));
+        }
+    }
+    Ok(m)
+}
+
 /// Read and decode one step's PFS bytes — chunked reads when the plan has
 /// them, per-sample reads otherwise — returning the staged samples plus
-/// the cost-model time those reads represent (for the throttle).
+/// the cost-model time those reads represent (for the throttle). Offsets
+/// come from the store's contiguity map, so seek distances are charged in
+/// the store's own (virtual) address space.
 fn stage_step(
-    reader: &ShdfReader,
+    store: &dyn SampleStore,
+    contig: &Contiguity,
     resident: &HashSet<u32>,
     load: &NodeStepLoad,
     cost: &CostModel,
@@ -600,33 +822,34 @@ fn stage_step(
     if !load.chunks.is_empty() {
         let mut pos: Option<u64> = None;
         for c in &load.chunks {
-            let bytes = reader.read_range_at(c.lo as usize, c.span() as usize)?;
-            let offset = reader.offset_of(c.lo as usize);
+            let bytes = store.read_range_at(c.lo as usize, c.span() as usize)?;
+            let offset = contig.offset_of(c.lo);
             let jump = pos.map(|p| p.abs_diff(offset)).unwrap_or(0);
             modeled += cost.pfs_read(c.span() as u64 * sb, jump);
             pos = Some(offset + c.span() as u64 * sb);
             for (i, rec) in bytes.chunks_exact(sb as usize).enumerate() {
-                staged.insert(c.lo + i as u32, Arc::new(ShdfReader::decode_f32(rec)));
+                staged.insert(c.lo + i as u32, Arc::new(decode_f32(rec)));
             }
         }
     } else {
         let mut pos: Option<u64> = None;
         for &x in load.samples.iter().filter(|&&x| !resident.contains(&x)) {
-            let bytes = reader.read_sample_at(x as usize)?;
-            let offset = reader.offset_of(x as usize);
+            let bytes = store.read_sample_at(x as usize)?;
+            let offset = contig.offset_of(x);
             let jump = pos.map(|p| p.abs_diff(offset)).unwrap_or(0);
             modeled += cost.pfs_read(sb, jump);
             pos = Some(offset + sb);
-            staged.insert(x, Arc::new(ShdfReader::decode_f32(&bytes)));
+            staged.insert(x, Arc::new(decode_f32(&bytes)));
         }
     }
     Ok((staged, modeled))
 }
 
-/// Assemble an eval batch straight from the file/buffer (no staging).
+/// Assemble an eval batch from the staged holdout bytes (falling back to
+/// a direct store read for any id the stage somehow missed).
 fn assemble_batch(
-    reader: &ShdfReader,
-    buffer: &HashMap<u32, Arc<Vec<f32>>>,
+    store: &dyn SampleStore,
+    staged: &HashMap<u32, Arc<Vec<f32>>>,
     ids: &[u32],
     b: usize,
     img: usize,
@@ -637,9 +860,9 @@ fn assemble_batch(
     let mut mask = vec![0.0f32; b];
     let mut nv = 0.0;
     for (i, &sid) in ids.iter().enumerate().take(b) {
-        let rec = match buffer.get(&sid) {
+        let rec = match staged.get(&sid) {
             Some(v) => v.clone(),
-            None => Arc::new(ShdfReader::decode_f32(&reader.read_sample_at(sid as usize)?)),
+            None => Arc::new(decode_f32(&store.read_sample_at(sid as usize)?)),
         };
         let (xs, ys) = synth::split_record(&rec);
         x[i * img2..(i + 1) * img2].copy_from_slice(xs);
@@ -648,4 +871,30 @@ fn assemble_batch(
         nv += 1.0;
     }
     Ok((x, y, mask, nv))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_depth_tracks_load_compute_ratio() {
+        assert_eq!(auto_depth(0.0, 1.0), 1);
+        assert_eq!(auto_depth(1.0, 0.0), 1);
+        assert_eq!(auto_depth(0.5, 1.0), 1);
+        assert_eq!(auto_depth(1.0, 1.0), 1);
+        assert_eq!(auto_depth(2.5, 1.0), 3);
+        assert_eq!(auto_depth(100.0, 1.0), MAX_AUTO_PREFETCH);
+    }
+
+    #[test]
+    fn prefetch_mode_depths_and_display() {
+        assert_eq!(PrefetchMode::Fixed(0).initial_depth(), 0);
+        assert_eq!(PrefetchMode::Fixed(3).initial_depth(), 3);
+        assert_eq!(PrefetchMode::Auto.initial_depth(), 1);
+        assert_eq!(PrefetchMode::Fixed(0).stage_bound(), 1);
+        assert_eq!(PrefetchMode::Auto.stage_bound(), MAX_AUTO_PREFETCH);
+        assert_eq!(PrefetchMode::Fixed(2).to_string(), "2");
+        assert_eq!(PrefetchMode::Auto.to_string(), "auto");
+    }
 }

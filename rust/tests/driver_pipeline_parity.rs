@@ -17,8 +17,8 @@ use solar::data::synth;
 use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
 use solar::storage::pfs::CostModel;
-use solar::storage::shdf::ShdfReader;
-use solar::train::driver::{train, TrainConfig};
+use solar::storage::store::{open_store, SampleStore};
+use solar::train::driver::{train, PrefetchMode, TrainConfig, MAX_AUTO_PREFETCH};
 
 fn artifacts() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -35,16 +35,34 @@ fn have_artifacts() -> bool {
     true
 }
 
+fn parity_spec(n: usize, name: &str) -> DatasetSpec {
+    let mut spec = DatasetSpec::paper("cd17").unwrap();
+    spec.n_samples = n;
+    spec.id = name.into();
+    spec
+}
+
 fn dataset(n: usize, name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join("solar_pipeline_parity");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join(format!("{name}_{n}.shdf"));
-    let ok = ShdfReader::open(&path).map(|r| r.n_samples() == n).unwrap_or(false);
+    let ok = open_store(&path).map(|s| s.n_samples() == n).unwrap_or(false);
     if !ok {
-        let mut spec = DatasetSpec::paper("cd17").unwrap();
-        spec.n_samples = n;
-        spec.id = name.into();
-        synth::generate_dataset(&path, &spec, 77).unwrap();
+        synth::generate_dataset(&path, &parity_spec(n, name), 77).unwrap();
+    }
+    path
+}
+
+/// Same samples as [`dataset`] (same spec/seed), laid out as a sharded
+/// directory instead of one file.
+fn sharded_dataset(n: usize, name: &str, shards: usize) -> PathBuf {
+    let dir = std::env::temp_dir().join("solar_pipeline_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}_{n}_x{shards}"));
+    let ok = open_store(&path).map(|s| s.n_samples() == n).unwrap_or(false);
+    if !ok {
+        let _ = std::fs::remove_dir_all(&path);
+        synth::generate_dataset_sharded(&path, &parity_spec(n, name), 77, shards).unwrap();
     }
     path
 }
@@ -69,7 +87,7 @@ fn tc(ds: &str, loader: &str, prefetch: usize, throttle: f64) -> TrainConfig {
             buffer_capacity: n_train / 4 / 2,
             cost: CostModel::default(),
         },
-        dataset_path: path,
+        store: open_store(&path).unwrap(),
         artifacts_dir: artifacts(),
         policy: LoaderPolicy::by_name(loader).unwrap(),
         dense: DenseImpl::Xla,
@@ -78,9 +96,10 @@ fn tc(ds: &str, loader: &str, prefetch: usize, throttle: f64) -> TrainConfig {
         eval_every: 0,
         max_steps: 0,
         holdout,
-        prefetch,
+        prefetch: PrefetchMode::Fixed(prefetch),
         epoch_drain: false,
         fetch_fault: None,
+        load_only: false,
     }
 }
 
@@ -211,6 +230,97 @@ fn cross_epoch_prefetch_shrinks_the_boundary_bubble() {
         "cross-epoch wall {} should beat per-epoch-drain wall {}",
         cross.total_wall_s,
         drained.total_wall_s
+    );
+}
+
+#[test]
+fn sharded_store_trains_bit_identically_to_single_file() {
+    // THE storage-API acceptance criterion: same config/seed, same bytes,
+    // different layout (one file vs 5 shards — uneven tail shard, chunk
+    // aggregation split at shard boundaries) → bit-identical TrainReports
+    // (params, losses, per-epoch stats). solar covers the chunked-read
+    // path, pytorch the per-sample path.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    for loader in ["solar", "pytorch"] {
+        let single = train(&tc("shardpar", loader, 1, 0.0)).unwrap();
+        let mut sharded_cfg = tc("shardpar", loader, 1, 0.0);
+        sharded_cfg.store = open_store(&sharded_dataset(112, "shardpar", 5)).unwrap();
+        let sharded = train(&sharded_cfg).unwrap();
+        assert_eq!(single.steps, sharded.steps, "{loader}");
+        assert_eq!(single.hits, sharded.hits, "{loader}");
+        assert_eq!(single.pfs_samples, sharded.pfs_samples, "{loader}");
+        assert_eq!(single.epoch_stats, sharded.epoch_stats, "{loader}");
+        for (a, b) in single.points.iter().zip(sharded.points.iter()) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "{loader}: loss diverged at step {}",
+                a.step
+            );
+        }
+        assert_eq!(single.final_params, sharded.final_params, "{loader}: params must be bit-identical");
+    }
+}
+
+#[test]
+fn eval_prefetch_matches_serial_eval_bit_for_bit() {
+    // Eval batches ride the fetch pipeline now (staged ahead, cached
+    // after the first read) — the reported val losses and the trained
+    // params must be bit-identical to the strictly serial schedule at
+    // every depth.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mk = |depth: usize| {
+        let mut c = tc("evalpar", "solar", depth, 0.0);
+        c.eval_every = 2;
+        c
+    };
+    let serial = train(&mk(0)).unwrap();
+    assert!(
+        serial.points.iter().any(|p| !p.val_loss.is_nan()),
+        "eval must actually run"
+    );
+    for depth in [1usize, 3] {
+        let pipe = train(&mk(depth)).unwrap();
+        assert_eq!(serial.points.len(), pipe.points.len(), "depth {depth}");
+        for (a, b) in serial.points.iter().zip(pipe.points.iter()) {
+            assert_eq!(
+                a.val_loss.to_bits(),
+                b.val_loss.to_bits(),
+                "depth {depth}: val loss diverged at step {}",
+                a.step
+            );
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "depth {depth}");
+        }
+        assert_eq!(serial.final_params, pipe.final_params, "depth {depth}");
+    }
+}
+
+#[test]
+fn auto_prefetch_trains_identically_and_picks_a_sane_depth() {
+    // PrefetchMode::Auto measures epoch 0 (at depth 1) and re-picks the
+    // depth for the rest of the run — the schedule, stats, and params
+    // must match any fixed depth bit for bit.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let fixed = train(&tc("autopf", "solar", 1, 0.0)).unwrap();
+    let mut c = tc("autopf", "solar", 0, 0.0);
+    c.prefetch = PrefetchMode::Auto;
+    let auto = train(&c).unwrap();
+    assert_eq!(fixed.steps, auto.steps);
+    assert_eq!(fixed.epoch_stats, auto.epoch_stats);
+    assert_eq!(fixed.final_params, auto.final_params);
+    assert!(
+        (1..=MAX_AUTO_PREFETCH).contains(&auto.prefetch),
+        "auto depth {} out of range",
+        auto.prefetch
     );
 }
 

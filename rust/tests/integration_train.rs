@@ -10,8 +10,8 @@ use solar::data::synth;
 use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
 use solar::storage::pfs::CostModel;
-use solar::storage::shdf::ShdfReader;
-use solar::train::driver::{train, TrainConfig};
+use solar::storage::store::{open_store, SampleStore};
+use solar::train::driver::{train, PrefetchMode, TrainConfig};
 
 fn artifacts() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -34,7 +34,7 @@ fn dataset(n: usize, name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join("solar_integration_train");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join(format!("{name}_{n}.shdf"));
-    let ok = ShdfReader::open(&path).map(|r| r.n_samples() == n).unwrap_or(false);
+    let ok = open_store(&path).map(|s| s.n_samples() == n).unwrap_or(false);
     if !ok {
         let mut spec = DatasetSpec::paper("cd17").unwrap();
         spec.n_samples = n;
@@ -58,7 +58,7 @@ fn tc(path: PathBuf, n_train: usize, loader: &str, n_nodes: usize, epochs: usize
             buffer_capacity: n_train / 2 / n_nodes.max(1),
             cost: CostModel::default(),
         },
-        dataset_path: path,
+        store: open_store(&path).unwrap(),
         artifacts_dir: artifacts(),
         policy: LoaderPolicy::by_name(loader).unwrap(),
         dense: DenseImpl::Xla,
@@ -67,9 +67,10 @@ fn tc(path: PathBuf, n_train: usize, loader: &str, n_nodes: usize, epochs: usize
         eval_every: 0,
         max_steps: steps,
         holdout: 16,
-        prefetch: 1,
+        prefetch: PrefetchMode::Fixed(1),
         epoch_drain: false,
         fetch_fault: None,
+        load_only: false,
     }
 }
 

@@ -1,0 +1,241 @@
+//! Shared conformance suite for every [`SampleStore`] backend: the
+//! single-file SHDF container, the sharded dataset directory, and the
+//! in-memory store are generated from the SAME spec/seed and must be
+//! byte-for-byte interchangeable — same reads, same errors, same
+//! concurrency guarantees — and must drive the training pipeline to the
+//! same schedule (checked here via the driver's PJRT-free `load_only`
+//! mode, so this runs everywhere; the full bit-identity of trained
+//! params lives in `driver_pipeline_parity.rs`, which needs artifacts).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use solar::config::RunConfig;
+use solar::data::spec::DatasetSpec;
+use solar::data::synth;
+use solar::loader::LoaderPolicy;
+use solar::runtime::executable::DenseImpl;
+use solar::storage::pfs::CostModel;
+use solar::storage::store::{decode_f32, open_store, SampleStore};
+use solar::train::driver::{train, PrefetchMode, TrainConfig};
+use solar::util::rng::Rng;
+
+const N: usize = 56;
+const SEED: u64 = 1234;
+
+fn spec() -> DatasetSpec {
+    let mut s = DatasetSpec::paper("cd17").unwrap();
+    s.n_samples = N;
+    s.id = "conformance".into();
+    s
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("solar_store_conformance");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// The three backends over identical bytes, labeled. Generation runs at
+/// most once per process (tests share these fixtures and run in
+/// parallel; concurrent writers to one path would corrupt it).
+fn backends() -> Vec<(&'static str, Arc<dyn SampleStore>)> {
+    static GEN: std::sync::OnceLock<()> = std::sync::OnceLock::new();
+    GEN.get_or_init(|| {
+        let spec = spec();
+        let single = tmp("single.shdf");
+        let ok = open_store(&single).map(|s| s.n_samples() == N).unwrap_or(false);
+        if !ok {
+            synth::generate_dataset(&single, &spec, SEED).unwrap();
+        }
+        let sharded = tmp("sharded");
+        let ok = open_store(&sharded).map(|s| s.n_samples() == N).unwrap_or(false);
+        if !ok {
+            let _ = std::fs::remove_dir_all(&sharded);
+            synth::generate_dataset_sharded(&sharded, &spec, SEED, 3).unwrap();
+        }
+    });
+    vec![
+        ("single-file", open_store(&tmp("single.shdf")).unwrap()),
+        ("sharded", open_store(&tmp("sharded")).unwrap()),
+        ("in-memory", Arc::new(synth::generate_dataset_mem(&spec(), SEED))),
+    ]
+}
+
+/// Ground truth: record `i` exactly as the generator produces it.
+fn expected(i: usize) -> Vec<f32> {
+    synth::generate_record(&mut Rng::new(SEED).fork(i as u64))
+}
+
+#[test]
+fn all_backends_serve_identical_metadata_and_bytes() {
+    for (name, store) in backends() {
+        assert_eq!(store.n_samples(), N, "{name}");
+        assert_eq!(store.sample_bytes(), 4 * 64 * 64 * 4, "{name}");
+        assert_eq!(store.shape(), &[4, 64, 64], "{name}");
+        assert_eq!(store.dataset_name(), "conformance", "{name}");
+        for i in [0usize, 1, 17, 18, 19, 37, 38, N - 1] {
+            let got = decode_f32(&store.read_sample_at(i).unwrap());
+            assert_eq!(got, expected(i), "{name}: sample {i}");
+        }
+    }
+}
+
+#[test]
+fn range_reads_match_per_sample_reads_everywhere() {
+    for (name, store) in backends() {
+        let sb = store.sample_bytes();
+        // [17, 23): crosses the 3-shard layout's first boundary (shards
+        // of ceil(56/3)=19 samples: 19+19+18).
+        for (start, count) in [(0usize, 5usize), (17, 6), (36, 4), (0, N), (N - 1, 1)] {
+            let bytes = store.read_range_at(start, count).unwrap();
+            assert_eq!(bytes.len(), count * sb, "{name}");
+            for k in 0..count {
+                assert_eq!(
+                    decode_f32(&bytes[k * sb..(k + 1) * sb]),
+                    expected(start + k),
+                    "{name}: range [{start},+{count}) sample {k}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn out_of_range_and_zero_length_semantics_agree() {
+    for (name, store) in backends() {
+        assert!(store.read_sample_at(N).is_err(), "{name}: sample N must error");
+        assert!(store.read_sample_at(N + 100).is_err(), "{name}");
+        assert!(store.read_range_at(N - 1, 2).is_err(), "{name}: range past end must error");
+        assert!(store.read_range_at(N, 1).is_err(), "{name}");
+        // Zero-length reads: Ok up to and at the end, error past it.
+        assert!(store.read_range_into_at(0, 0, &mut []).is_ok(), "{name}");
+        assert!(store.read_range_into_at(N, 0, &mut []).is_ok(), "{name}");
+        assert!(store.read_range_into_at(N + 1, 0, &mut []).is_err(), "{name}");
+    }
+}
+
+#[test]
+fn concurrent_reads_through_one_shared_handle() {
+    // The trait contract the fetch/exec threads rely on: positioned reads
+    // take &self and race-free through one shared handle.
+    for (name, store) in backends() {
+        let store: &dyn SampleStore = store.as_ref();
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                s.spawn(move || {
+                    for rep in 0..25 {
+                        let i = (t * 13 + rep * 7) % N;
+                        let got = decode_f32(&store.read_sample_at(i).unwrap());
+                        assert_eq!(got, expected(i), "{name}: thread {t} sample {i}");
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[test]
+fn contiguity_maps_describe_each_layout() {
+    for (name, store) in backends() {
+        let c = store.chunk_contiguity();
+        match name {
+            "sharded" => assert_eq!(c.n_regions(), 3, "{name}"),
+            _ => assert_eq!(c.n_regions(), 1, "{name}"),
+        }
+        // Within a region, consecutive samples are sample_bytes apart;
+        // offsets never decrease across the id space.
+        let sb = store.sample_bytes() as u64;
+        let mut prev = None;
+        for i in 0..N as u32 {
+            let off = c.offset_of(i);
+            if let Some(p) = prev {
+                assert!(off > p, "{name}: offsets must increase");
+                if c.region_end(i - 1) != i {
+                    assert_eq!(off - p, sb, "{name}: contiguous inside a region");
+                }
+            }
+            prev = Some(off);
+        }
+    }
+}
+
+#[test]
+fn open_store_detects_layouts() {
+    let _ = backends(); // ensure datasets exist
+    let single = open_store(&tmp("single.shdf")).unwrap();
+    let sharded = open_store(&tmp("sharded")).unwrap();
+    assert_eq!(single.chunk_contiguity().n_regions(), 1);
+    assert_eq!(sharded.chunk_contiguity().n_regions(), 3);
+    assert!(open_store(&tmp("nope.shdf")).is_err());
+}
+
+/// Load-only training config over a given store (no artifacts, no PJRT).
+fn load_only_tc(store: Arc<dyn SampleStore>, loader: &str, prefetch: PrefetchMode) -> TrainConfig {
+    let holdout = 8usize;
+    let mut run_spec = spec();
+    run_spec.n_samples = N - holdout;
+    TrainConfig {
+        run: RunConfig {
+            spec: run_spec,
+            n_nodes: 2,
+            local_batch: 8,
+            n_epochs: 2,
+            seed: 9,
+            buffer_capacity: 12,
+            cost: CostModel::default(),
+        },
+        store,
+        artifacts_dir: PathBuf::from("artifacts-not-needed"),
+        policy: LoaderPolicy::by_name(loader).unwrap(),
+        dense: DenseImpl::Xla,
+        lr: 0.08,
+        throttle: 0.0,
+        eval_every: 0,
+        max_steps: 0,
+        holdout,
+        prefetch,
+        epoch_drain: false,
+        fetch_fault: None,
+        load_only: true,
+    }
+}
+
+#[test]
+fn load_only_driver_runs_the_same_schedule_on_every_backend() {
+    // The whole pipeline — plan → fetch threads → staging → buffer mirror
+    // → batch assembly — against all three backends, no PJRT: step
+    // counts, hit/fetch totals, and per-epoch stats must be identical.
+    for loader in ["solar", "pytorch+lru"] {
+        let mut reports = Vec::new();
+        for (name, store) in backends() {
+            let r = train(&load_only_tc(store, loader, PrefetchMode::Fixed(1))).unwrap();
+            assert_eq!(r.steps, 2 * (48 / 16), "{name} {loader}");
+            assert_eq!(r.epochs, 2, "{name} {loader}");
+            assert!(r.points.iter().all(|p| p.train_loss == 0.0), "{name} {loader}");
+            reports.push((name, r));
+        }
+        let (base_name, base) = &reports[0];
+        for (name, r) in &reports[1..] {
+            assert_eq!(base.steps, r.steps, "{base_name} vs {name} ({loader})");
+            assert_eq!(base.hits, r.hits, "{base_name} vs {name} ({loader})");
+            assert_eq!(base.pfs_samples, r.pfs_samples, "{base_name} vs {name} ({loader})");
+            assert_eq!(base.epoch_stats, r.epoch_stats, "{base_name} vs {name} ({loader})");
+        }
+    }
+}
+
+#[test]
+fn load_only_schedule_is_depth_invariant() {
+    // Prefetch depth (including Auto) changes only timing; in load-only
+    // mode the schedule fingerprint must stay fixed on every backend.
+    let (_, store) = backends().remove(1); // sharded: the interesting layout
+    let base = train(&load_only_tc(store.clone(), "solar", PrefetchMode::Fixed(0))).unwrap();
+    for mode in [PrefetchMode::Fixed(2), PrefetchMode::Auto] {
+        let r = train(&load_only_tc(store.clone(), "solar", mode)).unwrap();
+        assert_eq!(base.steps, r.steps, "{mode}");
+        assert_eq!(base.hits, r.hits, "{mode}");
+        assert_eq!(base.pfs_samples, r.pfs_samples, "{mode}");
+        assert_eq!(base.epoch_stats, r.epoch_stats, "{mode}");
+    }
+}
