@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
                 epoch_drain: false,
                 fetch_fault: None,
                 load_only: false,
+                io_threads: 0, // auto: SOLAR_IO_THREADS or the machine default
             };
             let r = train(&tc)?;
             let b = *base.get_or_insert(r.total_wall_s);

@@ -91,6 +91,7 @@ fn main() -> anyhow::Result<()> {
             epoch_drain: false,
             fetch_fault: None,
             load_only: false,
+            io_threads: 0, // auto: SOLAR_IO_THREADS or the machine default
         };
         println!(
             "\n=== training with {loader} loader ({} samples, {} nodes, {} epochs, throttled PFS) ===",

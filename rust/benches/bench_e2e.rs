@@ -68,6 +68,7 @@ fn main() {
             epoch_drain: false,
             fetch_fault: None,
             load_only: false,
+            io_threads: 0, // auto: SOLAR_IO_THREADS or the machine default
         };
         suite.bench_units(
             &format!(

@@ -46,6 +46,19 @@ fn main() {
         });
     }
 
+    // Parallel-I/O cost model: each node's request stream dealt across 4
+    // concurrent PFS stream clocks (the fetch pool's width). Recorded
+    // from the first measured run, so the committed baseline captures the
+    // parallel-I/O model's throughput alongside the serial-stream runs.
+    {
+        let mut c = cfg(n, 8, 0.6, epochs);
+        c.cost.io_parallelism = 4;
+        let policy = LoaderPolicy::solar();
+        suite.bench_units(&format!("simulate solar-pario n={n} 8nodes io=4"), samples_scheduled, || {
+            simulate(&c, &policy)
+        });
+    }
+
     suite.finish();
     // Baseline for future perf PRs: scheduled samples/second per preset
     // (units_per_s in each record). Lands at the workspace root when run

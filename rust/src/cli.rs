@@ -113,7 +113,8 @@ COMMANDS
             --dataset cd17 [--scale 1000] --out PATH [--seed S]
             [--shards N] (write a sharded dataset: a directory of N SHDF
             shards + manifest.json, byte-identical samples to the single
-            file; --out is the directory)
+            file; --out is the directory. Shards are written in parallel
+            — SOLAR_IO_THREADS workers — with byte-identical output)
   verify-store  read-check a dataset (single-file or sharded)
             --data PATH [--ref PATH] (byte-compare against a second
             store; non-zero exit on mismatch)
@@ -128,6 +129,10 @@ COMMANDS
             [--dense pallas|xla] [--curve out.csv]
             [--prefetch 1|auto] (fetch-ahead depth; 0 = serial loading;
             auto = pick the depth from epoch 0's load:compute ratio)
+            [--io-threads N] (concurrent I/O workers per node's fetch
+            stage, and the modeled PFS stream count; 0 = auto from
+            SOLAR_IO_THREADS or the machine; 1 = serial fetch. Changes
+            only wall time — the trained model is bit-identical)
             [--epoch-drain] (drain the pipeline at epoch boundaries
             instead of prefetching across them; A/B the boundary bubble)
             [--load-only] (run the loading pipeline without PJRT/grads —

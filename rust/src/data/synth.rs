@@ -12,7 +12,7 @@
 //!   ch2 = object phase (target φ), ch3 = reserved/zero padding (brings the
 //!   record to 64 KiB at N=64, matching the paper's 65 KB CD images).
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::path::Path;
 
 use crate::data::fft::{fft2_inplace, fftshift2, Cpx};
@@ -20,6 +20,7 @@ use crate::data::spec::DatasetSpec;
 use crate::storage::shard::{ShardManifest, ShardedWriter};
 use crate::storage::shdf::{ShdfHeader, ShdfWriter};
 use crate::storage::store::MemStore;
+use crate::util::pool::parallel_map_workers;
 use crate::util::rng::Rng;
 
 /// Image side length (power of two for the FFT).
@@ -127,30 +128,33 @@ pub fn split_record(rec: &[f32]) -> (&[f32], &[f32]) {
     (&rec[..N * N], &rec[N * N..3 * N * N])
 }
 
-/// Stream a spec's records (record `i` = deterministic `fork(i)` off the
-/// seed) into `emit`. Only CD-shaped records ([4,64,64]) are generated
-/// with real physics; other specs get shape-correct smooth-field records
-/// (their loading behaviour is byte-identical, which is all the loaders
-/// see). Every dataset materializer — single-file, sharded, in-memory —
-/// goes through this one generator, so the three layouts hold
-/// byte-identical samples by construction.
+/// Record `i` of a spec: a deterministic `fork(i)` off the seed, so any
+/// record is computable independently of every other — what lets the
+/// sharded generator write shards concurrently. Only CD-shaped records
+/// ([4,64,64]) are generated with real physics; other specs get
+/// shape-correct smooth-field records (their loading behaviour is
+/// byte-identical, which is all the loaders see).
+fn record_at(spec: &DatasetSpec, root: &Rng, i: usize) -> Vec<f32> {
+    let mut rng = root.fork(i as u64);
+    if spec.shape == vec![CHANNELS, N, N] {
+        generate_record(&mut rng)
+    } else {
+        // Non-CD specs: volumetric smooth noise, correct byte size.
+        (0..spec.sample_bytes / 4).map(|_| rng.gen_f32()).collect()
+    }
+}
+
+/// Stream a spec's records into `emit`. Every dataset materializer —
+/// single-file, sharded, in-memory — goes through [`record_at`], so all
+/// layouts hold byte-identical samples by construction.
 fn for_each_record(
     spec: &DatasetSpec,
     seed: u64,
     mut emit: impl FnMut(&[f32]) -> Result<()>,
 ) -> Result<()> {
     let root = Rng::new(seed);
-    let elems = spec.sample_bytes / 4;
-    let cd = spec.shape == vec![CHANNELS, N, N];
     for i in 0..spec.n_samples {
-        let mut rng = root.fork(i as u64);
-        if cd {
-            emit(&generate_record(&mut rng))?;
-        } else {
-            // Non-CD specs: volumetric smooth noise, correct byte size.
-            let field: Vec<f32> = (0..elems).map(|_| rng.gen_f32()).collect();
-            emit(&field)?;
-        }
+        emit(&record_at(spec, &root, i))?;
     }
     Ok(())
 }
@@ -174,18 +178,77 @@ pub fn generate_dataset(path: &Path, spec: &DatasetSpec, seed: u64) -> Result<Sh
 
 /// Materialize the same dataset as a sharded directory (`n_shards` SHDF
 /// shards + manifest): sample-for-sample byte-identical to
-/// [`generate_dataset`] with the same spec/seed.
+/// [`generate_dataset`] with the same spec/seed. Shards are written
+/// **concurrently** (up to [`crate::loader::io::io_threads`] pool
+/// workers): `ShardedWriter::balanced_sizes` fixes every shard's sample
+/// range up front and each record regenerates independently
+/// ([`record_at`]), so the parallel writers produce the exact files —
+/// and the exact manifest — the serial rolling writer would.
 pub fn generate_dataset_sharded(
     dir: &Path,
     spec: &DatasetSpec,
     seed: u64,
     n_shards: usize,
 ) -> Result<ShardManifest> {
-    // Balanced split: exactly n_shards shards (capped at one sample per
-    // shard), sizes differing by at most one.
-    let mut w = ShardedWriter::create_balanced(dir, spec_header(spec), spec.n_samples, n_shards)?;
-    for_each_record(spec, seed, |rec| w.append_f32(rec))?;
-    w.finish()
+    generate_dataset_sharded_workers(dir, spec, seed, n_shards, crate::loader::io::io_threads())
+}
+
+/// [`generate_dataset_sharded`] with an explicit worker count
+/// (`workers <= 1` runs the serial rolling writer — the byte-identity
+/// reference the parallel path is tested against).
+pub fn generate_dataset_sharded_workers(
+    dir: &Path,
+    spec: &DatasetSpec,
+    seed: u64,
+    n_shards: usize,
+    workers: usize,
+) -> Result<ShardManifest> {
+    let sizes = ShardedWriter::balanced_sizes(spec.n_samples, n_shards);
+    if workers <= 1 || sizes.len() <= 1 || spec.n_samples == 0 {
+        // Serial reference: one rolling writer over the shared record
+        // stream (also the degenerate-total path, where the planned
+        // single shard may stay empty and produce no file).
+        let mut w =
+            ShardedWriter::create_balanced(dir, spec_header(spec), spec.n_samples, n_shards)?;
+        for_each_record(spec, seed, |rec| w.append_f32(rec))?;
+        return w.finish();
+    }
+
+    std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+    let header = spec_header(spec);
+    let root = Rng::new(seed);
+    // (shard index, first record, count) per shard — fixed before any
+    // byte is written, which is what makes the shards independent.
+    let mut ranges = Vec::with_capacity(sizes.len());
+    let mut start = 0usize;
+    for (k, &sz) in sizes.iter().enumerate() {
+        ranges.push((k, start, sz));
+        start += sz;
+    }
+    debug_assert_eq!(start, spec.n_samples, "balanced sizes must cover the dataset");
+    let results = parallel_map_workers(workers.min(ranges.len()), ranges, |(k, start, sz)| {
+        let path = dir.join(ShardedWriter::shard_file(k));
+        let mut w = ShdfWriter::create(&path, header.clone())?;
+        for i in start..start + sz {
+            w.append_f32(&record_at(spec, &root, i))?;
+        }
+        let h = w.finish()?;
+        Ok::<_, anyhow::Error>((ShardedWriter::shard_file(k), h.n_samples))
+    });
+    let mut shards = Vec::with_capacity(sizes.len());
+    for r in results {
+        shards.push(r?);
+    }
+    let manifest = ShardManifest {
+        name: header.name,
+        sample_bytes: header.sample_bytes,
+        shape: header.shape,
+        dtype: header.dtype,
+        n_samples: spec.n_samples,
+        shards,
+    };
+    manifest.save(dir)?;
+    Ok(manifest)
 }
 
 /// Materialize the same dataset in memory: sample-for-sample
@@ -258,6 +321,42 @@ mod tests {
             }
         }
         assert!(max_step < 0.25, "max_step={max_step}");
+    }
+
+    #[test]
+    fn parallel_sharded_generation_is_byte_identical_to_serial() {
+        // The parallel gen-data acceptance check: N shards written
+        // concurrently must produce the exact files (names + bytes) and
+        // the exact manifest of the serial rolling writer — including an
+        // uneven tail (11 samples over 4 shards → 3+3+3+2).
+        let base = std::env::temp_dir().join("solar_synth_par_shards");
+        let _ = std::fs::remove_dir_all(&base);
+        let spec = DatasetSpec::paper("cd17").unwrap().scaled(23_899); // 11 samples
+        assert_eq!(spec.n_samples, 11);
+        let serial_dir = base.join("serial");
+        let par_dir = base.join("parallel");
+        let m1 = generate_dataset_sharded_workers(&serial_dir, &spec, 7, 4, 1).unwrap();
+        let m4 = generate_dataset_sharded_workers(&par_dir, &spec, 7, 4, 4).unwrap();
+        assert_eq!(m1, m4, "manifests must match");
+        assert_eq!(m1.shards.iter().map(|(_, n)| *n).collect::<Vec<_>>(), vec![3, 3, 3, 2]);
+        let mut names: Vec<String> = std::fs::read_dir(&serial_dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        names.sort();
+        let mut par_names: Vec<String> = std::fs::read_dir(&par_dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        par_names.sort();
+        assert_eq!(names, par_names, "same file set");
+        for name in &names {
+            let a = std::fs::read(serial_dir.join(name)).unwrap();
+            let b = std::fs::read(par_dir.join(name)).unwrap();
+            // assert! (not assert_eq!) so a mismatch doesn't dump the
+            // whole shard's bytes into the failure message.
+            assert!(a == b, "{name} must be byte-identical");
+        }
     }
 
     #[test]

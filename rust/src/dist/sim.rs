@@ -9,10 +9,13 @@
 //! simulator additionally charges the costs that real runs pay in wall
 //! clock:
 //!
-//! * Each node issues its step's PFS requests as one ordered stream; the
-//!   first request of a step pays no seek, later requests pay the
-//!   cost-model seek for their byte distance from the previous request's
-//!   end (identical to the driver's throttle accounting).
+//! * Each node deals its step's PFS requests across
+//!   `CostModel::io_parallelism` concurrent streams (the fetch pool's
+//!   worker count) via the deterministic [`StreamClocks`] schedule: each
+//!   request goes to the least-busy stream and pays the seek from that
+//!   stream's own previous request end, and the step's PFS time is the
+//!   slowest stream (identical to the driver's throttle accounting; one
+//!   stream reproduces the classic serial accounting bit for bit).
 //! * PFS time is scaled by the cluster-level contention factor
 //!   ([`crate::storage::pfs::CostModel::pfs_contention`]) — the driver's
 //!   thread-per-node workers contend for real.
@@ -42,6 +45,7 @@
 use crate::config::RunConfig;
 use crate::loader::engine::LoaderEngine;
 use crate::loader::LoaderPolicy;
+use crate::storage::pfs::StreamClocks;
 
 pub use crate::dist::report::{EpochSim, SimReport};
 
@@ -81,6 +85,9 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
     // fill/drain, not every epoch.
     let mut fetch_done = vec![0.0f64; cfg.n_nodes];
     let mut barrier = 0.0f64;
+    // Reused across every (step × node): the accounting loop stays
+    // allocation-free (§module docs).
+    let mut streams = StreamClocks::new(cost.io_parallelism);
 
     for pos in 0..cfg.n_epochs {
         let epoch_src = report.epoch_order[pos];
@@ -105,18 +112,15 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
             // This step's allreduce barrier: max over nodes of exec end.
             let mut step_exec_end = 0.0f64;
             for (k, nl) in sl.nodes.iter().enumerate() {
-                // One request stream per node per step; charge seeks for
-                // discontiguities, none for the stream's first request.
-                let mut pfs_t = 0.0f64;
-                let mut stream_pos: Option<u64> = None;
+                // `io_parallelism` request streams per node per step
+                // (deterministic least-busy dealing; seeks charged per
+                // stream, none for a stream's first request). One stream
+                // is the classic serial accounting bit for bit.
+                streams.reset();
                 for r in &nl.pfs_reqs {
-                    let jump = match stream_pos {
-                        None => 0,
-                        Some(p) => p.abs_diff(r.offset),
-                    };
-                    pfs_t += cost.pfs_read(r.len, jump);
-                    stream_pos = Some(r.offset + r.len);
+                    streams.charge(cost, r.offset, r.len);
                 }
+                let pfs_t = streams.wall_s();
                 // Hideable share: byte movement the driver's fetch thread
                 // performs (PFS streams, remote fetches). Hit
                 // materialization and delivery/assembly stay on the exec
@@ -426,6 +430,42 @@ mod tests {
             );
             assert!(r.hidden_total_s() >= 0.0);
         }
+    }
+
+    #[test]
+    fn io_parallelism_speeds_load_but_never_touches_the_schedule() {
+        // 4 modeled streams per node: every schedule-level number (hits,
+        // remote, PFS samples/requests, chunked fraction, probes) must be
+        // identical to the serial-stream model — parallel I/O changes
+        // modeled TIME only — and the PyTorch loader (many requests per
+        // step) must get strictly faster loading.
+        let c1 = cfg(512, 4, 8, 3, 32);
+        let mut c4 = c1.clone();
+        c4.cost.io_parallelism = 4;
+        for name in ["pytorch", "solar", "nopfs"] {
+            let policy = LoaderPolicy::by_name(name).unwrap();
+            let a = simulate(&c1, &policy);
+            let b = simulate(&c4, &policy);
+            assert_eq!(a.sample_step_fetches, b.sample_step_fetches, "{name}");
+            assert_eq!(a.early_batch_sizes, b.early_batch_sizes, "{name}");
+            for (ea, eb) in a.epochs.iter().zip(b.epochs.iter()) {
+                assert_eq!(ea.hits, eb.hits, "{name} epoch {}", ea.epoch_pos);
+                assert_eq!(ea.remote_samples, eb.remote_samples, "{name}");
+                assert_eq!(ea.pfs_samples, eb.pfs_samples, "{name}");
+                assert_eq!(ea.pfs_requests, eb.pfs_requests, "{name}");
+                assert_eq!(ea.chunked_frac.to_bits(), eb.chunked_frac.to_bits(), "{name}");
+                assert_eq!(ea.comp_s.to_bits(), eb.comp_s.to_bits(), "{name}");
+                assert!(eb.load_pfs_s <= ea.load_pfs_s + 1e-12, "{name}");
+            }
+        }
+        let a = simulate(&c1, &LoaderPolicy::pytorch());
+        let b = simulate(&c4, &LoaderPolicy::pytorch());
+        assert!(
+            b.serial_total_s() < a.serial_total_s(),
+            "4 streams {} should beat 1 stream {}",
+            b.serial_total_s(),
+            a.serial_total_s()
+        );
     }
 
     #[test]

@@ -86,6 +86,7 @@ fn run_one(
         epoch_drain: false,
         fetch_fault: None,
         load_only: false,
+        io_threads: 0, // auto: SOLAR_IO_THREADS or the machine default
     };
     let report = train(&tc)?;
     std::fs::create_dir_all(&ctx.out_dir)?;

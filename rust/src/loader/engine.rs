@@ -44,6 +44,10 @@ pub struct NodeStepLoad {
     pub pfs_reqs: Vec<ReadReq>,
     /// Chunked reads among `pfs_reqs` (for Fig 13 accounting).
     pub chunks: Vec<Chunk>,
+    /// Contiguity-region (shard) index of each entry in `chunks`, from
+    /// the bound store's layout — what lets the parallel fetch pool group
+    /// a step's reads by shard without re-deriving the mapping.
+    pub chunk_regions: Vec<u32>,
     /// Samples the node must insert into its byte buffer this step (the
     /// real training workers mirror the engine's buffer state exactly).
     pub inserted: Vec<u32>,
@@ -285,20 +289,27 @@ impl LoaderEngine {
     /// Chunk-aggregate a sorted list of wanted sample ids, never merging
     /// across a contiguity-region (shard) boundary: within a region the
     /// gap-threshold rule of §4.4 applies unchanged; across regions there
-    /// is no contiguous byte range to read in one request.
-    fn aggregate_contig(&self, sorted_ids: &[u32]) -> Vec<Chunk> {
+    /// is no contiguous byte range to read in one request. Returns the
+    /// chunks plus a parallel list of each chunk's region index (the
+    /// fetch pool's group-by-shard annotation).
+    fn aggregate_contig(&self, sorted_ids: &[u32]) -> (Vec<Chunk>, Vec<u32>) {
         if self.contig.is_single() {
-            return aggregate(sorted_ids, self.gap_thresh);
+            let chunks = aggregate(sorted_ids, self.gap_thresh);
+            let regions = vec![0u32; chunks.len()];
+            return (chunks, regions);
         }
         let mut out = Vec::new();
+        let mut regions = Vec::new();
         let mut i = 0usize;
         while i < sorted_ids.len() {
             let end = self.contig.region_end(sorted_ids[i]);
+            let region = self.contig.region_of(sorted_ids[i]) as u32;
             let j = i + sorted_ids[i..].partition_point(|&x| x < end);
             out.extend(aggregate(&sorted_ids[i..j], self.gap_thresh));
+            regions.resize(out.len(), region);
             i = j;
         }
-        out
+        (out, regions)
     }
 
     /// step-index map of one epoch's permutation (UNUSED for dropped tail).
@@ -594,7 +605,7 @@ impl LoaderEngine {
             nl.pfs_samples = fetch_ids.len();
             if self.policy.chunk_agg {
                 fetch_ids.sort_unstable();
-                let chunks = self.aggregate_contig(&fetch_ids);
+                let (chunks, regions) = self.aggregate_contig(&fetch_ids);
                 for c in &chunks {
                     nl.pfs_reqs.push(ReadReq {
                         offset: self.offset_of(c.lo),
@@ -602,6 +613,7 @@ impl LoaderEngine {
                     });
                 }
                 nl.chunks = chunks;
+                nl.chunk_regions = regions;
             } else {
                 for &x in &fetch_ids {
                     nl.pfs_reqs.push(ReadReq {
@@ -669,7 +681,7 @@ impl LoaderEngine {
             }
             nl.pfs_samples = fetch_ids.len();
             fetch_ids.sort_unstable();
-            let chunks = self.aggregate_contig(&fetch_ids);
+            let (chunks, regions) = self.aggregate_contig(&fetch_ids);
             for c in &chunks {
                 nl.pfs_reqs.push(ReadReq {
                     offset: self.offset_of(c.lo),
@@ -677,6 +689,7 @@ impl LoaderEngine {
                 });
             }
             nl.chunks = chunks;
+            nl.chunk_regions = regions;
             for &x in &fetch_ids {
                 if !self.resident[k].contains(x as usize) {
                     let key = self.lru_key();
@@ -1232,10 +1245,13 @@ mod tests {
         let b: Vec<StepLoad> = sharded.plan_steps(0).collect();
         assert_eq!(a.len(), 1);
         assert_eq!(a[0].nodes[0].chunks, vec![Chunk { lo: 0, hi: 64, wanted: 64 }]);
+        assert_eq!(a[0].nodes[0].chunk_regions, vec![0]);
         assert_eq!(
             b[0].nodes[0].chunks,
             (0..4u32).map(|k| Chunk { lo: k * 16, hi: (k + 1) * 16, wanted: 16 }).collect::<Vec<_>>()
         );
+        // Each chunk is annotated with its shard (region) index.
+        assert_eq!(b[0].nodes[0].chunk_regions, vec![0, 1, 2, 3]);
         // Requests carry each region's own virtual offsets.
         let offsets: Vec<u64> = b[0].nodes[0].pfs_reqs.iter().map(|r| r.offset).collect();
         assert_eq!(offsets, (0..4).map(|k| k as u64 * shard_virtual + 4108).collect::<Vec<_>>());

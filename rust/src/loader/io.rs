@@ -1,0 +1,418 @@
+//! The parallel I/O fetch stage: concurrent chunk reads over pooled,
+//! recycled byte buffers.
+//!
+//! SOLAR's headline win is PFS throughput, and once the access ORDER is
+//! fixed by the offline plan, the remaining lever is issuing independent
+//! reads concurrently (Yang & Cong: concurrent reader threads per node
+//! are the biggest knob after access-order optimization). Two properties
+//! make a step's reads embarrassingly parallel here:
+//!
+//! * [`SampleStore`] reads are positioned and `&self`-concurrent by
+//!   contract — any number of workers share one handle;
+//! * chunk aggregation never bridges a contiguity region, so every
+//!   [`FetchUnit`] is one independent range inside one file/shard.
+//!
+//! [`FetchPool`] dispatches a step's unit list across
+//! [`FetchPool::workers`] threads (`util::pool`-style atomic-cursor work
+//! stealing, results merged back in deterministic unit order) and decodes
+//! the f32 records on the same workers. When the store is sharded and
+//! there are at least as many regions as workers, consecutive same-region
+//! units are grouped so one worker streams one shard file sequentially
+//! (per-shard parallel fetch) instead of two threads seeking over each
+//! other inside a file; a flat store parallelizes per unit.
+//!
+//! Bytes land in **pooled buffers**: a free list of sample-aligned
+//! `Vec<u8>`s recycled across steps, so the steady-state fetch path does
+//! no per-read heap allocation (capacities only grow; once every pooled
+//! buffer has carried the largest unit, acquires stop allocating —
+//! [`PoolStats`] proves it in tests). Parallelism changes only WHEN and
+//! HOW bytes move: the staged result is keyed by sample id and merged in
+//! unit order, so one worker (`SOLAR_IO_THREADS=1`) is bit-identical to
+//! the serial fetch stage, and N workers stage byte-identical samples.
+//!
+//! The *modeled* side lives in `storage::pfs`: the throttle and the
+//! simulator deal the plan's request stream across
+//! `CostModel::io_parallelism` deterministic stream clocks, so modeled
+//! time reflects N concurrent PFS streams without depending on real
+//! thread interleaving.
+
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::storage::store::{decode_f32, Contiguity, SampleStore};
+use crate::util::pool::parallel_map_workers;
+
+/// Worker count for the fetch pool (and the modeled stream count): the
+/// `SOLAR_IO_THREADS` environment variable when set (min 1 —
+/// `SOLAR_IO_THREADS=1` forces the serial fetch stage), otherwise the
+/// machine's available parallelism capped at 8 (per-node read streams
+/// beyond that saturate a PFS client long before they saturate cores).
+pub fn io_threads() -> usize {
+    if let Ok(v) = std::env::var("SOLAR_IO_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// One independent read: `count` consecutive samples starting at `lo`,
+/// entirely inside contiguity region `region` (one file/shard) — so it is
+/// exactly one underlying request, concurrent-safe with every other unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FetchUnit {
+    /// First sample id of the range.
+    pub lo: u32,
+    /// Number of consecutive samples.
+    pub count: usize,
+    /// Contiguity-region (shard) index holding the whole range.
+    pub region: u32,
+}
+
+/// Split a **sorted, duplicate-free** id list into maximal contiguous
+/// runs, never bridging a contiguity-region (shard) boundary: each run is
+/// one range read instead of `count` per-sample reads. This is what turns
+/// the per-sample fallback (and the holdout eval batch) into chunk-sized
+/// requests.
+pub fn contiguous_runs(sorted_ids: &[u32], contig: &Contiguity) -> Vec<FetchUnit> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < sorted_ids.len() {
+        let lo = sorted_ids[i];
+        let region_end = contig.region_end(lo);
+        let region = contig.region_of(lo) as u32;
+        let mut j = i + 1;
+        while j < sorted_ids.len()
+            && sorted_ids[j] == sorted_ids[j - 1] + 1
+            && sorted_ids[j] < region_end
+        {
+            j += 1;
+        }
+        out.push(FetchUnit { lo, count: j - i, region });
+        i = j;
+    }
+    out
+}
+
+/// Buffer-pool counters — the no-steady-state-allocation evidence.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffer checkouts (one per read unit).
+    pub acquires: u64,
+    /// Fresh buffer allocations (the free list was empty).
+    pub creates: u64,
+    /// Capacity growths of a recycled buffer (a unit larger than any that
+    /// buffer carried before). Capacities only grow, so this converges:
+    /// a steady-state step acquires without creating or growing.
+    pub grows: u64,
+}
+
+/// Free list of byte buffers recycled across steps. Buffers keep their
+/// capacity between uses; lengths are always whole samples, so every
+/// buffer stays sample-aligned.
+#[derive(Debug, Default)]
+struct BufferPool {
+    free: Vec<Vec<u8>>,
+    stats: PoolStats,
+}
+
+impl BufferPool {
+    /// Check out a buffer able to hold `len` bytes (capacity reserved
+    /// here; the read path sets the exact length).
+    fn acquire(&mut self, len: usize) -> Vec<u8> {
+        self.stats.acquires += 1;
+        match self.free.pop() {
+            Some(b) => {
+                if b.capacity() < len {
+                    self.stats.grows += 1;
+                }
+                b
+            }
+            None => {
+                self.stats.creates += 1;
+                Vec::with_capacity(len)
+            }
+        }
+    }
+
+    fn release(&mut self, buf: Vec<u8>) {
+        self.free.push(buf);
+    }
+}
+
+/// Per-node parallel fetch stage: a worker count plus the recycled buffer
+/// free list. One pool lives in each fetch thread for the whole run, so
+/// buffers recycle across steps.
+#[derive(Debug)]
+pub struct FetchPool {
+    workers: usize,
+    bufs: BufferPool,
+}
+
+impl FetchPool {
+    /// `workers <= 1` is the strictly serial fetch stage (no threads at
+    /// all — bit-identical to the pre-pool behaviour).
+    pub fn new(workers: usize) -> FetchPool {
+        FetchPool { workers: workers.max(1), bufs: BufferPool::default() }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.bufs.stats
+    }
+
+    /// Read and decode every unit, inserting sample `lo + i ↦ record`
+    /// into `staged`. Reads run on up to [`Self::workers`] threads;
+    /// results are merged in unit order, so the outcome is deterministic
+    /// and identical to a serial pass regardless of scheduling.
+    pub fn fetch(
+        &mut self,
+        store: &dyn SampleStore,
+        units: &[FetchUnit],
+        staged: &mut HashMap<u32, Arc<Vec<f32>>>,
+    ) -> Result<()> {
+        if units.is_empty() {
+            return Ok(());
+        }
+        let sb = store.sample_bytes();
+        let work: Vec<(FetchUnit, Vec<u8>)> =
+            units.iter().map(|&u| (u, self.bufs.acquire(u.count * sb))).collect();
+
+        // One unit's read + decode (runs on a pool worker).
+        let run_unit = |u: FetchUnit, mut buf: Vec<u8>| -> Result<(FetchUnit, Vec<u8>, Vec<Arc<Vec<f32>>>)> {
+            store.read_range_reusing_at(u.lo as usize, u.count, &mut buf)?;
+            let decoded = buf.chunks_exact(sb).map(|rec| Arc::new(decode_f32(rec))).collect();
+            Ok((u, buf, decoded))
+        };
+
+        // The parallel path below spawns scoped workers PER CALL
+        // (`parallel_map_workers`): ~tens of µs of spawn/join per step,
+        // bounded by `workers`, against multi-ms (real) or throttled
+        // (modeled) read time per step — simple and borrow-friendly.
+        // Persistent per-pool worker threads with a hand-off channel
+        // would shave that overhead; tracked as a ROADMAP follow-on.
+        if self.workers <= 1 || work.len() <= 1 {
+            // Serial fast path: caller's thread, unit order.
+            for (u, buf) in work {
+                let (u, buf, decoded) = run_unit(u, buf)?;
+                for (i, rec) in decoded.into_iter().enumerate() {
+                    staged.insert(u.lo + i as u32, rec);
+                }
+                self.bufs.release(buf);
+            }
+            return Ok(());
+        }
+
+        // Work items: per-shard groups when the store offers at least as
+        // many regions as workers (each worker streams one file
+        // sequentially); per-unit otherwise. Units arrive region-major
+        // (chunk lists and runs are id-sorted, regions are id ranges), so
+        // grouping is a single pass and flattening restores unit order.
+        let mut distinct_regions = 1usize;
+        for w in work.windows(2) {
+            if w[1].0.region != w[0].0.region {
+                distinct_regions += 1;
+            }
+        }
+        let by_region = distinct_regions >= self.workers && distinct_regions > 1;
+        let mut items: Vec<Vec<(FetchUnit, Vec<u8>)>> = Vec::new();
+        for (u, buf) in work {
+            match items.last_mut() {
+                Some(group) if by_region && group[0].0.region == u.region => {
+                    group.push((u, buf));
+                }
+                _ => items.push(vec![(u, buf)]),
+            }
+        }
+        let workers = self.workers.min(items.len());
+        let results = parallel_map_workers(workers, items, |group| {
+            group
+                .into_iter()
+                .map(|(u, buf)| run_unit(u, buf))
+                .collect::<Result<Vec<_>>>()
+        });
+
+        // Merge in deterministic unit order (parallel_map_workers returns
+        // results in input order); recycle every buffer we got back.
+        let mut first_err = None;
+        for r in results {
+            match r {
+                Ok(group) => {
+                    for (u, buf, decoded) in group {
+                        for (i, rec) in decoded.into_iter().enumerate() {
+                            staged.insert(u.lo + i as u32, rec);
+                        }
+                        self.bufs.release(buf);
+                    }
+                }
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::store::MemStore;
+
+    fn mem(n: usize, elems: usize) -> MemStore {
+        let mut m = MemStore::new("io", vec![elems], Vec::new()).unwrap();
+        for i in 0..n {
+            let s: Vec<f32> = (0..elems).map(|j| (i * 100 + j) as f32).collect();
+            m.push_f32(&s).unwrap();
+        }
+        m
+    }
+
+    fn expect_sample(i: u32, elems: usize) -> Vec<f32> {
+        (0..elems).map(|j| (i as usize * 100 + j) as f32).collect()
+    }
+
+    #[test]
+    fn runs_split_on_gaps_and_region_boundaries() {
+        let flat = Contiguity::single(0, 16);
+        assert_eq!(
+            contiguous_runs(&[1, 2, 3, 7, 8, 20], &flat),
+            vec![
+                FetchUnit { lo: 1, count: 3, region: 0 },
+                FetchUnit { lo: 7, count: 2, region: 0 },
+                FetchUnit { lo: 20, count: 1, region: 0 },
+            ]
+        );
+        assert!(contiguous_runs(&[], &flat).is_empty());
+        // Two regions split at sample 10: the run [8..12] must break at
+        // the shard boundary even though the ids are consecutive.
+        let sharded = Contiguity::from_regions(vec![(0, 0), (10, 5000)], 16);
+        assert_eq!(
+            contiguous_runs(&[8, 9, 10, 11], &sharded),
+            vec![
+                FetchUnit { lo: 8, count: 2, region: 0 },
+                FetchUnit { lo: 10, count: 2, region: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn fetch_stages_the_right_bytes_at_any_worker_count() {
+        let store = mem(64, 4);
+        let contig = store.chunk_contiguity();
+        let ids: Vec<u32> = vec![0, 1, 2, 10, 11, 30, 40, 41, 42, 43, 63];
+        let units = contiguous_runs(&ids, &contig);
+        for workers in [1usize, 2, 4, 8] {
+            let mut pool = FetchPool::new(workers);
+            let mut staged = HashMap::new();
+            pool.fetch(&store, &units, &mut staged).unwrap();
+            assert_eq!(staged.len(), ids.len(), "workers={workers}");
+            for &i in &ids {
+                assert_eq!(**staged.get(&i).unwrap(), expect_sample(i, 4), "workers={workers} id {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fetch_groups_by_region_and_stays_correct() {
+        // A 4-region layout with 4 workers takes the per-shard grouping
+        // path, with MULTIPLE units inside a group (gapped ids per
+        // region) — so the group-accumulation loop really merges and a
+        // dropped/mis-merged unit or buffer would be caught here.
+        let store = mem(40, 4);
+        let regions: Vec<(u32, u64)> = (0..4u32).map(|k| (k * 10, k as u64 * 1000)).collect();
+        let contig = Contiguity::from_regions(regions, 16);
+        let ids: Vec<u32> = vec![0, 1, 5, 6, 12, 13, 17, 25, 26, 33];
+        let units = contiguous_runs(&ids, &contig);
+        assert_eq!(units.len(), 6, "two runs in regions 0-1, one in 2-3");
+        assert_eq!(units.iter().map(|u| u.region).collect::<Vec<_>>(), vec![0, 0, 1, 1, 2, 3]);
+        let mut pool = FetchPool::new(4);
+        let mut staged = HashMap::new();
+        pool.fetch(&store, &units, &mut staged).unwrap();
+        assert_eq!(staged.len(), ids.len());
+        for &i in &ids {
+            assert_eq!(**staged.get(&i).unwrap(), expect_sample(i, 4));
+        }
+    }
+
+    #[test]
+    fn steady_state_fetch_does_not_allocate() {
+        // THE pool-stats acceptance assertion: after the first (warm-up)
+        // step, repeated steps check buffers out of the free list without
+        // a single create or grow.
+        let store = mem(64, 8);
+        let contig = store.chunk_contiguity();
+        let units = contiguous_runs(&[0, 1, 2, 3, 8, 9, 10, 11, 40, 41, 42, 43], &contig);
+        for workers in [1usize, 4] {
+            let mut pool = FetchPool::new(workers);
+            let mut staged = HashMap::new();
+            pool.fetch(&store, &units, &mut staged).unwrap();
+            let warm = pool.stats();
+            assert!(warm.creates > 0, "workers={workers}: warm-up must allocate");
+            for _ in 0..10 {
+                staged.clear();
+                pool.fetch(&store, &units, &mut staged).unwrap();
+            }
+            let steady = pool.stats();
+            assert_eq!(warm.creates, steady.creates, "workers={workers}: steady-state create");
+            assert_eq!(warm.grows, steady.grows, "workers={workers}: steady-state grow");
+            assert_eq!(steady.acquires, warm.acquires + 10 * units.len() as u64);
+        }
+    }
+
+    #[test]
+    fn grows_converge_when_unit_sizes_vary() {
+        // Buffer capacities only grow, so alternating between small and
+        // large steps stops growing once every pooled buffer has carried
+        // the largest unit.
+        let store = mem(64, 8);
+        let contig = store.chunk_contiguity();
+        let small = contiguous_runs(&[0, 1], &contig);
+        let large = contiguous_runs(&(0..32).collect::<Vec<_>>(), &contig);
+        let mut pool = FetchPool::new(1);
+        let mut staged = HashMap::new();
+        for _ in 0..6 {
+            staged.clear();
+            pool.fetch(&store, &small, &mut staged).unwrap();
+            staged.clear();
+            pool.fetch(&store, &large, &mut staged).unwrap();
+        }
+        let warm = pool.stats();
+        for _ in 0..6 {
+            staged.clear();
+            pool.fetch(&store, &small, &mut staged).unwrap();
+            staged.clear();
+            pool.fetch(&store, &large, &mut staged).unwrap();
+        }
+        let steady = pool.stats();
+        assert_eq!(warm.creates, steady.creates);
+        assert_eq!(warm.grows, steady.grows);
+    }
+
+    #[test]
+    fn fetch_surfaces_read_errors() {
+        let store = mem(8, 4);
+        let contig = store.chunk_contiguity();
+        // Unit past the end of the store: the store's own error must come
+        // back (from the serial and the parallel path alike).
+        let bad = vec![
+            FetchUnit { lo: 0, count: 2, region: 0 },
+            FetchUnit { lo: 6, count: 4, region: 0 },
+        ];
+        for workers in [1usize, 4] {
+            let mut pool = FetchPool::new(workers);
+            let mut staged = HashMap::new();
+            assert!(pool.fetch(&store, &bad, &mut staged).is_err(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn io_threads_is_at_least_one() {
+        assert!(io_threads() >= 1);
+    }
+}

@@ -11,6 +11,7 @@
 //! | `solar`        | Belady(plan) | optimized | ✓ | ✓ | ✓ | – |
 
 pub mod engine;
+pub mod io;
 
 /// Buffer/eviction policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -259,6 +259,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         "xla" => DenseImpl::Xla,
         d => bail!("--dense must be pallas|xla, got {d}"),
     };
+    // 0 = auto (SOLAR_IO_THREADS, else machine default); resolve here so
+    // the banner prints the width the fetch pools actually use.
+    let io_threads = match args.get_usize("io-threads", 0)? {
+        0 => solar::loader::io::io_threads(),
+        n => n,
+    };
     let tc = TrainConfig {
         run: cfg,
         store,
@@ -274,9 +280,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         epoch_drain: args.flag("epoch-drain"),
         fetch_fault: None,
         load_only: args.flag("load-only"),
+        io_threads,
     };
     println!(
-        "training: {} samples, {} nodes x batch {}, {} epochs, loader {}, throttle x{}, prefetch {}{}",
+        "training: {} samples, {} nodes x batch {}, {} epochs, loader {}, throttle x{}, prefetch {}, io-threads {}{}",
         tc.run.spec.n_samples,
         tc.run.n_nodes,
         tc.run.local_batch,
@@ -284,6 +291,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         loader,
         tc.throttle,
         tc.prefetch,
+        tc.io_threads,
         if tc.load_only { " (load-only: no PJRT, no gradients)" } else { "" }
     );
     let report = train(&tc)?;

@@ -155,11 +155,19 @@ impl ShardedWriter {
         total: usize,
         n_shards: usize,
     ) -> Result<ShardedWriter> {
+        Self::with_caps(dir, header, Self::balanced_sizes(total, n_shards))
+    }
+
+    /// The balanced per-shard sample counts [`create_balanced`] commits
+    /// to up front. Fixing the split before any byte is written is what
+    /// makes the shards independent: `gen-data` writes them concurrently
+    /// from pool workers with byte-identical output to the serial rolling
+    /// writer (`synth::generate_dataset_sharded`).
+    pub fn balanced_sizes(total: usize, n_shards: usize) -> Vec<usize> {
         let n_shards = n_shards.clamp(1, total.max(1));
         let q = total / n_shards;
         let r = total % n_shards;
-        let caps = (0..n_shards).map(|k| if k < r { q + 1 } else { q.max(1) }).collect();
-        Self::with_caps(dir, header, caps)
+        (0..n_shards).map(|k| if k < r { q + 1 } else { q.max(1) }).collect()
     }
 
     fn with_caps(dir: &Path, header: ShdfHeader, caps: Vec<usize>) -> Result<ShardedWriter> {
@@ -176,7 +184,9 @@ impl ShardedWriter {
         })
     }
 
-    fn shard_file(idx: usize) -> String {
+    /// Canonical shard file name for shard `idx` — shared with the
+    /// parallel writer so both layouts name files identically.
+    pub fn shard_file(idx: usize) -> String {
         format!("shard_{idx:05}.shdf")
     }
 
@@ -452,6 +462,14 @@ mod tests {
             w.append_f32(&sample(i, 4)).unwrap();
         }
         assert_eq!(w.finish().unwrap().shards.len(), 2);
+    }
+
+    #[test]
+    fn balanced_sizes_split_evenly() {
+        assert_eq!(ShardedWriter::balanced_sizes(6, 4), vec![2, 2, 1, 1]);
+        assert_eq!(ShardedWriter::balanced_sizes(2, 8), vec![1, 1]);
+        assert_eq!(ShardedWriter::balanced_sizes(10, 1), vec![10]);
+        assert_eq!(ShardedWriter::balanced_sizes(10, 3), vec![4, 3, 3]);
     }
 
     #[test]

@@ -79,6 +79,20 @@ pub trait SampleStore: Send + Sync + std::fmt::Debug {
         self.read_range_into_at(start, count, &mut buf)?;
         Ok(buf)
     }
+
+    /// Positioned range read into a **reusable** buffer: `buf` is resized
+    /// to the exact byte length and filled in place, so a buffer recycled
+    /// across calls stops allocating once its capacity has grown to the
+    /// largest range it carries — the parallel fetch pool's pooled-buffer
+    /// path (`loader::io`).
+    fn read_range_reusing_at(&self, start: usize, count: usize, buf: &mut Vec<u8>) -> Result<()> {
+        // resize (no clear): a recycled buffer whose length already
+        // matches is left untouched — the read overwrites every byte, so
+        // zero-filling the whole range first would be a wasted memset on
+        // exactly the steady-state path this method exists to serve.
+        buf.resize(count * self.sample_bytes(), 0);
+        self.read_range_into_at(start, count, buf)
+    }
 }
 
 /// Decode a sample byte buffer as f32 (little-endian) — the one record
@@ -160,6 +174,12 @@ impl Contiguity {
     /// last region).
     pub fn region_end(&self, x: u32) -> u32 {
         self.regions.get(self.region_index(x) + 1).map_or(u32::MAX, |&(start, _)| start)
+    }
+
+    /// Index of the region holding sample `x` (one region per
+    /// file/shard) — the fetch pool's group-by-shard key.
+    pub fn region_of(&self, x: u32) -> usize {
+        self.region_index(x)
     }
 }
 
@@ -344,12 +364,28 @@ mod tests {
     }
 
     #[test]
+    fn reusing_range_read_recycles_capacity() {
+        let m = mem(8, 4);
+        let mut buf = Vec::new();
+        m.read_range_reusing_at(2, 3, &mut buf).unwrap();
+        assert_eq!(decode_f32(&buf[..16]), vec![200.0, 201.0, 202.0, 203.0]);
+        let cap = buf.capacity();
+        // A smaller follow-up read shrinks the length, never the capacity.
+        m.read_range_reusing_at(5, 1, &mut buf).unwrap();
+        assert_eq!(buf.len(), 16);
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(decode_f32(&buf), vec![500.0, 501.0, 502.0, 503.0]);
+        assert!(m.read_range_reusing_at(7, 2, &mut buf).is_err());
+    }
+
+    #[test]
     fn contiguity_single_region() {
         let c = Contiguity::single(4108, 16);
         assert!(c.is_single());
         assert_eq!(c.offset_of(0), 4108);
         assert_eq!(c.offset_of(10), 4108 + 160);
         assert_eq!(c.region_end(5), u32::MAX);
+        assert_eq!(c.region_of(5), 0);
     }
 
     #[test]
@@ -363,6 +399,8 @@ mod tests {
         assert_eq!(c.region_end(0), 10);
         assert_eq!(c.region_end(9), 10);
         assert_eq!(c.region_end(10), u32::MAX);
+        assert_eq!(c.region_of(9), 0);
+        assert_eq!(c.region_of(10), 1);
     }
 
     #[test]

@@ -14,9 +14,14 @@
 //!   stages the PFS bytes for upcoming steps (the engine's deterministic
 //!   plan says exactly which bytes each step needs), charging the
 //!   throttle model as it goes — so the emulated Lustre delay runs here,
-//!   off the compute path. The same thread stages the holdout eval
-//!   batches (read once, cached, re-sent per eval), so evals never read
-//!   storage on the compute path;
+//!   off the compute path. Inside it, a [`FetchPool`] fans each step's
+//!   independent reads (chunks, or the per-sample fallback batched into
+//!   contiguous runs) across `io_threads` workers over pooled byte
+//!   buffers recycled across steps, and the throttle charges the plan's
+//!   request stream across that many deterministic model streams
+//!   (`CostModel::io_parallelism`) — see `loader::io`. The same thread
+//!   stages the holdout eval batches (read once, cached, re-sent per
+//!   eval), so evals never read storage on the compute path;
 //! * an **exec thread** that owns the PJRT CPU client + compiled
 //!   training-step executable (the `xla` handles are not `Send`) and the
 //!   in-memory byte buffer that mirrors the loader engine's buffer
@@ -62,6 +67,7 @@ use std::sync::Arc;
 use crate::config::RunConfig;
 use crate::data::synth;
 use crate::loader::engine::{LoaderEngine, NodeStepLoad, RunStep};
+use crate::loader::io::{contiguous_runs, FetchPool, FetchUnit};
 use crate::loader::LoaderPolicy;
 use crate::runtime::executable::{DenseImpl, TrainRuntime};
 use crate::runtime::params::{GradAccum, ParamStore};
@@ -156,6 +162,14 @@ pub struct TrainConfig {
     /// epoch_stats) is identical to a real run — the backend-parity smoke
     /// mode for machines without AOT artifacts (CI).
     pub load_only: bool,
+    /// Concurrent I/O workers per node's fetch stage (and the modeled
+    /// PFS stream count the throttle charges). `0` resolves to
+    /// [`crate::loader::io::io_threads`] (the `SOLAR_IO_THREADS`
+    /// environment variable, else the machine default); `1` is the
+    /// strictly serial fetch stage. Parallelism changes only WHEN bytes
+    /// move — params, losses, and per-epoch stats are bit-identical at
+    /// every worker count (tested in `driver_pipeline_parity.rs`).
+    pub io_threads: usize,
 }
 
 type Params = Arc<Vec<Vec<f32>>>;
@@ -218,6 +232,8 @@ struct WorkerCtx {
     cost: CostModel,
     /// Staged-channel bound (the largest depth the coordinator may use).
     stage_bound: usize,
+    /// Resolved fetch-pool worker count (≥ 1).
+    io_threads: usize,
     fetch_fault: Option<usize>,
     load_only: bool,
     /// Batch/img when no manifest is available (`load_only`).
@@ -250,6 +266,14 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     // real layout (single region for a flat file, one per shard else).
     engine.bind_store(tc.store.as_ref())?;
 
+    // Resolve the fetch-pool width once, and let the throttle model see
+    // it: the modeled PFS time per step is the plan's request stream
+    // dealt across this many deterministic stream clocks, so the emulated
+    // Lustre speeds up with the real read parallelism.
+    let io_threads = if tc.io_threads == 0 { crate::loader::io::io_threads() } else { tc.io_threads };
+    let mut worker_cost = tc.run.cost.clone();
+    worker_cost.io_parallelism = io_threads;
+
     // Spawn workers (a fetch + exec thread pair per node).
     let mut to_fetch: Vec<mpsc::Sender<FetchMsg>> = Vec::with_capacity(n_nodes);
     let mut to_workers: Vec<mpsc::Sender<WorkMsg>> = Vec::with_capacity(n_nodes);
@@ -268,8 +292,9 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             artifacts_dir: tc.artifacts_dir.clone(),
             dense: tc.dense,
             throttle: tc.throttle,
-            cost: tc.run.cost.clone(),
+            cost: worker_cost.clone(),
             stage_bound: tc.prefetch.stage_bound(),
+            io_threads,
             fetch_fault: tc.fetch_fault.and_then(|(node, step)| (node == k).then_some(step)),
             load_only: tc.load_only,
             fallback_batch: tc.run.local_batch.max(1),
@@ -508,8 +533,9 @@ fn worker_loop(
     let throttle = ctx.throttle;
     let cost = ctx.cost.clone();
     let fault = ctx.fetch_fault;
+    let io_threads = ctx.io_threads;
     let fetch_handle = std::thread::spawn(move || {
-        fetch_loop(node, fetch_rx, staged_tx, fetch_store, throttle, cost, fetch_done, fault)
+        fetch_loop(node, fetch_rx, staged_tx, fetch_store, throttle, cost, io_threads, fetch_done, fault)
     });
 
     let result = (|| -> Result<()> {
@@ -701,12 +727,16 @@ fn fetch_loop(
     store: Arc<dyn SampleStore>,
     throttle: f64,
     cost: CostModel,
+    io_threads: usize,
     done: mpsc::Sender<Result<DoneMsg>>,
     fault_at: Option<usize>,
 ) {
     let store: &dyn SampleStore = store.as_ref();
     let contig = store.chunk_contiguity();
-    let sb = store.sample_bytes() as u64;
+    // One fetch pool per node, alive for the whole run: its byte buffers
+    // recycle across steps (no per-read allocation in steady state) and
+    // its workers read independent chunks/runs concurrently.
+    let mut pool = FetchPool::new(io_threads);
     // Mirror of the exec thread's buffer KEYS, advanced in step order:
     // only staged-and-inserted ids enter, evicted ids leave — identical
     // to the exec side's value map, so "already buffered" decisions match
@@ -724,7 +754,7 @@ fn fetch_loop(
                     return;
                 }
                 let t = Stopwatch::start();
-                match stage_step(store, &contig, &resident, &load, &cost, sb) {
+                match stage_step(&mut pool, store, &contig, &resident, &load, &cost) {
                     Err(e) => {
                         let _ = done.send(Err(anyhow::anyhow!("worker {node} fetch: {e:#}")));
                         return;
@@ -761,7 +791,7 @@ fn fetch_loop(
             }
             FetchMsg::Eval { after_step, ids } => {
                 if holdout.is_none() {
-                    match stage_eval(store, &ids, sb as usize) {
+                    match stage_eval(&mut pool, store, &contig, &ids) {
                         Ok(m) => holdout = Some(m),
                         Err(e) => {
                             let _ = done.send(Err(anyhow::anyhow!(
@@ -780,68 +810,70 @@ fn fetch_loop(
     }
 }
 
-/// Read and decode the holdout eval batch. The holdout is the dataset's
-/// contiguous tail, so the common case is ONE range read (one request per
-/// shard on a sharded store); non-contiguous id lists fall back to
-/// per-sample reads.
+/// Read and decode the holdout eval batch through the fetch pool. The
+/// holdout is the dataset's contiguous tail, so the common case is ONE
+/// range read (one per shard on a sharded store); a non-contiguous id
+/// list is split into maximal contiguous runs with one range read each —
+/// never one read per sample.
 fn stage_eval(
+    pool: &mut FetchPool,
     store: &dyn SampleStore,
+    contig: &Contiguity,
     ids: &[u32],
-    sb: usize,
 ) -> Result<HashMap<u32, Arc<Vec<f32>>>> {
-    let mut m = HashMap::with_capacity(ids.len());
-    let contiguous = ids.windows(2).all(|w| w[1] == w[0] + 1);
-    if contiguous && !ids.is_empty() {
-        let bytes = store.read_range_at(ids[0] as usize, ids.len())?;
-        for (k, rec) in bytes.chunks_exact(sb).enumerate() {
-            m.insert(ids[0] + k as u32, Arc::new(decode_f32(rec)));
-        }
-    } else {
-        for &x in ids {
-            m.insert(x, Arc::new(decode_f32(&store.read_sample_at(x as usize)?)));
-        }
-    }
+    let mut sorted: Vec<u32> = ids.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let units = contiguous_runs(&sorted, contig);
+    let mut m = HashMap::with_capacity(sorted.len());
+    pool.fetch(store, &units, &mut m)?;
     Ok(m)
 }
 
-/// Read and decode one step's PFS bytes — chunked reads when the plan has
-/// them, per-sample reads otherwise — returning the staged samples plus
-/// the cost-model time those reads represent (for the throttle). Offsets
-/// come from the store's contiguity map, so seek distances are charged in
-/// the store's own (virtual) address space.
+/// Read and decode one step's PFS bytes through the fetch pool — the
+/// plan's chunk list when it has one, the per-sample fallback batched
+/// into maximal contiguous runs otherwise — returning the staged samples
+/// plus the cost-model time those bytes represent (for the throttle).
+/// The modeled time charges `load.pfs_reqs` — the exact request stream
+/// the simulator charges, with offsets in the store's own (virtual)
+/// address space — dealt across `cost.io_parallelism` deterministic
+/// stream clocks, plus the simulator's `remote_fetch` term for samples
+/// served from a neighbor node's buffer (NoPFS: those ids are absent
+/// from `pfs_reqs` but this node still moves their bytes). It models N
+/// concurrent PFS streams without depending on real thread interleaving;
+/// at `io_parallelism = 1` the PFS share is bit-identical to the
+/// pre-pool accounting.
 fn stage_step(
+    pool: &mut FetchPool,
     store: &dyn SampleStore,
     contig: &Contiguity,
     resident: &HashSet<u32>,
     load: &NodeStepLoad,
     cost: &CostModel,
-    sb: u64,
 ) -> Result<(HashMap<u32, Arc<Vec<f32>>>, f64)> {
-    let mut staged: HashMap<u32, Arc<Vec<f32>>> = HashMap::new();
-    let mut modeled = 0.0f64;
-    if !load.chunks.is_empty() {
-        let mut pos: Option<u64> = None;
-        for c in &load.chunks {
-            let bytes = store.read_range_at(c.lo as usize, c.span() as usize)?;
-            let offset = contig.offset_of(c.lo);
-            let jump = pos.map(|p| p.abs_diff(offset)).unwrap_or(0);
-            modeled += cost.pfs_read(c.span() as u64 * sb, jump);
-            pos = Some(offset + c.span() as u64 * sb);
-            for (i, rec) in bytes.chunks_exact(sb as usize).enumerate() {
-                staged.insert(c.lo + i as u32, Arc::new(decode_f32(rec)));
-            }
-        }
+    let sb = store.sample_bytes() as u64;
+    let modeled = cost.pfs_parallel_sequence(&load.pfs_reqs)
+        + load.remote as f64 * cost.remote_fetch(sb);
+    let units: Vec<FetchUnit> = if !load.chunks.is_empty() {
+        debug_assert_eq!(load.chunks.len(), load.chunk_regions.len());
+        load.chunks
+            .iter()
+            .zip(load.chunk_regions.iter())
+            .map(|(c, &region)| FetchUnit { lo: c.lo, count: c.span() as usize, region })
+            .collect()
     } else {
-        let mut pos: Option<u64> = None;
-        for &x in load.samples.iter().filter(|&&x| !resident.contains(&x)) {
-            let bytes = store.read_sample_at(x as usize)?;
-            let offset = contig.offset_of(x);
-            let jump = pos.map(|p| p.abs_diff(offset)).unwrap_or(0);
-            modeled += cost.pfs_read(sb, jump);
-            pos = Some(offset + sb);
-            staged.insert(x, Arc::new(decode_f32(&bytes)));
-        }
-    }
+        // Per-sample fallback (non-chunking policies): batch the wanted
+        // ids into contiguous runs so a clustered batch still reads in
+        // few requests.
+        let mut ids: Vec<u32> =
+            load.samples.iter().copied().filter(|x| !resident.contains(x)).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        contiguous_runs(&ids, contig)
+    };
+    let mut staged: HashMap<u32, Arc<Vec<f32>>> =
+        HashMap::with_capacity(units.iter().map(|u| u.count).sum());
+    pool.fetch(store, &units, &mut staged)?;
     Ok((staged, modeled))
 }
 

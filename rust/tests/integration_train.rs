@@ -71,6 +71,7 @@ fn tc(path: PathBuf, n_train: usize, loader: &str, n_nodes: usize, epochs: usize
         epoch_drain: false,
         fetch_fault: None,
         load_only: false,
+        io_threads: 0, // auto: SOLAR_IO_THREADS or the machine default
     }
 }
 

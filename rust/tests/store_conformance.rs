@@ -198,6 +198,7 @@ fn load_only_tc(store: Arc<dyn SampleStore>, loader: &str, prefetch: PrefetchMod
         epoch_drain: false,
         fetch_fault: None,
         load_only: true,
+        io_threads: 0, // auto: SOLAR_IO_THREADS or the machine default
     }
 }
 
@@ -222,6 +223,26 @@ fn load_only_driver_runs_the_same_schedule_on_every_backend() {
             assert_eq!(base.pfs_samples, r.pfs_samples, "{base_name} vs {name} ({loader})");
             assert_eq!(base.epoch_stats, r.epoch_stats, "{base_name} vs {name} ({loader})");
         }
+    }
+}
+
+#[test]
+fn load_only_schedule_is_io_thread_invariant_on_every_backend() {
+    // The parallel fetch pool moves bytes, never samples: at 1 vs 4 I/O
+    // workers the schedule fingerprint must be identical on all three
+    // backends (the sharded one exercises the per-shard grouping path).
+    for (name, store) in backends() {
+        let mk = |io: usize| {
+            let mut c = load_only_tc(store.clone(), "solar", PrefetchMode::Fixed(1));
+            c.io_threads = io;
+            c
+        };
+        let base = train(&mk(1)).unwrap();
+        let par = train(&mk(4)).unwrap();
+        assert_eq!(base.steps, par.steps, "{name}");
+        assert_eq!(base.hits, par.hits, "{name}");
+        assert_eq!(base.pfs_samples, par.pfs_samples, "{name}");
+        assert_eq!(base.epoch_stats, par.epoch_stats, "{name}");
     }
 }
 
