@@ -59,6 +59,21 @@ fn main() {
         });
     }
 
+    // Codec cost model: compressed shards at the delta-bitpack ratio
+    // measured by figCodec (~0.6 of raw) with the per-byte decode term
+    // engaged, on a congested PFS where the trade pays off. The baseline
+    // records what the codec-aware simulator costs to run.
+    {
+        let mut c = cfg(n, 8, 0.6, epochs);
+        c.cost.pfs_bw = 5e8;
+        c.cost.codec_ratio = 0.6;
+        c.cost.io_parallelism = 4;
+        let policy = LoaderPolicy::solar();
+        suite.bench_units(&format!("simulate solar-codec n={n} 8nodes io=4 r=0.6"), samples_scheduled, || {
+            simulate(&c, &policy)
+        });
+    }
+
     suite.finish();
     // Baseline for future perf PRs: scheduled samples/second per preset
     // (units_per_s in each record). Lands at the workspace root when run

@@ -104,7 +104,7 @@ USAGE: solar <command> [options]
 
 COMMANDS
   exp       regenerate a paper table/figure
-            --id fig2|fig3|tab1|tab3|fig7|fig9|fig10|fig11|fig12|fig13|fig14|fig14sweep|fig16|eoo|all
+            --id fig2|fig3|tab1|tab3|fig7|fig9|fig10|fig11|fig12|fig13|fig14|fig14sweep|fig16|figCodec|eoo|all
             [--full] (paper-scale sample counts)  [--epochs N]  [--seed S]
   sim       simulate one loading run
             [--dataset cd17|cd321|cd1200|bcdi|cosmoflow] [--tier medium]
@@ -115,6 +115,12 @@ COMMANDS
             shards + manifest.json, byte-identical samples to the single
             file; --out is the directory. Shards are written in parallel
             — SOLAR_IO_THREADS workers — with byte-identical output)
+            [--codec raw|delta-bitpack] (per-sample compression; readers
+            negotiate it from the header/manifest, decompress in the
+            fetch-stage workers, and serve bit-identical samples —
+            'raw' keeps the legacy fixed-stride layout. The solar-codec
+            bench preset models this trade: fewer PFS bytes vs decode
+            CPU)
   verify-store  read-check a dataset (single-file or sharded)
             --data PATH [--ref PATH] (byte-compare against a second
             store; non-zero exit on mismatch)
@@ -131,8 +137,10 @@ COMMANDS
             auto = pick the depth from epoch 0's load:compute ratio)
             [--io-threads N] (concurrent I/O workers per node's fetch
             stage, and the modeled PFS stream count; 0 = auto from
-            SOLAR_IO_THREADS or the machine; 1 = serial fetch. Changes
-            only wall time — the trained model is bit-identical)
+            SOLAR_IO_THREADS or the machine — with --prefetch auto the
+            driver instead co-tunes the width from epoch 0's
+            load:compute ratio; 1 = serial fetch. Changes only wall
+            time — the trained model is bit-identical)
             [--epoch-drain] (drain the pipeline at epoch boundaries
             instead of prefetching across them; A/B the boundary bubble)
             [--load-only] (run the loading pipeline without PJRT/grads —

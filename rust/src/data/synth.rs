@@ -17,6 +17,7 @@ use std::path::Path;
 
 use crate::data::fft::{fft2_inplace, fftshift2, Cpx};
 use crate::data::spec::DatasetSpec;
+use crate::storage::codec::Codec;
 use crate::storage::shard::{ShardManifest, ShardedWriter};
 use crate::storage::shdf::{ShdfHeader, ShdfWriter};
 use crate::storage::store::MemStore;
@@ -171,7 +172,19 @@ fn spec_header(spec: &DatasetSpec) -> ShdfHeader {
 
 /// Materialize a scaled dataset to a single-file SHDF container.
 pub fn generate_dataset(path: &Path, spec: &DatasetSpec, seed: u64) -> Result<ShdfHeader> {
-    let mut w = ShdfWriter::create(path, spec_header(spec))?;
+    generate_dataset_with(path, spec, seed, Codec::Raw)
+}
+
+/// [`generate_dataset`] under an explicit sample codec (`Codec::Raw`
+/// reproduces the legacy byte-identical container). The DECODED samples
+/// are identical across codecs — only the on-disk bytes differ.
+pub fn generate_dataset_with(
+    path: &Path,
+    spec: &DatasetSpec,
+    seed: u64,
+    codec: Codec,
+) -> Result<ShdfHeader> {
+    let mut w = ShdfWriter::create_with_codec(path, spec_header(spec), codec)?;
     for_each_record(spec, seed, |rec| w.append_f32(rec))?;
     Ok(w.finish()?)
 }
@@ -190,7 +203,14 @@ pub fn generate_dataset_sharded(
     seed: u64,
     n_shards: usize,
 ) -> Result<ShardManifest> {
-    generate_dataset_sharded_workers(dir, spec, seed, n_shards, crate::loader::io::io_threads())
+    generate_dataset_sharded_workers_with(
+        dir,
+        spec,
+        seed,
+        n_shards,
+        crate::loader::io::io_threads(),
+        Codec::Raw,
+    )
 }
 
 /// [`generate_dataset_sharded`] with an explicit worker count
@@ -203,13 +223,34 @@ pub fn generate_dataset_sharded_workers(
     n_shards: usize,
     workers: usize,
 ) -> Result<ShardManifest> {
+    generate_dataset_sharded_workers_with(dir, spec, seed, n_shards, workers, Codec::Raw)
+}
+
+/// [`generate_dataset_sharded_workers`] under an explicit sample codec:
+/// every shard is `codec`-encoded and the manifest records the codec.
+/// The codec is a pure function of each sample's bytes, so the parallel
+/// writers stay byte-identical to the serial rolling writer for any
+/// fixed codec — and the DECODED dataset is identical across codecs.
+pub fn generate_dataset_sharded_workers_with(
+    dir: &Path,
+    spec: &DatasetSpec,
+    seed: u64,
+    n_shards: usize,
+    workers: usize,
+    codec: Codec,
+) -> Result<ShardManifest> {
     let sizes = ShardedWriter::balanced_sizes(spec.n_samples, n_shards);
     if workers <= 1 || sizes.len() <= 1 || spec.n_samples == 0 {
         // Serial reference: one rolling writer over the shared record
         // stream (also the degenerate-total path, where the planned
         // single shard may stay empty and produce no file).
-        let mut w =
-            ShardedWriter::create_balanced(dir, spec_header(spec), spec.n_samples, n_shards)?;
+        let mut w = ShardedWriter::create_balanced_with_codec(
+            dir,
+            spec_header(spec),
+            spec.n_samples,
+            n_shards,
+            codec,
+        )?;
         for_each_record(spec, seed, |rec| w.append_f32(rec))?;
         return w.finish();
     }
@@ -228,7 +269,7 @@ pub fn generate_dataset_sharded_workers(
     debug_assert_eq!(start, spec.n_samples, "balanced sizes must cover the dataset");
     let results = parallel_map_workers(workers.min(ranges.len()), ranges, |(k, start, sz)| {
         let path = dir.join(ShardedWriter::shard_file(k));
-        let mut w = ShdfWriter::create(&path, header.clone())?;
+        let mut w = ShdfWriter::create_with_codec(&path, header.clone(), codec)?;
         for i in start..start + sz {
             w.append_f32(&record_at(spec, &root, i))?;
         }
@@ -246,6 +287,7 @@ pub fn generate_dataset_sharded_workers(
         dtype: header.dtype,
         n_samples: spec.n_samples,
         shards,
+        codec,
     };
     manifest.save(dir)?;
     Ok(manifest)
@@ -356,6 +398,53 @@ mod tests {
             // assert! (not assert_eq!) so a mismatch doesn't dump the
             // whole shard's bytes into the failure message.
             assert!(a == b, "{name} must be byte-identical");
+        }
+    }
+
+    #[test]
+    fn compressed_generation_is_parallel_stable_and_decodes_identically() {
+        use crate::storage::shard::ShardedStore;
+        use crate::storage::store::SampleStore;
+        // The codec twin of the byte-identity check above: compressed
+        // shards written concurrently must match the serial compressed
+        // writer file for file — and the DECODED samples must equal the
+        // raw layout's samples exactly.
+        let base = std::env::temp_dir().join("solar_synth_codec_shards");
+        let _ = std::fs::remove_dir_all(&base);
+        let spec = DatasetSpec::paper("cd17").unwrap().scaled(23_899); // 11 samples
+        let serial = base.join("serial");
+        let par = base.join("parallel");
+        let raw = base.join("raw");
+        let m1 = generate_dataset_sharded_workers_with(
+            &serial,
+            &spec,
+            7,
+            4,
+            1,
+            Codec::DeltaBitpack,
+        )
+        .unwrap();
+        let m4 =
+            generate_dataset_sharded_workers_with(&par, &spec, 7, 4, 4, Codec::DeltaBitpack)
+                .unwrap();
+        generate_dataset_sharded_workers(&raw, &spec, 7, 4, 1).unwrap();
+        assert_eq!(m1, m4, "compressed manifests must match");
+        assert_eq!(m1.codec, Codec::DeltaBitpack);
+        for (name, _) in &m1.shards {
+            let a = std::fs::read(serial.join(name)).unwrap();
+            let b = std::fs::read(par.join(name)).unwrap();
+            assert!(a == b, "{name} must be byte-identical");
+            let raw_bytes = std::fs::read(raw.join(name)).unwrap();
+            assert!(a.len() < raw_bytes.len(), "{name}: synthetic records must compress");
+        }
+        let sc = ShardedStore::open(&serial).unwrap();
+        let sr = ShardedStore::open(&raw).unwrap();
+        for i in 0..spec.n_samples {
+            assert_eq!(
+                sc.read_sample_at(i).unwrap(),
+                sr.read_sample_at(i).unwrap(),
+                "sample {i} decodes identically"
+            );
         }
     }
 

@@ -62,6 +62,13 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
     let comp_per_sample = cfg.spec.model.compute_per_sample_s();
     let contention = cfg.cost.pfs_contention(cfg.n_nodes);
     let cost = &cfg.cost;
+    // Parametric codec model (`CostModel::codec_ratio`, sim-only): a
+    // compressed layout shrinks every PFS request — lens AND offsets
+    // scale by the ratio, since the encoded extents pack contiguously —
+    // while the fetch crew pays `decode_cost` on the DECODED bytes. At
+    // ratio 1.0 (raw) both are exact no-ops, bit for bit.
+    let ratio = cost.codec_ratio;
+    let scale = |v: u64| if ratio == 1.0 { v } else { (v as f64 * ratio).round() as u64 };
 
     // Diagnostics (Fig 12 / Fig 16) probe the first post-warmup epoch:
     // buffers are populated, so remap/balancing behave as in steady state.
@@ -118,14 +125,23 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
                 // is the classic serial accounting bit for bit.
                 streams.reset();
                 for r in &nl.pfs_reqs {
-                    streams.charge(cost, r.offset, r.len);
+                    streams.charge(cost, scale(r.offset), scale(r.len));
                 }
                 let pfs_t = streams.wall_s();
                 // Hideable share: byte movement the driver's fetch thread
-                // performs (PFS streams, remote fetches). Hit
-                // materialization and delivery/assembly stay on the exec
-                // thread's critical path and cannot overlap compute.
-                let node_hide = pfs_t * contention + nl.remote as f64 * cost.remote_fetch(sample_bytes);
+                // performs (PFS streams, remote fetches), plus — under a
+                // codec — the crew's decompression of the fetched
+                // samples. Hit materialization and delivery/assembly stay
+                // on the exec thread's critical path and cannot overlap
+                // compute.
+                let decode_t = if ratio == 1.0 {
+                    0.0
+                } else {
+                    cost.decode_cost(nl.pfs_samples as u64 * sample_bytes)
+                };
+                let node_hide = pfs_t * contention
+                    + nl.remote as f64 * cost.remote_fetch(sample_bytes)
+                    + decode_t;
                 let node_load = node_hide
                     + nl.hits as f64 * cost.buffer_hit(sample_bytes)
                     + cost.delivery_overhead(nl.samples.len());
@@ -387,48 +403,99 @@ mod tests {
         // independently derived final barrier. Catches delta/bookkeeping
         // regressions (e.g. losing the fill, resetting clocks per epoch)
         // that a self-referential sum could never see.
-        let c = cfg(512, 4, 8, 4, 32);
+        // Replayed both raw (ratio 1.0) and under a parametric codec, so
+        // the scaled-request + decode-term accounting is independently
+        // verified too.
+        let mut c = cfg(512, 4, 8, 4, 32);
+        for ratio in [1.0f64, 0.55] {
+            c.cost.codec_ratio = ratio;
+            for name in ["pytorch", "solar", "nopfs"] {
+                let policy = LoaderPolicy::by_name(name).unwrap();
+                let r = simulate(&c, &policy);
+                let mut engine = LoaderEngine::new(c.clone(), policy);
+                let cost = &c.cost;
+                let contention = cost.pfs_contention(c.n_nodes);
+                let sb = c.spec.sample_bytes as u64;
+                let cps = c.spec.model.compute_per_sample_s();
+                let scale =
+                    |v: u64| if ratio == 1.0 { v } else { (v as f64 * ratio).round() as u64 };
+                let mut fetch_done = vec![0.0f64; c.n_nodes];
+                let mut barrier = 0.0f64;
+                for pos in 0..c.n_epochs {
+                    engine.run_epoch(pos, |_, sl| {
+                        let prev_barrier = barrier;
+                        let mut end = 0.0f64;
+                        for (k, nl) in sl.nodes.iter().enumerate() {
+                            let mut pfs_t = 0.0f64;
+                            let mut stream: Option<u64> = None;
+                            for rq in &nl.pfs_reqs {
+                                let (off, len) = (scale(rq.offset), scale(rq.len));
+                                let jump = stream.map(|p| p.abs_diff(off)).unwrap_or(0);
+                                pfs_t += cost.pfs_read(len, jump);
+                                stream = Some(off + len);
+                            }
+                            let decode_t = if ratio == 1.0 {
+                                0.0
+                            } else {
+                                cost.decode_cost(nl.pfs_samples as u64 * sb)
+                            };
+                            let hide = pfs_t * contention
+                                + nl.remote as f64 * cost.remote_fetch(sb)
+                                + decode_t;
+                            let exec = nl.hits as f64 * cost.buffer_hit(sb)
+                                + cost.delivery_overhead(nl.samples.len())
+                                + nl.samples.len() as f64 * cps;
+                            fetch_done[k] += hide;
+                            end = end.max(fetch_done[k].max(prev_barrier) + exec);
+                        }
+                        barrier = end;
+                    });
+                }
+                let sum: f64 = r.epochs.iter().map(|e| e.overlapped_s).sum();
+                assert!(
+                    (sum - barrier).abs() <= 1e-9 * barrier.max(1.0),
+                    "{name} ratio {ratio}: epoch shares {} vs independent run clock {}",
+                    sum,
+                    barrier
+                );
+                assert!(r.hidden_total_s() >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn codec_ratio_cuts_modeled_pfs_time_but_never_touches_the_schedule() {
+        // A bandwidth-bound PFS (slow streaming bandwidth, so byte volume
+        // dominates request latency): a 0.5-ratio codec must cut every
+        // epoch's modeled PFS time even after paying the decode term —
+        // while every schedule-level number stays identical. This is the
+        // sim-side half of the tentpole's acceptance criterion.
+        let mut c1 = cfg(512, 4, 8, 3, 32);
+        c1.cost.pfs_bw = 5e8;
+        let mut cz = c1.clone();
+        cz.cost.codec_ratio = 0.5;
         for name in ["pytorch", "solar", "nopfs"] {
             let policy = LoaderPolicy::by_name(name).unwrap();
-            let r = simulate(&c, &policy);
-            let mut engine = LoaderEngine::new(c.clone(), policy);
-            let cost = &c.cost;
-            let contention = cost.pfs_contention(c.n_nodes);
-            let sb = c.spec.sample_bytes as u64;
-            let cps = c.spec.model.compute_per_sample_s();
-            let mut fetch_done = vec![0.0f64; c.n_nodes];
-            let mut barrier = 0.0f64;
-            for pos in 0..c.n_epochs {
-                engine.run_epoch(pos, |_, sl| {
-                    let prev_barrier = barrier;
-                    let mut end = 0.0f64;
-                    for (k, nl) in sl.nodes.iter().enumerate() {
-                        let mut pfs_t = 0.0f64;
-                        let mut stream: Option<u64> = None;
-                        for rq in &nl.pfs_reqs {
-                            let jump = stream.map(|p| p.abs_diff(rq.offset)).unwrap_or(0);
-                            pfs_t += cost.pfs_read(rq.len, jump);
-                            stream = Some(rq.offset + rq.len);
-                        }
-                        let hide = pfs_t * contention
-                            + nl.remote as f64 * cost.remote_fetch(sb);
-                        let exec = nl.hits as f64 * cost.buffer_hit(sb)
-                            + cost.delivery_overhead(nl.samples.len())
-                            + nl.samples.len() as f64 * cps;
-                        fetch_done[k] += hide;
-                        end = end.max(fetch_done[k].max(prev_barrier) + exec);
-                    }
-                    barrier = end;
-                });
+            let a = simulate(&c1, &policy);
+            let b = simulate(&cz, &policy);
+            assert_eq!(a.sample_step_fetches, b.sample_step_fetches, "{name}");
+            assert_eq!(a.early_batch_sizes, b.early_batch_sizes, "{name}");
+            for (ea, eb) in a.epochs.iter().zip(b.epochs.iter()) {
+                assert_eq!(ea.hits, eb.hits, "{name} epoch {}", ea.epoch_pos);
+                assert_eq!(ea.remote_samples, eb.remote_samples, "{name}");
+                assert_eq!(ea.pfs_samples, eb.pfs_samples, "{name}");
+                assert_eq!(ea.pfs_requests, eb.pfs_requests, "{name}");
+                assert_eq!(ea.comp_s.to_bits(), eb.comp_s.to_bits(), "{name}");
+                if ea.pfs_samples > 0 {
+                    assert!(
+                        eb.load_pfs_s < ea.load_pfs_s,
+                        "{name} epoch {}: compressed {} !< raw {}",
+                        ea.epoch_pos,
+                        eb.load_pfs_s,
+                        ea.load_pfs_s
+                    );
+                }
             }
-            let sum: f64 = r.epochs.iter().map(|e| e.overlapped_s).sum();
-            assert!(
-                (sum - barrier).abs() <= 1e-9 * barrier.max(1.0),
-                "{name}: epoch shares {} vs independent run clock {}",
-                sum,
-                barrier
-            );
-            assert!(r.hidden_total_s() >= 0.0);
         }
     }
 

@@ -8,6 +8,7 @@
 //! are preserved exactly (set sizes scale together); `--full` uses the
 //! paper's sample counts.
 
+pub mod codec;
 pub mod compute;
 pub mod e2e;
 pub mod io;
@@ -94,7 +95,7 @@ impl ExpCtx {
 pub fn known_ids() -> Vec<&'static str> {
     vec![
         "fig2", "fig3", "tab1", "tab3", "fig7", "fig9", "fig10", "fig11", "fig12", "fig13",
-        "fig14", "fig14sweep", "fig16", "eoo",
+        "fig14", "fig14sweep", "fig16", "figCodec", "eoo",
     ]
 }
 
@@ -114,6 +115,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "fig14" => e2e::fig14_end_to_end(ctx),
         "fig14sweep" => e2e::fig14sweep_throttle(ctx),
         "fig16" => loading::fig16_batch_sizes(ctx),
+        "figCodec" => codec::fig_codec(ctx),
         "eoo" => loading::eoo_ablation(ctx),
         "all" => {
             for id in known_ids() {

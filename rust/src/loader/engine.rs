@@ -609,7 +609,11 @@ impl LoaderEngine {
                 for c in &chunks {
                     nl.pfs_reqs.push(ReadReq {
                         offset: self.offset_of(c.lo),
-                        len: c.span() as u64 * self.cfg.spec.sample_bytes as u64,
+                        // span_bytes, not span × sample_bytes: a compressed
+                        // layout's requests carry the encoded extent
+                        // lengths, so the cost model charges the bytes
+                        // that actually cross the PFS.
+                        len: self.contig.span_bytes(c.lo, c.span()),
                     });
                 }
                 nl.chunks = chunks;
@@ -618,7 +622,7 @@ impl LoaderEngine {
                 for &x in &fetch_ids {
                     nl.pfs_reqs.push(ReadReq {
                         offset: self.offset_of(x),
-                        len: self.cfg.spec.sample_bytes as u64,
+                        len: self.contig.span_bytes(x, 1),
                     });
                 }
             }
@@ -685,7 +689,7 @@ impl LoaderEngine {
             for c in &chunks {
                 nl.pfs_reqs.push(ReadReq {
                     offset: self.offset_of(c.lo),
-                    len: c.span() as u64 * self.cfg.spec.sample_bytes as u64,
+                    len: self.contig.span_bytes(c.lo, c.span()),
                 });
             }
             nl.chunks = chunks;

@@ -1,5 +1,6 @@
-//! The parallel I/O fetch stage: concurrent chunk reads over pooled,
-//! recycled byte buffers.
+//! The parallel I/O fetch stage: concurrent chunk reads — and, on
+//! compressed stores, concurrent DECOMPRESSION — over pooled, recycled
+//! buffers and a persistent worker crew.
 //!
 //! SOLAR's headline win is PFS throughput, and once the access ORDER is
 //! fixed by the offline plan, the remaining lever is issuing independent
@@ -12,36 +13,51 @@
 //! * chunk aggregation never bridges a contiguity region, so every
 //!   [`FetchUnit`] is one independent range inside one file/shard.
 //!
-//! [`FetchPool`] dispatches a step's unit list across
-//! [`FetchPool::workers`] threads (`util::pool`-style atomic-cursor work
-//! stealing, results merged back in deterministic unit order) and decodes
-//! the f32 records on the same workers. When the store is sharded and
-//! there are at least as many regions as workers, consecutive same-region
-//! units are grouped so one worker streams one shard file sequentially
-//! (per-shard parallel fetch) instead of two threads seeking over each
-//! other inside a file; a flat store parallelizes per unit.
+//! [`FetchPool`] dispatches a step's unit list across a crew of
+//! **persistent worker threads** (spawned once, on the first parallel
+//! fetch, and reused across every later step — no per-step spawn/join)
+//! and decodes the f32 records on those same workers. When the store is
+//! sharded and there are at least as many regions as workers, consecutive
+//! same-region units are grouped so one worker streams one shard file
+//! sequentially (per-shard parallel fetch) instead of two threads seeking
+//! over each other inside a file; a flat store parallelizes per unit.
 //!
-//! Bytes land in **pooled buffers**: a free list of sample-aligned
-//! `Vec<u8>`s recycled across steps, so the steady-state fetch path does
-//! no per-read heap allocation (capacities only grow; once every pooled
-//! buffer has carried the largest unit, acquires stop allocating —
-//! [`PoolStats`] proves it in tests). Parallelism changes only WHEN and
-//! HOW bytes move: the staged result is keyed by sample id and merged in
-//! unit order, so one worker (`SOLAR_IO_THREADS=1`) is bit-identical to
-//! the serial fetch stage, and N workers stage byte-identical samples.
+//! When the store carries a [`Codec`] (see `storage::codec`), each worker
+//! reads the unit's ENCODED extent span in one request
+//! ([`SampleStore::read_span_raw_at`] — the PFS moves compressed bytes)
+//! and then walks the extents, decompressing straight into pooled f32
+//! buffers. The CPU cost of decompression lands on the fetch crew, off
+//! the compute path — the trade the codec exists to make.
+//!
+//! Bytes land in **pooled buffers** on both sides of the decode:
+//!
+//! * a free list of sample-aligned `Vec<u8>`s carries the on-disk bytes
+//!   (raw samples or encoded extents), recycled across steps;
+//! * decoded samples go into pooled `Vec<f32>`s: every staged
+//!   `Arc<Vec<f32>>` is also *retired* into a bounded side list, and a
+//!   sweep at the start of each fetch reclaims the ones whose consumers
+//!   (exec-thread buffer mirror, batch assembly) have dropped their
+//!   clones — so the steady-state fetch path does no per-sample heap
+//!   allocation either. [`PoolStats`] proves both in tests.
+//!
+//! Parallelism changes only WHEN and HOW bytes move: the staged result is
+//! keyed by sample id and merged in deterministic unit order, so one
+//! worker (`SOLAR_IO_THREADS=1`) is bit-identical to the serial fetch
+//! stage, and N workers stage byte-identical samples.
 //!
 //! The *modeled* side lives in `storage::pfs`: the throttle and the
 //! simulator deal the plan's request stream across
-//! `CostModel::io_parallelism` deterministic stream clocks, so modeled
-//! time reflects N concurrent PFS streams without depending on real
-//! thread interleaving.
+//! `CostModel::io_parallelism` deterministic stream clocks (plus a
+//! `decode_cost` term on compressed stores), so modeled time reflects N
+//! concurrent PFS streams without depending on real thread interleaving.
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 
-use crate::storage::store::{decode_f32, Contiguity, SampleStore};
-use crate::util::pool::parallel_map_workers;
+use crate::storage::codec::Codec;
+use crate::storage::store::{Contiguity, SampleStore};
 
 /// Worker count for the fetch pool (and the modeled stream count): the
 /// `SOLAR_IO_THREADS` environment variable when set (min 1 —
@@ -95,42 +111,50 @@ pub fn contiguous_runs(sorted_ids: &[u32], contig: &Contiguity) -> Vec<FetchUnit
     out
 }
 
-/// Buffer-pool counters — the no-steady-state-allocation evidence.
+/// Buffer-pool counters — the no-steady-state-allocation evidence, for
+/// both the byte side (on-disk bytes) and the f32 side (decoded samples).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PoolStats {
-    /// Buffer checkouts (one per read unit).
+    /// Byte-buffer checkouts (one per read unit).
     pub acquires: u64,
-    /// Fresh buffer allocations (the free list was empty).
+    /// Fresh byte-buffer allocations (the free list was empty).
     pub creates: u64,
-    /// Capacity growths of a recycled buffer (a unit larger than any that
-    /// buffer carried before). Capacities only grow, so this converges:
-    /// a steady-state step acquires without creating or growing.
+    /// Capacity growths of a recycled byte buffer (a unit larger than any
+    /// that buffer carried before). Capacities only grow, so this
+    /// converges: a steady-state step acquires without creating or
+    /// growing.
     pub grows: u64,
+    /// Decoded-sample buffer checkouts (one per staged sample).
+    pub f32_acquires: u64,
+    /// Fresh decoded-sample allocations (the f32 free list was empty).
+    pub f32_creates: u64,
+    /// Decoded-sample buffers reclaimed from the retired list (every
+    /// consumer dropped its `Arc` clone, so the allocation recycles).
+    pub f32_reclaims: u64,
 }
 
 /// Free list of byte buffers recycled across steps. Buffers keep their
-/// capacity between uses; lengths are always whole samples, so every
-/// buffer stays sample-aligned.
+/// capacity between uses; lengths are always whole spans, so every buffer
+/// stays aligned to what its unit carried.
 #[derive(Debug, Default)]
 struct BufferPool {
     free: Vec<Vec<u8>>,
-    stats: PoolStats,
 }
 
 impl BufferPool {
     /// Check out a buffer able to hold `len` bytes (capacity reserved
     /// here; the read path sets the exact length).
-    fn acquire(&mut self, len: usize) -> Vec<u8> {
-        self.stats.acquires += 1;
+    fn acquire(&mut self, len: usize, stats: &mut PoolStats) -> Vec<u8> {
+        stats.acquires += 1;
         match self.free.pop() {
             Some(b) => {
                 if b.capacity() < len {
-                    self.stats.grows += 1;
+                    stats.grows += 1;
                 }
                 b
             }
             None => {
-                self.stats.creates += 1;
+                stats.creates += 1;
                 Vec::with_capacity(len)
             }
         }
@@ -141,20 +165,187 @@ impl BufferPool {
     }
 }
 
-/// Per-node parallel fetch stage: a worker count plus the recycled buffer
-/// free list. One pool lives in each fetch thread for the whole run, so
-/// buffers recycle across steps.
+/// Bound on the retired-`Arc` side list (and the f32 free list): staged
+/// samples beyond this many in flight simply fall back to allocation, so
+/// a pathological consumer that never drops its clones can't make the
+/// pool pin memory without bound.
+const RETIRED_CAP: usize = 1024;
+
+/// One work parcel for the crew: a group of units fetched sequentially by
+/// one worker (per-shard groups on sharded stores, single units on flat
+/// ones), with the pooled buffers it will fill. Owns an `Arc` of the
+/// store so the persistent threads never borrow from the caller.
+struct Job {
+    seq: usize,
+    store: Arc<dyn SampleStore>,
+    sample_bytes: usize,
+    group: Vec<(FetchUnit, Vec<u8>)>,
+    /// Pooled decode buffers: at least one per sample across the group.
+    f32_bufs: Vec<Vec<f32>>,
+}
+
+/// A finished parcel: the decoded samples plus every pooled buffer the
+/// job carried, returned for recycling whether or not the reads worked.
+struct JobOut {
+    seq: usize,
+    byte_bufs: Vec<Vec<u8>>,
+    /// Decode buffers left unconsumed (only on error).
+    spare_f32: Vec<Vec<f32>>,
+    result: Result<Vec<(FetchUnit, Vec<Arc<Vec<f32>>>)>>,
+}
+
+/// Read + decode one unit on a worker. Raw stores read decoded bytes
+/// directly; codec stores read the encoded extent span in ONE request and
+/// decompress extent by extent into the pooled f32 buffers.
+fn run_unit(
+    store: &dyn SampleStore,
+    codec: Codec,
+    sb: usize,
+    u: FetchUnit,
+    buf: &mut Vec<u8>,
+    f32_bufs: &mut Vec<Vec<f32>>,
+) -> Result<Vec<Arc<Vec<f32>>>> {
+    let mut decoded = Vec::with_capacity(u.count);
+    if codec.is_raw() {
+        store.read_range_reusing_at(u.lo as usize, u.count, buf)?;
+        for rec in buf.chunks_exact(sb) {
+            let mut v = f32_bufs.pop().unwrap_or_default();
+            v.clear();
+            v.extend(rec.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])));
+            decoded.push(Arc::new(v));
+        }
+    } else {
+        store.read_span_raw_at(u.lo as usize, u.count, buf)?;
+        let elems = sb / 4;
+        let mut stream = buf.as_slice();
+        for _ in 0..u.count {
+            let mut v = f32_bufs.pop().unwrap_or_default();
+            let used = codec.decode_f32_into(stream, elems, &mut v)?;
+            stream = &stream[used..];
+            decoded.push(Arc::new(v));
+        }
+        if !stream.is_empty() {
+            bail!(
+                "unit [{}, {}): {} trailing bytes after the last extent",
+                u.lo,
+                u.lo as usize + u.count,
+                stream.len()
+            );
+        }
+    }
+    Ok(decoded)
+}
+
+/// Execute one parcel (runs on a crew thread). The first failing unit
+/// stops the group's reads, but every pooled buffer still comes back.
+fn run_job(job: Job) -> JobOut {
+    let store = job.store.as_ref();
+    let codec = store.codec();
+    let sb = job.sample_bytes;
+    let mut f32_bufs = job.f32_bufs;
+    let mut byte_bufs = Vec::with_capacity(job.group.len());
+    let mut done = Vec::with_capacity(job.group.len());
+    let mut err = None;
+    for (u, mut buf) in job.group {
+        if err.is_none() {
+            match run_unit(store, codec, sb, u, &mut buf, &mut f32_bufs) {
+                Ok(decoded) => done.push((u, decoded)),
+                Err(e) => err = Some(e),
+            }
+        }
+        byte_bufs.push(buf);
+    }
+    JobOut {
+        seq: job.seq,
+        byte_bufs,
+        spare_f32: f32_bufs,
+        result: match err {
+            None => Ok(done),
+            Some(e) => Err(e),
+        },
+    }
+}
+
+/// The persistent worker threads plus their job/result channels. Workers
+/// pull [`Job`]s off a shared receiver (one lock-guarded hand-off per
+/// parcel; the reads and decodes run unlocked) and post [`JobOut`]s back.
+/// Dropping the job sender shuts the crew down; [`Crew::shutdown`] joins.
+#[derive(Debug)]
+struct Crew {
+    workers: usize,
+    job_tx: mpsc::Sender<Job>,
+    out_rx: mpsc::Receiver<JobOut>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Crew {
+    fn spawn(workers: usize) -> Crew {
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let (out_tx, out_rx) = mpsc::channel::<JobOut>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&job_rx);
+                let tx = out_tx.clone();
+                std::thread::spawn(move || loop {
+                    // Holding the lock across `recv` is the point: exactly
+                    // one idle worker parks on the channel, takes the next
+                    // job, and releases the lock before running it.
+                    let job = match rx.lock() {
+                        Ok(guard) => guard.recv(),
+                        Err(_) => break,
+                    };
+                    let Ok(job) = job else { break };
+                    if tx.send(run_job(job)).is_err() {
+                        break;
+                    }
+                })
+            })
+            .collect();
+        Crew { workers, job_tx, out_rx, handles }
+    }
+
+    fn shutdown(self) {
+        drop(self.job_tx);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-node parallel fetch stage: a worker count, the recycled buffer
+/// free lists, and (once a parallel fetch has run) the persistent crew.
+/// One pool lives in each fetch thread for the whole run, so buffers and
+/// threads recycle across steps.
 #[derive(Debug)]
 pub struct FetchPool {
     workers: usize,
     bufs: BufferPool,
+    /// Decoded-sample free list (capacities persist across uses).
+    f32_free: Vec<Vec<f32>>,
+    /// Clones of recently staged samples, swept for reclamation at the
+    /// start of each fetch (see module docs). Bounded by [`RETIRED_CAP`].
+    retired: Vec<Arc<Vec<f32>>>,
+    stats: PoolStats,
+    crew: Option<Crew>,
+    /// Total crew threads ever spawned — the persistent-threads evidence
+    /// (stays at `workers` across arbitrarily many steps).
+    spawned: u64,
 }
 
 impl FetchPool {
     /// `workers <= 1` is the strictly serial fetch stage (no threads at
     /// all — bit-identical to the pre-pool behaviour).
     pub fn new(workers: usize) -> FetchPool {
-        FetchPool { workers: workers.max(1), bufs: BufferPool::default() }
+        FetchPool {
+            workers: workers.max(1),
+            bufs: BufferPool::default(),
+            f32_free: Vec::new(),
+            retired: Vec::new(),
+            stats: PoolStats::default(),
+            crew: None,
+            spawned: 0,
+        }
     }
 
     pub fn workers(&self) -> usize {
@@ -162,53 +353,127 @@ impl FetchPool {
     }
 
     pub fn stats(&self) -> PoolStats {
-        self.bufs.stats
+        self.stats
+    }
+
+    /// Total crew threads spawned over the pool's lifetime. A run at a
+    /// fixed width spawns exactly `workers` threads no matter how many
+    /// steps it fetches; a [`resize`](Self::resize) adds one more crew.
+    pub fn threads_spawned(&self) -> u64 {
+        self.spawned
+    }
+
+    /// Change the worker count mid-run (the `Auto` co-tuner's hook). The
+    /// old crew is joined now; the new one spawns lazily on the next
+    /// parallel fetch. Width changes only WHEN bytes move — staged
+    /// samples are byte-identical at every width.
+    pub fn resize(&mut self, workers: usize) {
+        let w = workers.max(1);
+        if w == self.workers {
+            return;
+        }
+        self.workers = w;
+        if let Some(c) = self.crew.take() {
+            c.shutdown();
+        }
+    }
+
+    /// Reclaim retired decode buffers whose consumers are done: a retired
+    /// entry at strong count 1 is owned by us alone, so its allocation
+    /// goes back on the free list for the next decode.
+    fn sweep_retired(&mut self) {
+        let mut i = 0;
+        while i < self.retired.len() {
+            if Arc::strong_count(&self.retired[i]) == 1 {
+                let a = self.retired.swap_remove(i);
+                if let Ok(v) = Arc::try_unwrap(a) {
+                    self.stats.f32_reclaims += 1;
+                    if self.f32_free.len() < RETIRED_CAP {
+                        self.f32_free.push(v);
+                    }
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Check out `n` decode buffers (pooled where available).
+    fn acquire_f32(&mut self, n: usize) -> Vec<Vec<f32>> {
+        self.stats.f32_acquires += n as u64;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.f32_free.pop() {
+                Some(v) => out.push(v),
+                None => {
+                    self.stats.f32_creates += 1;
+                    out.push(Vec::new());
+                }
+            }
+        }
+        out
+    }
+
+    /// Stage one unit's decoded samples, retiring a clone of each for
+    /// later reclamation.
+    fn stash(
+        &mut self,
+        u: FetchUnit,
+        decoded: Vec<Arc<Vec<f32>>>,
+        staged: &mut HashMap<u32, Arc<Vec<f32>>>,
+    ) {
+        for (i, rec) in decoded.into_iter().enumerate() {
+            if self.retired.len() < RETIRED_CAP {
+                self.retired.push(rec.clone());
+            }
+            staged.insert(u.lo + i as u32, rec);
+        }
     }
 
     /// Read and decode every unit, inserting sample `lo + i ↦ record`
-    /// into `staged`. Reads run on up to [`Self::workers`] threads;
-    /// results are merged in unit order, so the outcome is deterministic
-    /// and identical to a serial pass regardless of scheduling.
+    /// into `staged`. Reads run on up to [`Self::workers`] persistent
+    /// crew threads; results are merged in unit order, so the outcome is
+    /// deterministic and identical to a serial pass regardless of
+    /// scheduling.
     pub fn fetch(
         &mut self,
-        store: &dyn SampleStore,
+        store: &Arc<dyn SampleStore>,
         units: &[FetchUnit],
         staged: &mut HashMap<u32, Arc<Vec<f32>>>,
     ) -> Result<()> {
         if units.is_empty() {
             return Ok(());
         }
+        self.sweep_retired();
         let sb = store.sample_bytes();
-        let work: Vec<(FetchUnit, Vec<u8>)> =
-            units.iter().map(|&u| (u, self.bufs.acquire(u.count * sb))).collect();
+        let codec = store.codec();
+        // Capacity hint per unit: a raw span is exactly count·sb; an
+        // encoded span of incompressible data is at most count·(sb+1)
+        // (one mode tag per sample). `read_span_raw_at` sets the exact
+        // length; the hint just keeps steady-state growth at zero.
+        let span_hint =
+            |count: usize| if codec.is_raw() { count * sb } else { count * (sb + 1) };
+        let work: Vec<(FetchUnit, Vec<u8>)> = units
+            .iter()
+            .map(|&u| {
+                let buf = self.bufs.acquire(span_hint(u.count), &mut self.stats);
+                (u, buf)
+            })
+            .collect();
 
-        // One unit's read + decode (runs on a pool worker).
-        let run_unit = |u: FetchUnit, mut buf: Vec<u8>| -> Result<(FetchUnit, Vec<u8>, Vec<Arc<Vec<f32>>>)> {
-            store.read_range_reusing_at(u.lo as usize, u.count, &mut buf)?;
-            let decoded = buf.chunks_exact(sb).map(|rec| Arc::new(decode_f32(rec))).collect();
-            Ok((u, buf, decoded))
-        };
-
-        // The parallel path below spawns scoped workers PER CALL
-        // (`parallel_map_workers`): ~tens of µs of spawn/join per step,
-        // bounded by `workers`, against multi-ms (real) or throttled
-        // (modeled) read time per step — simple and borrow-friendly.
-        // Persistent per-pool worker threads with a hand-off channel
-        // would shave that overhead; tracked as a ROADMAP follow-on.
         if self.workers <= 1 || work.len() <= 1 {
-            // Serial fast path: caller's thread, unit order.
-            for (u, buf) in work {
-                let (u, buf, decoded) = run_unit(u, buf)?;
-                for (i, rec) in decoded.into_iter().enumerate() {
-                    staged.insert(u.lo + i as u32, rec);
-                }
+            // Serial fast path: caller's thread, unit order, no crew.
+            for (u, mut buf) in work {
+                let mut f32s = self.acquire_f32(u.count);
+                let decoded = run_unit(store.as_ref(), codec, sb, u, &mut buf, &mut f32s)?;
+                self.stash(u, decoded, staged);
                 self.bufs.release(buf);
             }
             return Ok(());
         }
 
-        // Work items: per-shard groups when the store offers at least as
-        // many regions as workers (each worker streams one file
+        // Work parcels: per-shard groups when the store offers at least
+        // as many regions as workers (each worker streams one file
         // sequentially); per-unit otherwise. Units arrive region-major
         // (chunk lists and runs are id-sorted, regions are id ranges), so
         // grouping is a single pass and flattening restores unit order.
@@ -228,33 +493,81 @@ impl FetchPool {
                 _ => items.push(vec![(u, buf)]),
             }
         }
-        let workers = self.workers.min(items.len());
-        let results = parallel_map_workers(workers, items, |group| {
-            group
-                .into_iter()
-                .map(|(u, buf)| run_unit(u, buf))
-                .collect::<Result<Vec<_>>>()
-        });
+        let mut jobs = Vec::with_capacity(items.len());
+        for (seq, group) in items.into_iter().enumerate() {
+            let total: usize = group.iter().map(|(u, _)| u.count).sum();
+            let f32_bufs = self.acquire_f32(total);
+            jobs.push(Job { seq, store: Arc::clone(store), sample_bytes: sb, group, f32_bufs });
+        }
 
-        // Merge in deterministic unit order (parallel_map_workers returns
-        // results in input order); recycle every buffer we got back.
+        // Hand the parcels to the persistent crew (spawned on the first
+        // parallel fetch, reused for every later one; respawned only
+        // after a resize).
+        if self.crew.is_none() {
+            self.crew = Some(Crew::spawn(self.workers));
+            self.spawned += self.workers as u64;
+        }
+        let n_jobs = jobs.len();
+        let mut outs: Vec<Option<JobOut>> = (0..n_jobs).map(|_| None).collect();
+        let mut pool_err: Option<anyhow::Error> = None;
+        {
+            let crew = self.crew.as_ref().expect("crew just ensured");
+            debug_assert_eq!(crew.workers, self.workers);
+            let mut sent = 0usize;
+            for job in jobs {
+                if crew.job_tx.send(job).is_err() {
+                    pool_err = Some(anyhow!("fetch pool crew exited"));
+                    break;
+                }
+                sent += 1;
+            }
+            for _ in 0..sent {
+                match crew.out_rx.recv() {
+                    Ok(out) => {
+                        let seq = out.seq;
+                        outs[seq] = Some(out);
+                    }
+                    Err(_) => {
+                        pool_err = Some(anyhow!("fetch pool worker died mid-step"));
+                        break;
+                    }
+                }
+            }
+        }
+
+        // Merge in deterministic parcel order (seq = original unit
+        // order); recycle every buffer that came back, error or not.
         let mut first_err = None;
-        for r in results {
-            match r {
+        for out in outs.into_iter().flatten() {
+            for b in out.byte_bufs {
+                self.bufs.release(b);
+            }
+            for v in out.spare_f32 {
+                if self.f32_free.len() < RETIRED_CAP {
+                    self.f32_free.push(v);
+                }
+            }
+            match out.result {
                 Ok(group) => {
-                    for (u, buf, decoded) in group {
-                        for (i, rec) in decoded.into_iter().enumerate() {
-                            staged.insert(u.lo + i as u32, rec);
-                        }
-                        self.bufs.release(buf);
+                    for (u, decoded) in group {
+                        self.stash(u, decoded, staged);
                     }
                 }
                 Err(e) => first_err = first_err.or(Some(e)),
             }
         }
-        match first_err {
+        // A unit's own read/decode error beats a crew-plumbing error.
+        match first_err.or(pool_err) {
             Some(e) => Err(e),
             None => Ok(()),
+        }
+    }
+}
+
+impl Drop for FetchPool {
+    fn drop(&mut self) {
+        if let Some(c) = self.crew.take() {
+            c.shutdown();
         }
     }
 }
@@ -262,19 +575,42 @@ impl FetchPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::storage::shdf::{ShdfHeader, ShdfReader, ShdfWriter};
     use crate::storage::store::MemStore;
 
-    fn mem(n: usize, elems: usize) -> MemStore {
+    fn mem(n: usize, elems: usize) -> Arc<dyn SampleStore> {
         let mut m = MemStore::new("io", vec![elems], Vec::new()).unwrap();
         for i in 0..n {
             let s: Vec<f32> = (0..elems).map(|j| (i * 100 + j) as f32).collect();
             m.push_f32(&s).unwrap();
         }
-        m
+        Arc::new(m)
     }
 
     fn expect_sample(i: u32, elems: usize) -> Vec<f32> {
         (0..elems).map(|j| (i as usize * 100 + j) as f32).collect()
+    }
+
+    /// An SHDF store on disk holding the same samples as [`mem`], under
+    /// the given codec.
+    fn shdf(name: &str, n: usize, elems: usize, codec: Codec) -> Arc<dyn SampleStore> {
+        let dir = std::env::temp_dir().join("solar_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let header = ShdfHeader {
+            n_samples: n,
+            sample_bytes: elems * 4,
+            shape: vec![elems],
+            dtype: "f32".into(),
+            name: "io".into(),
+        };
+        let mut w = ShdfWriter::create_with_codec(&path, header, codec).unwrap();
+        for i in 0..n {
+            let s: Vec<f32> = (0..elems).map(|j| (i * 100 + j) as f32).collect();
+            w.append_f32(&s).unwrap();
+        }
+        w.finish().unwrap();
+        Arc::new(ShdfReader::open(&path).unwrap())
     }
 
     #[test]
@@ -319,6 +655,35 @@ mod tests {
     }
 
     #[test]
+    fn compressed_fetch_matches_raw_at_any_worker_count() {
+        // THE codec fetch-path assertion: a compressed store must stage
+        // byte-identical samples to a raw store holding the same data, at
+        // every worker count — decompression changes only HOW the bytes
+        // arrive. The id set mixes multi-sample runs (one span read, many
+        // extents) with singletons.
+        let raw = shdf("fetch_raw.shdf", 64, 8, Codec::Raw);
+        let comp = shdf("fetch_comp.shdf", 64, 8, Codec::DeltaBitpack);
+        let contig = raw.chunk_contiguity();
+        let ids: Vec<u32> = vec![0, 1, 2, 3, 9, 17, 18, 19, 40, 41, 42, 43, 44, 63];
+        let units = contiguous_runs(&ids, &contig);
+        for workers in [1usize, 2, 4, 8] {
+            let mut staged_raw = HashMap::new();
+            FetchPool::new(workers).fetch(&raw, &units, &mut staged_raw).unwrap();
+            let mut staged_comp = HashMap::new();
+            FetchPool::new(workers).fetch(&comp, &units, &mut staged_comp).unwrap();
+            assert_eq!(staged_comp.len(), ids.len(), "workers={workers}");
+            for &i in &ids {
+                assert_eq!(
+                    staged_comp.get(&i).map(|v| &***v),
+                    staged_raw.get(&i).map(|v| &***v),
+                    "workers={workers} id {i}"
+                );
+                assert_eq!(**staged_comp.get(&i).unwrap(), expect_sample(i, 8));
+            }
+        }
+    }
+
+    #[test]
     fn fetch_groups_by_region_and_stays_correct() {
         // A 4-region layout with 4 workers takes the per-shard grouping
         // path, with MULTIPLE units inside a group (gapped ids per
@@ -343,25 +708,86 @@ mod tests {
     #[test]
     fn steady_state_fetch_does_not_allocate() {
         // THE pool-stats acceptance assertion: after the first (warm-up)
-        // step, repeated steps check buffers out of the free list without
-        // a single create or grow.
+        // step, repeated steps check byte buffers out of the free list
+        // without a single create or grow — and once consumers drop their
+        // staged Arcs, decode buffers recycle too (zero f32 creates in
+        // steady state).
         let store = mem(64, 8);
         let contig = store.chunk_contiguity();
         let units = contiguous_runs(&[0, 1, 2, 3, 8, 9, 10, 11, 40, 41, 42, 43], &contig);
+        let n_samples: u64 = units.iter().map(|u| u.count as u64).sum();
         for workers in [1usize, 4] {
             let mut pool = FetchPool::new(workers);
             let mut staged = HashMap::new();
             pool.fetch(&store, &units, &mut staged).unwrap();
             let warm = pool.stats();
             assert!(warm.creates > 0, "workers={workers}: warm-up must allocate");
+            assert_eq!(warm.f32_creates, n_samples, "workers={workers}: warm-up decode allocs");
             for _ in 0..10 {
-                staged.clear();
+                staged.clear(); // consumer done: retired buffers reclaimable
                 pool.fetch(&store, &units, &mut staged).unwrap();
             }
             let steady = pool.stats();
             assert_eq!(warm.creates, steady.creates, "workers={workers}: steady-state create");
             assert_eq!(warm.grows, steady.grows, "workers={workers}: steady-state grow");
             assert_eq!(steady.acquires, warm.acquires + 10 * units.len() as u64);
+            assert_eq!(
+                steady.f32_creates, warm.f32_creates,
+                "workers={workers}: steady-state decode buffers come from the pool"
+            );
+            assert_eq!(steady.f32_acquires, warm.f32_acquires + 10 * n_samples);
+            assert!(steady.f32_reclaims >= 10 * n_samples, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn retained_samples_are_not_reclaimed() {
+        // A staged sample the consumer KEEPS (buffer-resident across
+        // steps) must never have its allocation recycled out from under
+        // the Arc: only strong-count-1 retirees reclaim.
+        let store = mem(16, 4);
+        let contig = store.chunk_contiguity();
+        let units = contiguous_runs(&[0, 1, 2, 3], &contig);
+        let mut pool = FetchPool::new(1);
+        let mut staged = HashMap::new();
+        pool.fetch(&store, &units, &mut staged).unwrap();
+        let kept: Vec<Arc<Vec<f32>>> = staged.values().cloned().collect();
+        staged.clear();
+        for _ in 0..3 {
+            staged.clear();
+            pool.fetch(&store, &units, &mut staged).unwrap();
+        }
+        for (i, v) in kept.iter().enumerate() {
+            assert_eq!(**v, expect_sample(i as u32, 4), "retained sample {i} intact");
+        }
+    }
+
+    #[test]
+    fn persistent_crew_is_reused_across_fetches() {
+        // Satellite guarantee: the parallel path spawns its worker
+        // threads ONCE and reuses them for every later step; a resize
+        // replaces the crew exactly once.
+        let store = mem(64, 4);
+        let contig = store.chunk_contiguity();
+        let units = contiguous_runs(&[0, 1, 5, 6, 10, 11, 20, 21, 30, 31], &contig);
+        let mut pool = FetchPool::new(4);
+        assert_eq!(pool.threads_spawned(), 0, "no crew before the first fetch");
+        let mut staged = HashMap::new();
+        for _ in 0..8 {
+            staged.clear();
+            pool.fetch(&store, &units, &mut staged).unwrap();
+        }
+        assert_eq!(pool.threads_spawned(), 4, "one crew across all steps");
+        pool.resize(4); // no-op: same width keeps the crew
+        pool.fetch(&store, &units, &mut staged).unwrap();
+        assert_eq!(pool.threads_spawned(), 4);
+        pool.resize(2);
+        assert_eq!(pool.workers(), 2);
+        staged.clear();
+        pool.fetch(&store, &units, &mut staged).unwrap();
+        assert_eq!(pool.threads_spawned(), 6, "resize respawns once");
+        for &i in &[0u32, 1, 5, 6, 10, 11, 20, 21, 30, 31] {
+            assert_eq!(**staged.get(&i).unwrap(), expect_sample(i, 4));
         }
     }
 
@@ -392,22 +818,27 @@ mod tests {
         let steady = pool.stats();
         assert_eq!(warm.creates, steady.creates);
         assert_eq!(warm.grows, steady.grows);
+        assert_eq!(warm.f32_creates, steady.f32_creates);
     }
 
     #[test]
     fn fetch_surfaces_read_errors() {
         let store = mem(8, 4);
-        let contig = store.chunk_contiguity();
         // Unit past the end of the store: the store's own error must come
-        // back (from the serial and the parallel path alike).
+        // back (from the serial and the parallel path alike), and the
+        // pool must stay usable afterwards.
         let bad = vec![
             FetchUnit { lo: 0, count: 2, region: 0 },
             FetchUnit { lo: 6, count: 4, region: 0 },
         ];
+        let good = vec![FetchUnit { lo: 0, count: 2, region: 0 }, FetchUnit { lo: 4, count: 2, region: 0 }];
         for workers in [1usize, 4] {
             let mut pool = FetchPool::new(workers);
             let mut staged = HashMap::new();
             assert!(pool.fetch(&store, &bad, &mut staged).is_err(), "workers={workers}");
+            staged.clear();
+            pool.fetch(&store, &good, &mut staged).unwrap();
+            assert_eq!(staged.len(), 4, "workers={workers}: pool survives an error");
         }
     }
 

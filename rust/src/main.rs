@@ -12,6 +12,7 @@ use solar::exp::{self, ExpCtx};
 use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
 use solar::sched::plan::SchedulePlan;
+use solar::storage::codec::Codec;
 use solar::storage::pfs::{CostModel, SystemTier};
 use solar::storage::store::{open_store, SampleStore};
 use solar::train::driver::{train, TrainConfig};
@@ -124,24 +125,37 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     let scale = args.get_usize("scale", 1000)?;
     let seed = args.get_usize("seed", 42)? as u64;
     let shards = args.get_usize("shards", 0)?;
+    let codec_name = args.get_or("codec", "raw");
+    let codec = Codec::by_name(&codec_name)
+        .with_context(|| format!("unknown --codec '{codec_name}' (raw|delta-bitpack)"))?;
     let spec = DatasetSpec::paper(dataset)
         .with_context(|| format!("unknown dataset '{dataset}'"))?
         .scaled(scale);
     println!(
-        "generating {} -> {} ({} samples, {}{})",
+        "generating {} -> {} ({} samples, {}{}, codec {})",
         spec.name,
         out.display(),
         spec.n_samples,
         fmt_bytes(spec.total_bytes()),
-        if shards > 0 { format!(", {shards} shards") } else { String::new() }
+        if shards > 0 { format!(", {shards} shards") } else { String::new() },
+        codec.name()
     );
     if shards > 0 {
         // Sharded layout: `out` becomes a directory of SHDF shards plus a
-        // manifest — byte-identical samples to the single-file layout.
-        let m = synth::generate_dataset_sharded(&out, &spec, seed, shards)?;
+        // manifest — sample-identical to the single-file layout (byte-
+        // identical files for a fixed codec, decoded-identical across
+        // codecs).
+        let m = synth::generate_dataset_sharded_workers_with(
+            &out,
+            &spec,
+            seed,
+            shards,
+            solar::loader::io::io_threads(),
+            codec,
+        )?;
         println!("wrote {} samples across {} shards", m.n_samples, m.shards.len());
     } else {
-        let h = synth::generate_dataset(&out, &spec, seed)?;
+        let h = synth::generate_dataset_with(&out, &spec, seed, codec)?;
         println!("wrote {} samples", h.n_samples);
     }
     Ok(())
@@ -156,14 +170,15 @@ fn cmd_verify_store(args: &Args) -> Result<()> {
     let n = store.n_samples();
     let contig = store.chunk_contiguity();
     println!(
-        "store {} ({}): {} samples x {} = {}, shape {:?}, {} contiguous region(s)",
+        "store {} ({}): {} samples x {} = {}, shape {:?}, {} contiguous region(s), codec {}",
         data.display(),
         if data.is_dir() { "sharded" } else { "single-file" },
         n,
         fmt_bytes(store.sample_bytes() as u64),
         fmt_bytes((n * store.sample_bytes()) as u64),
         store.shape(),
-        contig.n_regions()
+        contig.n_regions(),
+        store.codec().name()
     );
     let reference = match args.get_path("ref") {
         Some(p) => {
@@ -259,12 +274,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         "xla" => DenseImpl::Xla,
         d => bail!("--dense must be pallas|xla, got {d}"),
     };
-    // 0 = auto (SOLAR_IO_THREADS, else machine default); resolve here so
+    let prefetch = parse_prefetch(&args.get_or("prefetch", "1"))?;
+    // 0 = auto. With `--prefetch auto` the 0 sentinel reaches the driver,
+    // which co-tunes the width from epoch 0's load:compute ratio;
+    // otherwise resolve here (SOLAR_IO_THREADS, else machine default) so
     // the banner prints the width the fetch pools actually use.
     let io_threads = match args.get_usize("io-threads", 0)? {
+        0 if matches!(prefetch, solar::train::driver::PrefetchMode::Auto) => 0,
         0 => solar::loader::io::io_threads(),
         n => n,
     };
+    let codec = store.codec();
     let tc = TrainConfig {
         run: cfg,
         store,
@@ -276,22 +296,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_every: args.get_usize("eval-every", 8)?,
         max_steps: args.get_usize("max-steps", 0)?,
         holdout,
-        prefetch: parse_prefetch(&args.get_or("prefetch", "1"))?,
+        prefetch,
         epoch_drain: args.flag("epoch-drain"),
         fetch_fault: None,
         load_only: args.flag("load-only"),
         io_threads,
     };
     println!(
-        "training: {} samples, {} nodes x batch {}, {} epochs, loader {}, throttle x{}, prefetch {}, io-threads {}{}",
+        "training: {} samples, {} nodes x batch {}, {} epochs, loader {}, codec {}, throttle x{}, prefetch {}, io-threads {}{}",
         tc.run.spec.n_samples,
         tc.run.n_nodes,
         tc.run.local_batch,
         tc.run.n_epochs,
         loader,
+        codec.name(),
         tc.throttle,
         tc.prefetch,
-        tc.io_threads,
+        if tc.io_threads == 0 { "auto".to_string() } else { tc.io_threads.to_string() },
         if tc.load_only { " (load-only: no PJRT, no gradients)" } else { "" }
     );
     let report = train(&tc)?;
@@ -319,6 +340,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.steps, report.epochs, report.hits, report.pfs_samples
     );
     if matches!(tc.prefetch, solar::train::driver::PrefetchMode::Auto) {
+        if tc.io_threads == 0 {
+            println!("io-threads auto settled at {}", report.io_threads);
+        }
         if report.epochs > 1 {
             println!("prefetch auto picked depth {} after epoch 0", report.prefetch);
         } else {

@@ -5,6 +5,7 @@
 //! machinery.
 
 pub mod access;
+pub mod codec;
 pub mod pfs;
 pub mod shard;
 pub mod shdf;

@@ -53,6 +53,21 @@ pub struct CostModel {
     /// [`CostModel::pfs_sequence`]); the assignment is deterministic, so
     /// modeled time never depends on real thread interleaving.
     pub io_parallelism: usize,
+    /// Worker-CPU decompression cost per DECODED byte (the codec
+    /// tentpole's CPU side). Charged only when a compressed layout is in
+    /// play: the driver adds `decode_cost(decoded_bytes)` to the stage
+    /// time for PFS-fetched samples, and `dist::sim` adds the same term
+    /// to its node-hidden loading time. ~2 GB/s per worker by default —
+    /// the measured ballpark of simple delta+bitpack decoders.
+    pub decode_per_byte_s: f64,
+    /// SIM-ONLY parametric compression ratio (compressed/raw bytes, in
+    /// (0, 1]; 1.0 = raw). `dist::sim` scales the bytes and offsets it
+    /// charges the PFS by this factor to model a compressed layout
+    /// without materializing one. The REAL driver never applies it — its
+    /// `ReadReq`s already carry the true encoded extent lengths from
+    /// [`super::store::Contiguity::span_bytes`], so scaling again would
+    /// double-count.
+    pub codec_ratio: f64,
 }
 
 impl Default for CostModel {
@@ -69,6 +84,8 @@ impl Default for CostModel {
             mem_bw: 12e9,
             per_sample_overhead_s: 95e-6,
             io_parallelism: 1,
+            decode_per_byte_s: 5e-10,
+            codec_ratio: 1.0,
         }
     }
 }
@@ -182,6 +199,14 @@ impl CostModel {
     #[inline]
     pub fn delivery_overhead(&self, n: usize) -> f64 {
         n as f64 * self.per_sample_overhead_s
+    }
+
+    /// Worker-CPU cost of decompressing `decoded_bytes` of codec output,
+    /// spread across the [`Self::io_parallelism`] fetch workers (they
+    /// decompress their spans concurrently, so wall time divides).
+    #[inline]
+    pub fn decode_cost(&self, decoded_bytes: u64) -> f64 {
+        decoded_bytes as f64 * self.decode_per_byte_s / self.io_parallelism.max(1) as f64
     }
 
     /// PFS contention multiplier for `n` concurrent reader nodes: Lustre
@@ -342,6 +367,22 @@ mod tests {
         // wall = one first-read cost.
         let one = m.pfs_read(KB65, 0);
         assert!((m.pfs_parallel_sequence(&reqs) - one).abs() < 1e-15);
+    }
+
+    #[test]
+    fn decode_cost_scales_with_bytes_and_divides_across_workers() {
+        let mut m = CostModel::default();
+        assert_eq!(m.decode_cost(0), 0.0);
+        let one = m.decode_cost(KB65);
+        assert!(one > 0.0);
+        assert!((m.decode_cost(4 * KB65) - 4.0 * one).abs() < 1e-15);
+        m.io_parallelism = 4;
+        assert!((m.decode_cost(4 * KB65) - one).abs() < 1e-15);
+        // The decode term is worthwhile exactly when it undercuts the
+        // bandwidth it saves: at default calibration, decoding a 65 KB
+        // sample costs less than streaming even a quarter of it from PFS.
+        m.io_parallelism = 1;
+        assert!(m.decode_cost(KB65) < (KB65 / 4) as f64 / m.pfs_bw + m.pfs_request_latency_s);
     }
 
     #[test]

@@ -32,9 +32,11 @@
 
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
+use crate::storage::codec::Codec;
 use crate::storage::shdf::{ShdfHeader, ShdfReader, ShdfWriter};
-use crate::storage::store::{Contiguity, SampleStore};
+use crate::storage::store::{Contiguity, SampleStore, VarExtents};
 use crate::util::json::Json;
 
 pub const FORMAT: &str = "shdf-shards-v1";
@@ -51,6 +53,10 @@ pub struct ShardManifest {
     pub n_samples: usize,
     /// `(file name, sample count)` per shard, in global-id order.
     pub shards: Vec<(String, usize)>,
+    /// Per-sample codec shared by every shard. Serialized only when not
+    /// raw (the optional `codec` manifest key), so pre-codec manifests
+    /// stay byte-identical and keep parsing.
+    pub codec: Codec,
 }
 
 impl ShardManifest {
@@ -76,6 +82,9 @@ impl ShardManifest {
                         .collect(),
                 ),
             );
+        if !self.codec.is_raw() {
+            o.set("codec", Json::Str(self.codec.name().to_string()));
+        }
         o
     }
 
@@ -88,6 +97,15 @@ impl ShardManifest {
         for s in j.req_arr("shards")? {
             shards.push((s.req_str("file")?.to_string(), s.req_usize("n_samples")?));
         }
+        // Absent on every pre-codec manifest; an unknown name is a hard
+        // error (reading encoded extents as raw would corrupt samples).
+        let codec = match j.get("codec") {
+            None => Codec::Raw,
+            Some(_) => {
+                let name = j.req_str("codec")?;
+                Codec::by_name(name).with_context(|| format!("unsupported codec '{name}'"))?
+            }
+        };
         let m = ShardManifest {
             name: j.req_str("name")?.to_string(),
             sample_bytes: j.req_usize("sample_bytes")?,
@@ -95,6 +113,7 @@ impl ShardManifest {
             dtype: j.req_str("dtype")?.to_string(),
             n_samples: j.req_usize("n_samples")?,
             shards,
+            codec,
         };
         let total: usize = m.shards.iter().map(|(_, n)| n).sum();
         if total != m.n_samples {
@@ -130,6 +149,7 @@ pub struct ShardedWriter {
     /// Per-shard capacities; the last entry repeats for any further
     /// shards (a single entry = the fixed-capacity rolling mode).
     caps: Vec<usize>,
+    codec: Codec,
     cur: Option<ShdfWriter>,
     cur_count: usize,
     shards: Vec<(String, usize)>,
@@ -140,10 +160,20 @@ impl ShardedWriter {
     /// Fixed-capacity mode: roll to a new shard every `shard_capacity`
     /// samples (the shard count follows from how many samples arrive).
     pub fn create(dir: &Path, header: ShdfHeader, shard_capacity: usize) -> Result<ShardedWriter> {
+        Self::create_with_codec(dir, header, shard_capacity, Codec::Raw)
+    }
+
+    /// Fixed-capacity mode with every shard `codec`-encoded.
+    pub fn create_with_codec(
+        dir: &Path,
+        header: ShdfHeader,
+        shard_capacity: usize,
+        codec: Codec,
+    ) -> Result<ShardedWriter> {
         if shard_capacity == 0 {
             bail!("shard_capacity must be > 0");
         }
-        Self::with_caps(dir, header, vec![shard_capacity])
+        Self::with_caps(dir, header, vec![shard_capacity], codec)
     }
 
     /// Balanced mode for a known total: exactly `n_shards` shards (capped
@@ -155,7 +185,18 @@ impl ShardedWriter {
         total: usize,
         n_shards: usize,
     ) -> Result<ShardedWriter> {
-        Self::with_caps(dir, header, Self::balanced_sizes(total, n_shards))
+        Self::create_balanced_with_codec(dir, header, total, n_shards, Codec::Raw)
+    }
+
+    /// Balanced mode with every shard `codec`-encoded.
+    pub fn create_balanced_with_codec(
+        dir: &Path,
+        header: ShdfHeader,
+        total: usize,
+        n_shards: usize,
+        codec: Codec,
+    ) -> Result<ShardedWriter> {
+        Self::with_caps(dir, header, Self::balanced_sizes(total, n_shards), codec)
     }
 
     /// The balanced per-shard sample counts [`create_balanced`] commits
@@ -170,13 +211,19 @@ impl ShardedWriter {
         (0..n_shards).map(|k| if k < r { q + 1 } else { q.max(1) }).collect()
     }
 
-    fn with_caps(dir: &Path, header: ShdfHeader, caps: Vec<usize>) -> Result<ShardedWriter> {
+    fn with_caps(
+        dir: &Path,
+        header: ShdfHeader,
+        caps: Vec<usize>,
+        codec: Codec,
+    ) -> Result<ShardedWriter> {
         header.validate()?;
         std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
         Ok(ShardedWriter {
             dir: dir.to_path_buf(),
             header,
             caps,
+            codec,
             cur: None,
             cur_count: 0,
             shards: Vec::new(),
@@ -212,7 +259,7 @@ impl ShardedWriter {
         }
         if self.cur.is_none() {
             let path = self.dir.join(Self::shard_file(self.shards.len()));
-            self.cur = Some(ShdfWriter::create(&path, self.header.clone())?);
+            self.cur = Some(ShdfWriter::create_with_codec(&path, self.header.clone(), self.codec)?);
         }
         self.cur.as_mut().expect("shard writer just ensured").append(sample)?;
         self.cur_count += 1;
@@ -237,6 +284,7 @@ impl ShardedWriter {
             dtype: self.header.dtype.clone(),
             n_samples: self.total,
             shards: self.shards.clone(),
+            codec: self.codec,
         };
         manifest.save(&self.dir)?;
         Ok(manifest)
@@ -257,6 +305,7 @@ pub struct ShardedStore {
     /// Virtual byte address of each shard's byte 0 in the notional
     /// concatenation of the shard files (for the contiguity map).
     bases: Vec<u64>,
+    codec: Codec,
 }
 
 impl ShardedStore {
@@ -299,9 +348,26 @@ impl ShardedStore {
                     m.name
                 );
             }
+            if r.codec() != m.codec {
+                // Codec is negotiated once for the whole dataset; a shard
+                // encoded differently would be mis-decoded.
+                bail!(
+                    "shard {} uses codec '{}', manifest says '{}'",
+                    path.display(),
+                    r.codec().name(),
+                    m.codec.name()
+                );
+            }
             starts.push(starts.last().unwrap() + n);
             bases.push(base);
-            base += r.offset_of(0) + *n as u64 * m.sample_bytes as u64;
+            // Advance by the shard's true on-disk payload footprint: the
+            // encoded extent span when compressed, the uniform stride
+            // otherwise.
+            let payload = match r.extent_index() {
+                Some(idx) => idx[*n] - idx[0],
+                None => *n as u64 * m.sample_bytes as u64,
+            };
+            base += r.offset_of(0) + payload;
             shards.push(r);
         }
         Ok(ShardedStore {
@@ -311,6 +377,7 @@ impl ShardedStore {
             shards,
             starts,
             bases,
+            codec: m.codec,
         })
     }
 
@@ -380,13 +447,59 @@ impl SampleStore for ShardedStore {
 
     fn chunk_contiguity(&self) -> Contiguity {
         let mut regions = Vec::with_capacity(self.shards.len());
+        // Variable extents (compressed layout): per-sample virtual
+        // offsets plus each region's payload end, both rebased into the
+        // concatenated address space.
+        let mut var = VarExtents { offsets: Vec::new(), region_ends: Vec::new() };
         for (k, r) in self.shards.iter().enumerate() {
-            if ShdfReader::n_samples(r) == 0 {
+            let n = ShdfReader::n_samples(r);
+            if n == 0 {
                 continue; // empty shard: no addressable region
             }
             regions.push((self.starts[k] as u32, self.bases[k] + r.offset_of(0)));
+            if let Some(idx) = r.extent_index() {
+                var.offsets.extend(idx[..n].iter().map(|&o| self.bases[k] + o));
+                var.region_ends.push(self.bases[k] + idx[n]);
+            }
         }
-        Contiguity::from_regions(regions, self.sample_bytes)
+        let c = Contiguity::from_regions(regions, self.sample_bytes);
+        if self.codec.is_raw() {
+            c
+        } else {
+            c.with_var_extents(Arc::new(var))
+        }
+    }
+
+    fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    fn read_span_raw_at(&self, start: usize, count: usize, buf: &mut Vec<u8>) -> Result<()> {
+        if start + count > SampleStore::n_samples(self) {
+            bail!("range [{start}, {}) out of range", start + count);
+        }
+        if count == 0 {
+            buf.clear();
+            return Ok(());
+        }
+        let k = self.shard_of(start);
+        if start + count <= self.starts[k + 1] {
+            // The common case — chunk aggregation never bridges shards.
+            return self.shards[k].read_span_raw_at(start - self.starts[k], count, buf);
+        }
+        // Cross-shard span: concatenate per-shard spans (extents stay
+        // decodable in sequence). Correct but off the hot path.
+        buf.clear();
+        let mut pos = start;
+        let mut tmp = Vec::new();
+        while pos < start + count {
+            let k = self.shard_of(pos);
+            let take = (start + count - pos).min(self.starts[k + 1] - pos);
+            self.shards[k].read_span_raw_at(pos - self.starts[k], take, &mut tmp)?;
+            buf.extend_from_slice(&tmp);
+            pos += take;
+        }
+        Ok(())
     }
 }
 
@@ -561,6 +674,87 @@ mod tests {
     fn open_rejects_missing_manifest() {
         let dir = tmpdir("nomanifest");
         assert!(ShardedStore::open(&dir).is_err());
+    }
+
+    fn write_sharded_codec(dir: &Path, n: usize, elems: usize, cap: usize) -> ShardManifest {
+        let mut w =
+            ShardedWriter::create_with_codec(dir, header(elems), cap, Codec::DeltaBitpack).unwrap();
+        for i in 0..n {
+            w.append_f32(&sample(i, elems)).unwrap();
+        }
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn compressed_sharded_dataset_roundtrips() {
+        let dir = tmpdir("codec_roundtrip");
+        let m = write_sharded_codec(&dir, 23, 16, 10);
+        assert_eq!(m.codec, Codec::DeltaBitpack);
+        assert_eq!(ShardManifest::load(&dir).unwrap(), m);
+        let s = ShardedStore::open(&dir).unwrap();
+        assert_eq!(SampleStore::codec(&s), Codec::DeltaBitpack);
+        for i in [0usize, 9, 10, 19, 22] {
+            assert_eq!(decode_f32(&s.read_sample_at(i).unwrap()), sample(i, 16), "sample {i}");
+        }
+        // Cross-boundary decoded range read still works.
+        let bytes = s.read_range_at(8, 5).unwrap();
+        for (k, i) in (8..13).enumerate() {
+            assert_eq!(decode_f32(&bytes[k * 64..(k + 1) * 64]), sample(i, 16), "sample {i}");
+        }
+    }
+
+    #[test]
+    fn raw_manifest_has_no_codec_key() {
+        let dir = tmpdir("codec_absent");
+        write_sharded(&dir, 5, 4, 5);
+        let text = std::fs::read_to_string(dir.join(MANIFEST)).unwrap();
+        assert!(!text.contains("codec"), "{text}");
+        assert!(ShardManifest::load(&dir).unwrap().codec.is_raw());
+    }
+
+    #[test]
+    fn manifest_rejects_unknown_codec() {
+        let dir = tmpdir("codec_unknown");
+        let mut j = write_sharded(&dir, 5, 4, 5).to_json();
+        j.set("codec", Json::Str("bogus".into()));
+        let err = ShardManifest::from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported codec"), "{err:#}");
+    }
+
+    #[test]
+    fn open_rejects_shard_codec_mismatch() {
+        // A raw shard swapped into a compressed dataset must fail loudly.
+        let dir = tmpdir("codec_mismatch");
+        write_sharded_codec(&dir, 23, 4, 10);
+        let other = tmpdir("codec_mismatch_raw");
+        write_sharded(&other, 23, 4, 10);
+        std::fs::copy(other.join("shard_00001.shdf"), dir.join("shard_00001.shdf")).unwrap();
+        let err = ShardedStore::open(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("uses codec"), "{err:#}");
+    }
+
+    #[test]
+    fn compressed_contiguity_reports_var_extents() {
+        let dir = tmpdir("codec_contig");
+        write_sharded_codec(&dir, 23, 16, 10);
+        let s = ShardedStore::open(&dir).unwrap();
+        let c = s.chunk_contiguity();
+        assert_eq!(c.n_regions(), 3);
+        assert!(c.is_var());
+        // Offsets are monotone, and a full-shard span is smaller than the
+        // raw stride (these low-entropy ramps compress).
+        for i in 1..23u32 {
+            assert!(c.offset_of(i) >= c.offset_of(i - 1), "sample {i}");
+        }
+        assert!(c.span_bytes(0, 10) < 10 * 64);
+        // Spans match the raw bytes the store actually serves.
+        let mut raw = Vec::new();
+        s.read_span_raw_at(10, 10, &mut raw).unwrap();
+        assert_eq!(raw.len() as u64, c.span_bytes(10, 10));
+        // Cross-shard raw span concatenates per-shard extents.
+        let mut x = Vec::new();
+        s.read_span_raw_at(8, 5, &mut x).unwrap();
+        assert_eq!(x.len() as u64, c.span_bytes(8, 2) + c.span_bytes(10, 3));
     }
 
     #[test]

@@ -15,12 +15,26 @@
 //! same as an HDF5 dataset with contiguous layout. The reader exposes both
 //! per-sample reads and range (chunk) reads; all reads report the byte
 //! ranges they touched so the PFS cost model can charge them.
+//!
+//! **Compressed payloads.** A container may carry a per-sample codec
+//! (`storage::codec`): the header JSON gains `"codec"` and `"index_off"`
+//! keys, samples are stored as variable-size encoded extents (still
+//! contiguous, in index order), and an extent index — `n_samples + 1`
+//! little-endian u64 absolute offsets, the last one marking the payload
+//! end — is appended after the payload with its offset patched into the
+//! fixed 4096-byte header region at finish. Raw containers write neither
+//! key nor index, so every pre-codec file stays byte-identical and every
+//! old reader keeps working. Decoded-byte reads (`read_*`) decompress
+//! internally; `read_span_raw_at` serves the raw extents for the fetch
+//! pool's parallel decompress path.
 
 use anyhow::{bail, Context, Result};
 use std::fs::File;
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
+use crate::storage::codec::Codec;
 use crate::util::json::Json;
 
 pub const MAGIC: &[u8; 8] = b"SHDF0001";
@@ -82,48 +96,96 @@ impl ShdfHeader {
     }
 }
 
-/// Streaming writer: create → append samples → finish (patches the count).
+/// Render a header JSON with the optional codec keys. Raw containers omit
+/// both keys, keeping the legacy byte layout exactly.
+fn header_json(header: &ShdfHeader, codec: Codec, index_off: u64) -> Json {
+    let mut o = header.to_json();
+    if !codec.is_raw() {
+        o.set("codec", Json::Str(codec.name().to_string()))
+            .set("index_off", Json::Num(index_off as f64));
+    }
+    o
+}
+
+fn padded_header_bytes(header: &ShdfHeader, codec: Codec, index_off: u64) -> Result<Vec<u8>> {
+    // Pad the header region so the patched count (and, for compressed
+    // containers, the patched index offset) can't change its length: the
+    // whole header is rewritten at finish with the same byte length inside
+    // a fixed 4096-byte region.
+    let mut hbytes = header_json(header, codec, index_off).to_string_compact().into_bytes();
+    if hbytes.len() > 4096 {
+        bail!("header too large");
+    }
+    hbytes.resize(4096, b' ');
+    Ok(hbytes)
+}
+
+/// Streaming writer: create → append samples → finish (patches the count
+/// and, for compressed containers, appends the extent index).
 pub struct ShdfWriter {
     w: BufWriter<File>,
     header: ShdfHeader,
     written: usize,
     data_start: u64,
     path: PathBuf,
+    codec: Codec,
+    /// Absolute offset where the NEXT extent lands; with the absolute
+    /// start of every written extent this becomes the on-disk index.
+    extent_offs: Vec<u64>,
+    enc_scratch: Vec<u8>,
 }
 
 impl ShdfWriter {
-    /// Create a container. `header.n_samples` is advisory; the actual count
-    /// is patched on [`finish`].
+    /// Create a raw (uncompressed, legacy-layout) container.
+    /// `header.n_samples` is advisory; the actual count is patched on
+    /// [`finish`].
     pub fn create(path: &Path, header: ShdfHeader) -> Result<ShdfWriter> {
+        Self::create_with_codec(path, header, Codec::Raw)
+    }
+
+    /// Create a container whose samples are stored as `codec`-encoded
+    /// extents. `Codec::Raw` reproduces the legacy layout byte for byte.
+    pub fn create_with_codec(path: &Path, header: ShdfHeader, codec: Codec) -> Result<ShdfWriter> {
         header.validate()?;
         let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
         let mut w = BufWriter::new(f);
-        let hjson = header.to_json().to_string_compact();
-        // Pad the header region so the patched count can't change its length:
-        // we rewrite the whole header at finish with the same byte length by
-        // padding with spaces to a fixed 4096-byte region.
-        let mut hbytes = hjson.into_bytes();
-        if hbytes.len() > 4096 {
-            bail!("header too large");
-        }
-        hbytes.resize(4096, b' ');
+        let hbytes = padded_header_bytes(&header, codec, 0)?;
         w.write_all(MAGIC)?;
         w.write_all(&(hbytes.len() as u32).to_le_bytes())?;
         w.write_all(&hbytes)?;
         let data_start = (MAGIC.len() + 4 + hbytes.len()) as u64;
-        Ok(ShdfWriter { w, header, written: 0, data_start, path: path.to_path_buf() })
+        Ok(ShdfWriter {
+            w,
+            header,
+            written: 0,
+            data_start,
+            path: path.to_path_buf(),
+            codec,
+            extent_offs: vec![data_start],
+            enc_scratch: Vec::new(),
+        })
     }
 
     pub fn data_start(&self) -> u64 {
         self.data_start
     }
 
-    /// Append one sample; must be exactly `sample_bytes` long.
+    /// Append one sample; must be exactly `sample_bytes` long (the
+    /// *decoded* size — the writer encodes internally).
     pub fn append(&mut self, sample: &[u8]) -> Result<()> {
         if sample.len() != self.header.sample_bytes {
             bail!("sample is {} bytes, expected {}", sample.len(), self.header.sample_bytes);
         }
-        self.w.write_all(sample)?;
+        if self.codec.is_raw() {
+            self.w.write_all(sample)?;
+        } else {
+            self.enc_scratch.clear();
+            self.codec.encode_into(sample, &mut self.enc_scratch)?;
+            self.w.write_all(&self.enc_scratch)?;
+            let end = self.extent_offs.last().copied().expect("seeded at create")
+                + self.enc_scratch.len() as u64;
+            self.extent_offs.push(end);
+        }
         self.written += 1;
         Ok(())
     }
@@ -136,13 +198,21 @@ impl ShdfWriter {
         self.append(&crate::storage::store::encode_f32(sample))
     }
 
-    /// Flush and patch the true sample count into the header.
+    /// Flush and patch the true sample count into the header; compressed
+    /// containers also append the extent index here and patch its offset.
     pub fn finish(mut self) -> Result<ShdfHeader> {
+        let mut index_off = 0u64;
+        if !self.codec.is_raw() {
+            // The index starts where the payload ends.
+            index_off = self.extent_offs.last().copied().expect("seeded at create");
+            for off in &self.extent_offs {
+                self.w.write_all(&off.to_le_bytes())?;
+            }
+        }
         self.w.flush()?;
         let mut f = self.w.into_inner().context("flush")?;
         self.header.n_samples = self.written;
-        let mut hbytes = self.header.to_json().to_string_compact().into_bytes();
-        hbytes.resize(4096, b' ');
+        let hbytes = padded_header_bytes(&self.header, self.codec, index_off)?;
         f.seek(SeekFrom::Start((MAGIC.len() + 4) as u64))?;
         f.write_all(&hbytes)?;
         f.sync_all().with_context(|| format!("sync {}", self.path.display()))?;
@@ -159,6 +229,11 @@ pub struct ShdfReader {
     f: File,
     header: ShdfHeader,
     data_start: u64,
+    codec: Codec,
+    /// Extent index for compressed containers: `n_samples + 1` absolute
+    /// offsets (the last marks the payload end). `None` when raw. Behind
+    /// an Arc so the store layer can share it with `Contiguity` cheaply.
+    index: Option<Arc<Vec<u64>>>,
     /// Serializes the non-unix positioned-read fallback, which must go
     /// through the shared stream offset — training workers share ONE
     /// reader handle across threads, so the fallback's seek+read pair
@@ -185,16 +260,61 @@ impl ShdfReader {
         let mut hbytes = vec![0u8; hlen];
         f.read_exact(&mut hbytes)?;
         let text = String::from_utf8(hbytes).context("header utf-8")?;
-        let header = ShdfHeader::from_json(&Json::parse(text.trim_end()).context("header json")?)?;
+        let hjson = Json::parse(text.trim_end()).context("header json")?;
+        let header = ShdfHeader::from_json(&hjson)?;
         header.validate()?;
         let data_start = (8 + 4 + hlen) as u64;
+        // Codec negotiation: the key is absent on every pre-codec file; an
+        // UNKNOWN codec name is a hard error (silently reading encoded
+        // extents as raw bytes would corrupt samples).
+        let codec = match hjson.get("codec") {
+            None => Codec::Raw,
+            Some(_) => {
+                let name = hjson.req_str("codec")?;
+                Codec::by_name(name)
+                    .with_context(|| format!("{}: unsupported codec", path.display()))?
+            }
+        };
+        let index = if codec.is_raw() {
+            None
+        } else {
+            let index_off = hjson.req_u64("index_off")?;
+            let n = header.n_samples;
+            let mut raw = vec![0u8; (n + 1) * 8];
+            f.seek(SeekFrom::Start(index_off))?;
+            f.read_exact(&mut raw).context("extent index")?;
+            let offs: Vec<u64> = raw
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+                .collect();
+            if offs.first() != Some(&data_start)
+                || offs.last() != Some(&index_off)
+                || offs.windows(2).any(|w| w[0] > w[1])
+            {
+                bail!("{}: corrupt extent index", path.display());
+            }
+            Some(Arc::new(offs))
+        };
         Ok(ShdfReader {
             f,
             header,
             data_start,
+            codec,
+            index,
             #[cfg(not(unix))]
             seek_lock: std::sync::Mutex::new(()),
         })
+    }
+
+    /// The per-sample codec this container was written with.
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Extent index (compressed containers only): `n_samples + 1` absolute
+    /// offsets, the last marking the payload end.
+    pub fn extent_index(&self) -> Option<&Arc<Vec<u64>>> {
+        self.index.as_ref()
     }
 
     pub fn header(&self) -> &ShdfHeader {
@@ -209,13 +329,30 @@ impl ShdfReader {
         self.header.sample_bytes
     }
 
-    /// Byte offset of sample `i` within the file.
+    /// Byte offset of sample `i` within the file (the start of its
+    /// encoded extent when compressed).
     pub fn offset_of(&self, i: usize) -> u64 {
-        self.data_start + (i as u64) * self.header.sample_bytes as u64
+        match &self.index {
+            Some(idx) => idx[i],
+            None => self.data_start + (i as u64) * self.header.sample_bytes as u64,
+        }
+    }
+
+    /// On-disk bytes of the extent span `[start, start + count)` — equals
+    /// `count × sample_bytes` when raw.
+    fn span_len(&self, start: usize, count: usize) -> usize {
+        match &self.index {
+            Some(idx) => (idx[start + count] - idx[start]) as usize,
+            None => count * self.header.sample_bytes,
+        }
     }
 
     /// Read one sample into `buf` (must be `sample_bytes` long).
+    /// Decoded-byte contract: compressed containers decompress internally.
     pub fn read_sample_into(&mut self, i: usize, buf: &mut [u8]) -> Result<()> {
+        if !self.codec.is_raw() {
+            return self.read_sample_into_at(i, buf);
+        }
         if i >= self.header.n_samples {
             bail!("sample index {i} out of range ({} samples)", self.header.n_samples);
         }
@@ -233,8 +370,12 @@ impl ShdfReader {
     }
 
     /// Read `count` consecutive samples starting at `start` in ONE request
-    /// (the "full chunk loading" pattern of §4.4).
+    /// (the "full chunk loading" pattern of §4.4). Decoded-byte contract:
+    /// compressed containers decompress internally.
     pub fn read_range_into(&mut self, start: usize, count: usize, buf: &mut [u8]) -> Result<()> {
+        if !self.codec.is_raw() {
+            return self.read_range_into_at(start, count, buf);
+        }
         if start + count > self.header.n_samples {
             bail!("range [{start}, {}) out of range", start + count);
         }
@@ -280,12 +421,22 @@ impl ShdfReader {
     }
 
     /// Positioned read of one sample into `buf` (must be `sample_bytes`).
+    /// Decoded-byte contract: compressed containers decompress internally.
     pub fn read_sample_into_at(&self, i: usize, buf: &mut [u8]) -> Result<()> {
         if i >= self.header.n_samples {
             bail!("sample index {i} out of range ({} samples)", self.header.n_samples);
         }
         assert_eq!(buf.len(), self.header.sample_bytes);
-        self.pread_exact(buf, self.offset_of(i))
+        if self.codec.is_raw() {
+            return self.pread_exact(buf, self.offset_of(i));
+        }
+        let mut raw = vec![0u8; self.span_len(i, 1)];
+        self.pread_exact(&mut raw, self.offset_of(i))?;
+        let consumed = self.codec.decode_into(&raw, buf)?;
+        if consumed != raw.len() {
+            bail!("sample {i}: extent has {} trailing bytes", raw.len() - consumed);
+        }
+        Ok(())
     }
 
     /// Positioned read of one sample, allocating.
@@ -296,11 +447,42 @@ impl ShdfReader {
     }
 
     /// Positioned read of `count` consecutive samples in ONE request.
+    /// Decoded-byte contract: compressed containers read the encoded span
+    /// in one request and decompress internally.
     pub fn read_range_into_at(&self, start: usize, count: usize, buf: &mut [u8]) -> Result<()> {
         if start + count > self.header.n_samples {
             bail!("range [{start}, {}) out of range", start + count);
         }
         assert_eq!(buf.len(), count * self.header.sample_bytes);
+        if self.codec.is_raw() {
+            return self.pread_exact(buf, self.offset_of(start));
+        }
+        let mut raw = vec![0u8; self.span_len(start, count)];
+        self.pread_exact(&mut raw, self.offset_of(start))?;
+        let sb = self.header.sample_bytes;
+        let mut stream = &raw[..];
+        for (k, out) in buf.chunks_exact_mut(sb).enumerate() {
+            let consumed = self.codec.decode_into(stream, out).with_context(|| {
+                format!("decoding sample {} of range [{start}, {})", start + k, start + count)
+            })?;
+            stream = &stream[consumed..];
+        }
+        if !stream.is_empty() {
+            bail!("range [{start}, {}): {} trailing bytes", start + count, stream.len());
+        }
+        Ok(())
+    }
+
+    /// Positioned read of the ON-DISK bytes backing `count` consecutive
+    /// samples, with no decoding: raw containers serve the samples
+    /// themselves, compressed containers the concatenated encoded extents.
+    /// This is the fetch pool's input for parallel decompression. `buf` is
+    /// resized to the span length.
+    pub fn read_span_raw_at(&self, start: usize, count: usize, buf: &mut Vec<u8>) -> Result<()> {
+        if start + count > self.header.n_samples {
+            bail!("range [{start}, {}) out of range", start + count);
+        }
+        buf.resize(self.span_len(start, count), 0);
         self.pread_exact(buf, self.offset_of(start))
     }
 
@@ -484,5 +666,166 @@ mod tests {
         for i in 1..5 {
             assert_eq!(r.offset_of(i) - r.offset_of(i - 1), 16);
         }
+    }
+
+    // ---- codec-aware containers ----
+
+    fn write_codec_file(path: &Path, n_samples: usize, elems: usize, codec: Codec) -> ShdfHeader {
+        let header = ShdfHeader {
+            n_samples,
+            sample_bytes: elems * 4,
+            shape: vec![elems],
+            dtype: "f32".into(),
+            name: "test".into(),
+        };
+        let mut w = ShdfWriter::create_with_codec(path, header, codec).unwrap();
+        for i in 0..n_samples {
+            w.append_f32(&sample(i, elems)).unwrap();
+        }
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn raw_codec_container_is_byte_identical_to_legacy() {
+        let a = tmpfile("legacy.shdf");
+        let b = tmpfile("rawcodec.shdf");
+        write_test_file(&a, 7, 8);
+        write_codec_file(&b, 7, 8, Codec::Raw);
+        assert_eq!(std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+        // No codec key leaks into the header either.
+        assert!(!String::from_utf8_lossy(&std::fs::read(&a).unwrap()[12..100]).contains("codec"));
+    }
+
+    #[test]
+    fn compressed_container_roundtrips_and_shrinks() {
+        let raw = tmpfile("c_raw.shdf");
+        let dbp = tmpfile("c_dbp.shdf");
+        write_test_file(&raw, 24, 64);
+        write_codec_file(&dbp, 24, 64, Codec::DeltaBitpack);
+        // These low-entropy ramps compress; the compressed file (payload +
+        // index) must be smaller than the raw one.
+        let raw_len = std::fs::metadata(&raw).unwrap().len();
+        let dbp_len = std::fs::metadata(&dbp).unwrap().len();
+        assert!(dbp_len < raw_len, "compressed {dbp_len} >= raw {raw_len}");
+        let mut r = ShdfReader::open(&dbp).unwrap();
+        assert_eq!(r.codec(), Codec::DeltaBitpack);
+        assert_eq!(r.n_samples(), 24);
+        for i in 0..24 {
+            let got = ShdfReader::decode_f32(&r.read_sample(i).unwrap());
+            assert_eq!(got, sample(i, 64));
+            assert_eq!(r.read_sample_at(i).unwrap(), r.read_sample(i).unwrap());
+        }
+    }
+
+    #[test]
+    fn compressed_range_reads_match_individual_reads() {
+        let path = tmpfile("c_range.shdf");
+        write_codec_file(&path, 20, 16, Codec::DeltaBitpack);
+        let mut r = ShdfReader::open(&path).unwrap();
+        let chunk = r.read_range(3, 9).unwrap();
+        for k in 0..9 {
+            assert_eq!(chunk[k * 64..(k + 1) * 64], r.read_sample(3 + k).unwrap());
+        }
+        assert_eq!(r.read_range_at(3, 9).unwrap(), chunk);
+        assert!(r.read_range(15, 6).is_err());
+    }
+
+    #[test]
+    fn compressed_count_and_index_patched_on_finish() {
+        let path = tmpfile("c_patch.shdf");
+        let header = ShdfHeader {
+            n_samples: 9999, // wrong on purpose
+            sample_bytes: 16,
+            shape: vec![4],
+            dtype: "f32".into(),
+            name: "t".into(),
+        };
+        let mut w = ShdfWriter::create_with_codec(&path, header, Codec::DeltaBitpack).unwrap();
+        w.append_f32(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        w.append_f32(&[5.0, 6.0, 7.0, 8.0]).unwrap();
+        let h = w.finish().unwrap();
+        assert_eq!(h.n_samples, 2);
+        let r = ShdfReader::open(&path).unwrap();
+        assert_eq!(r.n_samples(), 2);
+        let idx = r.extent_index().unwrap();
+        assert_eq!(idx.len(), 3);
+        assert_eq!(idx[0], r.offset_of(0));
+        assert!(idx.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn raw_span_reads_serve_decodable_extents() {
+        let path = tmpfile("c_span.shdf");
+        write_codec_file(&path, 12, 32, Codec::DeltaBitpack);
+        let r = ShdfReader::open(&path).unwrap();
+        let mut raw = Vec::new();
+        r.read_span_raw_at(4, 5, &mut raw).unwrap();
+        assert_eq!(raw.len() as u64, r.offset_of(9) - r.offset_of(4));
+        let mut stream = &raw[..];
+        for k in 0..5 {
+            let mut out = vec![0u8; 128];
+            let consumed = Codec::DeltaBitpack.decode_into(stream, &mut out).unwrap();
+            stream = &stream[consumed..];
+            assert_eq!(out, r.read_sample_at(4 + k).unwrap());
+        }
+        assert!(stream.is_empty());
+    }
+
+    #[test]
+    fn unknown_codec_name_is_rejected() {
+        let path = tmpfile("badcodec.shdf");
+        let hjson = concat!(
+            r#"{"n_samples":1,"sample_bytes":8,"shape":[2],"dtype":"f32","#,
+            r#""name":"t","codec":"bogus","index_off":4108}"#
+        );
+        let mut hbytes = hjson.as_bytes().to_vec();
+        hbytes.resize(4096, b' ');
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(hbytes.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&hbytes);
+        bytes.extend_from_slice(&[0u8; 8]);
+        std::fs::write(&path, bytes).unwrap();
+        let err = ShdfReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("unsupported codec"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_extent_index_is_rejected() {
+        let path = tmpfile("badindex.shdf");
+        write_codec_file(&path, 4, 8, Codec::DeltaBitpack);
+        // Scribble over the first index entry so it no longer equals
+        // data_start.
+        let r = ShdfReader::open(&path).unwrap();
+        let idx_off = {
+            // index starts at the payload end == extent_index end offset
+            let idx = r.extent_index().unwrap();
+            idx[idx.len() - 1]
+        };
+        drop(r);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[idx_off as usize..idx_off as usize + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let err = ShdfReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("corrupt extent index"), "{err}");
+    }
+
+    #[test]
+    fn compressed_positioned_reads_are_concurrent_safe() {
+        let path = tmpfile("c_concurrent.shdf");
+        write_codec_file(&path, 64, 16, Codec::DeltaBitpack);
+        let r = ShdfReader::open(&path).unwrap();
+        std::thread::scope(|s| {
+            let r = &r;
+            for t in 0..4usize {
+                s.spawn(move || {
+                    for rep in 0..50 {
+                        let i = (t * 17 + rep * 7) % 64;
+                        let got = ShdfReader::decode_f32(&r.read_sample_at(i).unwrap());
+                        assert_eq!(got, sample(i, 16));
+                    }
+                });
+            }
+        });
     }
 }

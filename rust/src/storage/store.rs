@@ -26,6 +26,7 @@ use anyhow::{bail, Context, Result};
 use std::path::Path;
 use std::sync::Arc;
 
+use crate::storage::codec::Codec;
 use crate::storage::shdf::ShdfReader;
 
 /// Abstract read-only store of fixed-size samples.
@@ -93,6 +94,26 @@ pub trait SampleStore: Send + Sync + std::fmt::Debug {
         buf.resize(count * self.sample_bytes(), 0);
         self.read_range_into_at(start, count, buf)
     }
+
+    /// The chunk codec this store's payload is written with. `Raw` for
+    /// every legacy layout; when not raw, the decoded-byte read methods
+    /// above still serve decoded samples (decompressing internally), and
+    /// the fetch pool uses [`SampleStore::read_span_raw_at`] to pull the
+    /// compressed extents and decompress on its own workers.
+    fn codec(&self) -> Codec {
+        Codec::Raw
+    }
+
+    /// Positioned read of the **raw on-storage bytes** backing samples
+    /// `[start, start + count)` into a reusable buffer (resized to the
+    /// span's exact byte length). On a raw store this is the decoded
+    /// range; on a compressed store it is the concatenated encoded
+    /// extents, which [`Codec::decode_f32_into`] walks by consumed bytes.
+    /// The span must lie inside one contiguity region (chunk aggregation
+    /// never bridges regions, so the fetch path guarantees this).
+    fn read_span_raw_at(&self, start: usize, count: usize, buf: &mut Vec<u8>) -> Result<()> {
+        self.read_range_reusing_at(start, count, buf)
+    }
 }
 
 /// Decode a sample byte buffer as f32 (little-endian) — the one record
@@ -129,13 +150,30 @@ pub struct Contiguity {
     /// sample)`, ascending by sample id; the first region starts at 0.
     regions: Vec<(u32, u64)>,
     sample_bytes: u64,
+    /// Variable per-sample extents (compressed layouts). When present,
+    /// `offset_of`/`span_bytes` read these instead of the uniform-stride
+    /// arithmetic; when absent every sample occupies `sample_bytes` on
+    /// storage.
+    var: Option<Arc<VarExtents>>,
+}
+
+/// Per-sample extent table of a variable-size (compressed) layout.
+/// Offsets live in the same virtual address space as the region bases.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VarExtents {
+    /// Virtual byte offset of each sample's extent (length `n_samples`).
+    pub offsets: Vec<u64>,
+    /// Virtual end of each region's payload (length `n_regions`) — what a
+    /// span reaching a region's last sample ends at, so a chunk read
+    /// never swallows the next shard's header gap.
+    pub region_ends: Vec<u64>,
 }
 
 impl Contiguity {
     /// Single contiguous region (one flat file) with sample 0 at
     /// `data_start`.
     pub fn single(data_start: u64, sample_bytes: usize) -> Contiguity {
-        Contiguity { regions: vec![(0, data_start)], sample_bytes: sample_bytes as u64 }
+        Contiguity { regions: vec![(0, data_start)], sample_bytes: sample_bytes as u64, var: None }
     }
 
     /// Multi-region map. Regions must be ascending and start at sample 0;
@@ -148,7 +186,26 @@ impl Contiguity {
         for w in regions.windows(2) {
             assert!(w[0].0 < w[1].0, "contiguity regions must be strictly ascending");
         }
-        Contiguity { regions, sample_bytes: sample_bytes as u64 }
+        Contiguity { regions, sample_bytes: sample_bytes as u64, var: None }
+    }
+
+    /// Attach a variable per-sample extent table (compressed layouts).
+    /// Offsets must be monotone and consistent with the region list.
+    pub fn with_var_extents(mut self, var: Arc<VarExtents>) -> Contiguity {
+        assert_eq!(var.region_ends.len(), self.regions.len(), "one end per region");
+        assert!(var.offsets.windows(2).all(|w| w[0] <= w[1]), "extent offsets must be monotone");
+        for (k, &(start, base)) in self.regions.iter().enumerate() {
+            if let Some(&o) = var.offsets.get(start as usize) {
+                assert_eq!(o, base, "region {k} base must equal its first sample's extent offset");
+            }
+        }
+        self.var = Some(var);
+        self
+    }
+
+    /// Whether samples occupy variable-size extents (a compressed layout).
+    pub fn is_var(&self) -> bool {
+        self.var.is_some()
     }
 
     pub fn n_regions(&self) -> usize {
@@ -166,8 +223,37 @@ impl Contiguity {
 
     /// Virtual byte offset of sample `x`.
     pub fn offset_of(&self, x: u32) -> u64 {
+        if let Some(v) = &self.var {
+            return v.offsets[x as usize];
+        }
         let (start, base) = self.regions[self.region_index(x)];
         base + (x - start) as u64 * self.sample_bytes
+    }
+
+    /// On-storage byte length of the span covering samples
+    /// `[lo, lo + count)`, which must lie inside one contiguity region.
+    /// Uniform layouts answer `count * sample_bytes`; variable
+    /// (compressed) layouts answer the exact extent span — the length a
+    /// `ReadReq` carries, so the cost model charges the bytes that
+    /// actually cross the PFS.
+    pub fn span_bytes(&self, lo: u32, count: u32) -> u64 {
+        if count == 0 {
+            return 0;
+        }
+        let Some(v) = &self.var else {
+            return count as u64 * self.sample_bytes;
+        };
+        let k = self.region_index(lo);
+        let hi = lo + count;
+        debug_assert!(
+            hi - 1 < self.region_end(lo),
+            "span [{lo}, {hi}) crosses a contiguity region boundary"
+        );
+        let end = match v.offsets.get(hi as usize) {
+            Some(&o) if hi < self.region_end(lo) => o,
+            _ => v.region_ends[k],
+        };
+        end - v.offsets[lo as usize]
     }
 
     /// First sample id past `x`'s contiguous region (`u32::MAX` for the
@@ -211,7 +297,25 @@ impl SampleStore for ShdfReader {
     }
 
     fn chunk_contiguity(&self) -> Contiguity {
-        Contiguity::single(self.offset_of(0), ShdfReader::sample_bytes(self))
+        let c = Contiguity::single(self.offset_of(0), ShdfReader::sample_bytes(self));
+        match self.extent_index() {
+            None => c,
+            Some(idx) => {
+                let n = ShdfReader::n_samples(self);
+                c.with_var_extents(Arc::new(VarExtents {
+                    offsets: idx[..n].to_vec(),
+                    region_ends: vec![idx[n]],
+                }))
+            }
+        }
+    }
+
+    fn codec(&self) -> Codec {
+        ShdfReader::codec(self)
+    }
+
+    fn read_span_raw_at(&self, start: usize, count: usize, buf: &mut Vec<u8>) -> Result<()> {
+        ShdfReader::read_span_raw_at(self, start, count, buf)
     }
 }
 
@@ -414,5 +518,45 @@ mod tests {
     #[should_panic]
     fn contiguity_rejects_nonzero_first_region() {
         let _ = Contiguity::from_regions(vec![(5, 0)], 8);
+    }
+
+    #[test]
+    fn span_bytes_uniform_is_stride_arithmetic() {
+        let c = Contiguity::from_regions(vec![(0, 100), (10, 5000)], 16);
+        assert!(!c.is_var());
+        assert_eq!(c.span_bytes(0, 0), 0);
+        assert_eq!(c.span_bytes(3, 4), 64);
+        assert_eq!(c.span_bytes(10, 5), 80);
+    }
+
+    #[test]
+    fn span_bytes_var_uses_exact_extents() {
+        // Two regions of 3 samples each; extents of 5/7/9 bytes then
+        // 4/4/4, with a header gap before the second region's base (200).
+        let var = Arc::new(VarExtents {
+            offsets: vec![100, 105, 112, 200, 204, 208],
+            region_ends: vec![121, 212],
+        });
+        let c = Contiguity::from_regions(vec![(0, 100), (3, 200)], 16).with_var_extents(var);
+        assert!(c.is_var());
+        assert_eq!(c.offset_of(1), 105);
+        assert_eq!(c.offset_of(3), 200);
+        assert_eq!(c.span_bytes(0, 1), 5);
+        assert_eq!(c.span_bytes(0, 2), 12);
+        // A span reaching a region's LAST sample ends at the region's
+        // payload end, not at the next region's base — the header gap
+        // between 121 and 200 is never charged.
+        assert_eq!(c.span_bytes(0, 3), 21);
+        assert_eq!(c.span_bytes(2, 1), 9);
+        assert_eq!(c.span_bytes(3, 3), 12);
+        assert_eq!(c.span_bytes(5, 1), 4);
+        assert_eq!(c.span_bytes(4, 0), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn var_extents_reject_region_base_mismatch() {
+        let var = Arc::new(VarExtents { offsets: vec![100, 105], region_ends: vec![110] });
+        let _ = Contiguity::single(99, 8).with_var_extents(var);
     }
 }

@@ -16,10 +16,12 @@
 //!   throttle model as it goes — so the emulated Lustre delay runs here,
 //!   off the compute path. Inside it, a [`FetchPool`] fans each step's
 //!   independent reads (chunks, or the per-sample fallback batched into
-//!   contiguous runs) across `io_threads` workers over pooled byte
-//!   buffers recycled across steps, and the throttle charges the plan's
-//!   request stream across that many deterministic model streams
-//!   (`CostModel::io_parallelism`) — see `loader::io`. The same thread
+//!   contiguous runs) across a persistent crew of `io_threads` workers
+//!   over pooled byte buffers recycled across steps — decompressing
+//!   extents there when the store carries a codec — and the throttle
+//!   charges the plan's request stream across that many deterministic
+//!   model streams (`CostModel::io_parallelism`, plus a decode term on
+//!   compressed stores) — see `loader::io`. The same thread
 //!   stages the holdout eval batches (read once, cached, re-sent per
 //!   eval), so evals never read storage on the compute path;
 //! * an **exec thread** that owns the PJRT CPU client + compiled
@@ -61,6 +63,7 @@
 use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -165,10 +168,14 @@ pub struct TrainConfig {
     /// Concurrent I/O workers per node's fetch stage (and the modeled
     /// PFS stream count the throttle charges). `0` resolves to
     /// [`crate::loader::io::io_threads`] (the `SOLAR_IO_THREADS`
-    /// environment variable, else the machine default); `1` is the
-    /// strictly serial fetch stage. Parallelism changes only WHEN bytes
-    /// move — params, losses, and per-epoch stats are bit-identical at
-    /// every worker count (tested in `driver_pipeline_parity.rs`).
+    /// environment variable, else the machine default) — except under
+    /// [`PrefetchMode::Auto`], where `0` turns on the co-tuner: epoch 0
+    /// runs at width 1 alongside the depth measurement, and the width is
+    /// then picked from the same measured load:compute ratio as the
+    /// depth ([`auto_io_threads`]). `1` is the strictly serial fetch
+    /// stage. Parallelism changes only WHEN bytes move — params, losses,
+    /// and per-epoch stats are bit-identical at every worker count
+    /// (tested in `driver_pipeline_parity.rs`).
     pub io_threads: usize,
 }
 
@@ -232,8 +239,10 @@ struct WorkerCtx {
     cost: CostModel,
     /// Staged-channel bound (the largest depth the coordinator may use).
     stage_bound: usize,
-    /// Resolved fetch-pool worker count (≥ 1).
-    io_threads: usize,
+    /// Live fetch-pool width: read by the fetch stage before each step,
+    /// written by the coordinator's `Auto` co-tuner at the epoch-0
+    /// boundary (stays at its initial value otherwise).
+    io_width: Arc<AtomicUsize>,
     fetch_fault: Option<usize>,
     load_only: bool,
     /// Batch/img when no manifest is available (`load_only`).
@@ -248,6 +257,19 @@ fn auto_depth(load_s: f64, comp_s: f64) -> usize {
         return 1;
     }
     ((load_s / comp_s).ceil() as usize).clamp(1, MAX_AUTO_PREFETCH)
+}
+
+/// Fetch-pool width for the `Auto` co-tuner, from the same epoch-0
+/// measurement as [`auto_depth`]: epoch 0 runs at width 1, so a load
+/// bucket `r×` the compute bucket wants ~`⌈r⌉` concurrent streams to
+/// pull the per-step load under compute (depth then hides the rest).
+/// Clamped to the machine/env width from [`crate::loader::io::io_threads`]
+/// — the co-tuner never exceeds what a fixed default would use.
+fn auto_io_threads(load_s: f64, comp_s: f64) -> usize {
+    if load_s <= 0.0 || comp_s <= 0.0 {
+        return 1;
+    }
+    ((load_s / comp_s).ceil() as usize).clamp(1, crate::loader::io::io_threads())
 }
 
 /// Run distributed training; returns the loss curve + timing breakdown.
@@ -266,11 +288,23 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     // real layout (single region for a flat file, one per shard else).
     engine.bind_store(tc.store.as_ref())?;
 
-    // Resolve the fetch-pool width once, and let the throttle model see
-    // it: the modeled PFS time per step is the plan's request stream
-    // dealt across this many deterministic stream clocks, so the emulated
-    // Lustre speeds up with the real read parallelism.
-    let io_threads = if tc.io_threads == 0 { crate::loader::io::io_threads() } else { tc.io_threads };
+    // Resolve the fetch-pool width, and let the throttle model see it:
+    // the modeled PFS time per step is the plan's request stream dealt
+    // across this many deterministic stream clocks, so the emulated
+    // Lustre speeds up with the real read parallelism. Width 0 under
+    // `Auto` turns on the co-tuner: epoch 0 measures at width 1 (and
+    // depth 1), then depth AND width are re-picked together from the
+    // observed load:compute ratio — published through `io_width`, which
+    // every fetch stage re-reads before staging a step.
+    let auto_io = tc.io_threads == 0 && tc.prefetch == PrefetchMode::Auto;
+    let io_threads = if auto_io {
+        1
+    } else if tc.io_threads == 0 {
+        crate::loader::io::io_threads()
+    } else {
+        tc.io_threads
+    };
+    let io_width = Arc::new(AtomicUsize::new(io_threads));
     let mut worker_cost = tc.run.cost.clone();
     worker_cost.io_parallelism = io_threads;
 
@@ -294,7 +328,7 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             throttle: tc.throttle,
             cost: worker_cost.clone(),
             stage_bound: tc.prefetch.stage_bound(),
-            io_threads,
+            io_width: io_width.clone(),
             fetch_fault: tc.fetch_fault.and_then(|(node, step)| (node == k).then_some(step)),
             load_only: tc.load_only,
             fallback_batch: tc.run.local_batch.max(1),
@@ -420,6 +454,16 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
                 // here on. Changes only WHEN bytes move, never the
                 // schedule, so parameters stay bit-identical.
                 depth = auto_depth(report.load_wall_s, report.comp_wall_s);
+                if auto_io {
+                    // Co-tune the fetch-pool width with the depth from
+                    // the same measurement: depth hides load latency,
+                    // width raises load bandwidth. The fetch stages
+                    // adopt it before their next step.
+                    io_width.store(
+                        auto_io_threads(report.load_wall_s, report.comp_wall_s),
+                        Ordering::Relaxed,
+                    );
+                }
             }
             cur_epoch = step_epoch;
         }
@@ -497,6 +541,7 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     }
     report.steps = global_step;
     report.prefetch = depth;
+    report.io_threads = io_width.load(Ordering::Relaxed);
     report.total_wall_s = wall.elapsed_s();
     report.final_params = pstore.tensors.clone();
 
@@ -533,9 +578,9 @@ fn worker_loop(
     let throttle = ctx.throttle;
     let cost = ctx.cost.clone();
     let fault = ctx.fetch_fault;
-    let io_threads = ctx.io_threads;
+    let io_width = ctx.io_width.clone();
     let fetch_handle = std::thread::spawn(move || {
-        fetch_loop(node, fetch_rx, staged_tx, fetch_store, throttle, cost, io_threads, fetch_done, fault)
+        fetch_loop(node, fetch_rx, staged_tx, fetch_store, throttle, cost, io_width, fetch_done, fault)
     });
 
     let result = (|| -> Result<()> {
@@ -726,17 +771,18 @@ fn fetch_loop(
     out: mpsc::SyncSender<Staged>,
     store: Arc<dyn SampleStore>,
     throttle: f64,
-    cost: CostModel,
-    io_threads: usize,
+    mut cost: CostModel,
+    io_width: Arc<AtomicUsize>,
     done: mpsc::Sender<Result<DoneMsg>>,
     fault_at: Option<usize>,
 ) {
-    let store: &dyn SampleStore = store.as_ref();
     let contig = store.chunk_contiguity();
-    // One fetch pool per node, alive for the whole run: its byte buffers
-    // recycle across steps (no per-read allocation in steady state) and
-    // its workers read independent chunks/runs concurrently.
-    let mut pool = FetchPool::new(io_threads);
+    // One fetch pool per node, alive for the whole run: its byte buffers,
+    // decode buffers AND worker threads recycle across steps (no per-read
+    // allocation, no per-step spawn/join in steady state), and its
+    // workers read — and, on compressed stores, decompress — independent
+    // chunks/runs concurrently.
+    let mut pool = FetchPool::new(io_width.load(Ordering::Relaxed).max(1));
     // Mirror of the exec thread's buffer KEYS, advanced in step order:
     // only staged-and-inserted ids enter, evicted ids leave — identical
     // to the exec side's value map, so "already buffered" decisions match
@@ -745,6 +791,16 @@ fn fetch_loop(
     // Holdout eval bytes, filled on the first eval request (read-ahead).
     let mut holdout: Option<HashMap<u32, Arc<Vec<f32>>>> = None;
     while let Ok(msg) = rx.recv() {
+        // Adopt the coordinator's published width before staging (the
+        // `Auto` co-tuner re-picks it once, at the epoch-0 boundary):
+        // the crew resizes and the modeled stream count follows, so the
+        // throttle keeps matching the real parallelism. Width changes
+        // only WHEN bytes move — the schedule is untouched.
+        let w = io_width.load(Ordering::Relaxed).max(1);
+        if w != pool.workers() {
+            pool.resize(w);
+            cost.io_parallelism = w;
+        }
         match msg {
             FetchMsg::Step { step_id, load } => {
                 if fault_at == Some(step_id) {
@@ -754,7 +810,7 @@ fn fetch_loop(
                     return;
                 }
                 let t = Stopwatch::start();
-                match stage_step(&mut pool, store, &contig, &resident, &load, &cost) {
+                match stage_step(&mut pool, &store, &contig, &resident, &load, &cost) {
                     Err(e) => {
                         let _ = done.send(Err(anyhow::anyhow!("worker {node} fetch: {e:#}")));
                         return;
@@ -791,7 +847,7 @@ fn fetch_loop(
             }
             FetchMsg::Eval { after_step, ids } => {
                 if holdout.is_none() {
-                    match stage_eval(&mut pool, store, &contig, &ids) {
+                    match stage_eval(&mut pool, &store, &contig, &ids) {
                         Ok(m) => holdout = Some(m),
                         Err(e) => {
                             let _ = done.send(Err(anyhow::anyhow!(
@@ -817,7 +873,7 @@ fn fetch_loop(
 /// never one read per sample.
 fn stage_eval(
     pool: &mut FetchPool,
-    store: &dyn SampleStore,
+    store: &Arc<dyn SampleStore>,
     contig: &Contiguity,
     ids: &[u32],
 ) -> Result<HashMap<u32, Arc<Vec<f32>>>> {
@@ -845,15 +901,23 @@ fn stage_eval(
 /// pre-pool accounting.
 fn stage_step(
     pool: &mut FetchPool,
-    store: &dyn SampleStore,
+    store: &Arc<dyn SampleStore>,
     contig: &Contiguity,
     resident: &HashSet<u32>,
     load: &NodeStepLoad,
     cost: &CostModel,
 ) -> Result<(HashMap<u32, Arc<Vec<f32>>>, f64)> {
     let sb = store.sample_bytes() as u64;
-    let modeled = cost.pfs_parallel_sequence(&load.pfs_reqs)
+    let mut modeled = cost.pfs_parallel_sequence(&load.pfs_reqs)
         + load.remote as f64 * cost.remote_fetch(sb);
+    if !store.codec().is_raw() {
+        // Compressed store: the PFS terms above already move the SMALLER
+        // encoded bytes (the plan's request lens come from the store's
+        // true extent spans), and the crew pays to decompress — charge
+        // the decoded bytes at the codec's decode rate, divided across
+        // the same streams the crew fans over.
+        modeled += cost.decode_cost(load.pfs_samples as u64 * sb);
+    }
     let units: Vec<FetchUnit> = if !load.chunks.is_empty() {
         debug_assert_eq!(load.chunks.len(), load.chunk_regions.len());
         load.chunks
@@ -917,6 +981,16 @@ mod tests {
         assert_eq!(auto_depth(1.0, 1.0), 1);
         assert_eq!(auto_depth(2.5, 1.0), 3);
         assert_eq!(auto_depth(100.0, 1.0), MAX_AUTO_PREFETCH);
+    }
+
+    #[test]
+    fn auto_io_threads_tracks_ratio_and_caps_at_default_width() {
+        let cap = crate::loader::io::io_threads();
+        assert_eq!(auto_io_threads(0.0, 1.0), 1);
+        assert_eq!(auto_io_threads(1.0, 0.0), 1);
+        assert_eq!(auto_io_threads(0.5, 1.0), 1);
+        assert_eq!(auto_io_threads(3.5, 1.0), 4.min(cap));
+        assert_eq!(auto_io_threads(1e9, 1.0), cap, "never exceeds the fixed default");
     }
 
     #[test]

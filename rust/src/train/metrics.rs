@@ -33,6 +33,9 @@ pub struct TrainReport {
     pub loader: String,
     /// Fetch-ahead depth the run used (0 = strictly serial).
     pub prefetch: usize,
+    /// Fetch-pool width the run settled on (the co-tuned value under
+    /// `PrefetchMode::Auto` with `io_threads = 0`).
+    pub io_threads: usize,
     pub points: Vec<LossPoint>,
     /// Serial-equivalent load bucket: per-step max over nodes of
     /// fetch-stage + batch-assembly wall seconds, summed. With

@@ -16,6 +16,7 @@ use solar::data::spec::DatasetSpec;
 use solar::data::synth;
 use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
+use solar::storage::codec::Codec;
 use solar::storage::pfs::CostModel;
 use solar::storage::store::{open_store, SampleStore};
 use solar::train::driver::{train, PrefetchMode, TrainConfig, MAX_AUTO_PREFETCH};
@@ -63,6 +64,42 @@ fn sharded_dataset(n: usize, name: &str, shards: usize) -> PathBuf {
     if !ok {
         let _ = std::fs::remove_dir_all(&path);
         synth::generate_dataset_sharded(&path, &parity_spec(n, name), 77, shards).unwrap();
+    }
+    path
+}
+
+/// Same samples again ([`dataset`] spec/seed) as a delta-bitpack
+/// compressed single-file container: identical decoded bytes, different
+/// on-disk layout.
+fn dbp_dataset(n: usize, name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("solar_pipeline_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}_{n}_dbp.shdf"));
+    let ok = open_store(&path).map(|s| s.n_samples() == n).unwrap_or(false);
+    if !ok {
+        synth::generate_dataset_with(&path, &parity_spec(n, name), 77, Codec::DeltaBitpack)
+            .unwrap();
+    }
+    path
+}
+
+/// And the compressed sharded layout (codec recorded in the manifest).
+fn sharded_dbp_dataset(n: usize, name: &str, shards: usize) -> PathBuf {
+    let dir = std::env::temp_dir().join("solar_pipeline_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}_{n}_x{shards}_dbp"));
+    let ok = open_store(&path).map(|s| s.n_samples() == n).unwrap_or(false);
+    if !ok {
+        let _ = std::fs::remove_dir_all(&path);
+        synth::generate_dataset_sharded_workers_with(
+            &path,
+            &parity_spec(n, name),
+            77,
+            shards,
+            2,
+            Codec::DeltaBitpack,
+        )
+        .unwrap();
     }
     path
 }
@@ -432,6 +469,110 @@ fn parallel_io_wins_wall_clock_under_throttle() {
         par.total_wall_s,
         serial.total_wall_s
     );
+}
+
+#[test]
+fn compressed_store_trains_bit_identically_to_raw() {
+    // THE codec acceptance criterion: same config/seed, same decoded
+    // samples, delta-bitpack on disk (single-file and sharded) →
+    // bit-identical TrainReports to the raw layout at every fetch
+    // width. Decompression happens on the fetch workers and must never
+    // leak into the schedule, losses, or params. solar covers the
+    // chunked span-read path, pytorch the per-sample extents.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    for loader in ["solar", "pytorch"] {
+        let raw = train(&tc("codecpar", loader, 1, 0.0)).unwrap();
+        for io in [1usize, 4] {
+            let mut c = tc("codecpar", loader, 1, 0.0);
+            c.store = open_store(&dbp_dataset(112, "codecpar")).unwrap();
+            c.io_threads = io;
+            let r = train(&c).unwrap();
+            assert_reports_identical(&format!("{loader} single-dbp io={io}"), &raw, &r);
+
+            let mut c = tc("codecpar", loader, 1, 0.0);
+            c.store = open_store(&sharded_dbp_dataset(112, "codecpar", 5)).unwrap();
+            c.io_threads = io;
+            let r = train(&c).unwrap();
+            assert_reports_identical(&format!("{loader} sharded-dbp io={io}"), &raw, &r);
+        }
+    }
+}
+
+#[test]
+fn compressed_store_schedule_matches_raw_without_artifacts() {
+    // The CI half of the codec invariant (no PJRT needed): compressed
+    // layouts run the exact load-only schedule fingerprint of the raw
+    // layout, across fetch widths and prefetch depths.
+    for depth in [1usize, 2] {
+        let mut base_tc = tc("codeclo", "solar", depth, 0.0);
+        base_tc.load_only = true;
+        let base = train(&base_tc).unwrap();
+        for io in [1usize, 4] {
+            for (layout, path) in [
+                ("single-dbp", dbp_dataset(112, "codeclo")),
+                ("sharded-dbp", sharded_dbp_dataset(112, "codeclo", 5)),
+            ] {
+                let mut c = tc("codeclo", "solar", depth, 0.0);
+                c.store = open_store(&path).unwrap();
+                c.load_only = true;
+                c.io_threads = io;
+                let r = train(&c).unwrap();
+                let tag = format!("{layout} io={io} depth={depth}");
+                assert_eq!(base.steps, r.steps, "{tag}");
+                assert_eq!(base.hits, r.hits, "{tag}");
+                assert_eq!(base.pfs_samples, r.pfs_samples, "{tag}");
+                assert_eq!(base.epoch_stats, r.epoch_stats, "{tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_io_width_matches_fixed_width_without_artifacts() {
+    // The co-tuner (io_threads = 0 under PrefetchMode::Auto) measures
+    // epoch 0 at width 1 and resizes the fetch crews mid-run; the
+    // schedule must not notice. Load-only, so it runs everywhere.
+    let mk = |io: usize| {
+        let mut c = tc("autoiolo", "solar", 0, 0.0);
+        c.prefetch = PrefetchMode::Auto;
+        c.load_only = true;
+        c.io_threads = io;
+        c
+    };
+    let fixed = train(&mk(1)).unwrap();
+    let tuned = train(&mk(0)).unwrap();
+    assert_eq!(fixed.steps, tuned.steps);
+    assert_eq!(fixed.hits, tuned.hits);
+    assert_eq!(fixed.pfs_samples, tuned.pfs_samples);
+    assert_eq!(fixed.epoch_stats, tuned.epoch_stats);
+    assert!(
+        (1..=solar::loader::io::io_threads().max(1)).contains(&tuned.io_threads),
+        "co-tuned width {} out of range",
+        tuned.io_threads
+    );
+}
+
+#[test]
+fn auto_io_width_trains_bit_identically_to_fixed() {
+    // Full bit-identity of the co-tuned run: only the fetch-crew width
+    // differs between the two configs, and width never changes what is
+    // trained.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mk = |io: usize| {
+        let mut c = tc("autoiow", "solar", 0, 0.0);
+        c.prefetch = PrefetchMode::Auto;
+        c.io_threads = io;
+        c
+    };
+    let fixed = train(&mk(1)).unwrap();
+    let tuned = train(&mk(0)).unwrap();
+    assert_reports_identical("auto io width vs fixed", &fixed, &tuned);
 }
 
 #[test]

@@ -15,6 +15,7 @@ use solar::data::spec::DatasetSpec;
 use solar::data::synth;
 use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
+use solar::storage::codec::Codec;
 use solar::storage::pfs::CostModel;
 use solar::storage::store::{decode_f32, open_store, SampleStore};
 use solar::train::driver::{train, PrefetchMode, TrainConfig};
@@ -36,9 +37,11 @@ fn tmp(name: &str) -> PathBuf {
     dir.join(name)
 }
 
-/// The three backends over identical bytes, labeled. Generation runs at
-/// most once per process (tests share these fixtures and run in
-/// parallel; concurrent writers to one path would corrupt it).
+/// The five backends over identical decoded samples, labeled: raw
+/// single-file, raw sharded, in-memory, plus the delta-bitpack twins of
+/// the on-disk layouts (same spec/seed — only the on-disk bytes differ).
+/// Generation runs at most once per process (tests share these fixtures
+/// and run in parallel; concurrent writers to one path would corrupt it).
 fn backends() -> Vec<(&'static str, Arc<dyn SampleStore>)> {
     static GEN: std::sync::OnceLock<()> = std::sync::OnceLock::new();
     GEN.get_or_init(|| {
@@ -54,11 +57,32 @@ fn backends() -> Vec<(&'static str, Arc<dyn SampleStore>)> {
             let _ = std::fs::remove_dir_all(&sharded);
             synth::generate_dataset_sharded(&sharded, &spec, SEED, 3).unwrap();
         }
+        let single_dbp = tmp("single_dbp.shdf");
+        let ok = open_store(&single_dbp).map(|s| s.n_samples() == N).unwrap_or(false);
+        if !ok {
+            synth::generate_dataset_with(&single_dbp, &spec, SEED, Codec::DeltaBitpack).unwrap();
+        }
+        let sharded_dbp = tmp("sharded_dbp");
+        let ok = open_store(&sharded_dbp).map(|s| s.n_samples() == N).unwrap_or(false);
+        if !ok {
+            let _ = std::fs::remove_dir_all(&sharded_dbp);
+            synth::generate_dataset_sharded_workers_with(
+                &sharded_dbp,
+                &spec,
+                SEED,
+                3,
+                2,
+                Codec::DeltaBitpack,
+            )
+            .unwrap();
+        }
     });
     vec![
         ("single-file", open_store(&tmp("single.shdf")).unwrap()),
         ("sharded", open_store(&tmp("sharded")).unwrap()),
         ("in-memory", Arc::new(synth::generate_dataset_mem(&spec(), SEED))),
+        ("single-file-dbp", open_store(&tmp("single_dbp.shdf")).unwrap()),
+        ("sharded-dbp", open_store(&tmp("sharded_dbp")).unwrap()),
     ]
 }
 
@@ -139,25 +163,51 @@ fn concurrent_reads_through_one_shared_handle() {
 fn contiguity_maps_describe_each_layout() {
     for (name, store) in backends() {
         let c = store.chunk_contiguity();
-        match name {
-            "sharded" => assert_eq!(c.n_regions(), 3, "{name}"),
-            _ => assert_eq!(c.n_regions(), 1, "{name}"),
+        if name.starts_with("sharded") {
+            assert_eq!(c.n_regions(), 3, "{name}");
+        } else {
+            assert_eq!(c.n_regions(), 1, "{name}");
         }
-        // Within a region, consecutive samples are sample_bytes apart;
-        // offsets never decrease across the id space.
+        // Within a region, consecutive raw samples are sample_bytes
+        // apart; compressed extents vary, but offsets never decrease
+        // across the id space on any layout.
         let sb = store.sample_bytes() as u64;
+        let raw = store.codec().is_raw();
         let mut prev = None;
         for i in 0..N as u32 {
             let off = c.offset_of(i);
             if let Some(p) = prev {
                 assert!(off > p, "{name}: offsets must increase");
-                if c.region_end(i - 1) != i {
+                if raw && c.region_end(i - 1) != i {
                     assert_eq!(off - p, sb, "{name}: contiguous inside a region");
                 }
             }
             prev = Some(off);
         }
     }
+}
+
+#[test]
+fn compressed_layouts_serve_identical_bytes_and_smaller_files() {
+    let b = backends();
+    let raw = &b[0].1; // single-file
+    for (name, store) in &b[3..] {
+        assert!(!store.codec().is_raw(), "{name}");
+        for i in 0..N {
+            assert_eq!(
+                store.read_sample_at(i).unwrap(),
+                raw.read_sample_at(i).unwrap(),
+                "{name}: sample {i}"
+            );
+        }
+        let bytes = store.read_range_at(0, N).unwrap();
+        assert_eq!(bytes, raw.read_range_at(0, N).unwrap(), "{name}: full range");
+    }
+    // The compression is real: the encoded container is smaller than the
+    // fixed-stride one.
+    let raw_len = std::fs::metadata(tmp("single.shdf")).unwrap().len();
+    let dbp_len = std::fs::metadata(tmp("single_dbp.shdf")).unwrap().len();
+    assert!(dbp_len < raw_len, "dbp {dbp_len} vs raw {raw_len}");
 }
 
 #[test]
