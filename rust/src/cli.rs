@@ -96,6 +96,28 @@ pub fn parse_prefetch(s: &str) -> Result<crate::train::driver::PrefetchMode> {
     Ok(PrefetchMode::Fixed(d))
 }
 
+/// `--fetch-fault NODE:STEP[:loss]`: inject a fetch-stage fault on node
+/// NODE at step STEP. The default kind reports an error (the well-behaved
+/// failure); the `:loss` suffix makes the stage vanish silently instead —
+/// the abrupt node-loss drill (resume the run elastically afterwards).
+pub fn parse_fetch_fault(s: &str) -> Result<((usize, usize), crate::train::driver::FaultKind)> {
+    use crate::train::driver::FaultKind;
+    let parts: Vec<&str> = s.split(':').collect();
+    let (node_s, step_s, kind) = match parts.as_slice() {
+        [n, t] => (n, t, FaultKind::Error),
+        [n, t, "error"] => (n, t, FaultKind::Error),
+        [n, t, "loss"] => (n, t, FaultKind::NodeLoss),
+        _ => bail!("--fetch-fault must be NODE:STEP or NODE:STEP:(error|loss), got '{s}'"),
+    };
+    let node = node_s
+        .parse()
+        .with_context(|| format!("--fetch-fault node must be an integer, got '{node_s}'"))?;
+    let step = step_s
+        .parse()
+        .with_context(|| format!("--fetch-fault step must be an integer, got '{step_s}'"))?;
+    Ok(((node, step), kind))
+}
+
 pub const USAGE: &str = "\
 SOLAR — data-loading framework for distributed surrogate training
 (rust + JAX + Pallas reproduction of PVLDB'22 SOLAR)
@@ -145,6 +167,20 @@ COMMANDS
             instead of prefetching across them; A/B the boundary bubble)
             [--load-only] (run the loading pipeline without PJRT/grads —
             storage/loader smoke mode, needs no artifacts)
+            [--checkpoint PATH] [--checkpoint-every N] (write an atomic,
+            versioned RunState checkpoint to PATH every N steps; each
+            write replaces the previous one)
+            [--resume PATH] (continue from a checkpoint. Same --nodes:
+            bit-identical to the uninterrupted run; different --nodes:
+            elastic resume — allowed whenever the global batch is
+            preserved, the remainder is re-planned for the new node set
+            and already-buffered bytes are never re-read. --batch,
+            --seed, --epochs, and --buffer default to values derived
+            from the checkpoint)
+            [--fetch-fault NODE:STEP[:loss]] (inject a fetch-stage fault:
+            node NODE fails at step STEP. Default reports an error;
+            ':loss' makes the stage vanish silently — the node-loss
+            drill; recover with --resume on the surviving node count)
   smoke     PJRT round-trip check   [--hlo PATH]
   info      print manifest + environment info
 ";
@@ -186,6 +222,17 @@ mod tests {
         assert!(parse_tier("medium").is_ok());
         assert!(parse_tier("mid").is_ok());
         assert!(parse_tier("ultra").is_err());
+    }
+
+    #[test]
+    fn fetch_fault_parsing() {
+        use crate::train::driver::FaultKind;
+        assert_eq!(parse_fetch_fault("1:4").unwrap(), ((1, 4), FaultKind::Error));
+        assert_eq!(parse_fetch_fault("0:12:error").unwrap(), ((0, 12), FaultKind::Error));
+        assert_eq!(parse_fetch_fault("2:7:loss").unwrap(), ((2, 7), FaultKind::NodeLoss));
+        assert!(parse_fetch_fault("3").is_err());
+        assert!(parse_fetch_fault("1:2:crash").is_err());
+        assert!(parse_fetch_fault("x:2").is_err());
     }
 
     #[test]

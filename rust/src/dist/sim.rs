@@ -36,15 +36,31 @@
 //!   drain at run end — not per epoch — and `overlapped_s` is each
 //!   epoch's share of the run clock (barrier delta), so the per-epoch
 //!   values sum exactly to `SimReport::pipelined_total_s()`.
+//! * The pipeline's fetch-ahead window is bounded by
+//!   `CostModel::prefetch_depth` (sim-only), mirroring the driver's
+//!   `--prefetch N`: dispatch gating (at most depth+1 steps in flight)
+//!   plus staged-slot backpressure (a `depth.max(1)`-slot handoff
+//!   channel). The default `usize::MAX` is the classic unbounded model,
+//!   bit for bit — see [`PipeClocks`].
+//!
+//! [`simulate_elastic`] replays the same model through mid-run membership
+//! changes (the elastic-resume drill): at each [`MembershipEvent`] the
+//! buffers are exported, re-planned for the new node set
+//! (`sched::replan`), imported into a fresh engine, and the plan cursor
+//! seeks to the bounce step — the driver's elastic-resume path, on the
+//! same run clock.
 //!
 //! The accounting loop runs once per (step × node) at full paper scale —
 //! tens of millions of iterations — and therefore keeps to flat scalar
 //! accumulators: no heap allocation per step (the engine's `StepLoad`
 //! buffers are borrowed, never cloned).
 
+use anyhow::{ensure, Context, Result};
+
 use crate::config::RunConfig;
-use crate::loader::engine::LoaderEngine;
+use crate::loader::engine::{LoaderEngine, RunPos};
 use crate::loader::LoaderPolicy;
+use crate::sched::replan;
 use crate::storage::pfs::StreamClocks;
 
 pub use crate::dist::report::{EpochSim, SimReport};
@@ -52,6 +68,106 @@ pub use crate::dist::report::{EpochSim, SimReport};
 /// How many leading steps of the probe epoch record per-node batch sizes
 /// (Fig 16 plots the first ten).
 const EARLY_STEPS: usize = 10;
+
+/// The cross-epoch pipeline clocks, with a bounded fetch-ahead window.
+///
+/// Per node: a fetch-stage clock (`free`) charged the hideable share of
+/// each step's load. Per step: the exec stage starts at max(its node's
+/// handoff, the previous allreduce barrier), and the new barrier is the
+/// max exec end over nodes. Two extra constraints model the driver's
+/// bounded pipeline when `depth != usize::MAX`:
+///
+/// * **dispatch gating** — the coordinator hands the fetch stage step *s*
+///   only after step *s−1−depth*'s allreduce cleared (at most `depth+1`
+///   steps in flight), so depth 0 is the fully serial schedule;
+/// * **staged-slot backpressure** — the fetch→exec handoff channel has
+///   `depth.max(1)` slots (the driver's `sync_channel(stage_bound)`), so
+///   the handoff of step *s* blocks until the exec side pulled step
+///   *s−slots*.
+///
+/// At the default `usize::MAX` both constraints vanish and the float
+/// arithmetic is EXACTLY the historic unbounded recurrence
+/// (`free[k] += hide; end = end.max(free[k].max(barrier) + exec)`) — the
+/// independent-replay test pins that bit for bit. Histories are fixed
+/// rings of size `depth+1` / `slots`, so bounded depths stay O(depth)
+/// memory over million-step runs.
+struct PipeClocks {
+    depth: usize,
+    slots: usize,
+    free: Vec<f64>,
+    barrier: f64,
+    step: usize,
+    step_end: f64,
+    /// Ring of post-step barriers: entry `s % (depth+1)` is the barrier
+    /// after step `s` (valid for the trailing `depth+1` steps).
+    barrier_ring: Vec<f64>,
+    /// Per-node ring of exec-start (= staged-slot pull) times.
+    pull_ring: Vec<Vec<f64>>,
+}
+
+impl PipeClocks {
+    fn new(n_nodes: usize, depth: usize) -> PipeClocks {
+        let bounded = depth != usize::MAX;
+        let slots = if bounded { depth.max(1) } else { 0 };
+        PipeClocks {
+            depth,
+            slots,
+            free: vec![0.0; n_nodes],
+            barrier: 0.0,
+            step: 0,
+            step_end: 0.0,
+            barrier_ring: if bounded { vec![0.0; depth + 1] } else { Vec::new() },
+            pull_ring: if bounded { vec![vec![0.0; slots]; n_nodes] } else { Vec::new() },
+        }
+    }
+
+    fn barrier(&self) -> f64 {
+        self.barrier
+    }
+
+    /// Restart the pipeline for a new node set (elastic bounce): the
+    /// allreduce barrier carries over as the restart instant, every fetch
+    /// clock begins there, and the in-flight window is empty again — the
+    /// relaunched driver pays a fresh pipeline fill.
+    fn restart(&mut self, n_nodes: usize) {
+        let b = self.barrier;
+        *self = PipeClocks::new(n_nodes, self.depth);
+        self.barrier = b;
+        self.free.fill(b);
+    }
+
+    /// Charge node `k`'s two stages for the current step: `hide` seconds
+    /// of fetch-stage byte movement, `exec` seconds of exec-stage work
+    /// (un-hideable load share + compute).
+    fn node(&mut self, k: usize, hide: f64, exec: f64) {
+        let bounded = self.depth != usize::MAX;
+        let mut start = self.free[k];
+        if bounded && self.step > self.depth {
+            start = start.max(self.barrier_ring[self.step % (self.depth + 1)]);
+        }
+        let mut handoff = start + hide;
+        if bounded && self.step >= self.slots {
+            handoff = handoff.max(self.pull_ring[k][self.step % self.slots]);
+        }
+        self.free[k] = handoff;
+        let exec_start = handoff.max(self.barrier);
+        if bounded {
+            self.pull_ring[k][self.step % self.slots] = exec_start;
+        }
+        self.step_end = self.step_end.max(exec_start + exec);
+    }
+
+    /// Commit the step: advance the allreduce barrier to the slowest
+    /// node's exec end and record the history the bounded window gates on.
+    fn end_step(&mut self) {
+        self.barrier = self.step_end;
+        self.step_end = 0.0;
+        if self.depth != usize::MAX {
+            self.barrier_ring[self.step % (self.depth + 1)] = self.barrier;
+        }
+        self.step += 1;
+    }
+}
 
 /// Simulate a full run of `policy` under `cfg`; returns the per-epoch
 /// accounting. Deterministic: the same config (seed included) produces a
@@ -85,20 +201,18 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
     let mut probe_step_found = false;
 
     // Exact per-node-clock pipeline model (the driver's cross-epoch
-    // prefetch, idealized to unbounded fetch-ahead depth): `fetch_done[k]`
-    // is node k's fetch-stage clock, `barrier` the allreduce barrier after
-    // the last executed step. Both persist ACROSS epochs — epoch e+1's
-    // fetches proceed while epoch e's tail executes, so only the run pays
-    // fill/drain, not every epoch.
-    let mut fetch_done = vec![0.0f64; cfg.n_nodes];
-    let mut barrier = 0.0f64;
+    // prefetch, fetch-ahead window bounded by `cost.prefetch_depth`):
+    // clocks persist ACROSS epochs — epoch e+1's fetches proceed while
+    // epoch e's tail executes, so only the run pays fill/drain, not
+    // every epoch.
+    let mut clocks = PipeClocks::new(cfg.n_nodes, cost.prefetch_depth);
     // Reused across every (step × node): the accounting loop stays
     // allocation-free (§module docs).
     let mut streams = StreamClocks::new(cost.io_parallelism);
 
     for pos in 0..cfg.n_epochs {
         let epoch_src = report.epoch_order[pos];
-        let epoch_start_clock = barrier;
+        let epoch_start_clock = clocks.barrier();
         // Flat per-epoch accumulators — the hot loop writes only these.
         let mut load_s = 0.0f64;
         let mut load_pfs_s = 0.0f64;
@@ -116,8 +230,6 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
             let mut step_hide = 0.0f64;
             let mut step_comp = 0.0f64;
             let mut step_max_pfs = 0usize;
-            // This step's allreduce barrier: max over nodes of exec end.
-            let mut step_exec_end = 0.0f64;
             for (k, nl) in sl.nodes.iter().enumerate() {
                 // `io_parallelism` request streams per node per step
                 // (deterministic least-busy dealing; seeks charged per
@@ -155,9 +267,7 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
                 // step's hideable byte movement serially; the exec stage
                 // (un-hideable load share + compute) starts once its own
                 // bytes landed AND the previous step's allreduce cleared.
-                fetch_done[k] += node_hide;
-                let node_exec = (node_load - node_hide) + node_comp;
-                step_exec_end = step_exec_end.max(fetch_done[k].max(barrier) + node_exec);
+                clocks.node(k, node_hide, (node_load - node_hide) + node_comp);
 
                 hits += nl.hits;
                 remote_samples += nl.remote;
@@ -176,7 +286,7 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
             // model approximated the pipeline from barrier aggregates and
             // charged fill/drain per epoch; the per-node clocks above are
             // exact and cross epoch boundaries like the real driver.)
-            barrier = step_exec_end;
+            clocks.end_step();
             max_numpfs_sum += step_max_pfs as u64;
             steps += 1;
 
@@ -202,7 +312,7 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
             load_pfs_s,
             comp_s,
             // This epoch's share of the pipelined run clock.
-            overlapped_s: barrier - epoch_start_clock,
+            overlapped_s: clocks.barrier() - epoch_start_clock,
             hits,
             remote_samples,
             pfs_samples,
@@ -216,6 +326,213 @@ pub fn simulate(cfg: &RunConfig, policy: &LoaderPolicy) -> SimReport {
         });
     }
     report
+}
+
+/// A membership change mid-run: from global step `at_step` onward the run
+/// executes on `n_nodes` nodes (same clocks, same global index list).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MembershipEvent {
+    /// 0-based global step at which the new node set takes over; must be
+    /// strictly inside the run (`0 < at_step < total_steps`).
+    pub at_step: usize,
+    /// New node count; must divide the global batch (the step grid — and
+    /// with it eq. 3's gradient — is preserved across the bounce).
+    pub n_nodes: usize,
+}
+
+/// Flat per-epoch accumulators for [`simulate_elastic`] — an epoch can
+/// span a bounce, so they live outside the segment loop.
+#[derive(Default)]
+struct EpochAcc {
+    load_s: f64,
+    load_pfs_s: f64,
+    comp_s: f64,
+    hits: usize,
+    remote_samples: usize,
+    pfs_samples: usize,
+    pfs_requests: usize,
+    chunked_samples: u64,
+    max_numpfs_sum: u64,
+    steps: usize,
+}
+
+/// Simulate an elastic run: `cfg` is the initial node set and each
+/// [`MembershipEvent`] bounces the run to a new node count mid-run. Every
+/// bounce replays the driver's elastic-resume path at the scheduler
+/// level — export the buffer membership, re-plan it for the new node set
+/// ([`replan::replan_suffix`], capacity-preserving), import into a fresh
+/// engine, seek the plan cursor to the bounce step — so buffered bytes
+/// are never re-fetched and the global shuffled index list is untouched.
+/// The pipeline clocks persist across bounces (the barrier is the restart
+/// instant) but the fetch-ahead window refills, like a relaunched driver.
+///
+/// With no events this charges exactly [`simulate`]'s schedule, step for
+/// step. The Fig 12/16 probe diagnostics are node-set-relative and are
+/// not recorded here: `sample_step_fetches` stays zero and
+/// `early_batch_sizes` empty.
+pub fn simulate_elastic(
+    cfg: &RunConfig,
+    policy: &LoaderPolicy,
+    events: &[MembershipEvent],
+) -> Result<SimReport> {
+    let spe = cfg.steps_per_epoch();
+    let total_steps = spe * cfg.n_epochs;
+    let mut prev = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        ensure!(
+            ev.at_step > 0 && ev.at_step < total_steps,
+            "elastic: event {i} at step {} outside the run interior (1..{total_steps})",
+            ev.at_step
+        );
+        ensure!(
+            i == 0 || ev.at_step > prev,
+            "elastic: events must be strictly increasing in at_step"
+        );
+        prev = ev.at_step;
+    }
+
+    let sample_bytes = cfg.spec.sample_bytes as u64;
+    let comp_per_sample = cfg.spec.model.compute_per_sample_s();
+    let cost = &cfg.cost;
+    let ratio = cost.codec_ratio;
+    let scale = |v: u64| if ratio == 1.0 { v } else { (v as f64 * ratio).round() as u64 };
+
+    // Segment table: [start, end) on n nodes.
+    let mut segments: Vec<(usize, usize, usize)> = Vec::with_capacity(events.len() + 1);
+    {
+        let mut start = 0usize;
+        let mut n = cfg.n_nodes;
+        for ev in events {
+            segments.push((start, ev.at_step, n));
+            start = ev.at_step;
+            n = ev.n_nodes;
+        }
+        segments.push((start, total_steps, n));
+    }
+
+    let mut report = SimReport {
+        loader: policy.name.clone(),
+        epoch_order: Vec::new(),
+        epoch_order_cost: 0.0,
+        epochs: Vec::with_capacity(cfg.n_epochs),
+        sample_step_fetches: vec![0; cfg.n_nodes],
+        early_batch_sizes: Vec::new(),
+    };
+
+    let mut clocks = PipeClocks::new(cfg.n_nodes, cost.prefetch_depth);
+    let mut streams = StreamClocks::new(cost.io_parallelism);
+    let mut cur_cfg = cfg.clone();
+    let mut members: Vec<Vec<u32>> = Vec::new();
+    let mut acc = EpochAcc::default();
+    let mut epoch_start_clock = 0.0f64;
+    let last = segments.len() - 1;
+
+    for (i, &(start, end, n)) in segments.iter().enumerate() {
+        let mut engine;
+        if i == 0 {
+            engine = LoaderEngine::new(cur_cfg.clone(), policy.clone());
+            report.epoch_order = engine.epoch_order.clone();
+            report.epoch_order_cost = engine.epoch_order_cost;
+        } else {
+            let plan = replan::replan_suffix(&cur_cfg, &members, n, None)
+                .with_context(|| format!("elastic: re-planning for {n} nodes at step {start}"))?;
+            // The capacity-preserving default never drops buffered bytes.
+            debug_assert_eq!(plan.dropped, 0);
+            cur_cfg = plan.cfg.clone();
+            engine = LoaderEngine::new(cur_cfg.clone(), policy.clone());
+            engine.import_buffers(&plan.members)?;
+            clocks.restart(n);
+        }
+        let contention = cost.pfs_contention(n);
+        let mut cursor = if i == 0 {
+            engine.plan_run()
+        } else {
+            engine.plan_run_seek(RunPos { epoch_pos: start / spe, step: start % spe })
+        };
+        for g in start..end {
+            let rs = cursor
+                .next()
+                .with_context(|| format!("elastic: plan cursor ended before step {g}"))?;
+            let mut step_load = 0.0f64;
+            let mut step_hide = 0.0f64;
+            let mut step_comp = 0.0f64;
+            let mut step_max_pfs = 0usize;
+            for (k, nl) in rs.load.nodes.iter().enumerate() {
+                // Identical charge arithmetic to `simulate` — the
+                // empty-events parity test pins it bit for bit.
+                streams.reset();
+                for r in &nl.pfs_reqs {
+                    streams.charge(cost, scale(r.offset), scale(r.len));
+                }
+                let pfs_t = streams.wall_s();
+                let decode_t = if ratio == 1.0 {
+                    0.0
+                } else {
+                    cost.decode_cost(nl.pfs_samples as u64 * sample_bytes)
+                };
+                let node_hide = pfs_t * contention
+                    + nl.remote as f64 * cost.remote_fetch(sample_bytes)
+                    + decode_t;
+                let node_load = node_hide
+                    + nl.hits as f64 * cost.buffer_hit(sample_bytes)
+                    + cost.delivery_overhead(nl.samples.len());
+                let node_comp = nl.samples.len() as f64 * comp_per_sample;
+                step_load = step_load.max(node_load);
+                step_hide = step_hide.max(node_hide);
+                step_comp = step_comp.max(node_comp);
+                step_max_pfs = step_max_pfs.max(nl.pfs_samples);
+                clocks.node(k, node_hide, (node_load - node_hide) + node_comp);
+
+                acc.hits += nl.hits;
+                acc.remote_samples += nl.remote;
+                acc.pfs_samples += nl.pfs_samples;
+                acc.pfs_requests += nl.pfs_reqs.len();
+                for c in &nl.chunks {
+                    if c.wanted > 1 {
+                        acc.chunked_samples += c.wanted as u64;
+                    }
+                }
+            }
+            acc.load_s += step_load;
+            acc.load_pfs_s += step_hide;
+            acc.comp_s += step_comp;
+            clocks.end_step();
+            acc.max_numpfs_sum += step_max_pfs as u64;
+            acc.steps += 1;
+
+            if rs.epoch_end {
+                let a = std::mem::take(&mut acc);
+                report.epochs.push(EpochSim {
+                    epoch_pos: rs.epoch_pos,
+                    epoch_src: report.epoch_order[rs.epoch_pos],
+                    load_s: a.load_s,
+                    load_pfs_s: a.load_pfs_s,
+                    comp_s: a.comp_s,
+                    overlapped_s: clocks.barrier() - epoch_start_clock,
+                    hits: a.hits,
+                    remote_samples: a.remote_samples,
+                    pfs_samples: a.pfs_samples,
+                    pfs_requests: a.pfs_requests,
+                    chunked_frac: if a.pfs_samples > 0 {
+                        a.chunked_samples as f64 / a.pfs_samples as f64
+                    } else {
+                        0.0
+                    },
+                    mean_max_numpfs: if a.steps > 0 {
+                        a.max_numpfs_sum as f64 / a.steps as f64
+                    } else {
+                        0.0
+                    },
+                });
+                epoch_start_clock = clocks.barrier();
+            }
+        }
+        drop(cursor);
+        if i < last {
+            members = engine.export_buffers();
+        }
+    }
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -533,6 +850,148 @@ mod tests {
             b.serial_total_s(),
             a.serial_total_s()
         );
+    }
+
+    #[test]
+    fn deep_bounded_window_is_the_unbounded_model_bitwise() {
+        // A bounded window wider than the run exercises the bounded code
+        // path with every gate vacuous: the clocks must equal the classic
+        // unbounded model bit for bit.
+        let c1 = cfg(512, 4, 8, 3, 32);
+        let mut cb = c1.clone();
+        cb.cost.prefetch_depth = 4096;
+        for name in ["pytorch", "solar", "nopfs"] {
+            let policy = LoaderPolicy::by_name(name).unwrap();
+            let a = simulate(&c1, &policy);
+            let b = simulate(&cb, &policy);
+            for (ea, eb) in a.epochs.iter().zip(b.epochs.iter()) {
+                assert_eq!(ea.overlapped_s.to_bits(), eb.overlapped_s.to_bits(), "{name}");
+                assert_eq!(ea.load_s.to_bits(), eb.load_s.to_bits(), "{name}");
+                assert_eq!(ea.load_pfs_s.to_bits(), eb.load_pfs_s.to_bits(), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn shallower_prefetch_depth_never_speeds_the_pipeline() {
+        // The window only CONSTRAINS: each deeper depth weakens the
+        // dispatch/slot gates pointwise, so the pipelined run clock is
+        // monotone non-increasing in depth — and the schedule-level
+        // numbers (what is fetched, from where) never move at all.
+        let c = cfg(512, 4, 8, 3, 0); // pytorch fetches every step
+        let policy = LoaderPolicy::pytorch();
+        let base = simulate(&c, &policy);
+        let mut totals = Vec::new();
+        for depth in [0usize, 1, 2, 8, usize::MAX] {
+            let mut cd = c.clone();
+            cd.cost.prefetch_depth = depth;
+            let r = simulate(&cd, &policy);
+            for (ea, eb) in base.epochs.iter().zip(r.epochs.iter()) {
+                assert_eq!(ea.hits, eb.hits, "depth {depth}");
+                assert_eq!(ea.pfs_samples, eb.pfs_samples, "depth {depth}");
+                assert_eq!(ea.pfs_requests, eb.pfs_requests, "depth {depth}");
+                assert_eq!(ea.load_s.to_bits(), eb.load_s.to_bits(), "depth {depth}");
+                assert_eq!(ea.comp_s.to_bits(), eb.comp_s.to_bits(), "depth {depth}");
+            }
+            totals.push(r.pipelined_total_s());
+        }
+        for w in totals.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "deeper window slower: {totals:?}");
+        }
+        // One slot of fetch-ahead already hides fetch behind exec…
+        assert!(totals[1] < totals[0], "depth 1 should beat serial: {totals:?}");
+        // …and even depth 0 never exceeds the serial schedule.
+        assert!(totals[0] <= base.serial_total_s() + 1e-9);
+    }
+
+    #[test]
+    fn single_node_depth_zero_is_the_serial_schedule() {
+        // Depth 0 on one node is fully serialized: every step pays
+        // fetch + exec back to back, which IS the serial accounting.
+        let mut c = cfg(128, 1, 8, 2, 0);
+        c.cost.prefetch_depth = 0;
+        let r = simulate(&c, &LoaderPolicy::pytorch());
+        let (p, s) = (r.pipelined_total_s(), r.serial_total_s());
+        assert!((p - s).abs() <= 1e-9 * s, "depth-0 single node: pipelined {p} vs serial {s}");
+    }
+
+    #[test]
+    fn elastic_with_no_events_is_simulate_bit_for_bit() {
+        let c = cfg(512, 4, 8, 3, 32);
+        for name in ["pytorch", "solar", "nopfs"] {
+            let policy = LoaderPolicy::by_name(name).unwrap();
+            let a = simulate(&c, &policy);
+            let b = simulate_elastic(&c, &policy, &[]).unwrap();
+            assert_eq!(a.epoch_order, b.epoch_order, "{name}");
+            assert_eq!(a.epochs.len(), b.epochs.len(), "{name}");
+            for (ea, eb) in a.epochs.iter().zip(b.epochs.iter()) {
+                assert_eq!(ea.hits, eb.hits, "{name} epoch {}", ea.epoch_pos);
+                assert_eq!(ea.remote_samples, eb.remote_samples, "{name}");
+                assert_eq!(ea.pfs_samples, eb.pfs_samples, "{name}");
+                assert_eq!(ea.pfs_requests, eb.pfs_requests, "{name}");
+                assert_eq!(ea.load_s.to_bits(), eb.load_s.to_bits(), "{name}");
+                assert_eq!(ea.load_pfs_s.to_bits(), eb.load_pfs_s.to_bits(), "{name}");
+                assert_eq!(ea.comp_s.to_bits(), eb.comp_s.to_bits(), "{name}");
+                assert_eq!(ea.overlapped_s.to_bits(), eb.overlapped_s.to_bits(), "{name}");
+                assert_eq!(ea.chunked_frac.to_bits(), eb.chunked_frac.to_bits(), "{name}");
+                assert_eq!(ea.mean_max_numpfs.to_bits(), eb.mean_max_numpfs.to_bits(), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_bounce_trains_the_same_samples_and_stays_warm() {
+        // N→M→N drill in the warm capacity-preserving regime: 4 nodes
+        // with aggregate capacity == dataset, bounce to 2 mid-epoch-1 and
+        // back to 4 mid-epoch-2. The global index list is node-count
+        // independent, so every epoch still conserves the trained
+        // samples, the pre-bounce epoch matches the uninterrupted run bit
+        // for bit, and the re-planned (imported) buffers keep the suffix
+        // all-hits — no byte charged before a bounce is ever re-fetched.
+        let c = cfg(256, 4, 8, 3, 64);
+        let spe = c.steps_per_epoch();
+        let policy = LoaderPolicy::solar();
+        let a = simulate(&c, &policy);
+        let b = simulate_elastic(
+            &c,
+            &policy,
+            &[
+                MembershipEvent { at_step: spe + 2, n_nodes: 2 },
+                MembershipEvent { at_step: 2 * spe + 1, n_nodes: 4 },
+            ],
+        )
+        .unwrap();
+        let trained = spe * c.global_batch();
+        assert_eq!(b.epochs.len(), 3);
+        for e in &b.epochs {
+            assert_eq!(e.hits + e.remote_samples + e.pfs_samples, trained, "epoch {}", e.epoch_pos);
+        }
+        // Epoch 0 runs entirely on the original node set.
+        assert_eq!(a.epochs[0].hits, b.epochs[0].hits);
+        assert_eq!(a.epochs[0].pfs_samples, b.epochs[0].pfs_samples);
+        assert_eq!(a.epochs[0].load_s.to_bits(), b.epochs[0].load_s.to_bits());
+        // Warm + capacity-preserving: the bounced suffix never re-fetches,
+        // matching the uninterrupted run's hit/PFS totals exactly.
+        for (ea, eb) in a.epochs.iter().zip(b.epochs.iter()).skip(1) {
+            assert_eq!(eb.pfs_samples, 0, "epoch {} re-fetched after a bounce", eb.epoch_pos);
+            assert_eq!(eb.hits, trained, "epoch {}", eb.epoch_pos);
+            assert_eq!((ea.hits, ea.pfs_samples), (eb.hits, eb.pfs_samples));
+        }
+        assert!(b.pipelined_total_s() > 0.0);
+    }
+
+    #[test]
+    fn elastic_rejects_malformed_events() {
+        let c = cfg(256, 4, 8, 2, 32);
+        let p = LoaderPolicy::solar();
+        let total = c.steps_per_epoch() * 2;
+        let ev = |s, n| MembershipEvent { at_step: s, n_nodes: n };
+        assert!(simulate_elastic(&c, &p, &[ev(0, 2)]).is_err(), "bounce before step 1");
+        assert!(simulate_elastic(&c, &p, &[ev(total, 2)]).is_err(), "bounce past the run");
+        assert!(simulate_elastic(&c, &p, &[ev(4, 2), ev(4, 4)]).is_err(), "non-increasing");
+        // 3 does not divide the global batch of 32; 0 nodes is nonsense.
+        assert!(simulate_elastic(&c, &p, &[ev(4, 3)]).is_err());
+        assert!(simulate_elastic(&c, &p, &[ev(4, 0)]).is_err());
     }
 
     #[test]

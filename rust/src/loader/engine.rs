@@ -29,6 +29,17 @@ use crate::util::rng::Rng;
 /// Sample-id sentinel for "not scheduled / unused".
 const UNUSED: u32 = u32::MAX;
 
+/// A position in a run's deterministic plan stream: (epoch position in
+/// the optimized visiting order, step within that epoch). The unit of
+/// seeking for [`LoaderEngine::plan_run_from`] /
+/// [`LoaderEngine::plan_run_seek`] and of checkpoint resume
+/// (`train::runstate`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunPos {
+    pub epoch_pos: usize,
+    pub step: usize,
+}
+
 /// One node's loading work for one step.
 #[derive(Debug, Clone, Default)]
 pub struct NodeStepLoad {
@@ -720,6 +731,120 @@ impl LoaderEngine {
     pub fn buffered_per_node(&self) -> &[usize] {
         &self.count
     }
+
+    /// Per-node buffer membership (sample ids in increasing order) — the
+    /// scheduler-facing view a checkpoint records and an elastic re-plan
+    /// redistributes.
+    pub fn export_buffers(&self) -> Vec<Vec<u32>> {
+        self.resident.iter().map(|r| r.iter().map(|x| x as u32).collect()).collect()
+    }
+
+    /// Replace ALL buffer state with the given per-node membership — the
+    /// elastic-resume entry point (`sched::replan` redistributes a
+    /// checkpoint's membership over a new node set, then imports it
+    /// here). Keys and eviction queues are reset deterministically: LRU
+    /// keys restart in import order (node-major, id-ascending when the
+    /// lists come from [`export_buffers`]); Belady keys are recomputed
+    /// from the step maps by the next [`plan_run_seek`](Self::plan_run_seek)
+    /// / `begin_epoch`.
+    pub fn import_buffers(&mut self, members: &[Vec<u32>]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            members.len() == self.cfg.n_nodes,
+            "import_buffers: {} membership lists for {} nodes",
+            members.len(),
+            self.cfg.n_nodes
+        );
+        let n = self.cfg.spec.n_samples;
+        for r in self.resident.iter_mut() {
+            r.clear();
+        }
+        self.loc = vec![NO_NODE; n];
+        self.count = vec![0; self.cfg.n_nodes];
+        for h in self.heaps.iter_mut() {
+            h.clear();
+        }
+        self.tick = 0;
+        for (k, ids) in members.iter().enumerate() {
+            for &x in ids {
+                anyhow::ensure!((x as usize) < n, "import_buffers: sample {x} out of range");
+                if self.resident[k].contains(x as usize) {
+                    continue;
+                }
+                anyhow::ensure!(
+                    self.count[k] < self.cfg.buffer_capacity,
+                    "import_buffers: node {k} membership exceeds capacity {}",
+                    self.cfg.buffer_capacity
+                );
+                self.resident[k].insert(x as usize);
+                self.count[k] += 1;
+                if self.loc[x as usize] == NO_NODE {
+                    self.loc[x as usize] = k as i16;
+                }
+                let key = match self.policy.buffer {
+                    BufferPolicy::Lru => self.lru_key(),
+                    _ => 0, // Belady keys are rebuilt at the next epoch begin
+                };
+                self.key[x as usize] = key;
+                self.heaps[k].push(key, x);
+            }
+        }
+        Ok(())
+    }
+
+    /// Seekable run cursor, replay flavor: plan (and discard) every step
+    /// before `from`, then stream from there. Planning is pure CPU — no
+    /// store I/O ever happens here — and reconstructs the engine's buffer
+    /// and key state BYTE-EXACTLY, so a same-node-count resume yields the
+    /// identical plan suffix the uninterrupted run would have produced
+    /// (bit-identity, tested). Cost: O(prior steps) arithmetic.
+    pub fn plan_run_from(&mut self, from: RunPos) -> PlanRun<'_> {
+        let spe = self.steps_per_epoch();
+        let skip = from.epoch_pos * spe + from.step;
+        let mut run = PlanRun { engine: self, pos: 0, cur: None };
+        for _ in 0..skip {
+            if run.next().is_none() {
+                break;
+            }
+        }
+        run
+    }
+
+    /// Seekable run cursor, direct flavor: reconstruct the cursor and
+    /// buffer-key state AT `from` without replaying prior epochs — O(n)
+    /// instead of O(steps·n). Possible because SOLAR's shuffle is
+    /// per-epoch independent (`epoch_perm(e)` forks its own RNG stream)
+    /// and buffer membership arrives via [`import_buffers`]: the step
+    /// maps position the Belady keys, and residents whose use-step this
+    /// epoch precedes `from.step` get their "already used" key (next-use
+    /// in the following epoch), exactly the key the hit would have
+    /// assigned. This is the elastic path, where the prefix was planned
+    /// by a DIFFERENT node count and replay is impossible by construction.
+    pub fn plan_run_seek(&mut self, from: RunPos) -> PlanRun<'_> {
+        let n_epochs = self.cfg.n_epochs;
+        if from.epoch_pos >= n_epochs {
+            return PlanRun { engine: self, pos: n_epochs, cur: None };
+        }
+        let mut cur = self.begin_epoch(from.epoch_pos);
+        let step = from.step.min(cur.steps);
+        cur.step = step;
+        if !cur.deepio && self.policy.buffer == BufferPolicy::Belady && step > 0 {
+            for k in 0..self.resident.len() {
+                for x in self.resident[k].iter().collect::<Vec<_>>() {
+                    if let Some(&s) = self.step_this.get(x) {
+                        if s != UNUSED && (s as usize) < step {
+                            self.key[x] = self.belady_key(x as u32, true);
+                        }
+                    }
+                }
+            }
+        }
+        if step >= cur.steps {
+            self.end_epoch(&mut cur);
+            PlanRun { engine: self, pos: from.epoch_pos + 1, cur: None }
+        } else {
+            PlanRun { engine: self, pos: from.epoch_pos, cur: Some(cur) }
+        }
+    }
 }
 
 /// State of one epoch's streaming cursor: the source epoch, its
@@ -1295,6 +1420,116 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn assert_same_load(a: &StepLoad, b: &StepLoad, tag: &str) {
+        for (nx, ny) in a.nodes.iter().zip(b.nodes.iter()) {
+            assert_eq!(nx.samples, ny.samples, "{tag}");
+            assert_eq!(nx.hits, ny.hits, "{tag}");
+            assert_eq!(nx.remote, ny.remote, "{tag}");
+            assert_eq!(nx.pfs_reqs, ny.pfs_reqs, "{tag}");
+            assert_eq!(nx.inserted, ny.inserted, "{tag}");
+            assert_eq!(nx.evicted, ny.evicted, "{tag}");
+        }
+    }
+
+    #[test]
+    fn plan_run_from_matches_the_uninterrupted_suffix_exactly() {
+        // The replay seek: a fresh engine sought to (epoch, step) must
+        // stream the byte-exact plan suffix of an uninterrupted run —
+        // mid-epoch, at a boundary, and at the very start.
+        for name in ["pytorch", "pytorch+lru", "nopfs", "solar", "deepio"] {
+            let cfg = tiny_cfg(256, 4, 8, 3, 32);
+            let policy = LoaderPolicy::by_name(name).unwrap();
+            let mut base = LoaderEngine::new(cfg.clone(), policy.clone());
+            let full: Vec<RunStep> = base.plan_run().collect();
+            let spe = full.len() / 3;
+            for from in
+                [RunPos { epoch_pos: 0, step: 0 }, RunPos { epoch_pos: 1, step: 3 }, RunPos { epoch_pos: 2, step: 0 }]
+            {
+                let mut fresh = LoaderEngine::new(cfg.clone(), policy.clone());
+                let suffix: Vec<RunStep> = fresh.plan_run_from(from).collect();
+                let skip = from.epoch_pos * spe + from.step;
+                assert_eq!(suffix.len(), full.len() - skip, "{name} from {from:?}");
+                for (rs, expect) in suffix.iter().zip(full[skip..].iter()) {
+                    assert_eq!(rs.epoch_pos, expect.epoch_pos, "{name} from {from:?}");
+                    assert_eq!(rs.step, expect.step, "{name} from {from:?}");
+                    assert_same_load(&rs.load, &expect.load, &format!("{name} from {from:?}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn import_buffers_roundtrips_export_and_validates() {
+        let cfg = tiny_cfg(256, 4, 8, 3, 32);
+        let mut engine = LoaderEngine::new(cfg.clone(), LoaderPolicy::solar());
+        for _ in engine.plan_run().take(10) {}
+        let members = engine.export_buffers();
+        assert_eq!(members.len(), 4);
+        assert!(members.iter().all(|m| m.windows(2).all(|w| w[0] < w[1])), "sorted ids");
+
+        let mut fresh = LoaderEngine::new(cfg.clone(), LoaderPolicy::solar());
+        fresh.import_buffers(&members).unwrap();
+        assert_eq!(fresh.export_buffers(), members);
+        assert_eq!(fresh.buffered_per_node(), engine.buffered_per_node());
+
+        // Wrong node count, out-of-range ids, over-capacity: rejected.
+        assert!(fresh.import_buffers(&members[..2]).is_err());
+        assert!(fresh.import_buffers(&[vec![9999u32], vec![], vec![], vec![]]).is_err());
+        let over: Vec<Vec<u32>> = vec![(0..33u32).collect(), vec![], vec![], vec![]];
+        assert!(fresh.import_buffers(&over).is_err());
+    }
+
+    #[test]
+    fn plan_run_seek_streams_the_warm_suffix_without_replay() {
+        // The elastic seek: import a warm membership, position the cursor
+        // mid-run WITHOUT planning the prefix, and the suffix must match
+        // the uninterrupted run's — exactly, in the capacity-preserving
+        // warm regime (aggregate buffer = dataset ⇒ the suffix is all
+        // hits, so key details cannot diverge the plans).
+        let cfg = tiny_cfg(256, 4, 8, 3, 64); // 4×64 = 256 = dataset
+        let mut base = LoaderEngine::new(cfg.clone(), LoaderPolicy::solar());
+        let spe = base.steps_per_epoch();
+        let from = RunPos { epoch_pos: 1, step: 3 };
+        let mut full = base.plan_run();
+        for _ in 0..(spe + 3) {
+            full.next().unwrap();
+        }
+        let expect: Vec<RunStep> = full.collect();
+        let members = {
+            let mut warm = LoaderEngine::new(cfg.clone(), LoaderPolicy::solar());
+            let mut c = warm.plan_run();
+            for _ in 0..(spe + 3) {
+                c.next().unwrap();
+            }
+            drop(c);
+            warm.export_buffers()
+        };
+        let mut fresh = LoaderEngine::new(cfg, LoaderPolicy::solar());
+        fresh.import_buffers(&members).unwrap();
+        let suffix: Vec<RunStep> = fresh.plan_run_seek(from).collect();
+        assert_eq!(suffix.len(), expect.len());
+        for (rs, exp) in suffix.iter().zip(expect.iter()) {
+            assert_eq!((rs.epoch_pos, rs.step), (exp.epoch_pos, exp.step));
+            assert_same_load(&rs.load, &exp.load, &format!("seek step {}/{}", rs.epoch_pos, rs.step));
+        }
+    }
+
+    #[test]
+    fn plan_run_seek_handles_boundaries_and_past_the_end() {
+        let cfg = tiny_cfg(256, 2, 8, 2, 32);
+        let spe = 256 / 16;
+        // Seek exactly to an epoch boundary: first yielded step is the
+        // next epoch's step 0.
+        let mut e = LoaderEngine::new(cfg.clone(), LoaderPolicy::solar());
+        let mut c = e.plan_run_seek(RunPos { epoch_pos: 0, step: spe });
+        let first = c.next().unwrap();
+        assert_eq!((first.epoch_pos, first.step), (1, 0));
+        drop(c);
+        // Seek past the end: empty stream.
+        let mut e = LoaderEngine::new(cfg, LoaderPolicy::solar());
+        assert!(e.plan_run_seek(RunPos { epoch_pos: 2, step: 0 }).next().is_none());
     }
 
     #[test]

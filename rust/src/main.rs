@@ -3,7 +3,7 @@
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 
-use solar::cli::{parse_prefetch, parse_tier, Args, USAGE};
+use solar::cli::{parse_fetch_fault, parse_prefetch, parse_tier, Args, USAGE};
 use solar::config::RunConfig;
 use solar::data::spec::DatasetSpec;
 use solar::data::synth;
@@ -15,7 +15,8 @@ use solar::sched::plan::SchedulePlan;
 use solar::storage::codec::Codec;
 use solar::storage::pfs::{CostModel, SystemTier};
 use solar::storage::store::{open_store, SampleStore};
-use solar::train::driver::{train, TrainConfig};
+use solar::train::driver::{train, FaultKind, TrainConfig};
+use solar::train::runstate::RunState;
 use solar::util::{fmt_bytes, fmt_secs};
 
 fn main() {
@@ -255,18 +256,33 @@ fn cmd_train(args: &Args) -> Result<()> {
     let store = open_store(&data)?;
     let holdout = args.get_usize("holdout", 32)?;
     let n_nodes = args.get_usize("nodes", 2)?;
+    // Load the checkpoint up front: a resumed run defaults its schedule
+    // knobs to checkpoint-derived values (batch from the preserved global
+    // batch, capacity from the preserved aggregate), so `--resume PATH
+    // --nodes M` alone is a valid elastic resume. Explicit flags still
+    // win — validate_resume rejects any that break the schedule identity.
+    let resume = args.get_path("resume").map(|p| RunState::load(&p)).transpose()?;
     let mut spec = DatasetSpec::paper("cd17").unwrap();
     spec.id = store.dataset_name().to_string();
     spec.n_samples = store.n_samples().saturating_sub(holdout);
     spec.sample_bytes = store.sample_bytes();
     spec.shape = store.shape().to_vec();
+    let (d_batch, d_epochs, d_seed, d_buffer) = match &resume {
+        Some(rs) => (
+            rs.global_batch() / n_nodes.max(1),
+            rs.n_epochs,
+            rs.seed as usize,
+            (rs.buffer_capacity * rs.n_nodes).div_ceil(n_nodes.max(1)),
+        ),
+        None => (16, 3, 42, (spec.n_samples * 7 / 10 / n_nodes).max(1)),
+    };
     let cfg = RunConfig {
         spec: spec.clone(),
         n_nodes,
-        local_batch: args.get_usize("batch", 16)?,
-        n_epochs: args.get_usize("epochs", 3)?,
-        seed: args.get_usize("seed", 42)? as u64,
-        buffer_capacity: args.get_usize("buffer", (spec.n_samples * 7 / 10 / n_nodes).max(1))?,
+        local_batch: args.get_usize("batch", d_batch)?,
+        n_epochs: args.get_usize("epochs", d_epochs)?,
+        seed: args.get_usize("seed", d_seed)? as u64,
+        buffer_capacity: args.get_usize("buffer", d_buffer.max(1))?,
         cost: CostModel::default(),
     };
     let dense = match args.get_or("dense", "pallas").as_str() {
@@ -284,6 +300,21 @@ fn cmd_train(args: &Args) -> Result<()> {
         0 => solar::loader::io::io_threads(),
         n => n,
     };
+    let (fetch_fault, fault_kind) = match args.get("fetch-fault") {
+        Some(s) => {
+            let (at, kind) = parse_fetch_fault(s)?;
+            (Some(at), kind)
+        }
+        None => (None, FaultKind::Error),
+    };
+    let checkpoint_path = args.get_path("checkpoint");
+    // `--checkpoint PATH` alone checkpoints at every epoch boundary;
+    // `--checkpoint-every N` picks the step cadence explicitly.
+    let default_every = if checkpoint_path.is_some() { cfg.steps_per_epoch() } else { 0 };
+    let checkpoint_every = args.get_usize("checkpoint-every", default_every)?;
+    if checkpoint_every > 0 && checkpoint_path.is_none() {
+        bail!("--checkpoint-every needs --checkpoint PATH");
+    }
     let codec = store.codec();
     let tc = TrainConfig {
         run: cfg,
@@ -298,7 +329,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         holdout,
         prefetch,
         epoch_drain: args.flag("epoch-drain"),
-        fetch_fault: None,
+        fetch_fault,
+        fault_kind,
+        checkpoint_every,
+        checkpoint_path,
+        resume,
         load_only: args.flag("load-only"),
         io_threads,
     };
@@ -315,6 +350,25 @@ fn cmd_train(args: &Args) -> Result<()> {
         if tc.io_threads == 0 { "auto".to_string() } else { tc.io_threads.to_string() },
         if tc.load_only { " (load-only: no PJRT, no gradients)" } else { "" }
     );
+    if let Some(rs) = &tc.resume {
+        println!(
+            "resume: from step {} (epoch {}), checkpointed on {} nodes x batch {}{}",
+            rs.global_step,
+            rs.cur_epoch,
+            rs.n_nodes,
+            rs.local_batch,
+            if rs.n_nodes == tc.run.n_nodes {
+                " — same node set, bit-identical replay"
+            } else {
+                " — elastic: suffix re-planned for the new node set"
+            }
+        );
+    }
+    if tc.checkpoint_every > 0 {
+        if let Some(p) = &tc.checkpoint_path {
+            println!("checkpoint: every {} steps -> {}", tc.checkpoint_every, p.display());
+        }
+    }
     let report = train(&tc)?;
     for p in report.points.iter().filter(|p| !p.val_loss.is_nan()) {
         println!(

@@ -12,3 +12,4 @@ pub mod locality;
 pub mod plan;
 pub mod planio;
 pub mod pso;
+pub mod replan;

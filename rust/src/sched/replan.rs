@@ -1,0 +1,231 @@
+//! Mid-run suffix re-planning for a changed node set (elastic runs).
+//!
+//! SOLAR's schedule is a pure function of (seed, config, node count), and
+//! the global shuffled index list depends only on (seed, n_samples,
+//! n_epochs) — NOT on the node count. So when membership changes at step
+//! *t* (a node dies, capacity is added back), the remainder of the run is
+//! fully determined the moment we fix three things:
+//!
+//! 1. the new node count M, constrained to preserve the GLOBAL batch
+//!    (`local_batch = G / M`) — this keeps the step grid, and therefore
+//!    eq. 3's gradient, identical to the uninterrupted run;
+//! 2. the new per-node buffer capacity (default: the old aggregate
+//!    capacity split over M, rounded up — capacity-preserving);
+//! 3. a deterministic redistribution of the checkpointed buffer
+//!    membership over the M nodes.
+//!
+//! [`replan_suffix`] computes all three. Feeding the result into a fresh
+//! `LoaderEngine` via `import_buffers` + `plan_run_seek(pos)` re-runs the
+//! engine's locality remap and fetch balancing against the NEW membership
+//! from step *t* onward — the locality/balance recompute the issue's
+//! tentpole names — while the global shuffled index list (and with it the
+//! per-step global batches) is untouched.
+
+use anyhow::{ensure, Result};
+
+use crate::config::RunConfig;
+
+/// The deterministic inputs a new node set needs to continue a run from
+/// step *t*: a ready-to-use [`RunConfig`] and the redistributed buffer
+/// membership to `import_buffers` into a fresh engine.
+#[derive(Debug, Clone)]
+pub struct ElasticPlan {
+    /// The old config with n_nodes / local_batch / buffer_capacity
+    /// replaced for the new node set (global batch preserved).
+    pub cfg: RunConfig,
+    /// Checkpointed buffer membership dealt over the new node set,
+    /// ascending ids per node.
+    pub members: Vec<Vec<u32>>,
+    /// Buffered samples that did not fit the new aggregate capacity (0
+    /// unless the caller forced a smaller per-node capacity).
+    pub dropped: usize,
+}
+
+/// Recompute the run's node-set-dependent state for `new_nodes` nodes.
+///
+/// `old_cfg` is the checkpointed run's config; `old_members` its per-node
+/// buffer membership at the checkpoint step. `new_capacity` overrides the
+/// capacity-preserving default `ceil(old_cap × old_N / M)`.
+///
+/// The redistribution is a contiguous block split of the ascending
+/// (deduplicated) id list — deterministic, balanced to ±1, and keeping
+/// each node's membership clustered so any later re-reads near it still
+/// chunk-aggregate well. Duplicated residents (NoPFS-style policies may
+/// hold a sample on several nodes) collapse to one copy: the new node
+/// set inherits the UNION of buffered bytes, each byte exactly once.
+pub fn replan_suffix(
+    old_cfg: &RunConfig,
+    old_members: &[Vec<u32>],
+    new_nodes: usize,
+    new_capacity: Option<usize>,
+) -> Result<ElasticPlan> {
+    ensure!(new_nodes > 0, "replan: node count must be positive");
+    ensure!(
+        old_members.len() == old_cfg.n_nodes,
+        "replan: {} membership lists for a {}-node checkpoint",
+        old_members.len(),
+        old_cfg.n_nodes
+    );
+    let g = old_cfg.global_batch();
+    ensure!(
+        g % new_nodes == 0,
+        "replan: global batch {g} is not divisible by {new_nodes} nodes \
+         (the global batch must be preserved to keep the step grid identical)"
+    );
+    let cap = new_capacity
+        .unwrap_or_else(|| (old_cfg.buffer_capacity * old_cfg.n_nodes).div_ceil(new_nodes));
+    ensure!(cap > 0 || old_members.iter().all(|m| m.is_empty()), "replan: zero capacity cannot hold the checkpointed buffers");
+
+    let mut ids: Vec<u32> = old_members.iter().flatten().copied().collect();
+    ids.sort_unstable();
+    ids.dedup();
+
+    // Block split: node k takes the k-th run of `per` ascending ids.
+    let per = ids.len().div_ceil(new_nodes).min(cap).max(1);
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); new_nodes];
+    let mut it = ids.iter().copied();
+    'fill: for m in members.iter_mut() {
+        while m.len() < per {
+            match it.next() {
+                Some(x) => m.push(x),
+                None => break 'fill,
+            }
+        }
+    }
+    // A forced smaller capacity can leave a remainder: spill into nodes
+    // with room, then count what still doesn't fit.
+    let mut rest: Vec<u32> = it.collect();
+    for m in members.iter_mut() {
+        while m.len() < cap {
+            match rest.pop() {
+                Some(x) => m.push(x),
+                None => break,
+            }
+        }
+    }
+    let dropped = rest.len();
+    for m in members.iter_mut() {
+        m.sort_unstable();
+    }
+
+    let mut cfg = old_cfg.clone();
+    cfg.n_nodes = new_nodes;
+    cfg.local_batch = g / new_nodes;
+    cfg.buffer_capacity = cap;
+    Ok(ElasticPlan { cfg, members, dropped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spec::DatasetSpec;
+    use crate::loader::engine::{LoaderEngine, RunPos, RunStep};
+    use crate::loader::LoaderPolicy;
+    use crate::storage::pfs::CostModel;
+
+    fn cfg(n_samples: usize, n_nodes: usize, local_batch: usize, n_epochs: usize, cap: usize) -> RunConfig {
+        let mut spec = DatasetSpec::paper("cd17").unwrap();
+        spec.n_samples = n_samples;
+        RunConfig {
+            spec,
+            n_nodes,
+            local_batch,
+            n_epochs,
+            seed: 7,
+            buffer_capacity: cap,
+            cost: CostModel::default(),
+        }
+    }
+
+    #[test]
+    fn preserves_global_batch_and_aggregate_capacity() {
+        let old = cfg(256, 4, 8, 3, 16);
+        let members: Vec<Vec<u32>> = (0..4).map(|k| (k * 16..k * 16 + 16).collect()).collect();
+        let p = replan_suffix(&old, &members, 2, None).unwrap();
+        assert_eq!(p.cfg.n_nodes, 2);
+        assert_eq!(p.cfg.local_batch, 16);
+        assert_eq!(p.cfg.global_batch(), old.global_batch());
+        assert_eq!(p.cfg.buffer_capacity, 32); // 16×4 / 2
+        assert_eq!(p.dropped, 0);
+        // Union preserved, blocks ascending and balanced.
+        let all: Vec<u32> = p.members.iter().flatten().copied().collect();
+        assert_eq!(all, (0..64).collect::<Vec<u32>>());
+        assert_eq!(p.members[0].len(), 32);
+        assert_eq!(p.members[1].len(), 32);
+    }
+
+    #[test]
+    fn rejects_incompatible_node_counts() {
+        let old = cfg(256, 4, 8, 3, 16);
+        let members = vec![vec![], vec![], vec![], vec![]];
+        // 32 is not divisible by 3: the step grid would change.
+        assert!(replan_suffix(&old, &members, 3, None).is_err());
+        assert!(replan_suffix(&old, &members, 0, None).is_err());
+        assert!(replan_suffix(&old, &members[..3], 2, None).is_err());
+    }
+
+    #[test]
+    fn dedups_replicated_residents_and_spills_on_forced_capacity() {
+        let old = cfg(256, 2, 8, 3, 16);
+        // Sample 5 buffered on both nodes (NoPFS-style replication).
+        let members = vec![vec![1, 5, 9], vec![2, 5, 7]];
+        let p = replan_suffix(&old, &members, 2, None).unwrap();
+        let all: Vec<u32> = p.members.iter().flatten().copied().collect();
+        assert_eq!(all, vec![1, 2, 5, 7, 9]);
+        // Forced tiny capacity: spill fills every node, remainder counted.
+        let p = replan_suffix(&old, &members, 2, Some(2)).unwrap();
+        assert_eq!(p.members.iter().map(|m| m.len()).sum::<usize>(), 4);
+        assert_eq!(p.dropped, 1);
+    }
+
+    #[test]
+    fn replan_feeds_a_new_engine_that_continues_the_run() {
+        // End to end at the scheduler level: warm 4-node prefix →
+        // replan to 2 nodes → import + seek → the 2-node suffix trains
+        // the same global batches all-hit (capacity-preserving warm
+        // regime), i.e. the re-planned remainder matches the
+        // uninterrupted run's per-step sample multisets and totals.
+        let old = cfg(256, 4, 8, 3, 64); // aggregate 256 = dataset
+        let mut a = LoaderEngine::new(old.clone(), LoaderPolicy::solar());
+        let spe = a.steps_per_epoch();
+        let cut = spe + 2;
+        let mut full = a.plan_run();
+        for _ in 0..cut {
+            full.next().unwrap();
+        }
+        let expect: Vec<RunStep> = full.collect();
+
+        let mut warm = LoaderEngine::new(old.clone(), LoaderPolicy::solar());
+        let mut c = warm.plan_run();
+        for _ in 0..cut {
+            c.next().unwrap();
+        }
+        drop(c);
+        let p = replan_suffix(&old, &warm.export_buffers(), 2, None).unwrap();
+        assert_eq!(p.dropped, 0);
+        let mut engine = LoaderEngine::new(p.cfg.clone(), LoaderPolicy::solar());
+        engine.import_buffers(&p.members).unwrap();
+        let suffix: Vec<RunStep> =
+            engine.plan_run_seek(RunPos { epoch_pos: 1, step: 2 }).collect();
+        assert_eq!(suffix.len(), expect.len());
+        for (got, exp) in suffix.iter().zip(expect.iter()) {
+            assert_eq!((got.epoch_pos, got.step), (exp.epoch_pos, exp.step));
+            // Same global batch multiset each step…
+            let mut g1: Vec<u32> =
+                got.load.nodes.iter().flat_map(|n| n.samples.iter().copied()).collect();
+            let mut g2: Vec<u32> =
+                exp.load.nodes.iter().flat_map(|n| n.samples.iter().copied()).collect();
+            g1.sort_unstable();
+            g2.sort_unstable();
+            assert_eq!(g1, g2, "step {}/{}", got.epoch_pos, got.step);
+            // …and the same hit/PFS totals (all hits: the buffers are warm
+            // and capacity is preserved).
+            let hits: usize = got.load.nodes.iter().map(|n| n.hits).sum();
+            let pfs: usize = got.load.nodes.iter().map(|n| n.pfs_samples).sum();
+            let exp_hits: usize = exp.load.nodes.iter().map(|n| n.hits).sum();
+            let exp_pfs: usize = exp.load.nodes.iter().map(|n| n.pfs_samples).sum();
+            assert_eq!((hits, pfs), (exp_hits, exp_pfs), "step {}/{}", got.epoch_pos, got.step);
+            assert_eq!(pfs, 0, "warm capacity-preserving suffix must be all hits");
+        }
+    }
+}

@@ -68,6 +68,15 @@ pub struct CostModel {
     /// [`super::store::Contiguity::span_bytes`], so scaling again would
     /// double-count.
     pub codec_ratio: f64,
+    /// SIM-ONLY fetch-ahead depth for `dist::sim`'s pipeline clock model,
+    /// mirroring the driver's `--prefetch N`: the coordinator dispatches
+    /// a step's fetch only once at most `depth` later steps are in
+    /// flight, and the staged channel holds `depth.max(1)` slots, so a
+    /// slow exec side backpressures the fetch stage. `usize::MAX` (the
+    /// default) is the unbounded model the simulator always used —
+    /// bit-identical to it. Like `codec_ratio`, the REAL driver never
+    /// reads this; its depth comes from `--prefetch`.
+    pub prefetch_depth: usize,
 }
 
 impl Default for CostModel {
@@ -86,6 +95,7 @@ impl Default for CostModel {
             io_parallelism: 1,
             decode_per_byte_s: 5e-10,
             codec_ratio: 1.0,
+            prefetch_depth: usize::MAX,
         }
     }
 }

@@ -74,9 +74,11 @@ use crate::loader::io::{contiguous_runs, FetchPool, FetchUnit};
 use crate::loader::LoaderPolicy;
 use crate::runtime::executable::{DenseImpl, TrainRuntime};
 use crate::runtime::params::{GradAccum, ParamStore};
+use crate::sched::replan;
 use crate::storage::pfs::CostModel;
 use crate::storage::store::{decode_f32, Contiguity, SampleStore};
 use crate::train::metrics::{EpochLoadStat, LossPoint, TrainReport};
+use crate::train::runstate::RunState;
 use crate::util::timer::Stopwatch;
 
 /// Depth cap for [`PrefetchMode::Auto`] (and the staged-channel bound it
@@ -127,6 +129,21 @@ impl std::fmt::Display for PrefetchMode {
     }
 }
 
+/// How an injected fetch fault ([`TrainConfig::fetch_fault`]) manifests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultKind {
+    /// The fetch stage reports an error to the coordinator and exits —
+    /// the well-behaved failure path (an I/O error, a bad read).
+    #[default]
+    Error,
+    /// The fetch stage vanishes without reporting anything — models an
+    /// abrupt node loss (OOM kill, hardware death). The rest of the
+    /// pipeline must still shut down with a clear error instead of
+    /// hanging, and the run can then be resumed elastically from its
+    /// last checkpoint on the surviving node count.
+    NodeLoss,
+}
+
 /// Driver configuration.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -156,10 +173,28 @@ pub struct TrainConfig {
     /// is identical either way; only the boundary fill/drain bubble
     /// returns. Kept for A/B measurement of that bubble.
     pub epoch_drain: bool,
-    /// Test hook: node `.0`'s fetch stage reports an injected error
-    /// instead of staging step `.1` — exercises the fetch-death shutdown
-    /// path (regression-tested in `driver_pipeline_parity.rs`).
+    /// Test hook: node `.0`'s fetch stage fails instead of staging step
+    /// `.1` — exercises the fetch-death shutdown path (regression-tested
+    /// in `driver_pipeline_parity.rs`). Exposed on the CLI as
+    /// `train --fetch-fault NODE:STEP[:loss]`.
     pub fetch_fault: Option<(usize, usize)>,
+    /// How the injected fault manifests: a reported error, or a silent
+    /// node loss (see [`FaultKind`]).
+    pub fault_kind: FaultKind,
+    /// Write a [`RunState`] checkpoint to `checkpoint_path` every this
+    /// many steps (0 = never). Each write is atomic (temp + rename) and
+    /// replaces the previous checkpoint.
+    pub checkpoint_every: usize,
+    /// Where periodic checkpoints go; required when `checkpoint_every > 0`.
+    pub checkpoint_path: Option<PathBuf>,
+    /// Start from this checkpoint instead of step 0. The checkpoint is
+    /// validated against `run` (same schedule identity; the node count
+    /// may differ as long as the global batch is preserved — an elastic
+    /// resume re-deals the buffered bytes over the new node set via
+    /// [`replan::replan_suffix`]). Workers are seeded with the
+    /// checkpointed buffer BYTES, so a resume never re-reads anything
+    /// charged to the PFS before the checkpoint step.
+    pub resume: Option<RunState>,
     /// Run the loading pipeline without PJRT: no artifacts, no gradients,
     /// losses report 0. The schedule accounting (steps, hits, PFS counts,
     /// epoch_stats) is identical to a real run — the backend-parity smoke
@@ -181,6 +216,10 @@ pub struct TrainConfig {
 
 type Params = Arc<Vec<Vec<f32>>>;
 
+/// One node's buffer contents at a step boundary, sorted by sample id —
+/// what a [`RunState`] checkpoint carries per node.
+type BufferSnapshot = Vec<(u32, Arc<Vec<f32>>)>;
+
 /// Work for a node's fetch stage.
 enum FetchMsg {
     /// Stage one step's PFS bytes.
@@ -193,6 +232,11 @@ enum FetchMsg {
 enum WorkMsg {
     Exec { step_id: usize, params: Params },
     Eval { after_step: usize, params: Params, ids: Arc<Vec<u32>> },
+    /// Report the node's current buffer contents for a checkpoint. Rides
+    /// the same FIFO as `Exec`, so the snapshot lands exactly between two
+    /// steps' buffer mutations — and never touches the staged channel, so
+    /// the fetch pipeline stays in lockstep.
+    Snapshot { reply: mpsc::Sender<(usize, BufferSnapshot)> },
     Stop,
 }
 
@@ -243,8 +287,12 @@ struct WorkerCtx {
     /// written by the coordinator's `Auto` co-tuner at the epoch-0
     /// boundary (stays at its initial value otherwise).
     io_width: Arc<AtomicUsize>,
-    fetch_fault: Option<usize>,
+    fetch_fault: Option<(usize, FaultKind)>,
     load_only: bool,
+    /// Buffer contents to seed the node with (resume): the exec half
+    /// starts with these bytes resident, the fetch half with their ids —
+    /// so the plan suffix's buffer hits are served without re-reading.
+    init_buffer: BufferSnapshot,
     /// Batch/img when no manifest is available (`load_only`).
     fallback_batch: usize,
     fallback_img: usize,
@@ -288,6 +336,62 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     // real layout (single region for a flat file, one per shard else).
     engine.bind_store(tc.store.as_ref())?;
 
+    // Resume: validate the checkpoint against this run's schedule
+    // identity and work out each node's initial buffer bytes. Same node
+    // count → workers inherit the checkpointed buffers verbatim and the
+    // engine REPLAYS to the checkpoint position (pure CPU — planning does
+    // no store I/O), giving bit-identical state. Different node count
+    // (elastic) → the scheduler re-deals the buffered ids over the new
+    // node set and the engine SEEKS to the position with the imported
+    // membership; the global shuffled index list is untouched, so every
+    // step still trains the same global batch.
+    let mut init_buffers: Vec<BufferSnapshot> = vec![Vec::new(); n_nodes];
+    let mut resume_elastic = false;
+    if let Some(rs) = &tc.resume {
+        rs.validate_resume(&tc.run, &tc.policy.name)?;
+        if !tc.load_only && rs.params.is_empty() {
+            bail!(
+                "checkpoint was written by a load-only run (no parameters); \
+                 it can only resume a load-only run"
+            );
+        }
+        if rs.n_nodes == n_nodes {
+            for (k, b) in rs.buffers.iter().enumerate() {
+                init_buffers[k] = b.clone();
+            }
+        } else {
+            resume_elastic = true;
+            let mut old_cfg = tc.run.clone();
+            old_cfg.n_nodes = rs.n_nodes;
+            old_cfg.local_batch = rs.local_batch;
+            old_cfg.buffer_capacity = rs.buffer_capacity;
+            let plan = replan::replan_suffix(
+                &old_cfg,
+                &rs.buffer_ids(),
+                n_nodes,
+                Some(tc.run.buffer_capacity),
+            )?;
+            let bytes: HashMap<u32, Arc<Vec<f32>>> = rs
+                .buffers
+                .iter()
+                .flat_map(|b| b.iter())
+                .map(|(x, v)| (*x, v.clone()))
+                .collect();
+            for (k, ids) in plan.members.iter().enumerate() {
+                init_buffers[k] = ids
+                    .iter()
+                    .map(|&x| {
+                        bytes
+                            .get(&x)
+                            .map(|v| (x, v.clone()))
+                            .context("replan produced an id absent from the checkpoint")
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            engine.import_buffers(&plan.members)?;
+        }
+    }
+
     // Resolve the fetch-pool width, and let the throttle model see it:
     // the modeled PFS time per step is the plan's request stream dealt
     // across this many deterministic stream clocks, so the emulated
@@ -297,7 +401,11 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     // observed load:compute ratio — published through `io_width`, which
     // every fetch stage re-reads before staging a step.
     let auto_io = tc.io_threads == 0 && tc.prefetch == PrefetchMode::Auto;
-    let io_threads = if auto_io {
+    let io_threads = if let Some(rs) = tc.resume.as_ref().filter(|rs| rs.io_width > 0) {
+        // Resume inherits the checkpointed width (the Auto co-tuner's
+        // pick survives the restart instead of re-measuring).
+        rs.io_width
+    } else if auto_io {
         1
     } else if tc.io_threads == 0 {
         crate::loader::io::io_threads()
@@ -329,8 +437,11 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             cost: worker_cost.clone(),
             stage_bound: tc.prefetch.stage_bound(),
             io_width: io_width.clone(),
-            fetch_fault: tc.fetch_fault.and_then(|(node, step)| (node == k).then_some(step)),
+            fetch_fault: tc
+                .fetch_fault
+                .and_then(|(node, step)| (node == k).then_some((step, tc.fault_kind))),
             load_only: tc.load_only,
+            init_buffer: std::mem::take(&mut init_buffers[k]),
             fallback_batch: tc.run.local_batch.max(1),
             fallback_img,
         };
@@ -339,9 +450,12 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     drop(done_tx);
 
     // Coordinator state. `load_only` runs without artifacts: an empty
-    // parameter store (SGD over zero tensors is a no-op).
+    // parameter store (SGD over zero tensors is a no-op). A resume picks
+    // up the checkpointed parameters instead of the manifest's init.
     let mut pstore = if tc.load_only {
         ParamStore::from_tensors(Vec::new())
+    } else if let Some(rs) = &tc.resume {
+        ParamStore::from_tensors(rs.params.clone())
     } else {
         let manifest = crate::runtime::manifest::Manifest::load(&tc.artifacts_dir)?;
         ParamStore::load_init(&manifest)?
@@ -368,11 +482,45 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     let mut fetch_step = 0usize;
     // Effective fetch-ahead depth; `Auto` re-picks it after epoch 0.
     let mut depth = tc.prefetch.initial_depth();
+    // Epoch of the most recently executed step; stats close out when the
+    // executed stream crosses a boundary.
+    let mut cur_epoch = 0usize;
+    let mut epoch_stat = EpochLoadStat::default();
+    let mut dispatch_epoch = 0usize;
+    if let Some(rs) = &tc.resume {
+        // Restore the coordinator state the checkpoint carries: counters,
+        // the loss curve so far, closed-epoch stats plus the open epoch's
+        // accumulator (the close-out is lazy, exactly as it was live),
+        // and the autotuned depth. Wall clocks restart — resumed
+        // LossPoint wall_s values are relative to THIS process.
+        global_step = rs.global_step;
+        fetch_step = rs.global_step;
+        cur_epoch = rs.cur_epoch;
+        epoch_stat = rs.partial_epoch;
+        dispatch_epoch = rs.pos().epoch_pos;
+        if rs.depth > 0 {
+            depth = rs.depth;
+        }
+        report.points = rs.points.clone();
+        report.epoch_stats = rs.epoch_stats.clone();
+        report.hits = rs.hits;
+        report.pfs_samples = rs.pfs_samples;
+        report.load_wall_s = rs.load_wall_s;
+        report.comp_wall_s = rs.comp_wall_s;
+    }
 
     // One run-long cursor: the plan stream crosses epoch boundaries, so
     // the dispatch loop below stages epoch e+1's first steps while epoch
     // e's tail is still executing — the boundary is just another step.
-    let mut cursor = engine.plan_run();
+    // Resumes start the cursor AT the checkpoint position: a same-N
+    // resume replays the prefix (bit-identical cursor + buffer-key
+    // state), an elastic one seeks (the imported membership stands in
+    // for the prefix it never planned).
+    let mut cursor = match &tc.resume {
+        None => engine.plan_run(),
+        Some(rs) if !resume_elastic => engine.plan_run_from(rs.pos()),
+        Some(rs) => engine.plan_run_seek(rs.pos()),
+    };
     // Per-step (epoch, hits, pfs) of plans whose fetch has been
     // dispatched but whose exec hasn't run — counted into the report at
     // exec time so totals match the serial schedule under max_steps cuts.
@@ -380,11 +528,6 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     // One-slot lookahead for `epoch_drain`: a next-epoch step held back
     // until the current epoch's in-flight steps have all executed.
     let mut pending: Option<RunStep> = None;
-    let mut dispatch_epoch = 0usize;
-    // Epoch of the most recently executed step; stats close out when the
-    // executed stream crosses a boundary.
-    let mut cur_epoch = 0usize;
-    let mut epoch_stat = EpochLoadStat::default();
     // Set when a fetch thread is gone: its root-cause error travels
     // through the exec half's poisoned staged slot to done_rx, so we
     // stop dispatching and keep executing in-flight steps to surface
@@ -525,6 +668,53 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             val_loss,
         });
         global_step += 1;
+        if tc.checkpoint_every > 0 && global_step % tc.checkpoint_every == 0 {
+            let path = tc
+                .checkpoint_path
+                .as_ref()
+                .context("checkpoint_every set without a checkpoint_path")?;
+            // Snapshot each node's buffer through the exec FIFO: the
+            // request lands after step `global_step - 1`'s buffer
+            // mutations and before the next step's — exactly the state a
+            // resume's engine replay/seek reconstructs. The staged
+            // channel is untouched, so the fetch pipeline keeps running.
+            let (snap_tx, snap_rx) = mpsc::channel::<(usize, BufferSnapshot)>();
+            for tx in &to_workers {
+                tx.send(WorkMsg::Snapshot { reply: snap_tx.clone() })
+                    .context("worker channel closed")?;
+            }
+            drop(snap_tx);
+            let mut buffers: Vec<BufferSnapshot> = vec![Vec::new(); n_nodes];
+            for _ in 0..n_nodes {
+                let (k, b) = snap_rx.recv().context("worker died during snapshot")?;
+                buffers[k] = b;
+            }
+            let rs = RunState {
+                dataset: tc.run.spec.id.clone(),
+                n_samples: tc.run.spec.n_samples,
+                sample_bytes: tc.run.spec.sample_bytes,
+                n_nodes,
+                local_batch: tc.run.local_batch,
+                n_epochs: tc.run.n_epochs,
+                seed: tc.run.seed,
+                buffer_capacity: tc.run.buffer_capacity,
+                policy: tc.policy.name.clone(),
+                global_step,
+                cur_epoch,
+                depth,
+                io_width: io_width.load(Ordering::Relaxed),
+                load_wall_s: report.load_wall_s,
+                comp_wall_s: report.comp_wall_s,
+                hits: report.hits,
+                pfs_samples: report.pfs_samples,
+                epoch_stats: report.epoch_stats.clone(),
+                partial_epoch: epoch_stat,
+                points: report.points.clone(),
+                params: pstore.tensors.clone(),
+                buffers,
+            };
+            rs.save(path)?;
+        }
         if tc.max_steps > 0 && global_step >= tc.max_steps {
             break;
         }
@@ -579,8 +769,22 @@ fn worker_loop(
     let cost = ctx.cost.clone();
     let fault = ctx.fetch_fault;
     let io_width = ctx.io_width.clone();
+    // The fetch half mirrors buffer KEYS only — seed it with the resumed
+    // ids (the exec half below gets the bytes).
+    let init_resident: Vec<u32> = ctx.init_buffer.iter().map(|(x, _)| *x).collect();
     let fetch_handle = std::thread::spawn(move || {
-        fetch_loop(node, fetch_rx, staged_tx, fetch_store, throttle, cost, io_width, fetch_done, fault)
+        fetch_loop(
+            node,
+            fetch_rx,
+            staged_tx,
+            fetch_store,
+            throttle,
+            cost,
+            io_width,
+            fetch_done,
+            fault,
+            init_resident,
+        )
     });
 
     let result = (|| -> Result<()> {
@@ -592,7 +796,8 @@ fn worker_loop(
         // Positioned reads only: the store carries no seek state, so it
         // needs no `&mut` plumbing through the batch-assembly closures.
         let store: &dyn SampleStore = ctx.store.as_ref();
-        let mut buffer: HashMap<u32, Arc<Vec<f32>>> = HashMap::new();
+        let mut buffer: HashMap<u32, Arc<Vec<f32>>> =
+            ctx.init_buffer.iter().map(|(x, v)| (*x, v.clone())).collect();
         let (b, img) = match &rt {
             Some(rt) => (rt.manifest.batch, rt.manifest.img),
             None => (ctx.fallback_batch, ctx.fallback_img),
@@ -601,6 +806,12 @@ fn worker_loop(
         while let Ok(msg) = rx.recv() {
             match msg {
                 WorkMsg::Stop => break,
+                WorkMsg::Snapshot { reply } => {
+                    let mut b: BufferSnapshot =
+                        buffer.iter().map(|(x, v)| (*x, v.clone())).collect();
+                    b.sort_unstable_by_key(|(x, _)| *x);
+                    let _ = reply.send((ctx.node, b));
+                }
                 WorkMsg::Eval { after_step, params, ids } => {
                     let Some(rt) = rt.as_ref() else {
                         bail!("eval dispatched in load-only mode");
@@ -774,7 +985,8 @@ fn fetch_loop(
     mut cost: CostModel,
     io_width: Arc<AtomicUsize>,
     done: mpsc::Sender<Result<DoneMsg>>,
-    fault_at: Option<usize>,
+    fault: Option<(usize, FaultKind)>,
+    init_resident: Vec<u32>,
 ) {
     let contig = store.chunk_contiguity();
     // One fetch pool per node, alive for the whole run: its byte buffers,
@@ -786,8 +998,9 @@ fn fetch_loop(
     // Mirror of the exec thread's buffer KEYS, advanced in step order:
     // only staged-and-inserted ids enter, evicted ids leave — identical
     // to the exec side's value map, so "already buffered" decisions match
-    // the serial schedule exactly.
-    let mut resident: HashSet<u32> = HashSet::new();
+    // the serial schedule exactly. Seeded with the resumed buffer's ids
+    // so the suffix's buffer hits never turn into re-reads.
+    let mut resident: HashSet<u32> = init_resident.into_iter().collect();
     // Holdout eval bytes, filled on the first eval request (read-ahead).
     let mut holdout: Option<HashMap<u32, Arc<Vec<f32>>>> = None;
     while let Ok(msg) = rx.recv() {
@@ -803,11 +1016,18 @@ fn fetch_loop(
         }
         match msg {
             FetchMsg::Step { step_id, load } => {
-                if fault_at == Some(step_id) {
-                    let _ = done.send(Err(anyhow::anyhow!(
-                        "worker {node} fetch: injected fetch fault at step {step_id}"
-                    )));
-                    return;
+                if let Some((at, kind)) = fault {
+                    if at == step_id {
+                        if kind == FaultKind::Error {
+                            let _ = done.send(Err(anyhow::anyhow!(
+                                "worker {node} fetch: injected fetch fault at step {step_id}"
+                            )));
+                        }
+                        // NodeLoss: vanish without a report — the abrupt
+                        // node-death path. The exec half's closed staged
+                        // channel carries the failure to the coordinator.
+                        return;
+                    }
                 }
                 let t = Stopwatch::start();
                 match stage_step(&mut pool, &store, &contig, &resident, &load, &cost) {

@@ -1,2 +1,3 @@
 pub mod driver;
 pub mod metrics;
+pub mod runstate;

@@ -1,0 +1,597 @@
+//! Resumable run state: everything the driver needs to continue a
+//! training run from step `global_step` — and, because SOLAR's schedule
+//! is a pure function of (seed, config, node count), everything a
+//! *different* node count needs to deterministically re-plan the
+//! remainder of the run (see `sched::replan`).
+//!
+//! The state that used to be smeared across `train/driver.rs` locals
+//! (plan-cursor position, per-node buffer contents, epoch accumulators,
+//! the autotuned prefetch depth / fetch width, the loss curve, the
+//! parameters) is gathered here into one serializable [`RunState`].
+//!
+//! On-disk format (version 1), little-endian throughout:
+//!
+//! ```text
+//! [0..8)    magic  b"SOLARRUN"
+//! [8..12)   u32    format version
+//! [12..20)  u64    header length H
+//! [20..20+H)       header JSON (config fingerprint, progress counters,
+//!                  tensor/point/buffer shapes — everything needed to
+//!                  size the payload)
+//! [..  -8)         payload: params f32s, loss points as raw f64 bits
+//!                  (NaN val_loss survives exactly), buffered samples f32s
+//! [-8.. )   u64    FNV-1a over bytes [8 .. len-8)
+//! ```
+//!
+//! Writes are atomic (temp file + rename, the same idiom as shard
+//! manifests) so a crash mid-checkpoint can never leave a torn file where
+//! a resume would find it. Loads validate magic, version, lengths, and
+//! checksum before touching the payload: a truncated, wrong-version, or
+//! corrupt file is a clear error, never a panic or a silent bad resume.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::train::metrics::{EpochLoadStat, LossPoint};
+use crate::util::json::Json;
+
+pub use crate::loader::engine::RunPos;
+
+/// Magic bytes at the head of every checkpoint file.
+pub const MAGIC: &[u8; 8] = b"SOLARRUN";
+/// Current on-disk format version.
+pub const VERSION: u32 = 1;
+
+/// Serializable snapshot of a training run at a step boundary: the next
+/// step to execute is `global_step`, every step before it has been fully
+/// applied (SGD included), and `buffers` holds each node's resident
+/// sample bytes at that instant — so a resume re-reads nothing that was
+/// already charged to the PFS before the checkpoint.
+#[derive(Debug, Clone)]
+pub struct RunState {
+    // ---- config fingerprint of the run that wrote the checkpoint ----
+    pub dataset: String,
+    pub n_samples: usize,
+    pub sample_bytes: usize,
+    pub n_nodes: usize,
+    pub local_batch: usize,
+    pub n_epochs: usize,
+    pub seed: u64,
+    pub buffer_capacity: usize,
+    pub policy: String,
+    // ---- progress counters (the driver's coordinator state) ----
+    /// Next step to execute (steps `0..global_step` are applied).
+    pub global_step: usize,
+    /// Epoch of the most recently executed step — NOT derived from
+    /// `global_step`, because the driver closes epoch stats lazily: at an
+    /// exact boundary the finished epoch's stat is still pending.
+    pub cur_epoch: usize,
+    /// Effective prefetch depth at the checkpoint (Auto may have re-picked).
+    pub depth: usize,
+    /// Fetch-pool width at the checkpoint (the Auto co-tuner's pick).
+    pub io_width: usize,
+    pub load_wall_s: f64,
+    pub comp_wall_s: f64,
+    pub hits: usize,
+    pub pfs_samples: usize,
+    /// Closed epochs' stats, in epoch order.
+    pub epoch_stats: Vec<EpochLoadStat>,
+    /// The open epoch's accumulator (pending close-out).
+    pub partial_epoch: EpochLoadStat,
+    pub points: Vec<LossPoint>,
+    /// Parameter tensors after `global_step` SGD steps (empty for
+    /// load-only runs, which carry no model).
+    pub params: Vec<Vec<f32>>,
+    /// Per-node buffer contents at the checkpoint, sorted by sample id.
+    pub buffers: Vec<Vec<(u32, Arc<Vec<f32>>)>>,
+}
+
+impl RunState {
+    /// Global batch size of the checkpointed run — the invariant an
+    /// elastic resume must preserve.
+    pub fn global_batch(&self) -> usize {
+        self.n_nodes * self.local_batch
+    }
+
+    /// Steps per epoch (drop-last, same as [`RunConfig::steps_per_epoch`]).
+    /// Identical for any node count that preserves the global batch.
+    pub fn steps_per_epoch(&self) -> usize {
+        self.n_samples / self.global_batch().max(1)
+    }
+
+    /// Plan-stream position of the next step to execute.
+    pub fn pos(&self) -> RunPos {
+        let spe = self.steps_per_epoch().max(1);
+        RunPos { epoch_pos: self.global_step / spe, step: self.global_step % spe }
+    }
+
+    /// Per-node buffer membership (ids only), the scheduler-facing view.
+    pub fn buffer_ids(&self) -> Vec<Vec<u32>> {
+        self.buffers.iter().map(|b| b.iter().map(|(x, _)| *x).collect()).collect()
+    }
+
+    /// Check that `run` describes the same deterministic schedule as the
+    /// checkpointed run. The node count may differ (elastic resume) as
+    /// long as the global batch — and therefore the step grid — is
+    /// preserved; everything else must match exactly, or the plan suffix
+    /// the resume executes would not be the suffix the prefix came from.
+    pub fn validate_resume(&self, run: &RunConfig, policy: &str) -> Result<()> {
+        if run.spec.id != self.dataset {
+            bail!("checkpoint is for dataset '{}', run uses '{}'", self.dataset, run.spec.id);
+        }
+        if run.spec.n_samples != self.n_samples {
+            bail!("checkpoint has {} train samples, run has {}", self.n_samples, run.spec.n_samples);
+        }
+        if run.spec.sample_bytes != self.sample_bytes {
+            bail!("checkpoint sample_bytes {} != run {}", self.sample_bytes, run.spec.sample_bytes);
+        }
+        if run.seed != self.seed {
+            bail!("checkpoint seed {} != run seed {}", self.seed, run.seed);
+        }
+        if run.n_epochs != self.n_epochs {
+            bail!("checkpoint has {} epochs, run has {}", self.n_epochs, run.n_epochs);
+        }
+        if policy != self.policy {
+            bail!("checkpoint used loader '{}', run uses '{}'", self.policy, policy);
+        }
+        if run.global_batch() != self.global_batch() {
+            bail!(
+                "global batch must be preserved across a resume: checkpoint {}x{}={}, run {}x{}={}",
+                self.n_nodes,
+                self.local_batch,
+                self.global_batch(),
+                run.n_nodes,
+                run.local_batch,
+                run.global_batch()
+            );
+        }
+        let total = self.steps_per_epoch() * self.n_epochs;
+        if self.global_step > total {
+            bail!("checkpoint step {} is beyond the run's {} total steps", self.global_step, total);
+        }
+        if run.n_nodes == self.n_nodes && run.buffer_capacity != self.buffer_capacity {
+            bail!(
+                "same-node-count resume must keep buffer_capacity ({} != {})",
+                self.buffer_capacity,
+                run.buffer_capacity
+            );
+        }
+        Ok(())
+    }
+
+    // ---------------- serialization ----------------
+
+    fn header(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("dataset", Json::Str(self.dataset.clone()))
+            .set("n_samples", Json::Num(self.n_samples as f64))
+            .set("sample_bytes", Json::Num(self.sample_bytes as f64))
+            .set("n_nodes", Json::Num(self.n_nodes as f64))
+            .set("local_batch", Json::Num(self.local_batch as f64))
+            .set("n_epochs", Json::Num(self.n_epochs as f64))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("buffer_capacity", Json::Num(self.buffer_capacity as f64))
+            .set("policy", Json::Str(self.policy.clone()))
+            .set("global_step", Json::Num(self.global_step as f64))
+            .set("cur_epoch", Json::Num(self.cur_epoch as f64))
+            .set("depth", Json::Num(self.depth as f64))
+            .set("io_width", Json::Num(self.io_width as f64))
+            .set("hits", Json::Num(self.hits as f64))
+            .set("pfs_samples", Json::Num(self.pfs_samples as f64))
+            .set(
+                "epoch_stats",
+                Json::Arr(
+                    self.epoch_stats
+                        .iter()
+                        .map(|s| Json::arr_usize(&[s.hits, s.pfs_samples]))
+                        .collect(),
+                ),
+            )
+            .set(
+                "partial_epoch",
+                Json::arr_usize(&[self.partial_epoch.hits, self.partial_epoch.pfs_samples]),
+            )
+            .set("n_points", Json::Num(self.points.len() as f64))
+            .set(
+                "param_lens",
+                Json::arr_usize(&self.params.iter().map(|t| t.len()).collect::<Vec<_>>()),
+            )
+            .set(
+                "buffer_ids",
+                Json::Arr(
+                    self.buffers
+                        .iter()
+                        .map(|b| Json::arr_u32(&b.iter().map(|(x, _)| *x).collect::<Vec<_>>()))
+                        .collect(),
+                ),
+            )
+            .set("rec_elems", Json::Num(self.rec_elems() as f64));
+        o
+    }
+
+    /// Elements per buffered sample record (decoded f32s). All records in
+    /// one run have the same length.
+    fn rec_elems(&self) -> usize {
+        self.buffers
+            .iter()
+            .flat_map(|b| b.iter())
+            .map(|(_, v)| v.len())
+            .next()
+            .unwrap_or(self.sample_bytes / 4)
+    }
+
+    /// Serialize to the versioned byte format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        // load_wall_s / comp_wall_s go through the payload as raw f64
+        // bits (JSON would round-trip them lossily through decimal).
+        let header = self.header().to_string_compact().into_bytes();
+        let rec_elems = self.rec_elems();
+        let n_buf: usize = self.buffers.iter().map(|b| b.len()).sum();
+        let payload_len = self.params.iter().map(|t| t.len()).sum::<usize>() * 4
+            + self.points.len() * 5 * 8
+            + 2 * 8
+            + n_buf * rec_elems * 4;
+        let mut out = Vec::with_capacity(20 + header.len() + payload_len + 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(&header);
+        for t in &self.params {
+            for v in t {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        for p in &self.points {
+            out.extend_from_slice(&(p.step as f64).to_le_bytes());
+            out.extend_from_slice(&(p.epoch as f64).to_le_bytes());
+            out.extend_from_slice(&p.wall_s.to_le_bytes());
+            out.extend_from_slice(&p.train_loss.to_le_bytes());
+            out.extend_from_slice(&p.val_loss.to_le_bytes());
+        }
+        out.extend_from_slice(&self.load_wall_s.to_le_bytes());
+        out.extend_from_slice(&self.comp_wall_s.to_le_bytes());
+        for b in &self.buffers {
+            for (_, v) in b {
+                debug_assert_eq!(v.len(), rec_elems);
+                for x in v.iter() {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        let sum = fnv1a(&out[8..]);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse the versioned byte format, rejecting truncated, mislabeled,
+    /// or corrupt input with a descriptive error.
+    pub fn from_bytes(bytes: &[u8]) -> Result<RunState> {
+        if bytes.len() < 28 {
+            bail!("checkpoint truncated: {} bytes is smaller than any valid file", bytes.len());
+        }
+        if &bytes[0..8] != MAGIC {
+            bail!("not a SOLAR checkpoint (bad magic)");
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version} (this build reads version {VERSION})");
+        }
+        let body = &bytes[8..bytes.len() - 8];
+        let sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        if fnv1a(body) != sum {
+            bail!("checkpoint corrupt: checksum mismatch");
+        }
+        let hlen = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        let payload_end = bytes.len() - 8;
+        if 20 + hlen > payload_end {
+            bail!("checkpoint truncated: header claims {hlen} bytes past end of file");
+        }
+        let header_str = std::str::from_utf8(&bytes[20..20 + hlen])
+            .context("checkpoint header is not valid utf-8")?;
+        let h = Json::parse(header_str)
+            .map_err(|e| anyhow::anyhow!("checkpoint header is not valid json: {e}"))?;
+
+        let param_lens = h
+            .req_arr("param_lens")?
+            .iter()
+            .map(|j| j.as_usize())
+            .collect::<Option<Vec<_>>>()
+            .context("bad param_lens")?;
+        let buffer_ids: Vec<Vec<u32>> = h
+            .req_arr("buffer_ids")?
+            .iter()
+            .map(|j| j.arr_as_u32())
+            .collect::<Option<Vec<_>>>()
+            .context("bad buffer_ids")?;
+        let n_points = h.req_usize("n_points")?;
+        let rec_elems = h.req_usize("rec_elems")?;
+        let n_buf: usize = buffer_ids.iter().map(|b| b.len()).sum();
+        let payload_len = (|| {
+            // Checked: a header with absurd sizes must error, not wrap.
+            let params = param_lens.iter().try_fold(0usize, |a, &n| a.checked_add(n))?.checked_mul(4)?;
+            let points = n_points.checked_mul(5 * 8)?;
+            let bufs = n_buf.checked_mul(rec_elems)?.checked_mul(4)?;
+            params.checked_add(points)?.checked_add(2 * 8)?.checked_add(bufs)
+        })()
+        .context("checkpoint header describes an impossibly large payload")?;
+        if 20 + hlen + payload_len != payload_end {
+            bail!(
+                "checkpoint truncated: header describes {payload_len} payload bytes, file has {}",
+                payload_end.saturating_sub(20 + hlen)
+            );
+        }
+        let mut at = 20 + hlen;
+        let mut f32s = |n: usize| -> Vec<f32> {
+            let v = bytes[at..at + n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            at += n * 4;
+            v
+        };
+        let params: Vec<Vec<f32>> = param_lens.iter().map(|&n| f32s(n)).collect();
+        let mut f64s = |n: usize| -> Vec<f64> {
+            let v = bytes[at..at + n * 8]
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            at += n * 8;
+            v
+        };
+        let mut points = Vec::with_capacity(n_points);
+        for _ in 0..n_points {
+            let p = f64s(5);
+            points.push(LossPoint {
+                step: p[0] as usize,
+                epoch: p[1] as usize,
+                wall_s: p[2],
+                train_loss: p[3],
+                val_loss: p[4],
+            });
+        }
+        let walls = f64s(2);
+        let mut f32s = |n: usize| -> Vec<f32> {
+            let v = bytes[at..at + n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            at += n * 4;
+            v
+        };
+        let buffers: Vec<Vec<(u32, Arc<Vec<f32>>)>> = buffer_ids
+            .iter()
+            .map(|ids| ids.iter().map(|&x| (x, Arc::new(f32s(rec_elems)))).collect())
+            .collect();
+
+        let stat = |j: &Json| -> Result<EpochLoadStat> {
+            let v = j.arr_as_usize().context("bad epoch stat")?;
+            if v.len() != 2 {
+                bail!("bad epoch stat");
+            }
+            Ok(EpochLoadStat { hits: v[0], pfs_samples: v[1] })
+        };
+        Ok(RunState {
+            dataset: h.req_str("dataset")?.to_string(),
+            n_samples: h.req_usize("n_samples")?,
+            sample_bytes: h.req_usize("sample_bytes")?,
+            n_nodes: h.req_usize("n_nodes")?,
+            local_batch: h.req_usize("local_batch")?,
+            n_epochs: h.req_usize("n_epochs")?,
+            seed: h.req_u64("seed")?,
+            buffer_capacity: h.req_usize("buffer_capacity")?,
+            policy: h.req_str("policy")?.to_string(),
+            global_step: h.req_usize("global_step")?,
+            cur_epoch: h.req_usize("cur_epoch")?,
+            depth: h.req_usize("depth")?,
+            io_width: h.req_usize("io_width")?,
+            load_wall_s: walls[0],
+            comp_wall_s: walls[1],
+            hits: h.req_usize("hits")?,
+            pfs_samples: h.req_usize("pfs_samples")?,
+            epoch_stats: h.req_arr("epoch_stats")?.iter().map(stat).collect::<Result<_>>()?,
+            partial_epoch: stat(h.get("partial_epoch").context("missing partial_epoch")?)?,
+            points,
+            params,
+            buffers,
+        })
+    }
+
+    /// Atomic write: serialize to `{path}.tmp`, then rename over `path` —
+    /// a crash mid-write can never leave a torn checkpoint at `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_file_name(format!(
+            "{}.tmp",
+            path.file_name().and_then(|s| s.to_str()).unwrap_or("checkpoint")
+        ));
+        std::fs::write(&tmp, self.to_bytes())
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<RunState> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("read checkpoint {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("load checkpoint {}", path.display()))
+    }
+}
+
+/// FNV-1a 64-bit — tiny, dependency-free, and plenty for torn/bit-rot
+/// detection (this is an integrity check, not an authenticity one).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> RunState {
+        RunState {
+            dataset: "cd17_t".into(),
+            n_samples: 96,
+            sample_bytes: 48,
+            n_nodes: 2,
+            local_batch: 8,
+            n_epochs: 3,
+            seed: 42,
+            buffer_capacity: 12,
+            policy: "solar".into(),
+            global_step: 7,
+            cur_epoch: 1,
+            depth: 2,
+            io_width: 4,
+            load_wall_s: 0.25,
+            comp_wall_s: 1.5,
+            hits: 11,
+            pfs_samples: 101,
+            epoch_stats: vec![EpochLoadStat { hits: 3, pfs_samples: 93 }],
+            partial_epoch: EpochLoadStat { hits: 8, pfs_samples: 8 },
+            points: vec![
+                LossPoint { step: 0, epoch: 0, wall_s: 0.1, train_loss: 1.25, val_loss: f64::NAN },
+                LossPoint { step: 1, epoch: 0, wall_s: 0.2, train_loss: 0.75, val_loss: 0.5 },
+            ],
+            params: vec![vec![1.0, -2.5, 3.25], vec![0.5]],
+            buffers: vec![
+                vec![(3, Arc::new(vec![0.5; 12])), (9, Arc::new(vec![-1.5; 12]))],
+                vec![(1, Arc::new(vec![2.0; 12]))],
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let s = sample_state();
+        let b = s.to_bytes();
+        let r = RunState::from_bytes(&b).unwrap();
+        assert_eq!(r.dataset, s.dataset);
+        assert_eq!(r.global_step, 7);
+        assert_eq!(r.cur_epoch, 1);
+        assert_eq!(r.depth, 2);
+        assert_eq!(r.io_width, 4);
+        assert_eq!(r.load_wall_s.to_bits(), s.load_wall_s.to_bits());
+        assert_eq!(r.comp_wall_s.to_bits(), s.comp_wall_s.to_bits());
+        assert_eq!(r.epoch_stats, s.epoch_stats);
+        assert_eq!(r.partial_epoch, s.partial_epoch);
+        assert_eq!(r.params, s.params);
+        assert_eq!(r.points.len(), 2);
+        // NaN val_loss survives bit-exactly through the raw-f64 payload.
+        assert!(r.points[0].val_loss.is_nan());
+        assert_eq!(r.points[1].train_loss.to_bits(), 0.75f64.to_bits());
+        assert_eq!(r.buffer_ids(), vec![vec![3, 9], vec![1]]);
+        assert_eq!(*r.buffers[0][1].1, vec![-1.5; 12]);
+    }
+
+    #[test]
+    fn pos_derives_from_the_step_grid() {
+        let mut s = sample_state();
+        // 96 samples / (2x8) = 6 steps per epoch.
+        assert_eq!(s.steps_per_epoch(), 6);
+        assert_eq!(s.pos(), RunPos { epoch_pos: 1, step: 1 });
+        s.global_step = 6;
+        assert_eq!(s.pos(), RunPos { epoch_pos: 1, step: 0 });
+        s.global_step = 0;
+        assert_eq!(s.pos(), RunPos { epoch_pos: 0, step: 0 });
+    }
+
+    #[test]
+    fn truncated_file_is_a_clear_error() {
+        let b = sample_state().to_bytes();
+        for cut in [0, 4, 12, 27, b.len() / 2, b.len() - 1] {
+            let err = RunState::from_bytes(&b[..cut]).unwrap_err().to_string();
+            assert!(
+                err.contains("truncated") || err.contains("checksum") || err.contains("magic"),
+                "cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_magic_and_version_are_rejected() {
+        let mut b = sample_state().to_bytes();
+        b[0] = b'X';
+        let err = RunState::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+
+        let mut b = sample_state().to_bytes();
+        b[8] = 99; // version tag
+        let err = RunState::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_payload_fails_the_checksum() {
+        let mut b = sample_state().to_bytes();
+        let mid = b.len() - 20; // inside the buffer payload
+        b[mid] ^= 0x40;
+        let err = RunState::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_header_fails_the_checksum_before_parsing() {
+        let mut b = sample_state().to_bytes();
+        b[24] ^= 0xff; // inside the JSON header
+        let err = RunState::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn save_is_atomic_and_loadable() {
+        let dir = std::env::temp_dir().join("solar_runstate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        let s = sample_state();
+        s.save(&path).unwrap();
+        // No temp residue, and a second save overwrites cleanly.
+        assert!(!dir.join("run.ckpt.tmp").exists());
+        s.save(&path).unwrap();
+        let r = RunState::load(&path).unwrap();
+        assert_eq!(r.global_step, s.global_step);
+        assert_eq!(r.params, s.params);
+        let err = RunState::load(&dir.join("missing.ckpt")).unwrap_err();
+        assert!(format!("{err:#}").contains("missing.ckpt"));
+    }
+
+    #[test]
+    fn validate_resume_enforces_the_schedule_identity() {
+        use crate::data::spec::DatasetSpec;
+        use crate::storage::pfs::CostModel;
+        let s = sample_state();
+        let mut spec = DatasetSpec::paper("cd17").unwrap();
+        spec.id = "cd17_t".into();
+        spec.n_samples = 96;
+        spec.sample_bytes = 48;
+        let cfg = |n_nodes: usize, local_batch: usize, cap: usize| RunConfig {
+            spec: spec.clone(),
+            n_nodes,
+            local_batch,
+            n_epochs: 3,
+            seed: 42,
+            buffer_capacity: cap,
+            cost: CostModel::default(),
+        };
+        // Same shape: fine. Elastic 2->1 preserving the global batch: fine.
+        s.validate_resume(&cfg(2, 8, 12), "solar").unwrap();
+        s.validate_resume(&cfg(1, 16, 24), "solar").unwrap();
+        // Global batch change: rejected.
+        assert!(s.validate_resume(&cfg(1, 8, 24), "solar").is_err());
+        // Seed / policy / epochs / capacity drift: rejected.
+        let mut c = cfg(2, 8, 12);
+        c.seed = 7;
+        assert!(s.validate_resume(&c, "solar").is_err());
+        assert!(s.validate_resume(&cfg(2, 8, 12), "pytorch").is_err());
+        let mut c = cfg(2, 8, 12);
+        c.n_epochs = 4;
+        assert!(s.validate_resume(&c, "solar").is_err());
+        assert!(s.validate_resume(&cfg(2, 8, 13), "solar").is_err());
+    }
+}

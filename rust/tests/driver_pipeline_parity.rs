@@ -19,7 +19,8 @@ use solar::runtime::executable::DenseImpl;
 use solar::storage::codec::Codec;
 use solar::storage::pfs::CostModel;
 use solar::storage::store::{open_store, SampleStore};
-use solar::train::driver::{train, PrefetchMode, TrainConfig, MAX_AUTO_PREFETCH};
+use solar::train::driver::{train, FaultKind, PrefetchMode, TrainConfig, MAX_AUTO_PREFETCH};
+use solar::train::runstate::RunState;
 
 fn artifacts() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -136,6 +137,10 @@ fn tc(ds: &str, loader: &str, prefetch: usize, throttle: f64) -> TrainConfig {
         prefetch: PrefetchMode::Fixed(prefetch),
         epoch_drain: false,
         fetch_fault: None,
+        fault_kind: FaultKind::Error,
+        checkpoint_every: 0,
+        checkpoint_path: None,
+        resume: None,
         load_only: false,
         // Serial fetch stage: the baseline every parallel-I/O case is
         // compared against (the io-thread sweep overrides this).
@@ -573,6 +578,192 @@ fn auto_io_width_trains_bit_identically_to_fixed() {
     let fixed = train(&mk(1)).unwrap();
     let tuned = train(&mk(0)).unwrap();
     assert_reports_identical("auto io width vs fixed", &fixed, &tuned);
+}
+
+/// Fresh checkpoint path for a test (removed up front so a stale file
+/// from an earlier run can't satisfy the assertions).
+fn ckpt_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("solar_pipeline_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(format!("{name}.ckpt"));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+#[test]
+fn kill_and_resume_same_nodes_is_bit_identical_load_only() {
+    // Tentpole headline, CI half (runs without artifacts): execute 7 of
+    // 18 steps, checkpoint, "kill" (max_steps), resume from the file on
+    // the SAME node count — the stitched report must be bit-identical to
+    // the uninterrupted run: the resumed engine REPLAYS the plan prefix
+    // (pure CPU, no store I/O) and the workers inherit the checkpointed
+    // buffer bytes, so the suffix schedule cannot drift and bytes charged
+    // before the checkpoint are never re-read (epoch_stats equality
+    // would catch any extra PFS fetch).
+    let mk = || {
+        let mut c = tc("killres", "solar", 2, 0.0);
+        c.load_only = true;
+        c
+    };
+    let full = train(&mk()).unwrap();
+    assert_eq!(full.steps, 18, "6 steps/epoch × 3 epochs");
+
+    let path = ckpt_path("killres");
+    let mut first = mk();
+    first.max_steps = 7; // dies mid-epoch-1, one step past the boundary
+    first.checkpoint_every = 7;
+    first.checkpoint_path = Some(path.clone());
+    let partial = train(&first).unwrap();
+    assert_eq!(partial.steps, 7);
+
+    let rs = RunState::load(&path).unwrap();
+    assert_eq!(rs.global_step, 7);
+    assert_eq!(rs.n_nodes, 2);
+    let mut second = mk();
+    second.resume = Some(rs);
+    let resumed = train(&second).unwrap();
+    assert_reports_identical("load-only kill/resume", &full, &resumed);
+}
+
+#[test]
+fn kill_and_resume_same_nodes_trains_bit_identically() {
+    // The artifacts half of the headline: losses and parameters included.
+    // The checkpoint carries the params and the partial loss curve; the
+    // resumed run must finish with the EXACT report of the uninterrupted
+    // one — same loss bits at every step, same final params.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let full = train(&tc("killresart", "solar", 2, 0.0)).unwrap();
+    let path = ckpt_path("killresart");
+    let mut first = tc("killresart", "solar", 2, 0.0);
+    first.max_steps = 7;
+    first.checkpoint_every = 7;
+    first.checkpoint_path = Some(path.clone());
+    train(&first).unwrap();
+    let mut second = tc("killresart", "solar", 2, 0.0);
+    second.resume = Some(RunState::load(&path).unwrap());
+    let resumed = train(&second).unwrap();
+    assert_reports_identical("kill/resume with artifacts", &full, &resumed);
+}
+
+/// The three-stage N→M→N bounce shared by the elastic tests: 2 nodes die
+/// at step 7 (mid-epoch-1), one survivor carries steps 7..13, the pair
+/// returns for the rest. Aggregate buffer capacity (96 = the dataset)
+/// is preserved at every stage, so the warm suffix stays all-hits.
+fn bounce_2_1_2(ds: &str, load_only: bool) -> solar::train::metrics::TrainReport {
+    let base = |nodes: usize, batch: usize, cap: usize| {
+        let mut c = tc(ds, "solar", 2, 0.0);
+        c.run.n_nodes = nodes;
+        c.run.local_batch = batch;
+        c.run.buffer_capacity = cap;
+        c.load_only = load_only;
+        c
+    };
+    let p1 = ckpt_path(&format!("{ds}_s1"));
+    let mut first = base(2, 8, 48);
+    first.max_steps = 7;
+    first.checkpoint_every = 7;
+    first.checkpoint_path = Some(p1.clone());
+    train(&first).unwrap();
+
+    let p2 = ckpt_path(&format!("{ds}_s2"));
+    let mut second = base(1, 16, 96); // global batch 16 preserved
+    second.resume = Some(RunState::load(&p1).unwrap());
+    second.max_steps = 13;
+    second.checkpoint_every = 13;
+    second.checkpoint_path = Some(p2.clone());
+    let mid = train(&second).unwrap();
+    assert_eq!(mid.steps, 13);
+
+    let mut third = base(2, 8, 48);
+    third.resume = Some(RunState::load(&p2).unwrap());
+    train(&third).unwrap_or_else(|e| panic!("{ds}: final elastic stage failed: {e:#}"))
+}
+
+#[test]
+fn elastic_bounce_matches_uninterrupted_run_load_only() {
+    // Tentpole headline #2, CI half: the N→M→N bounce in the warm
+    // capacity-preserving regime. The global shuffled index list is
+    // node-count independent, so every step still trains the same global
+    // batch; with aggregate capacity == dataset the re-planned buffers
+    // keep the suffix all-hits — the bounced run's schedule totals,
+    // epoch attribution, and (trivial, load-only) loss stream are
+    // bit-identical to the uninterrupted 2-node run.
+    let mut c = tc("bounce", "solar", 2, 0.0);
+    c.run.buffer_capacity = 48;
+    c.load_only = true;
+    let full = train(&c).unwrap();
+    let bounced = bounce_2_1_2("bounce", true);
+    assert_reports_identical("elastic bounce load-only", &full, &bounced);
+    // Warm regime sanity: after the cold epoch 0, nothing re-fetches —
+    // neither in the uninterrupted run nor across two membership changes.
+    for e in &full.epoch_stats[1..] {
+        assert_eq!(e.pfs_samples, 0, "baseline should be warm after epoch 0");
+    }
+}
+
+#[test]
+fn elastic_bounce_trains_within_tolerance() {
+    // Artifacts variant: different partitions sum the allreduce in a
+    // different order, so loss bit-identity across the bounce is
+    // impossible — but it is the same computation graph on the same
+    // global batches, so the N→M→N loss stream must track the
+    // uninterrupted run to float-reassociation noise, step for step.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut c = tc("bounceart", "solar", 2, 0.0);
+    c.run.buffer_capacity = 48;
+    let full = train(&c).unwrap();
+    let bounced = bounce_2_1_2("bounceart", false);
+    assert_eq!(full.steps, bounced.steps);
+    assert_eq!(full.epoch_stats, bounced.epoch_stats, "schedule totals must be exact");
+    assert_eq!(full.points.len(), bounced.points.len());
+    for (a, b) in full.points.iter().zip(bounced.points.iter()) {
+        assert_eq!(a.epoch, b.epoch, "epoch attribution at step {}", a.step);
+        let tol = 1e-3 * a.train_loss.abs().max(1e-3);
+        assert!(
+            (a.train_loss - b.train_loss).abs() <= tol,
+            "loss diverged at step {}: {} vs {}",
+            a.step,
+            a.train_loss,
+            b.train_loss
+        );
+    }
+    assert_eq!(full.final_params.len(), bounced.final_params.len());
+    for (ta, tb) in full.final_params.iter().zip(bounced.final_params.iter()) {
+        let scale = ta.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-3);
+        for (x, y) in ta.iter().zip(tb.iter()) {
+            assert!(
+                (x - y).abs() <= 1e-2 * scale,
+                "params diverged beyond reassociation noise: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn node_loss_fault_surfaces_without_hanging() {
+    // The abrupt node-death drill (`--fetch-fault N:S:loss`): the fetch
+    // stage vanishes silently — no error report — so the failure must
+    // surface as the exec half's closed staged channel, promptly, and
+    // shutdown must not wedge. Load-only, so it runs everywhere.
+    let t0 = std::time::Instant::now();
+    let mut c = tc("nodeloss", "solar", 2, 0.0);
+    c.load_only = true;
+    c.fetch_fault = Some((1, 2));
+    c.fault_kind = FaultKind::NodeLoss;
+    let err = train(&c).expect_err("a vanished fetch stage must fail the run");
+    let chain = format!("{err:#}");
+    assert!(chain.contains("fetch stage died"), "closed-channel cause must surface, got: {chain}");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(60),
+        "node-loss shutdown took {:?} — stuck on the staged channel?",
+        t0.elapsed()
+    );
 }
 
 #[test]

@@ -11,7 +11,7 @@ use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
 use solar::storage::pfs::CostModel;
 use solar::storage::store::{open_store, SampleStore};
-use solar::train::driver::{train, PrefetchMode, TrainConfig};
+use solar::train::driver::{train, FaultKind, PrefetchMode, TrainConfig};
 
 fn artifacts() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -70,6 +70,10 @@ fn tc(path: PathBuf, n_train: usize, loader: &str, n_nodes: usize, epochs: usize
         prefetch: PrefetchMode::Fixed(1),
         epoch_drain: false,
         fetch_fault: None,
+        fault_kind: FaultKind::Error,
+        checkpoint_every: 0,
+        checkpoint_path: None,
+        resume: None,
         load_only: false,
         io_threads: 0, // auto: SOLAR_IO_THREADS or the machine default
     }

@@ -18,7 +18,7 @@ use solar::runtime::executable::DenseImpl;
 use solar::storage::codec::Codec;
 use solar::storage::pfs::CostModel;
 use solar::storage::store::{decode_f32, open_store, SampleStore};
-use solar::train::driver::{train, PrefetchMode, TrainConfig};
+use solar::train::driver::{train, FaultKind, PrefetchMode, TrainConfig};
 use solar::util::rng::Rng;
 
 const N: usize = 56;
@@ -247,6 +247,10 @@ fn load_only_tc(store: Arc<dyn SampleStore>, loader: &str, prefetch: PrefetchMod
         prefetch,
         epoch_drain: false,
         fetch_fault: None,
+        fault_kind: FaultKind::Error,
+        checkpoint_every: 0,
+        checkpoint_path: None,
+        resume: None,
         load_only: true,
         io_threads: 0, // auto: SOLAR_IO_THREADS or the machine default
     }
