@@ -1,0 +1,173 @@
+//! The committed lint baseline: triaged pre-existing findings that
+//! `solar lint --deny` tolerates. Identity is `(rule, file, snippet)` —
+//! line numbers drift as files are edited, trimmed source text does not
+//! (and when it does, the finding deserves a fresh look anyway).
+//!
+//! Every entry carries a mandatory `reason`; an entry that no longer
+//! matches any finding is *stale* and fails `--deny` too, so the
+//! baseline can only shrink in step with the tree.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::analysis::rules::Finding;
+use crate::util::json::Json;
+
+pub const BASELINE_VERSION: u64 = 1;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BaselineEntry {
+    pub rule: String,
+    pub file: String,
+    pub snippet: String,
+    pub reason: String,
+}
+
+impl BaselineEntry {
+    pub fn matches(&self, f: &Finding) -> bool {
+        self.rule == f.rule && self.file == f.file && self.snippet.trim() == f.snippet.trim()
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    pub entries: Vec<BaselineEntry>,
+}
+
+impl Baseline {
+    pub fn empty() -> Baseline {
+        Baseline::default()
+    }
+
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("bad baseline JSON: {e}"))?;
+        let version = j.req_u64("version").map_err(|e| anyhow::anyhow!("{e}"))?;
+        if version != BASELINE_VERSION {
+            bail!("unsupported baseline version {version} (expected {BASELINE_VERSION})");
+        }
+        let mut entries = Vec::new();
+        for (i, e) in j.req_arr("entries").map_err(|e| anyhow::anyhow!("{e}"))?.iter().enumerate()
+        {
+            let req = |k: &str| -> Result<String> {
+                Ok(e.req_str(k)
+                    .map_err(|err| anyhow::anyhow!("baseline entry {i}: {err}"))?
+                    .to_string())
+            };
+            let entry = BaselineEntry {
+                rule: req("rule")?,
+                file: req("file")?,
+                snippet: req("snippet")?,
+                reason: req("reason")?,
+            };
+            if entry.reason.trim().is_empty() {
+                bail!("baseline entry {i} ({} {}): empty reason — a justification is mandatory",
+                    entry.rule, entry.file);
+            }
+            entries.push(entry);
+        }
+        Ok(Baseline { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Baseline> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading baseline {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing baseline {}", path.display()))
+    }
+
+    pub fn to_json_string(&self) -> String {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                Json::from_pairs(vec![
+                    ("rule", Json::Str(e.rule.clone())),
+                    ("file", Json::Str(e.file.clone())),
+                    ("snippet", Json::Str(e.snippet.clone())),
+                    ("reason", Json::Str(e.reason.clone())),
+                ])
+            })
+            .collect();
+        let mut root = Json::obj();
+        root.set("version", Json::Num(BASELINE_VERSION as f64));
+        root.set("entries", Json::Arr(entries));
+        let mut s = root.to_string_pretty();
+        s.push('\n');
+        s
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json_string())
+            .with_context(|| format!("writing baseline {}", path.display()))
+    }
+
+    pub fn contains(&self, f: &Finding) -> bool {
+        self.entries.iter().any(|e| e.matches(f))
+    }
+
+    /// Entries matching no current finding — they must be deleted.
+    pub fn stale_entries(&self, findings: &[Finding]) -> Vec<&BaselineEntry> {
+        self.entries.iter().filter(|e| !findings.iter().any(|f| e.matches(f))).collect()
+    }
+
+    /// Capture current findings as a baseline (each entry still needs a
+    /// human-written reason before it deserves to be committed).
+    pub fn from_findings(findings: &[Finding], reason: &str) -> Baseline {
+        let mut entries: Vec<BaselineEntry> = findings
+            .iter()
+            .map(|f| BaselineEntry {
+                rule: f.rule.clone(),
+                file: f.file.clone(),
+                snippet: f.snippet.clone(),
+                reason: reason.to_string(),
+            })
+            .collect();
+        entries.dedup();
+        Baseline { entries }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &str, file: &str, line: usize, snippet: &str) -> Finding {
+        Finding {
+            rule: rule.into(),
+            file: file.into(),
+            line,
+            snippet: snippet.into(),
+            message: String::new(),
+            hint: String::new(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_line_drift_tolerance() {
+        let f = finding("R3", "exp/x.rs", 10, "let t = Instant::now();");
+        let b = Baseline::from_findings(&[f.clone()], "legacy timer");
+        let b2 = Baseline::parse(&b.to_json_string()).unwrap();
+        assert_eq!(b2.entries, b.entries);
+        // Same code on a different line still matches (identity is
+        // rule+file+snippet, not line).
+        let drifted = finding("R3", "exp/x.rs", 99, "  let t = Instant::now();  ");
+        assert!(b2.contains(&drifted));
+        // A different file does not.
+        assert!(!b2.contains(&finding("R3", "exp/y.rs", 10, "let t = Instant::now();")));
+    }
+
+    #[test]
+    fn stale_entries_are_reported() {
+        let f = finding("R5", "loader/x.rs", 3, "use ShdfReader;");
+        let b = Baseline::from_findings(&[f.clone()], "pre-trait legacy");
+        assert!(b.stale_entries(&[f.clone()]).is_empty());
+        assert_eq!(b.stale_entries(&[]).len(), 1);
+    }
+
+    #[test]
+    fn reasons_are_mandatory() {
+        let text = r#"{"version": 1, "entries": [{"rule": "R1", "file": "a.rs", "snippet": "x", "reason": "  "}]}"#;
+        assert!(Baseline::parse(text).is_err());
+        let bad_version = r#"{"version": 2, "entries": []}"#;
+        assert!(Baseline::parse(bad_version).is_err());
+    }
+}

@@ -1,0 +1,463 @@
+//! A lightweight Rust source lexer for `solar lint` — just enough to make
+//! the rules in [`crate::analysis::rules`] robust without a real parser
+//! (`syn` is not in the offline crate set; DESIGN.md §Substitutions).
+//!
+//! The core artifact is the *scrubbed* text: a byte-for-byte copy of the
+//! source in which every comment, string literal, and char literal is
+//! blanked to spaces (newlines preserved), so line/byte positions in the
+//! scrubbed text map 1:1 onto the original. Rules scan the scrubbed text
+//! and therefore never fire on tokens that appear inside strings or docs.
+//!
+//! On top of scrubbing this module extracts:
+//! - `// solar-lint: allow(R1[,R2]) -- reason` suppression pragmas,
+//! - `#[cfg(test)]` item spans (findings inside test-only code are
+//!   dropped — test code may legitimately exercise the hazards),
+//! - a line table for byte→line mapping and per-line slicing.
+
+/// One `// solar-lint: allow(...)` pragma, parsed from a comment.
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    pub line: usize,
+    /// 1-based line the pragma suppresses: its own line when the pragma
+    /// trails code, the next line when the pragma stands alone.
+    pub target_line: usize,
+    /// Rule ids the pragma allows (e.g. `["R1"]`). Empty when malformed.
+    pub rules: Vec<String>,
+    /// Mandatory justification (text after `--`).
+    pub reason: String,
+    /// `Some(why)` when the pragma failed to parse — surfaced as its own
+    /// finding so a typo'd suppression never silently allows nothing.
+    pub malformed: Option<String>,
+}
+
+/// A source file prepared for rule scanning.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the scan root, with `/` separators.
+    pub rel_path: String,
+    /// Original text.
+    pub raw: String,
+    /// Comment/string/char-blanked text, byte-aligned with `raw`.
+    pub scrubbed: String,
+    /// Byte offset of the start of each line (line i+1 starts at `[i]`).
+    line_starts: Vec<usize>,
+    /// Suppression pragmas found in comments.
+    pub pragmas: Vec<Pragma>,
+    /// 1-based inclusive line spans of `#[cfg(test)]` items.
+    test_spans: Vec<(usize, usize)>,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank `out[range]` to spaces, preserving newlines (line alignment).
+fn blank(out: &mut [u8], start: usize, end: usize) {
+    for b in &mut out[start..end.min(out.len())] {
+        if *b != b'\n' {
+            *b = b' ';
+        }
+    }
+}
+
+/// Scrub comments/strings/chars; returns the scrubbed text plus every
+/// line comment as `(start_byte, text)` for pragma parsing.
+fn scrub(src: &str) -> (String, Vec<(usize, String)>) {
+    let bytes = src.as_bytes();
+    let len = bytes.len();
+    let mut out = bytes.to_vec();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut i = 0usize;
+    while i < len {
+        let b = bytes[i];
+        let next = if i + 1 < len { bytes[i + 1] } else { 0 };
+        if b == b'/' && next == b'/' {
+            let start = i;
+            while i < len && bytes[i] != b'\n' {
+                i += 1;
+            }
+            comments.push((start, src[start..i].to_string()));
+            blank(&mut out, start, i);
+        } else if b == b'/' && next == b'*' {
+            let start = i;
+            i += 2;
+            let mut depth = 1usize;
+            while i < len && depth > 0 {
+                if bytes[i] == b'/' && i + 1 < len && bytes[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if bytes[i] == b'*' && i + 1 < len && bytes[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut out, start, i);
+        } else if b == b'"' {
+            i = scrub_string(bytes, &mut out, i);
+        } else if (b == b'r' || b == b'b') && (i == 0 || !is_ident_byte(bytes[i - 1])) {
+            if let Some(end) = try_prefixed_literal(bytes, i) {
+                blank(&mut out, i, end);
+                i = end;
+            } else {
+                i += 1;
+            }
+        } else if b == b'\'' {
+            if let Some(end) = try_char_literal(src, i) {
+                blank(&mut out, i, end);
+                i = end;
+            } else {
+                i += 1; // lifetime / label: leave as code
+            }
+        } else {
+            i += 1;
+        }
+    }
+    // Every byte written is ASCII and untouched bytes are intact, so the
+    // buffer stays valid UTF-8.
+    (String::from_utf8(out).expect("scrub produced invalid UTF-8"), comments)
+}
+
+/// Blank a plain `"..."` string starting at `open`; returns the index
+/// just past the closing quote.
+fn scrub_string(bytes: &[u8], out: &mut Vec<u8>, open: usize) -> usize {
+    let len = bytes.len();
+    let mut i = open + 1;
+    while i < len {
+        match bytes[i] {
+            b'\\' => i += 2,
+            b'"' => {
+                i += 1;
+                break;
+            }
+            _ => i += 1,
+        }
+    }
+    blank(out, open, i.min(len));
+    i.min(len)
+}
+
+/// Recognize `r"..."`, `r#"..."#`, `b"..."`, `br#"..."#`, `b'x'` starting
+/// at `i` (which holds `r` or `b`). Returns the end index when matched.
+fn try_prefixed_literal(bytes: &[u8], i: usize) -> Option<usize> {
+    let len = bytes.len();
+    let mut j = i;
+    if bytes[j] == b'b' {
+        j += 1;
+        if j < len && bytes[j] == b'\'' {
+            // b'x' byte literal: reuse the char scanner semantics.
+            let mut k = j + 1;
+            if k < len && bytes[k] == b'\\' {
+                k += 2;
+            } else {
+                k += 1;
+            }
+            while k < len && bytes[k] != b'\'' && bytes[k] != b'\n' {
+                k += 1;
+            }
+            return if k < len && bytes[k] == b'\'' { Some(k + 1) } else { None };
+        }
+    }
+    if j < len && bytes[j] == b'r' {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while j < len && bytes[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= len || bytes[j] != b'"' {
+        return None;
+    }
+    if hashes == 0 && j == i {
+        return None; // plain `"` handled by the caller
+    }
+    j += 1;
+    // Raw strings have no escapes: scan for `"` followed by `hashes` #s.
+    while j < len {
+        if bytes[j] == b'"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < len && bytes[k] == b'#' && seen < hashes {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return Some(k);
+            }
+        }
+        j += 1;
+    }
+    Some(len)
+}
+
+/// Char literal at `i` (a `'`), or `None` for a lifetime/label. A char
+/// literal holds exactly one (possibly escaped) char and closes on the
+/// same line within a few bytes.
+fn try_char_literal(src: &str, i: usize) -> Option<usize> {
+    let bytes = src.as_bytes();
+    let len = bytes.len();
+    if i + 1 >= len {
+        return None;
+    }
+    if bytes[i + 1] == b'\\' {
+        let mut k = i + 2;
+        while k < len && bytes[k] != b'\'' && bytes[k] != b'\n' {
+            k += 1;
+        }
+        return if k < len && bytes[k] == b'\'' { Some(k + 1) } else { None };
+    }
+    // Unescaped: the closing quote must arrive within one char (≤4 bytes)
+    // and the interior must be exactly one char — otherwise it's `'life`.
+    for k in (i + 2)..len.min(i + 6) {
+        if bytes[k] == b'\n' {
+            return None;
+        }
+        if bytes[k] == b'\'' {
+            let interior = &src[i + 1..k];
+            return if interior.chars().count() == 1 { Some(k + 1) } else { None };
+        }
+    }
+    None
+}
+
+/// Valid rule ids a pragma may allow.
+pub const KNOWN_RULES: &[&str] = &["R1", "R2", "R3", "R4", "R5", "R6"];
+
+/// Parse one comment's pragma. A pragma is a plain `//` comment whose
+/// text *starts with* `solar-lint:` — doc comments (`///`, `//!`) and
+/// prose that merely mentions the marker mid-sentence never parse, so
+/// documentation about the pragma syntax cannot masquerade as one.
+fn parse_pragma(comment: &str) -> Option<(Vec<String>, String, Option<String>)> {
+    let body = comment.strip_prefix("//")?;
+    if body.starts_with('/') || body.starts_with('!') {
+        return None; // doc comment
+    }
+    let rest = body.trim_start().strip_prefix("solar-lint:")?.trim();
+    let malformed = |why: &str| Some((Vec::new(), String::new(), Some(why.to_string())));
+    let Some(rest) = rest.strip_prefix("allow") else {
+        return malformed("expected `allow(...)` after `solar-lint:`");
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix('(') else {
+        return malformed("expected `(` after `allow`");
+    };
+    let Some(close) = rest.find(')') else {
+        return malformed("unclosed `allow(` list");
+    };
+    let mut rules = Vec::new();
+    for part in rest[..close].split(',') {
+        let id = part.trim();
+        if id.is_empty() {
+            return malformed("empty rule id in allow list");
+        }
+        if !KNOWN_RULES.contains(&id) {
+            return Some((
+                Vec::new(),
+                String::new(),
+                Some(format!("unknown rule id `{id}` (known: R1..R6)")),
+            ));
+        }
+        rules.push(id.to_string());
+    }
+    if rules.is_empty() {
+        return malformed("empty allow list");
+    }
+    let tail = rest[close + 1..].trim();
+    let Some(reason) = tail.strip_prefix("--") else {
+        return malformed("missing `-- reason` after allow list");
+    };
+    let reason = reason.trim();
+    if reason.is_empty() {
+        return malformed("empty reason after `--` (a justification is mandatory)");
+    }
+    Some((rules, reason.to_string(), None))
+}
+
+/// Find the matching close delimiter for the open delimiter at
+/// `open_idx` in scrubbed text (same-kind counting is sound there).
+pub fn match_delim(s: &str, open_idx: usize) -> Option<usize> {
+    let bytes = s.as_bytes();
+    let open = bytes[open_idx];
+    let close = match open {
+        b'(' => b')',
+        b'[' => b']',
+        b'{' => b'}',
+        _ => return None,
+    };
+    let mut depth = 0usize;
+    for (k, &b) in bytes.iter().enumerate().skip(open_idx) {
+        if b == open {
+            depth += 1;
+        } else if b == close {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+impl SourceFile {
+    pub fn parse(rel_path: &str, src: &str) -> SourceFile {
+        let (scrubbed, comments) = scrub(src);
+        let mut line_starts = vec![0usize];
+        for (k, b) in src.bytes().enumerate() {
+            if b == b'\n' {
+                line_starts.push(k + 1);
+            }
+        }
+        let mut sf = SourceFile {
+            rel_path: rel_path.replace('\\', "/"),
+            raw: src.to_string(),
+            scrubbed,
+            line_starts,
+            pragmas: Vec::new(),
+            test_spans: Vec::new(),
+        };
+        sf.find_test_spans();
+        sf.find_pragmas(&comments);
+        sf
+    }
+
+    fn find_test_spans(&mut self) {
+        let s = &self.scrubbed;
+        let mut from = 0usize;
+        while let Some(p) = s[from..].find("cfg(test)") {
+            let at = from + p;
+            from = at + 1;
+            // The next `{` opens the cfg-gated item's body (mod or fn).
+            let Some(rel_open) = s[at..].find('{') else { continue };
+            let open = at + rel_open;
+            let close = match_delim(s, open).unwrap_or(s.len().saturating_sub(1));
+            self.test_spans.push((self.line_of(at), self.line_of(close)));
+        }
+    }
+
+    fn find_pragmas(&mut self, comments: &[(usize, String)]) {
+        for (start, text) in comments {
+            let Some((rules, reason, malformed)) = parse_pragma(text) else {
+                continue;
+            };
+            let line = self.line_of(*start);
+            // Pragma on its own line targets the next line; a trailing
+            // pragma targets its own line.
+            let code = self.scrub_line(line);
+            let target_line = if code.trim().is_empty() { line + 1 } else { line };
+            self.pragmas.push(Pragma { line, target_line, rules, reason, malformed });
+        }
+    }
+
+    pub fn n_lines(&self) -> usize {
+        self.line_starts.len()
+    }
+
+    /// 1-based line containing byte `pos`.
+    pub fn line_of(&self, pos: usize) -> usize {
+        match self.line_starts.binary_search(&pos) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    fn line_span(&self, line: usize) -> (usize, usize) {
+        let start = self.line_starts[line - 1];
+        let end = self.line_starts.get(line).map(|&e| e - 1).unwrap_or(self.raw.len());
+        (start, end)
+    }
+
+    /// Raw text of 1-based `line` (no trailing newline).
+    pub fn raw_line(&self, line: usize) -> &str {
+        let (s, e) = self.line_span(line);
+        &self.raw[s..e.max(s)]
+    }
+
+    /// Scrubbed text of 1-based `line`.
+    pub fn scrub_line(&self, line: usize) -> &str {
+        let (s, e) = self.line_span(line);
+        &self.scrubbed[s..e.max(s)]
+    }
+
+    /// Whether 1-based `line` falls inside a `#[cfg(test)]` item.
+    pub fn in_test_code(&self, line: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrubbing_blanks_comments_and_strings_preserving_alignment() {
+        let src = "let a = \"Instant::now()\"; // Instant::now()\nlet b = 1;\n";
+        let sf = SourceFile::parse("x.rs", src);
+        assert_eq!(sf.raw.len(), sf.scrubbed.len());
+        assert!(!sf.scrubbed.contains("Instant"));
+        assert!(sf.scrubbed.contains("let b = 1;"));
+        assert_eq!(sf.line_of(src.find("let b").unwrap()), 2);
+    }
+
+    #[test]
+    fn raw_strings_and_chars_are_blanked_lifetimes_survive() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = 'y'; let r = r#\"panic!\"#; 'z' }\n";
+        let sf = SourceFile::parse("x.rs", src);
+        assert!(!sf.scrubbed.contains("panic"));
+        assert!(!sf.scrubbed.contains("'y'"));
+        assert!(sf.scrubbed.contains("<'a>"), "lifetime must survive: {}", sf.scrubbed);
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        let src = "/* a /* b */ c */ let x = 1;\n";
+        let sf = SourceFile::parse("x.rs", src);
+        assert!(!sf.scrubbed.contains('c'));
+        assert!(sf.scrubbed.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn cfg_test_spans_cover_the_module() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn tail() {}\n";
+        let sf = SourceFile::parse("x.rs", src);
+        assert!(!sf.in_test_code(1));
+        assert!(sf.in_test_code(3));
+        assert!(sf.in_test_code(4));
+        assert!(sf.in_test_code(5));
+        assert!(!sf.in_test_code(6));
+    }
+
+    #[test]
+    fn pragma_parsing_trailing_and_standalone() {
+        let src = "\
+let x = 1; // solar-lint: allow(R3) -- timer calibration
+// solar-lint: allow(R1, R2) -- fixture
+let y = 2;
+";
+        let sf = SourceFile::parse("x.rs", src);
+        assert_eq!(sf.pragmas.len(), 2);
+        assert_eq!(sf.pragmas[0].target_line, 1);
+        assert_eq!(sf.pragmas[0].rules, vec!["R3"]);
+        assert_eq!(sf.pragmas[0].reason, "timer calibration");
+        assert_eq!(sf.pragmas[1].target_line, 3);
+        assert_eq!(sf.pragmas[1].rules, vec!["R1", "R2"]);
+    }
+
+    #[test]
+    fn malformed_pragmas_are_reported_not_dropped() {
+        for bad in [
+            "// solar-lint: allow(R1)",          // missing reason
+            "// solar-lint: allow(R9) -- x",     // unknown rule
+            "// solar-lint: allow() -- x",       // empty list
+            "// solar-lint: deny(R1) -- x",      // wrong verb
+            "// solar-lint: allow(R1 -- x",      // unclosed
+            "// solar-lint: allow(R1) --   ",    // blank reason
+        ] {
+            let sf = SourceFile::parse("x.rs", &format!("{bad}\nlet x = 1;\n"));
+            assert_eq!(sf.pragmas.len(), 1, "{bad}");
+            assert!(sf.pragmas[0].malformed.is_some(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! `solar lint` — a dependency-free static analysis pass that codifies
+//! the repo's determinism invariants as named rules (R1–R6; see
+//! [`rules`] and DESIGN.md "Invariants & static analysis").
+//!
+//! The pass is deliberately *lexical*: [`lexer`] blanks comments and
+//! strings, tracks `#[cfg(test)]` spans and suppression pragmas, and the
+//! rules scan the scrubbed text with token-boundary matching. No type
+//! information, no `syn` — the rules are tuned so that on this codebase
+//! the sanctioned idioms (key-sorted collects, BTree swaps, the
+//! `util::timer` clock authority) pass cleanly and the hazard patterns
+//! fail loudly. Output is deterministic: files are scanned in sorted
+//! path order, findings sort by `(file, line, rule)`, and the JSON
+//! renderer is `util::json` (BTreeMap-backed objects), so byte-identical
+//! reports across runs and machines are a testable property.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use baseline::Baseline;
+use lexer::SourceFile;
+use rules::Finding;
+
+/// A full scan of one source tree.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Scan root as given (relative paths in findings are under it).
+    pub root: String,
+    pub files_scanned: usize,
+    /// Sorted by `(file, line, rule)`.
+    pub findings: Vec<Finding>,
+}
+
+/// Recursively collect `.rs` files under `root`, as sorted relative
+/// paths (`/`-separated) — the scan order, hence deterministic output.
+fn collect_rs_files(root: &Path) -> Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+        let entries =
+            std::fs::read_dir(dir).with_context(|| format!("reading dir {}", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            if path.is_dir() {
+                walk(&path, out)?;
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+        Ok(())
+    }
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    files.sort();
+    Ok(files)
+}
+
+/// Scan every `.rs` file under `root` with all rules.
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    let files = collect_rs_files(root)?;
+    let mut findings = Vec::new();
+    let files_scanned = files.len();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let sf = SourceFile::parse(&rel, &src);
+        findings.extend(rules::check_file(&sf));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    Ok(LintReport { root: root.to_string_lossy().replace('\\', "/"), files_scanned, findings })
+}
+
+/// Partition a report's findings against a baseline:
+/// `(new, baselined, stale_baseline_entries)`.
+pub fn partition<'a>(
+    report: &'a LintReport,
+    base: &'a Baseline,
+) -> (Vec<&'a Finding>, Vec<&'a Finding>, Vec<&'a baseline::BaselineEntry>) {
+    let new: Vec<&Finding> = report.findings.iter().filter(|f| !base.contains(f)).collect();
+    let old: Vec<&Finding> = report.findings.iter().filter(|f| base.contains(f)).collect();
+    let stale = base.stale_entries(&report.findings);
+    (new, old, stale)
+}
+
+/// Human-readable report.
+pub fn render_text(report: &LintReport, base: &Baseline) -> String {
+    let (new, old, stale) = partition(report, base);
+    let mut out = String::new();
+    for f in &report.findings {
+        let status = if base.contains(f) { " [baselined]" } else { "" };
+        out.push_str(&format!(
+            "{}:{}: [{}]{} {}\n    | {}\n    = help: {}\n",
+            f.file, f.line, f.rule, status, f.message, f.snippet, f.hint
+        ));
+    }
+    for e in &stale {
+        out.push_str(&format!(
+            "baseline: stale entry [{}] {} ({:?}) — finding no longer exists, delete it\n",
+            e.rule, e.file, e.snippet
+        ));
+    }
+    out.push_str(&format!(
+        "solar lint: {} file(s), {} finding(s) ({} new, {} baselined, {} stale baseline entr{})\n",
+        report.files_scanned,
+        report.findings.len(),
+        new.len(),
+        old.len(),
+        stale.len(),
+        if stale.len() == 1 { "y" } else { "ies" }
+    ));
+    out
+}
+
+/// Machine-readable report — deterministic bytes for identical inputs
+/// (sorted findings, BTreeMap-keyed objects, no timestamps or absolute
+/// paths beyond the root as given).
+pub fn render_json(report: &LintReport, base: &Baseline) -> String {
+    let (new, old, stale) = partition(report, base);
+    let findings: Vec<Json> = report
+        .findings
+        .iter()
+        .map(|f| {
+            Json::from_pairs(vec![
+                ("rule", Json::Str(f.rule.clone())),
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("snippet", Json::Str(f.snippet.clone())),
+                ("message", Json::Str(f.message.clone())),
+                ("hint", Json::Str(f.hint.clone())),
+                (
+                    "status",
+                    Json::Str(if base.contains(f) { "baselined" } else { "new" }.to_string()),
+                ),
+            ])
+        })
+        .collect();
+    let stale_json: Vec<Json> = stale
+        .iter()
+        .map(|e| {
+            Json::from_pairs(vec![
+                ("rule", Json::Str(e.rule.clone())),
+                ("file", Json::Str(e.file.clone())),
+                ("snippet", Json::Str(e.snippet.clone())),
+            ])
+        })
+        .collect();
+    let mut root = Json::obj();
+    root.set("version", Json::Num(1.0));
+    root.set("root", Json::Str(report.root.clone()));
+    root.set("files_scanned", Json::Num(report.files_scanned as f64));
+    root.set("new", Json::Num(new.len() as f64));
+    root.set("baselined", Json::Num(old.len() as f64));
+    root.set("findings", Json::Arr(findings));
+    root.set("stale_baseline", Json::Arr(stale_json));
+    let mut s = root.to_string_pretty();
+    s.push('\n');
+    s
+}
+
+/// `--deny` verdict: `Ok` only when nothing new and nothing stale.
+pub fn deny_verdict(report: &LintReport, base: &Baseline) -> Result<()> {
+    let (new, _, stale) = partition(report, base);
+    if new.is_empty() && stale.is_empty() {
+        return Ok(());
+    }
+    anyhow::bail!(
+        "lint --deny failed: {} new finding(s), {} stale baseline entr{}",
+        new.len(),
+        stale.len(),
+        if stale.len() == 1 { "y" } else { "ies" }
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(findings: Vec<Finding>) -> LintReport {
+        LintReport { root: "fixture".into(), files_scanned: 1, findings }
+    }
+
+    fn f(rule: &str, file: &str, line: usize, snippet: &str) -> Finding {
+        Finding {
+            rule: rule.into(),
+            file: file.into(),
+            line,
+            snippet: snippet.into(),
+            message: "m".into(),
+            hint: "h".into(),
+        }
+    }
+
+    #[test]
+    fn deny_fails_on_new_passes_on_baselined_fails_on_stale() {
+        let finding = f("R3", "exp/x.rs", 4, "let t = Instant::now();");
+        let report = report_with(vec![finding.clone()]);
+        assert!(deny_verdict(&report, &Baseline::empty()).is_err(), "new finding");
+        let base = Baseline::from_findings(&[finding], "triaged legacy timer");
+        assert!(deny_verdict(&report, &base).is_ok(), "baselined finding");
+        assert!(deny_verdict(&report_with(vec![]), &base).is_err(), "stale entry");
+        assert!(deny_verdict(&report_with(vec![]), &Baseline::empty()).is_ok(), "clean");
+    }
+
+    #[test]
+    fn render_json_is_deterministic_and_statused() {
+        let report = report_with(vec![
+            f("R1", "train/a.rs", 2, "for k in m.keys() {"),
+            f("R3", "exp/x.rs", 4, "let t = Instant::now();"),
+        ]);
+        let base = Baseline::from_findings(&[report.findings[1].clone()], "legacy");
+        let a = render_json(&report, &base);
+        let b = render_json(&report, &base);
+        assert_eq!(a, b);
+        assert!(a.contains("\"new\": 1"), "{a}");
+        assert!(a.contains("\"baselined\": 1"), "{a}");
+        let text = render_text(&report, &base);
+        assert!(text.contains("[R1]"));
+        assert!(text.contains("[baselined]"));
+    }
+}

@@ -1,0 +1,628 @@
+//! The `solar lint` rules. Each rule encodes an invariant this repo has
+//! already paid for dynamically (see DESIGN.md "Invariants & static
+//! analysis" for the historical bug behind each id):
+//!
+//! - **R1** — no `HashMap`/`HashSet` iteration in schedule-affecting
+//!   modules unless the result is immediately sorted (or the collection
+//!   is a BTree). Iteration order there can reach staged-byte order.
+//! - **R2** — float ordering must use `total_cmp`, never `partial_cmp`
+//!   (NaN makes `partial_cmp`-based sorts order-unstable).
+//! - **R3** — no `Instant::now()`/`SystemTime::now()` outside
+//!   `util/timer.rs`: ad-hoc wall-clock reads break replay/resume.
+//! - **R4** — no `.unwrap()`/`.expect()`/`panic!` inside spawned worker
+//!   closures on the fetch/exec paths: a dying worker must propagate a
+//!   root-cause error, not vanish.
+//! - **R5** — `ShdfReader` is a `storage/` implementation detail; other
+//!   layers go through the `SampleStore` trait.
+//! - **R6** — no bare narrowing `as` casts in `storage/` byte-offset /
+//!   extent arithmetic; corrupt metadata must fail, not wrap.
+//!
+//! Rules scan the *scrubbed* text (comments/strings blanked), skip
+//! `#[cfg(test)]` spans, and honor `// solar-lint: allow(...)` pragmas.
+
+use crate::analysis::lexer::{match_delim, SourceFile};
+use std::collections::BTreeSet;
+
+/// One rule violation (or a malformed suppression pragma).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule id: `R1`..`R6`, or `PRAGMA` for a broken suppression.
+    pub rule: String,
+    /// Path relative to the scan root.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Trimmed source line (baseline identity key; line-drift tolerant).
+    pub snippet: String,
+    pub message: String,
+    pub hint: String,
+}
+
+/// `(id, one-line summary)` for help/docs output.
+pub const RULE_SUMMARIES: &[(&str, &str)] = &[
+    ("R1", "no HashMap/HashSet iteration in schedule-affecting modules unless sorted"),
+    ("R2", "float ordering must use total_cmp, not partial_cmp"),
+    ("R3", "no Instant::now()/SystemTime::now() outside util/timer.rs"),
+    ("R4", "no unwrap/expect/panic inside spawned worker closures"),
+    ("R5", "ShdfReader must not be named outside storage/"),
+    ("R6", "no narrowing `as` casts in storage offset/extent arithmetic"),
+];
+
+/// R1 scope: modules where iteration order can reach the schedule.
+fn r1_scope(path: &str) -> bool {
+    ["sched/", "loader/", "dist/", "train/"].iter().any(|p| path.starts_with(p))
+}
+
+/// R3 allowlist: the single wall-clock authority.
+const R3_ALLOW: &[&str] = &["util/timer.rs"];
+
+/// R4 scope: files whose spawns are fetch/exec/worker threads.
+fn r4_scope(path: &str) -> bool {
+    ["loader/", "train/", "dist/"].iter().any(|p| path.starts_with(p)) || path == "util/pool.rs"
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offsets where `tok` occurs in `hay` with non-ident chars (or the
+/// text boundary) on both sides.
+fn token_positions(hay: &str, tok: &str) -> Vec<usize> {
+    let hb = hay.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(tok) {
+        let at = from + p;
+        from = at + 1;
+        let left_ok = at == 0 || !is_ident(hb[at - 1]);
+        let end = at + tok.len();
+        let right_ok = end >= hb.len() || !is_ident(hb[end]);
+        if left_ok && right_ok {
+            out.push(at);
+        }
+    }
+    out
+}
+
+fn has_token(hay: &str, tok: &str) -> bool {
+    !token_positions(hay, tok).is_empty()
+}
+
+fn push(out: &mut Vec<Finding>, sf: &SourceFile, rule: &str, line: usize, message: String, hint: &str) {
+    let mut snippet = sf.raw_line(line).trim().to_string();
+    if snippet.len() > 160 {
+        let mut cut = 160;
+        while !snippet.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        snippet.truncate(cut);
+    }
+    out.push(Finding {
+        rule: rule.to_string(),
+        file: sf.rel_path.clone(),
+        line,
+        snippet,
+        message,
+        hint: hint.to_string(),
+    });
+}
+
+// ---------------------------------------------------------------- R1 ---
+
+/// Names bound to `HashMap`/`HashSet` in this file: `let [mut] N = Hash…`
+/// and the typed forms `N: [&][mut ][Option<]HashMap<…` (params, fields,
+/// annotated lets).
+fn hash_typed_names(sf: &SourceFile) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for line_no in 1..=sf.n_lines() {
+        let line = sf.scrub_line(line_no);
+        let mut hash_positions = token_positions(line, "HashMap");
+        hash_positions.extend(token_positions(line, "HashSet"));
+        if hash_positions.is_empty() {
+            continue;
+        }
+        // `let [mut] NAME … HashMap …` on one line.
+        for let_at in token_positions(line, "let") {
+            let mut rest = line[let_at + 3..].trim_start();
+            if let Some(r) = rest.strip_prefix("mut ") {
+                rest = r.trim_start();
+            }
+            let name: String =
+                rest.bytes().take_while(|&b| is_ident(b)).map(|b| b as char).collect();
+            if !name.is_empty() && !name.as_bytes()[0].is_ascii_digit() {
+                names.insert(name);
+            }
+        }
+        // `NAME: [&][mut ][Option<] HashMap<` — walk left from the token.
+        for &at in &hash_positions {
+            let mut k = at;
+            loop {
+                while k > 0 && line.as_bytes()[k - 1] == b' ' {
+                    k -= 1;
+                }
+                if k > 0 && line.as_bytes()[k - 1] == b'&' {
+                    k -= 1;
+                } else if line[..k].ends_with("mut") {
+                    k -= 3;
+                } else if line[..k].ends_with("Option<") {
+                    k -= 7;
+                } else {
+                    break;
+                }
+            }
+            if k == 0 || line.as_bytes()[k - 1] != b':' {
+                continue;
+            }
+            k -= 1;
+            while k > 0 && line.as_bytes()[k - 1] == b' ' {
+                k -= 1;
+            }
+            let name_start = {
+                let mut s = k;
+                while s > 0 && is_ident(line.as_bytes()[s - 1]) {
+                    s -= 1;
+                }
+                s
+            };
+            let name = &line[name_start..k];
+            if !name.is_empty() && !name.as_bytes()[0].is_ascii_digit() {
+                names.insert(name.to_string());
+            }
+        }
+    }
+    names
+}
+
+/// The flagged line (or either of the next two) sorts the result or goes
+/// through a BTree — that's the sanctioned deterministic-iteration idiom.
+fn sorted_nearby(sf: &SourceFile, line: usize) -> bool {
+    (line..=(line + 2).min(sf.n_lines()))
+        .any(|l| sf.scrub_line(l).contains(".sort") || sf.scrub_line(l).contains("BTree"))
+}
+
+const R1_ITER_METHODS: &[&str] = &[
+    "iter()", "iter_mut()", "into_iter()", "values()", "values_mut()", "into_values()",
+    "keys()", "into_keys()", "drain(", "retain(",
+];
+
+fn rule_r1(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !r1_scope(&sf.rel_path) {
+        return;
+    }
+    let names = hash_typed_names(sf);
+    if names.is_empty() {
+        return;
+    }
+    let hint = "sort the collected result on the next line, or use BTreeMap/BTreeSet";
+    for line_no in 1..=sf.n_lines() {
+        let line = sf.scrub_line(line_no);
+        let mut hit = false;
+        for name in &names {
+            for at in token_positions(line, name) {
+                let after = &line[at + name.len()..];
+                let method_hit = after.starts_with('.')
+                    && R1_ITER_METHODS.iter().any(|m| after[1..].starts_with(m));
+                // `for … in [&[mut ]]name` — the for/in must precede the use.
+                let for_hit = after.trim_start().starts_with('{')
+                    && token_positions(line, "for").iter().any(|&f| f < at)
+                    && token_positions(line, "in").iter().any(|&i| i < at);
+                if method_hit || for_hit {
+                    hit = true;
+                }
+            }
+        }
+        if hit && !sorted_nearby(sf, line_no) {
+            push(
+                out,
+                sf,
+                "R1",
+                line_no,
+                "HashMap/HashSet iteration in a schedule-affecting module: the order is \
+                 hasher-dependent and can reach staged-byte order or reported stats"
+                    .to_string(),
+                hint,
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R2 ---
+
+fn rule_r2(sf: &SourceFile, out: &mut Vec<Finding>) {
+    for line_no in 1..=sf.n_lines() {
+        if has_token(sf.scrub_line(line_no), "partial_cmp") {
+            push(
+                out,
+                sf,
+                "R2",
+                line_no,
+                "float ordering via partial_cmp: NaN compares as None and the sort order \
+                 becomes input-dependent"
+                    .to_string(),
+                "use f64::total_cmp / f32::total_cmp (IEEE 754 total order)",
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R3 ---
+
+fn rule_r3(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if R3_ALLOW.contains(&sf.rel_path.as_str()) {
+        return;
+    }
+    for line_no in 1..=sf.n_lines() {
+        let line = sf.scrub_line(line_no);
+        if line.contains("Instant::now(") || line.contains("SystemTime::now(") {
+            push(
+                out,
+                sf,
+                "R3",
+                line_no,
+                "ad-hoc wall-clock read: time must flow through util::timer so replay and \
+                 resume stay deterministic"
+                    .to_string(),
+                "use util::timer::Stopwatch (the single wall-clock authority)",
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R4 ---
+
+const R4_PANICS: &[&str] = &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+
+/// Byte spans (start, end) of closure bodies passed to `spawn(...)`.
+fn spawn_closure_spans(s: &str) -> Vec<(usize, usize)> {
+    let bytes = s.as_bytes();
+    let mut spans = Vec::new();
+    for at in token_positions(s, "spawn") {
+        let mut k = at + "spawn".len();
+        while k < bytes.len() && (bytes[k] == b' ' || bytes[k] == b'\n') {
+            k += 1;
+        }
+        if k >= bytes.len() || bytes[k] != b'(' {
+            continue;
+        }
+        let Some(close) = match_delim(s, k) else { continue };
+        let args = &s[k + 1..close];
+        let Some(bar) = args.find('|') else { continue };
+        let params_end = if args[bar + 1..].starts_with('|') {
+            bar + 1
+        } else {
+            match args[bar + 1..].find('|') {
+                Some(p) => bar + 1 + p,
+                None => continue,
+            }
+        };
+        let body_rel = args[params_end + 1..]
+            .char_indices()
+            .find(|&(_, c)| !c.is_whitespace())
+            .map(|(i, _)| params_end + 1 + i);
+        let Some(body_rel) = body_rel else { continue };
+        let body_abs = k + 1 + body_rel;
+        let body_end = if bytes[body_abs] == b'{' {
+            match_delim(s, body_abs).map(|e| e + 1).unwrap_or(close)
+        } else {
+            close // expression closure: runs to the spawn's close paren
+        };
+        spans.push((body_abs, body_end));
+    }
+    spans
+}
+
+fn rule_r4(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !r4_scope(&sf.rel_path) {
+        return;
+    }
+    for (start, end) in spawn_closure_spans(&sf.scrubbed) {
+        let body = &sf.scrubbed[start..end];
+        for pat in R4_PANICS {
+            let mut from = 0usize;
+            while let Some(p) = body[from..].find(pat) {
+                let abs = start + from + p;
+                from += p + 1;
+                push(
+                    out,
+                    sf,
+                    "R4",
+                    sf.line_of(abs),
+                    format!(
+                        "`{}` inside a spawned worker closure: a panicking worker dies without \
+                         propagating a root-cause error to the driver",
+                        pat.trim_start_matches('.')
+                    ),
+                    "return a Result through the channel/join handle, or recover in place",
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R5 ---
+
+fn rule_r5(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if sf.rel_path.starts_with("storage/") {
+        return;
+    }
+    for line_no in 1..=sf.n_lines() {
+        if has_token(sf.scrub_line(line_no), "ShdfReader") {
+            push(
+                out,
+                sf,
+                "R5",
+                line_no,
+                "ShdfReader named outside storage/: backends are interchangeable only behind \
+                 the SampleStore trait"
+                    .to_string(),
+                "go through storage::store::{SampleStore, open_store}",
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R6 ---
+
+const R6_CONTEXT: &[&str] = &["offset", "extent", "span", "data_start", "idx[", "starts[", "bases["];
+
+fn rule_r6(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !sf.rel_path.starts_with("storage/") {
+        return;
+    }
+    for line_no in 1..=sf.n_lines() {
+        let line = sf.scrub_line(line_no);
+        if !R6_CONTEXT.iter().any(|k| line.contains(k)) {
+            continue;
+        }
+        let narrowing = [") as usize", "] as usize", " as u32", " as u16", " as u8"]
+            .iter()
+            .any(|pat| {
+                let mut from = 0usize;
+                while let Some(p) = line[from..].find(pat) {
+                    let end = from + p + pat.len();
+                    from += p + 1;
+                    if end >= line.len() || !is_ident(line.as_bytes()[end]) {
+                        return true;
+                    }
+                }
+                false
+            });
+        if narrowing {
+            push(
+                out,
+                sf,
+                "R6",
+                line_no,
+                "narrowing `as` cast in byte-offset/extent arithmetic: corrupt metadata wraps \
+                 silently instead of failing"
+                    .to_string(),
+                "use usize::try_from / u32::try_from with an explicit expect or error",
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------ driver ---
+
+/// Run every rule over one file; returns findings sorted by (line, rule),
+/// after dropping test-span findings and pragma-suppressed ones, and
+/// adding a `PRAGMA` finding per malformed suppression.
+pub fn check_file(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    rule_r1(sf, &mut out);
+    rule_r2(sf, &mut out);
+    rule_r3(sf, &mut out);
+    rule_r4(sf, &mut out);
+    rule_r5(sf, &mut out);
+    rule_r6(sf, &mut out);
+    out.retain(|f| !sf.in_test_code(f.line));
+    for p in &sf.pragmas {
+        if p.malformed.is_none() {
+            out.retain(|f| !(f.line == p.target_line && p.rules.iter().any(|r| *r == f.rule)));
+        }
+    }
+    for p in &sf.pragmas {
+        if let Some(why) = &p.malformed {
+            if !sf.in_test_code(p.line) {
+                push(
+                    &mut out,
+                    sf,
+                    "PRAGMA",
+                    p.line,
+                    format!("malformed solar-lint pragma: {why}"),
+                    "format: // solar-lint: allow(R1[,R2]) -- reason",
+                );
+            }
+        }
+    }
+    out.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::SourceFile;
+
+    fn findings(path: &str, src: &str) -> Vec<Finding> {
+        check_file(&SourceFile::parse(path, src))
+    }
+
+    fn rules_of(fs: &[Finding]) -> Vec<&str> {
+        fs.iter().map(|f| f.rule.as_str()).collect()
+    }
+
+    // R1 — positive, negative (sorted), negative (out of scope), BTree.
+    #[test]
+    fn r1_flags_unsorted_hash_iteration_in_scope() {
+        let src = "\
+fn f(staged: &mut HashMap<u32, V>) {
+    for (k, v) in staged.iter() {
+        use_it(k, v);
+    }
+}
+";
+        let fs = findings("loader/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["R1"]);
+        assert_eq!(fs[0].line, 2);
+        assert!(findings("exp/x.rs", src).is_empty(), "out of scope");
+    }
+
+    #[test]
+    fn r1_accepts_sorted_iteration_and_btree() {
+        let sorted = "\
+fn f() {
+    let mut m: HashMap<u32, V> = make();
+    let mut v: Vec<_> = m.iter().map(|(k, x)| (*k, x.clone())).collect();
+    v.sort_unstable_by_key(|(k, _)| *k);
+}
+";
+        assert!(findings("train/x.rs", sorted).is_empty());
+        let btree = "\
+fn f() {
+    let m: BTreeMap<u32, V> = make();
+    for (k, v) in m.iter() { use_it(k, v); }
+}
+";
+        assert!(findings("train/x.rs", btree).is_empty());
+    }
+
+    #[test]
+    fn r1_flags_let_bound_maps_values_keys_drain() {
+        let src = "\
+fn f() {
+    let mut seen = HashSet::new();
+    let total: u64 = seen.iter().sum();
+}
+";
+        assert_eq!(rules_of(&findings("sched/x.rs", src)), vec!["R1"]);
+    }
+
+    // R2
+    #[test]
+    fn r2_flags_partial_cmp_and_accepts_total_cmp() {
+        let bad = "fn f(v: &mut [f64]) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        let fs = findings("util/x.rs", bad);
+        assert_eq!(rules_of(&fs), vec!["R2"]);
+        let good = "fn f(v: &mut [f64]) { v.sort_by(f64::total_cmp); }\n";
+        assert!(findings("util/x.rs", good).is_empty());
+    }
+
+    // R3
+    #[test]
+    fn r3_flags_wall_clock_outside_timer() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(rules_of(&findings("exp/x.rs", src)), vec!["R3"]);
+        assert!(findings("util/timer.rs", src).is_empty(), "allowlisted authority");
+        let st = "fn f() { let t = SystemTime::now(); }\n";
+        assert_eq!(rules_of(&findings("storage/x.rs", st)), vec!["R3"]);
+    }
+
+    #[test]
+    fn r3_ignores_strings_and_comments() {
+        let src = "fn f() { let s = \"Instant::now()\"; } // Instant::now()\n";
+        assert!(findings("exp/x.rs", src).is_empty());
+    }
+
+    // R4
+    #[test]
+    fn r4_flags_panics_inside_spawn_closures_only() {
+        let src = "\
+fn f() {
+    let h = std::thread::spawn(move || {
+        let v = rx.recv().unwrap();
+        work(v).expect(\"boom\");
+    });
+    h.join().unwrap();
+}
+";
+        let fs = findings("loader/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["R4", "R4"]);
+        assert_eq!(fs[0].line, 3);
+        assert_eq!(fs[1].line, 4);
+        assert!(findings("util/x.rs", src).is_empty(), "out of scope");
+    }
+
+    #[test]
+    fn r4_scoped_spawn_and_expression_closures() {
+        let src = "\
+fn f() {
+    std::thread::scope(|s| {
+        s.spawn(|| step().unwrap());
+    });
+}
+";
+        let fs = findings("train/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["R4"]);
+        assert_eq!(fs[0].line, 3);
+    }
+
+    // R5
+    #[test]
+    fn r5_flags_reader_outside_storage() {
+        let src = "fn f(r: &ShdfReader) {}\n";
+        assert_eq!(rules_of(&findings("loader/x.rs", src)), vec!["R5"]);
+        assert!(findings("storage/x.rs", src).is_empty());
+    }
+
+    // R6
+    #[test]
+    fn r6_flags_narrowing_casts_in_offset_arithmetic() {
+        let src = "fn f() { let n = (idx[b] - idx[a]) as usize; }\n";
+        assert_eq!(rules_of(&findings("storage/x.rs", src)), vec!["R6"]);
+        assert!(findings("loader/x.rs", src).is_empty(), "storage-only rule");
+        let good = "fn f() { let n = usize::try_from(idx[b] - idx[a]).expect(\"span\"); }\n";
+        assert!(findings("storage/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn r6_ignores_widening_and_keyword_free_lines() {
+        let widen = "fn f() { let n = count as u64 * offset; }\n";
+        assert!(findings("storage/x.rs", widen).is_empty());
+        let no_kw = "fn f() { let n = (a - b) as usize; }\n";
+        assert!(findings("storage/x.rs", no_kw).is_empty());
+    }
+
+    // Pragmas + test spans.
+    #[test]
+    fn pragma_suppresses_exactly_its_rule_and_line() {
+        let src = "\
+fn f() {
+    // solar-lint: allow(R3) -- calibration outside the hot path
+    let t = Instant::now();
+    let u = Instant::now();
+}
+";
+        let fs = findings("exp/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["R3"]);
+        assert_eq!(fs[0].line, 4, "only the targeted line is suppressed");
+    }
+
+    #[test]
+    fn wrong_rule_pragma_does_not_suppress() {
+        let src = "let t = Instant::now(); // solar-lint: allow(R1) -- wrong id\n";
+        assert_eq!(rules_of(&findings("exp/x.rs", src)), vec!["R3"]);
+    }
+
+    #[test]
+    fn malformed_pragma_is_its_own_finding() {
+        let src = "let t = Instant::now(); // solar-lint: allow(R3)\n";
+        let fs = findings("exp/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["PRAGMA", "R3"], "no reason -> no suppression");
+    }
+
+    #[test]
+    fn test_code_is_skipped() {
+        let src = "\
+#[cfg(test)]
+mod tests {
+    fn t() {
+        let t = Instant::now();
+        let x = map.iter().count();
+    }
+}
+";
+        assert!(findings("exp/x.rs", src).is_empty());
+    }
+}

@@ -181,6 +181,21 @@ COMMANDS
             node NODE fails at step STEP. Default reports an error;
             ':loss' makes the stage vanish silently — the node-loss
             drill; recover with --resume on the surviving node count)
+  lint      determinism-invariant static analysis over the sources
+            [--root DIR] (default rust/src, else src) [--json]
+            [--deny] (non-zero exit on any finding not covered by the
+            baseline, and on stale baseline entries)
+            [--baseline PATH] (default lint-baseline.json)
+            [--write-baseline] (capture current findings; every entry
+            still needs a hand-written reason before committing)
+            Rules — each encodes a past bug class (DESIGN.md):
+              R1 no HashMap/HashSet iteration in sched/loader/dist/train
+                 unless sorted or BTree;  R2 total_cmp not partial_cmp;
+              R3 no Instant/SystemTime::now outside util/timer.rs;
+              R4 no unwrap/expect/panic in spawned worker closures;
+              R5 ShdfReader stays inside storage/;  R6 no narrowing
+                 `as` casts in storage offset/extent arithmetic.
+            Suppress per-site: // solar-lint: allow(R1) -- reason
   smoke     PJRT round-trip check   [--hlo PATH]
   info      print manifest + environment info
 ";

@@ -12,6 +12,7 @@
 //!   to HLO text once (`make artifacts`).
 //! * L1 (`python/compile/kernels/`): Pallas matmul kernel inside L2.
 
+pub mod analysis;
 pub mod cli;
 pub mod config;
 pub mod data;

@@ -444,6 +444,10 @@ impl LoaderEngine {
     }
 
     /// Rebuild per-node heaps for a new epoch's Belady keys.
+    // The `.collect::<Vec<_>>()` below is load-bearing: the loop body
+    // mutates `self.heaps`/`self.key` while `resident[k].iter()` borrows
+    // `self`, so the membership must be materialized first.
+    #[allow(clippy::needless_collect)]
     fn rebuild_heaps(&mut self) {
         for h in self.heaps.iter_mut() {
             h.clear();
@@ -819,6 +823,9 @@ impl LoaderEngine {
     /// in the following epoch), exactly the key the hit would have
     /// assigned. This is the elastic path, where the prefix was planned
     /// by a DIFFERENT node count and replay is impossible by construction.
+    // `.collect::<Vec<_>>()` in the re-key loop is load-bearing (mutates
+    // `self.key` while iterating residency) — same shape as rebuild_heaps.
+    #[allow(clippy::needless_collect)]
     pub fn plan_run_seek(&mut self, from: RunPos) -> PlanRun<'_> {
         let n_epochs = self.cfg.n_epochs;
         if from.epoch_pos >= n_epochs {

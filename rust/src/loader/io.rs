@@ -751,14 +751,22 @@ mod tests {
         let mut pool = FetchPool::new(1);
         let mut staged = HashMap::new();
         pool.fetch(&store, &units, &mut staged).unwrap();
-        let kept: Vec<Arc<Vec<f32>>> = staged.values().cloned().collect();
+        // Regression note (lint R1): this used to collect
+        // `staged.values()` and index the result by position — HashMap
+        // iteration order, so the assertion compared sample i against
+        // whatever value the hasher put at position i. Key-sorted pairs
+        // make the expectation order-independent.
+        let mut kept: Vec<(u32, Arc<Vec<f32>>)> =
+            staged.iter().map(|(x, v)| (*x, v.clone())).collect();
+        kept.sort_unstable_by_key(|(x, _)| *x);
         staged.clear();
         for _ in 0..3 {
             staged.clear();
             pool.fetch(&store, &units, &mut staged).unwrap();
         }
-        for (i, v) in kept.iter().enumerate() {
-            assert_eq!(**v, expect_sample(i as u32, 4), "retained sample {i} intact");
+        assert_eq!(kept.iter().map(|(x, _)| *x).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        for (x, v) in &kept {
+            assert_eq!(**v, expect_sample(*x, 4), "retained sample {x} intact");
         }
     }
 

@@ -17,6 +17,7 @@ use solar::storage::pfs::{CostModel, SystemTier};
 use solar::storage::store::{open_store, SampleStore};
 use solar::train::driver::{train, FaultKind, TrainConfig};
 use solar::train::runstate::RunState;
+use solar::util::timer::Stopwatch;
 use solar::util::{fmt_bytes, fmt_secs};
 
 fn main() {
@@ -46,6 +47,7 @@ fn run(argv: &[String]) -> Result<()> {
             println!("smoke result = {v:?}");
             Ok(())
         }
+        "lint" => cmd_lint(&args),
         "info" => cmd_info(&args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
@@ -230,7 +232,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     let spec = DatasetSpec::paper(dataset).context("unknown dataset")?.scaled(scale);
     let mut cfg = RunConfig::for_tier(spec, tier, args.get_usize("batch", 16)?, epochs, args.get_usize("seed", 42)? as u64);
     cfg.buffer_capacity = (cfg.buffer_capacity / scale).max(1);
-    let t = std::time::Instant::now();
+    let t = Stopwatch::start();
     // Streamed: the plan JSON goes straight to the file, one step at a
     // time — O(1) plan memory, so full-scale multi-epoch plans (tens of
     // GB) schedule without materializing an epoch.
@@ -240,7 +242,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         cfg.n_epochs,
         cfg.steps_per_epoch(),
         cfg.n_nodes,
-        fmt_secs(t.elapsed().as_secs_f64()),
+        fmt_secs(t.elapsed_s()),
         summary.epoch_order,
         summary.epoch_order_cost
     );
@@ -277,7 +279,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         None => (16, 3, 42, (spec.n_samples * 7 / 10 / n_nodes).max(1)),
     };
     let cfg = RunConfig {
-        spec: spec.clone(),
+        spec,
         n_nodes,
         local_batch: args.get_usize("batch", d_batch)?,
         n_epochs: args.get_usize("epochs", d_epochs)?,
@@ -408,6 +410,52 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(curve) = args.get_path("curve") {
         report.write_csv(&curve)?;
         println!("loss curve -> {}", curve.display());
+    }
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    use solar::analysis::{self, baseline::Baseline};
+    // Default root: the crate's own sources, wherever the CLI runs from.
+    let root = match args.get_path("root") {
+        Some(p) => p,
+        None => {
+            let candidates = [PathBuf::from("rust/src"), PathBuf::from("src")];
+            match candidates.into_iter().find(|p| p.is_dir()) {
+                Some(p) => p,
+                None => bail!("no rust/src or src directory here; pass --root DIR"),
+            }
+        }
+    };
+    let baseline_path =
+        args.get_path("baseline").unwrap_or_else(|| PathBuf::from("lint-baseline.json"));
+    let report = analysis::lint_tree(&root)?;
+    if args.flag("write-baseline") {
+        let base = Baseline::from_findings(
+            &report.findings,
+            "TODO: replace with a real justification before committing",
+        );
+        base.save(&baseline_path)?;
+        println!(
+            "wrote {} entr{} to {}",
+            base.entries.len(),
+            if base.entries.len() == 1 { "y" } else { "ies" },
+            baseline_path.display()
+        );
+        return Ok(());
+    }
+    let base = if baseline_path.is_file() {
+        Baseline::load(&baseline_path)?
+    } else {
+        Baseline::empty()
+    };
+    if args.flag("json") {
+        print!("{}", analysis::render_json(&report, &base));
+    } else {
+        print!("{}", analysis::render_text(&report, &base));
+    }
+    if args.flag("deny") {
+        analysis::deny_verdict(&report, &base)?;
     }
     Ok(())
 }

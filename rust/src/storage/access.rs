@@ -16,6 +16,7 @@ use anyhow::Result;
 use crate::storage::pfs::{CostModel, ReadReq};
 use crate::storage::shdf::ShdfReader;
 use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
 
 /// Which §4.4 access pattern to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -161,7 +162,7 @@ pub fn measured_time(
     };
     let mut rng = Rng::new(seed).fork(rank as u64);
     let idx = w.indices(pattern, &mut rng);
-    let t = std::time::Instant::now();
+    let t = Stopwatch::start();
     let mut bytes = 0u64;
     let mut checksum = 0u64;
     match pattern {
@@ -181,7 +182,7 @@ pub fn measured_time(
             }
         }
     }
-    Ok((t.elapsed().as_secs_f64(), bytes, checksum))
+    Ok((t.elapsed_s(), bytes, checksum))
 }
 
 #[cfg(test)]

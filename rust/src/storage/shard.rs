@@ -456,7 +456,11 @@ impl SampleStore for ShardedStore {
             if n == 0 {
                 continue; // empty shard: no addressable region
             }
-            regions.push((self.starts[k] as u32, self.bases[k] + r.offset_of(0)));
+            // Checked narrowing (lint R6): sample ids are u32 by format
+            // contract; a shard starting beyond u32::MAX is a corrupt
+            // manifest, not an id to wrap.
+            let first_id = u32::try_from(self.starts[k]).expect("shard start exceeds u32 id space");
+            regions.push((first_id, self.bases[k] + r.offset_of(0)));
             if let Some(idx) = r.extent_index() {
                 var.offsets.extend(idx[..n].iter().map(|&o| self.bases[k] + o));
                 var.region_ends.push(self.bases[k] + idx[n]);

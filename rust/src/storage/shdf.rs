@@ -342,7 +342,10 @@ impl ShdfReader {
     /// `count × sample_bytes` when raw.
     fn span_len(&self, start: usize, count: usize) -> usize {
         match &self.index {
-            Some(idx) => (idx[start + count] - idx[start]) as usize,
+            // Checked narrowing (lint R6): a span wider than the address
+            // space means a corrupt extent index, not a length to truncate.
+            Some(idx) => usize::try_from(idx[start + count] - idx[start])
+                .expect("extent span exceeds usize"),
             None => count * self.header.sample_bytes,
         }
     }

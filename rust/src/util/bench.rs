@@ -8,7 +8,7 @@
 
 use crate::util::json::Json;
 use crate::util::stats::Summary;
-use std::time::Instant;
+use crate::util::timer::Stopwatch;
 
 /// One benchmark result.
 #[derive(Debug, Clone)]
@@ -95,15 +95,15 @@ impl BenchSuite {
             return;
         }
         // Warmup + calibration: time a single iteration.
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         std::hint::black_box(f());
-        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let once = t0.elapsed_s().max(1e-9);
         let iters = ((self.target_time_s / once).ceil() as usize).clamp(3, self.max_iters);
         let mut samples = Vec::with_capacity(iters);
         for _ in 0..iters {
-            let t = Instant::now();
+            let t = Stopwatch::start();
             std::hint::black_box(f());
-            samples.push(t.elapsed().as_secs_f64());
+            samples.push(t.elapsed_s());
         }
         let s = Summary::of(&samples);
         let result = BenchResult {

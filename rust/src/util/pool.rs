@@ -55,14 +55,22 @@ where
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 s.spawn(|| {
+                    // No panics inside the worker closure (lint R4): a
+                    // poisoned lock means a sibling died mid-`f` — recover
+                    // the slot rather than cascading; a drained slot means
+                    // the cursor logic broke — stop and let the caller's
+                    // completeness assert report it on the main thread.
                     let mut out: Vec<(usize, R)> = Vec::new();
                     loop {
                         let i = cursor.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
                             break;
                         }
-                        let item =
-                            tasks[i].lock().expect("pool task lock").take().expect("task taken twice");
+                        let item = match tasks[i].lock() {
+                            Ok(mut slot) => slot.take(),
+                            Err(poisoned) => poisoned.into_inner().take(),
+                        };
+                        let Some(item) = item else { break };
                         out.push((i, f(item)));
                     }
                     out
@@ -71,9 +79,15 @@ where
             .collect();
         handles
             .into_iter()
-            .flat_map(|h| h.join().expect("pool worker panicked"))
+            .flat_map(|h| match h.join() {
+                Ok(out) => out,
+                // Propagate a worker panic from the caller's thread, where
+                // it carries the root cause instead of dying silently.
+                Err(p) => std::panic::resume_unwind(p),
+            })
             .collect()
     });
+    assert_eq!(indexed.len(), n, "pool lost results: {} of {n} completed", indexed.len());
     indexed.sort_unstable_by_key(|&(i, _)| i);
     indexed.into_iter().map(|(_, r)| r).collect()
 }

@@ -1,0 +1,212 @@
+//! `solar lint` end-to-end: seeded fixture violations for every rule are
+//! detected, pragmas and baselines behave, the real tree is clean against
+//! the committed baseline, and the JSON report is byte-identical across
+//! runs and thread counts (the lint output is itself a determinism
+//! artifact — CI diffs it).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use solar::analysis::baseline::Baseline;
+use solar::analysis::{deny_verdict, lint_tree, partition, render_json};
+
+/// Build the fixture tree (one seeded violation per rule, plus sanctioned
+/// idioms that must stay clean) under a unique temp dir.
+fn write_fixture() -> PathBuf {
+    let root = std::env::temp_dir().join(format!("solar_lint_fixture_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    for sub in ["loader", "storage", "exp", "util", "train"] {
+        std::fs::create_dir_all(root.join(sub)).unwrap();
+    }
+    // R1 (unsorted hash iteration), R4 (unwrap in spawn), R5 (ShdfReader
+    // outside storage/) — all on loader paths.
+    std::fs::write(
+        root.join("loader/fetch.rs"),
+        r#"use std::collections::HashMap;
+
+pub fn stage(staged: &mut HashMap<u32, Vec<u8>>) -> Vec<u32> {
+    let mut out = Vec::new();
+    for (k, _v) in staged.iter() {
+        out.push(*k);
+    }
+    out
+}
+
+pub fn worker(rx: std::sync::mpsc::Receiver<u32>) {
+    std::thread::spawn(move || {
+        let v = rx.recv().unwrap();
+        drop(v);
+    });
+}
+
+pub fn open_directly() -> ShdfReader {
+    ShdfReader::open("x")
+}
+"#,
+    )
+    .unwrap();
+    // R6: narrowing cast in extent arithmetic.
+    std::fs::write(
+        root.join("storage/layout.rs"),
+        r#"pub fn span(idx: &[u64], a: usize, b: usize) -> usize {
+    (idx[b] - idx[a]) as usize
+}
+"#,
+    )
+    .unwrap();
+    // R3 + R2, plus a correctly-suppressed R3 (pragma with reason).
+    std::fs::write(
+        root.join("exp/timing.rs"),
+        r#"pub fn now() -> f64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_secs_f64()
+}
+
+pub fn rank(v: &mut [f64]) {
+    v.sort_by(|x, y| x.partial_cmp(y).unwrap());
+}
+
+pub fn calibrated() -> std::time::Instant {
+    // solar-lint: allow(R3) -- calibration outside the replayed path
+    std::time::Instant::now()
+}
+"#,
+    )
+    .unwrap();
+    // PRAGMA: a suppression missing its mandatory reason.
+    std::fs::write(
+        root.join("util/bad_pragma.rs"),
+        r#"pub fn f() -> u32 {
+    // solar-lint: allow(R3)
+    1
+}
+"#,
+    )
+    .unwrap();
+    // Clean file: BTree iteration + sorted hash collect are sanctioned.
+    std::fs::write(
+        root.join("train/clean.rs"),
+        r#"use std::collections::{BTreeMap, HashMap};
+
+pub fn stats(m: &BTreeMap<u32, f64>) -> f64 {
+    m.values().sum()
+}
+
+pub fn snapshot(buffer: &HashMap<u32, f64>) -> Vec<(u32, f64)> {
+    let mut v: Vec<(u32, f64)> = buffer.iter().map(|(k, x)| (*k, *x)).collect();
+    v.sort_unstable_by_key(|(k, _)| *k);
+    v
+}
+"#,
+    )
+    .unwrap();
+    root
+}
+
+#[test]
+fn every_rule_fires_on_its_seeded_fixture_and_only_there() {
+    let root = write_fixture();
+    let report = lint_tree(&root).unwrap();
+    let got: Vec<(String, String, usize)> = report
+        .findings
+        .iter()
+        .map(|f| (f.file.clone(), f.rule.clone(), f.line))
+        .collect();
+    let want: Vec<(String, String, usize)> = [
+        ("exp/timing.rs", "R3", 2),
+        ("exp/timing.rs", "R2", 7),
+        ("loader/fetch.rs", "R1", 5),
+        ("loader/fetch.rs", "R4", 13),
+        ("loader/fetch.rs", "R5", 18),
+        ("loader/fetch.rs", "R5", 19),
+        ("storage/layout.rs", "R6", 2),
+        ("util/bad_pragma.rs", "PRAGMA", 2),
+    ]
+    .iter()
+    .map(|(f, r, l)| (f.to_string(), r.to_string(), *l))
+    .collect();
+    assert_eq!(got, want, "full report: {:#?}", report.findings);
+    // The allowed R3 at exp/timing.rs:12 must NOT appear.
+    assert!(!report.findings.iter().any(|f| f.file == "exp/timing.rs" && f.line == 12));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn baseline_covers_findings_then_goes_stale_when_fixed() {
+    let root = write_fixture();
+    let report = lint_tree(&root).unwrap();
+    assert!(deny_verdict(&report, &Baseline::empty()).is_err(), "un-baselined tree");
+    let base = Baseline::from_findings(&report.findings, "triaged fixture finding");
+    assert!(deny_verdict(&report, &base).is_ok(), "fully baselined tree");
+    // "Fix" the storage violation: its baseline entry is now stale and
+    // --deny must fail until the entry is deleted.
+    std::fs::write(
+        root.join("storage/layout.rs"),
+        "pub fn span(idx: &[u64], a: usize, b: usize) -> usize {\n    usize::try_from(idx[b] - idx[a]).expect(\"span\")\n}\n",
+    )
+    .unwrap();
+    let fixed = lint_tree(&root).unwrap();
+    let (new, old, stale) = partition(&fixed, &base);
+    assert!(new.is_empty());
+    assert_eq!(old.len(), fixed.findings.len());
+    assert_eq!(stale.len(), 1, "the fixed R6 entry is stale");
+    assert!(deny_verdict(&fixed, &base).is_err(), "stale baseline fails --deny");
+    // Round-trip through the on-disk format preserves the verdicts.
+    let reparsed = Baseline::parse(&base.to_json_string()).unwrap();
+    assert!(deny_verdict(&report, &reparsed).is_ok());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn real_tree_is_clean_against_the_committed_baseline() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint_tree(&manifest.join("rust/src")).unwrap();
+    let base = Baseline::load(&manifest.join("lint-baseline.json")).unwrap();
+    let (new, _old, stale) = partition(&report, &base);
+    assert!(
+        new.is_empty(),
+        "new lint findings in rust/src — fix them or justify in lint-baseline.json:\n{:#?}",
+        new
+    );
+    assert!(stale.is_empty(), "stale lint-baseline.json entries — delete them:\n{:#?}", stale);
+}
+
+#[test]
+fn json_report_is_byte_identical_across_runs_and_thread_counts() {
+    let root = write_fixture();
+    // Library level: two scans render identically.
+    let a = render_json(&lint_tree(&root).unwrap(), &Baseline::empty());
+    let b = render_json(&lint_tree(&root).unwrap(), &Baseline::empty());
+    assert_eq!(a, b);
+    // CLI level: `solar lint --json` bytes are invariant across runs and
+    // across SOLAR_THREADS values (the report must never depend on the
+    // process's parallelism knobs).
+    let run = |threads: &str| {
+        let out = Command::new(env!("CARGO_BIN_EXE_solar"))
+            .args(["lint", "--json", "--root"])
+            .arg(&root)
+            .env("SOLAR_THREADS", threads)
+            .output()
+            .expect("run solar lint");
+        assert!(out.status.success(), "lint --json (no --deny) exits 0");
+        out.stdout
+    };
+    let one = run("1");
+    assert_eq!(one, run("1"), "same thread count, same bytes");
+    assert_eq!(one, run("8"), "different thread count, same bytes");
+    assert!(!one.is_empty());
+    // --deny on the seeded fixture must fail; on the clean subtree pass.
+    let deny = Command::new(env!("CARGO_BIN_EXE_solar"))
+        .args(["lint", "--deny", "--root"])
+        .arg(&root)
+        .output()
+        .expect("run solar lint --deny");
+    assert!(!deny.status.success(), "seeded violations must fail --deny");
+    let clean = Command::new(env!("CARGO_BIN_EXE_solar"))
+        .args(["lint", "--deny", "--root"])
+        .arg(root.join("train"))
+        .output()
+        .expect("run solar lint --deny (clean)");
+    assert!(clean.status.success(), "clean subtree passes --deny: {:?}", clean);
+    let _ = std::fs::remove_dir_all(&root);
+}
