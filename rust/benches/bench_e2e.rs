@@ -73,6 +73,8 @@ fn main() {
             resume: None,
             load_only: false,
             io_threads: 0, // auto: SOLAR_IO_THREADS or the machine default
+            plan: None,
+            connect: None,
         };
         suite.bench_units(
             &format!(

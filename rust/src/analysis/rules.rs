@@ -48,17 +48,21 @@ pub const RULE_SUMMARIES: &[(&str, &str)] = &[
     ("R6", "no narrowing `as` casts in storage offset/extent arithmetic"),
 ];
 
-/// R1 scope: modules where iteration order can reach the schedule.
+/// R1 scope: modules where iteration order can reach the schedule. The
+/// serve daemon stages bytes for every tenant, so its iteration order
+/// reaches *all* of their schedules.
 fn r1_scope(path: &str) -> bool {
-    ["sched/", "loader/", "dist/", "train/"].iter().any(|p| path.starts_with(p))
+    ["sched/", "loader/", "dist/", "train/", "serve/"].iter().any(|p| path.starts_with(p))
 }
 
 /// R3 allowlist: the single wall-clock authority.
 const R3_ALLOW: &[&str] = &["util/timer.rs"];
 
-/// R4 scope: files whose spawns are fetch/exec/worker threads.
+/// R4 scope: files whose spawns are fetch/exec/worker threads (serve/
+/// spawns accept-loop and per-connection handler threads).
 fn r4_scope(path: &str) -> bool {
-    ["loader/", "train/", "dist/"].iter().any(|p| path.starts_with(p)) || path == "util/pool.rs"
+    ["loader/", "train/", "dist/", "serve/"].iter().any(|p| path.starts_with(p))
+        || path == "util/pool.rs"
 }
 
 fn is_ident(b: u8) -> bool {
@@ -466,6 +470,7 @@ fn f(staged: &mut HashMap<u32, V>) {
         let fs = findings("loader/x.rs", src);
         assert_eq!(rules_of(&fs), vec!["R1"]);
         assert_eq!(fs[0].line, 2);
+        assert_eq!(rules_of(&findings("serve/x.rs", src)), vec!["R1"], "serve/ is in scope");
         assert!(findings("exp/x.rs", src).is_empty(), "out of scope");
     }
 
@@ -541,6 +546,7 @@ fn f() {
         assert_eq!(rules_of(&fs), vec!["R4", "R4"]);
         assert_eq!(fs[0].line, 3);
         assert_eq!(fs[1].line, 4);
+        assert_eq!(rules_of(&findings("serve/x.rs", src)), vec!["R4", "R4"], "serve/ in scope");
         assert!(findings("util/x.rs", src).is_empty(), "out of scope");
     }
 

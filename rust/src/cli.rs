@@ -149,6 +149,10 @@ COMMANDS
   schedule  run the offline scheduler, write the plan artifact
             --dataset cd17 [--tier medium] [--epochs 8] [--loader solar]
             [--scale 1000] --out plan.json
+            --data PATH (store mode: derive the run identity from a real
+            dataset exactly as `train` does — [--nodes 2] [--batch 16]
+            [--epochs 3] [--seed 42] [--buffer N] [--holdout 32] — so
+            the plan executes later via `train --plan` on that store)
   train     end-to-end distributed training on real bytes
             --data PATH (single SHDF file or sharded dataset directory;
             the trained model is bit-identical across layouts)
@@ -181,6 +185,23 @@ COMMANDS
             node NODE fails at step STEP. Default reports an error;
             ':loss' makes the stage vanish silently — the node-loss
             drill; recover with --resume on the surviving node count)
+            [--plan FILE] (execute a pre-computed schedule artifact from
+            `schedule --data` instead of running the loader engine;
+            schedule knobs default to the plan's embedded config and may
+            not contradict it. Bit-identical to the engine run)
+            [--connect ADDR] (run as a thin client of a `solar serve`
+            daemon: the plan streams from the daemon, staged bytes come
+            from its shared pool. The daemon must see --data at the
+            same path. Bit-identical to the standalone run — only WHERE
+            bytes come from changes)
+  serve     loader-as-a-service daemon: plans for registered tenant
+            runs, stages bytes through one shared oracle-evicted pool
+            [--listen 127.0.0.1:17871] [--pool 4096] (shared pool
+            capacity in samples; 0 disables pooling)
+            [--tenants 1] (exit after N tenant runs complete)
+            [--telemetry PATH] (write the per-tenant feed JSON on exit;
+            also served live over the wire). Prints 'serve: accounting
+            OK' when per-tenant counters sum to the pool totals
   lint      determinism-invariant static analysis over the sources
             [--root DIR] (default rust/src, else src) [--json]
             [--deny] (non-zero exit on any finding not covered by the

@@ -91,6 +91,8 @@ fn run_one(
         resume: None,
         load_only: false,
         io_threads: 0, // auto: SOLAR_IO_THREADS or the machine default
+        plan: None,
+        connect: None,
     };
     let report = train(&tc)?;
     std::fs::create_dir_all(&ctx.out_dir)?;

@@ -20,6 +20,7 @@ pub mod exp;
 pub mod dist;
 pub mod loader;
 pub mod sched;
+pub mod serve;
 pub mod shuffle;
 pub mod storage;
 pub mod train;

@@ -562,6 +562,25 @@ impl FetchPool {
             None => Ok(()),
         }
     }
+
+    /// Fetch an arbitrary wanted-id set: sort + dedup, split into maximal
+    /// contiguous runs (never bridging a shard region), fetch the runs.
+    /// The convenience entry for callers holding wanted ids rather than
+    /// planned chunks — holdout eval, the plan-executing driver's
+    /// fallback staging, and the serve daemon's shared-pool misses.
+    pub fn fetch_ids(
+        &mut self,
+        store: &Arc<dyn SampleStore>,
+        contig: &Contiguity,
+        ids: &[u32],
+        staged: &mut HashMap<u32, Arc<Vec<f32>>>,
+    ) -> Result<()> {
+        let mut sorted = ids.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        let units = contiguous_runs(&sorted, contig);
+        self.fetch(store, &units, staged)
+    }
 }
 
 impl Drop for FetchPool {

@@ -15,8 +15,9 @@ use solar::sched::plan::SchedulePlan;
 use solar::storage::codec::Codec;
 use solar::storage::pfs::{CostModel, SystemTier};
 use solar::storage::store::{open_store, SampleStore};
-use solar::train::driver::{train, FaultKind, TrainConfig};
+use solar::train::driver::{train, FaultKind, ServeTarget, TrainConfig};
 use solar::train::runstate::RunState;
+use solar::util::json::Json;
 use solar::util::timer::Stopwatch;
 use solar::util::{fmt_bytes, fmt_secs};
 
@@ -41,6 +42,7 @@ fn run(argv: &[String]) -> Result<()> {
         "verify-store" => cmd_verify_store(&args),
         "schedule" => cmd_schedule(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "smoke" => {
             let path = args.get_or("hlo", "/tmp/fn_hlo.txt");
             let v = solar::runtime::smoke(&path)?;
@@ -222,13 +224,50 @@ fn cmd_verify_store(args: &Args) -> Result<()> {
 }
 
 fn cmd_schedule(args: &Args) -> Result<()> {
-    let dataset = args.get("dataset").context("--dataset required")?;
     let out = args.get_path("out").context("--out required")?;
+    let loader = args.get_or("loader", "solar");
+    let policy = LoaderPolicy::by_name(&loader).context("unknown loader")?;
+    if let Some(data) = args.get_path("data") {
+        // Store mode: derive the run identity from the store EXACTLY as
+        // `train` does (same template, same defaults), so the emitted
+        // plan's embedded config matches a later `train --plan` against
+        // the same store with the same flags.
+        let store = open_store(&data)?;
+        let holdout = args.get_usize("holdout", 32)?;
+        let n_nodes = args.get_usize("nodes", 2)?;
+        let mut spec = DatasetSpec::paper("cd17").unwrap();
+        spec.id = store.dataset_name().to_string();
+        spec.n_samples = store.n_samples().saturating_sub(holdout);
+        spec.sample_bytes = store.sample_bytes();
+        spec.shape = store.shape().to_vec();
+        let d_buffer = (spec.n_samples * 7 / 10 / n_nodes).max(1);
+        let cfg = RunConfig {
+            spec,
+            n_nodes,
+            local_batch: args.get_usize("batch", 16)?,
+            n_epochs: args.get_usize("epochs", 3)?,
+            seed: args.get_usize("seed", 42)? as u64,
+            buffer_capacity: args.get_usize("buffer", d_buffer)?,
+            cost: CostModel::default(),
+        };
+        let t = Stopwatch::start();
+        let summary = SchedulePlan::compute_to_file(&cfg, &policy, &out)?;
+        println!(
+            "offline schedule (store {}): {} epochs x {} steps x {} nodes in {} (order {:?})",
+            data.display(),
+            cfg.n_epochs,
+            cfg.steps_per_epoch(),
+            cfg.n_nodes,
+            fmt_secs(t.elapsed_s()),
+            summary.epoch_order
+        );
+        println!("plan -> {} ({} PFS samples total)", out.display(), summary.total_pfs_samples);
+        return Ok(());
+    }
+    let dataset = args.get("dataset").context("--dataset or --data required")?;
     let tier = parse_tier(&args.get_or("tier", "medium"))?;
     let scale = args.get_usize("scale", 1000)?;
     let epochs = args.get_usize("epochs", 8)?;
-    let loader = args.get_or("loader", "solar");
-    let policy = LoaderPolicy::by_name(&loader).context("unknown loader")?;
     let spec = DatasetSpec::paper(dataset).context("unknown dataset")?.scaled(scale);
     let mut cfg = RunConfig::for_tier(spec, tier, args.get_usize("batch", 16)?, epochs, args.get_usize("seed", 42)? as u64);
     cfg.buffer_capacity = (cfg.buffer_capacity / scale).max(1);
@@ -264,19 +303,40 @@ fn cmd_train(args: &Args) -> Result<()> {
     // --nodes M` alone is a valid elastic resume. Explicit flags still
     // win — validate_resume rejects any that break the schedule identity.
     let resume = args.get_path("resume").map(|p| RunState::load(&p)).transpose()?;
+    // `--plan FILE` executes a pre-computed schedule artifact: the run
+    // identity comes from the PLAN's config (flags may not contradict
+    // it — the driver validates), with the store supplying the physical
+    // shape the registry-independent fields.
+    let plan = args.get_path("plan").map(|p| SchedulePlan::load(&p)).transpose()?;
+    let connect = args.get("connect").map(str::to_string);
     let mut spec = DatasetSpec::paper("cd17").unwrap();
     spec.id = store.dataset_name().to_string();
     spec.n_samples = store.n_samples().saturating_sub(holdout);
     spec.sample_bytes = store.sample_bytes();
     spec.shape = store.shape().to_vec();
-    let (d_batch, d_epochs, d_seed, d_buffer) = match &resume {
-        Some(rs) => (
+    let (d_batch, d_epochs, d_seed, d_buffer) = match (&resume, &plan) {
+        (Some(rs), _) => (
             rs.global_batch() / n_nodes.max(1),
             rs.n_epochs,
             rs.seed as usize,
             (rs.buffer_capacity * rs.n_nodes).div_ceil(n_nodes.max(1)),
         ),
-        None => (16, 3, 42, (spec.n_samples * 7 / 10 / n_nodes).max(1)),
+        (None, Some(p)) if p.config != Json::Null => (
+            // Schedule knobs default to the plan's own config, so
+            // `--plan FILE` alone executes the artifact it names. Raw
+            // key reads, not RunConfig::from_json — a plan computed
+            // against a store (`schedule --data`) carries the store's
+            // dataset name, which no registry entry needs to match.
+            p.config.req_usize("local_batch")?,
+            p.config.req_usize("n_epochs")?,
+            p.config.req_u64("seed")? as usize,
+            p.config.req_usize("buffer_capacity")?,
+        ),
+        _ => (16, 3, 42, (spec.n_samples * 7 / 10 / n_nodes).max(1)),
+    };
+    let n_nodes = match (&resume, &plan) {
+        (None, Some(p)) if p.config != Json::Null => p.config.req_usize("n_nodes")?,
+        _ => n_nodes,
     };
     let cfg = RunConfig {
         spec,
@@ -338,6 +398,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         resume,
         load_only: args.flag("load-only"),
         io_threads,
+        plan: plan.map(std::sync::Arc::new),
+        connect: connect
+            .map(|addr| ServeTarget { addr, data: data.display().to_string() }),
     };
     println!(
         "training: {} samples, {} nodes x batch {}, {} epochs, loader {}, codec {}, throttle x{}, prefetch {}, io-threads {}{}",
@@ -352,6 +415,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         if tc.io_threads == 0 { "auto".to_string() } else { tc.io_threads.to_string() },
         if tc.load_only { " (load-only: no PJRT, no gradients)" } else { "" }
     );
+    if tc.plan.is_some() {
+        println!("plan: executing a pre-computed schedule artifact (engine bypassed)");
+    }
+    if let Some(t) = &tc.connect {
+        println!("connect: plan + staged bytes streamed from serve daemon at {}", t.addr);
+    }
     if let Some(rs) = &tc.resume {
         println!(
             "resume: from step {} (epoch {}), checkpointed on {} nodes x batch {}{}",
@@ -412,6 +481,53 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("loss curve -> {}", curve.display());
     }
     Ok(())
+}
+
+/// `solar serve` — the multi-tenant plan daemon. Binds, serves until
+/// `--tenants N` runs complete, prints the per-tenant telemetry summary
+/// and the accounting cross-check, then exits (non-zero on mismatch).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use solar::serve::server::{ServeOpts, Server};
+    let listen = args.get_or("listen", "127.0.0.1:17871");
+    let tenants = args.get_usize("tenants", 1)?;
+    let opts = ServeOpts {
+        pool_capacity: args.get_usize("pool", 4096)?,
+        telemetry: args.get_path("telemetry"),
+    };
+    let pool_capacity = opts.pool_capacity;
+    let telemetry = opts.telemetry.clone();
+    let server = Server::bind(&listen, opts)?;
+    println!(
+        "serve: listening on {} (shared pool {} samples, waiting for {} tenant run(s))",
+        server.local_addr()?,
+        pool_capacity,
+        tenants
+    );
+    let feed = server.run_until(tenants)?;
+    if let Some(Json::Arr(ts)) = feed.get("tenants") {
+        for t in ts {
+            println!(
+                "  tenant {} seed {} ({}): {} steps, plan hits {}, pool hits {}, pfs {} ({} staged)",
+                t.req_usize("id")?,
+                t.req_u64("seed")?,
+                t.req_str("policy")?,
+                t.req_usize("steps")?,
+                t.req_usize("plan_hits")?,
+                t.req_usize("pool_hits")?,
+                t.req_usize("pfs_samples")?,
+                fmt_bytes(t.req_u64("staged_bytes")?)
+            );
+        }
+    }
+    if let Some(p) = &telemetry {
+        println!("telemetry -> {}", p.display());
+    }
+    if feed.req_str("accounting")? == "ok" {
+        println!("serve: accounting OK");
+        Ok(())
+    } else {
+        bail!("serve: telemetry accounting mismatch\n{}", feed.to_string_compact())
+    }
 }
 
 fn cmd_lint(args: &Args) -> Result<()> {

@@ -30,6 +30,59 @@ pub struct PlanNodeStep {
     pub hits: usize,
     /// Chunked PFS reads: (lo, hi) sample-id ranges.
     pub chunks: Vec<(u32, u32)>,
+    /// Samples fetched from the PFS this step (excludes hits and
+    /// remote-buffer fetches). Optional in the artifact ("pfs"); absent
+    /// means `samples.len() - hits`, which is exact for every
+    /// non-remote-class policy.
+    pub pfs: usize,
+    /// Buffer-plan delta: sample ids admitted to this node's resident
+    /// buffer after the step ("ins"). Optional in the artifact; absent
+    /// means no delta was recorded (pre-PR-9 plans), which a plan
+    /// *executor* treats as "stage everything, buffer nothing".
+    pub inserted: Vec<u32>,
+    /// Buffer-plan delta: sample ids evicted after the step ("evs").
+    pub evicted: Vec<u32>,
+}
+
+impl PlanNodeStep {
+    /// Capture one node's planned step from the engine's live load —
+    /// the single conversion the materializing scheduler, the plan
+    /// server, and the tests all share.
+    pub fn from_node_load(nl: &crate::loader::engine::NodeStepLoad) -> PlanNodeStep {
+        PlanNodeStep {
+            samples: nl.samples.clone(),
+            hits: nl.hits,
+            chunks: nl.chunks.iter().map(|c| (c.lo, c.hi)).collect(),
+            pfs: nl.pfs_samples,
+            inserted: nl.inserted.clone(),
+            evicted: nl.evicted.clone(),
+        }
+    }
+
+    /// Rehydrate the executable load a plan step describes. Chunk lists
+    /// are deliberately dropped: an executor reading a plan artifact (or
+    /// a serve-protocol step) has no store-region table to pair them
+    /// with, so it batches the staged set into contiguous runs itself —
+    /// same bytes, same schedule, different request framing. The modeled
+    /// request stream (`pfs_reqs`) is likewise empty: the throttle's
+    /// emulated PFS time is a wall-clock concern, never a schedule one.
+    pub fn to_node_load(self) -> crate::loader::engine::NodeStepLoad {
+        let remote = self.samples.len().saturating_sub(self.hits + self.pfs);
+        crate::loader::engine::NodeStepLoad {
+            hits: self.hits,
+            remote,
+            pfs_samples: self.pfs,
+            samples: self.samples,
+            inserted: self.inserted,
+            evicted: self.evicted,
+            ..Default::default()
+        }
+    }
+
+    /// This node-step as artifact JSON (the exact on-disk schema).
+    pub fn to_json(&self) -> Json {
+        node_step_json(self)
+    }
 }
 
 /// What the streaming scheduler returns in memory — the plan itself goes
@@ -70,7 +123,27 @@ pub(crate) fn node_steps_from_json(step: &Json) -> Result<Vec<PlanNodeStep>> {
             }
             chunks.push((pair[0], pair[1]));
         }
-        node_steps.push(PlanNodeStep { samples, hits, chunks });
+        // PR-9 buffer-delta / source-split fields; all optional so every
+        // pre-existing artifact still loads.
+        let pfs = match ns.get("pfs") {
+            Some(v) => v.as_usize().context("pfs is not a non-negative integer")?,
+            None => samples.len() - hits,
+        };
+        if hits + pfs > samples.len() {
+            bail!(
+                "malformed node step: hits ({hits}) + pfs ({pfs}) exceeds batch size ({})",
+                samples.len()
+            );
+        }
+        let inserted = match ns.get("ins") {
+            Some(v) => v.arr_as_u32().context("ins is not an array of sample ids")?,
+            None => Vec::new(),
+        };
+        let evicted = match ns.get("evs") {
+            Some(v) => v.arr_as_u32().context("evs is not an array of sample ids")?,
+            None => Vec::new(),
+        };
+        node_steps.push(PlanNodeStep { samples, hits, chunks, pfs, inserted, evicted });
     }
     Ok(node_steps)
 }
@@ -78,15 +151,31 @@ pub(crate) fn node_steps_from_json(step: &Json) -> Result<Vec<PlanNodeStep>> {
 /// JSON object for one node's step — the single source of truth for the
 /// node-step schema, shared by the materialized and the streamed writers
 /// so the two artifacts cannot drift.
-fn node_step_json(samples: &[u32], hits: usize, chunks: impl Iterator<Item = (u32, u32)>) -> Json {
+fn node_step_json(ns: &PlanNodeStep) -> Json {
     let mut o = Json::obj();
-    o.set("samples", Json::arr_u32(samples))
-        .set("hits", Json::Num(hits as f64))
+    o.set("samples", Json::arr_u32(&ns.samples))
+        .set("hits", Json::Num(ns.hits as f64))
         .set(
             "chunks",
-            Json::Arr(chunks.map(|(lo, hi)| Json::arr_u32(&[lo, hi])).collect()),
-        );
+            Json::Arr(ns.chunks.iter().map(|&(lo, hi)| Json::arr_u32(&[lo, hi])).collect()),
+        )
+        .set("pfs", Json::Num(ns.pfs as f64))
+        .set("ins", Json::arr_u32(&ns.inserted))
+        .set("evs", Json::arr_u32(&ns.evicted));
     o
+}
+
+/// Emit a `[1,2,3]` id array straight to the writer — the streamed
+/// counterpart of `Json::arr_u32(..).to_string_compact()`.
+fn write_id_array(out: &mut dyn Write, ids: &[u32]) -> std::io::Result<()> {
+    out.write_all(b"[")?;
+    for (i, &x) in ids.iter().enumerate() {
+        if i > 0 {
+            out.write_all(b",")?;
+        }
+        write!(out, "{x}")?;
+    }
+    out.write_all(b"]")
 }
 
 /// Fully materialized plan.
@@ -119,9 +208,12 @@ impl SchedulePlan {
                     .nodes
                     .into_iter()
                     .map(|nl| PlanNodeStep {
+                        chunks: nl.chunks.iter().map(|c| (c.lo, c.hi)).collect(),
                         samples: nl.samples,
                         hits: nl.hits,
-                        chunks: nl.chunks.iter().map(|c| (c.lo, c.hi)).collect(),
+                        pfs: nl.pfs_samples,
+                        inserted: nl.inserted,
+                        evicted: nl.evicted,
                     })
                     .collect(),
             );
@@ -186,8 +278,9 @@ impl SchedulePlan {
                 // Direct byte emission, no per-step Json tree or String:
                 // at full scale this loop runs tens of millions of times.
                 // Key order matches the BTreeMap-backed [`node_step_json`]
-                // (chunks < hits < samples); drift between the two writers
-                // is caught by the byte-identity test.
+                // (chunks < evs < hits < ins < pfs < samples); drift
+                // between the two writers is caught by the byte-identity
+                // test.
                 write!(out, "{{\"chunks\":[")?;
                 for (i, c) in nl.chunks.iter().enumerate() {
                     if i > 0 {
@@ -195,14 +288,13 @@ impl SchedulePlan {
                     }
                     write!(out, "[{},{}]", c.lo, c.hi)?;
                 }
-                write!(out, "],\"hits\":{},\"samples\":[", nl.hits)?;
-                for (i, &x) in nl.samples.iter().enumerate() {
-                    if i > 0 {
-                        out.write_all(b",")?;
-                    }
-                    write!(out, "{x}")?;
-                }
-                out.write_all(b"]}")?;
+                write!(out, "],\"evs\":")?;
+                write_id_array(out, &nl.evicted)?;
+                write!(out, ",\"hits\":{},\"ins\":", nl.hits)?;
+                write_id_array(out, &nl.inserted)?;
+                write!(out, ",\"pfs\":{},\"samples\":", nl.pfs_samples)?;
+                write_id_array(out, &nl.samples)?;
+                out.write_all(b"}")?;
             }
             out.write_all(b"]")?;
             if rs.epoch_end {
@@ -272,19 +364,7 @@ impl SchedulePlan {
                 Json::Arr(
                     epoch
                         .iter()
-                        .map(|step| {
-                            Json::Arr(
-                                step.iter()
-                                    .map(|ns| {
-                                        node_step_json(
-                                            &ns.samples,
-                                            ns.hits,
-                                            ns.chunks.iter().copied(),
-                                        )
-                                    })
-                                    .collect(),
-                            )
-                        })
+                        .map(|step| Json::Arr(step.iter().map(node_step_json).collect()))
                         .collect(),
                 )
             })
@@ -609,6 +689,32 @@ mod tests {
         // Truncation errors instead of panicking.
         std::fs::write(&path, &plan_json_with_chunks("[[1,2]]")[..30]).unwrap();
         assert!(SchedulePlan::load(&path).is_err());
+    }
+
+    #[test]
+    fn source_fields_roundtrip_and_default_for_legacy_artifacts() {
+        // Legacy artifact without pfs/ins/evs: the defaults apply (all
+        // non-hits from PFS, no recorded buffer delta).
+        let src = r#"{"config":null,"epoch_order":[0],"loader":"solar","steps":[[[{"chunks":[],"hits":1,"samples":[1,2]}]]]}"#;
+        let plan = SchedulePlan::from_json(&Json::parse(src).unwrap()).unwrap();
+        let ns = &plan.steps[0][0][0];
+        assert_eq!(ns.pfs, 1);
+        assert!(ns.inserted.is_empty() && ns.evicted.is_empty());
+        // Computed plans carry buffer deltas and roundtrip them exactly.
+        let plan = SchedulePlan::compute(&tiny_cfg(), &crate::loader::LoaderPolicy::solar());
+        assert!(
+            plan.steps.iter().flatten().flatten().any(|ns| !ns.inserted.is_empty()),
+            "a buffered policy must record insertions"
+        );
+        let plan2 = SchedulePlan::from_json(&plan.to_json()).unwrap();
+        for (a, b) in
+            plan.steps.iter().flatten().flatten().zip(plan2.steps.iter().flatten().flatten())
+        {
+            assert_eq!(a, b);
+        }
+        // hits + pfs beyond the batch is rejected like bad hits alone.
+        let bad = r#"{"config":null,"epoch_order":[0],"loader":"solar","steps":[[[{"chunks":[],"hits":1,"pfs":2,"samples":[1,2]}]]]}"#;
+        assert!(SchedulePlan::from_json(&Json::parse(bad).unwrap()).is_err());
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Client side of the loader service: what `solar train --connect ADDR`
+//! speaks.
+//!
+//! Two client roles mirror the driver's two thread roles:
+//!
+//! * [`TenantClient`] — the coordinator's handle: registers the run
+//!   identity, then streams plan steps one at a time (the remote
+//!   counterpart of `LoaderEngine::plan_run`), and reports completion.
+//! * [`NodeClient`] — one per node fetch stage: pulls the staged bytes
+//!   for each (step, node) and the holdout eval batch.
+//!
+//! Each client owns its own connection, so a node's byte stream never
+//! head-of-line-blocks the coordinator's plan stream. All frames go
+//! through [`super::proto`]; a server-reported `error` frame surfaces
+//! as a descriptive `anyhow` error with the server's message.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use crate::loader::engine::{RunStep, StepLoad};
+use crate::sched::plan::{node_steps_from_json, PlanNodeStep};
+use crate::serve::proto::{self, Frame};
+use crate::serve::tenant::TenantSpec;
+use crate::util::json::Json;
+
+/// Connection retry budget: the daemon may still be binding when the
+/// first tenant starts (CI launches both at once).
+const CONNECT_ATTEMPTS: usize = 40;
+const CONNECT_BACKOFF_MS: u64 = 250;
+
+/// One framed request/response connection to the daemon.
+pub struct Conn {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+}
+
+impl Conn {
+    /// Connect, retrying while the daemon comes up.
+    pub fn connect(addr: &str) -> Result<Conn> {
+        let mut last: Option<std::io::Error> = None;
+        for _ in 0..CONNECT_ATTEMPTS {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    let reader = stream.try_clone().context("clone serve connection")?;
+                    return Ok(Conn { r: BufReader::new(reader), w: BufWriter::new(stream) });
+                }
+                Err(e) => {
+                    last = Some(e);
+                    std::thread::sleep(std::time::Duration::from_millis(CONNECT_BACKOFF_MS));
+                }
+            }
+        }
+        bail!(
+            "serve daemon at {addr} unreachable after {CONNECT_ATTEMPTS} attempts: {}",
+            last.map(|e| e.to_string()).unwrap_or_else(|| "no attempt made".to_string())
+        )
+    }
+
+    /// One round trip. A server `error` frame becomes an `Err` carrying
+    /// the server's message.
+    pub fn request(&mut self, header: &Json, payload: &[u8]) -> Result<Frame> {
+        proto::write_frame(&mut self.w, header, payload)?;
+        let frame = proto::read_frame(&mut self.r)?
+            .context("serve daemon closed the connection mid-request")?;
+        if frame.kind()? == "error" {
+            bail!("serve daemon: {}", frame.header.req_str("message").unwrap_or("(no message)"));
+        }
+        Ok(frame)
+    }
+}
+
+/// The coordinator's tenant handle: plan stream + lifecycle.
+pub struct TenantClient {
+    conn: Conn,
+    pub tenant: u32,
+    /// Total steps the daemon planned for this run.
+    pub n_steps: usize,
+    next: usize,
+}
+
+impl TenantClient {
+    /// Register the run identity; the daemon replies once it has
+    /// recomputed the full plan and announced it to the shared pool.
+    pub fn register(addr: &str, spec: &TenantSpec) -> Result<TenantClient> {
+        let mut conn = Conn::connect(addr)?;
+        let mut h = proto::msg("register");
+        h.set("spec", spec.to_json());
+        let f = conn.request(&h, &[])?;
+        if f.kind()? != "registered" {
+            bail!("unexpected registration reply '{}'", f.kind()?);
+        }
+        Ok(TenantClient {
+            conn,
+            tenant: f.header.req_usize("tenant")? as u32,
+            n_steps: f.header.req_usize("steps")?,
+            next: 0,
+        })
+    }
+
+    /// Next planned step, in run order — the remote `plan_run` cursor.
+    /// `Ok(None)` when the plan is exhausted.
+    pub fn next_step(&mut self) -> Result<Option<RunStep>> {
+        let mut h = proto::msg("next");
+        h.set("step", Json::Num(self.next as f64))
+            .set("tenant", Json::Num(self.tenant as f64));
+        let f = self.conn.request(&h, &[])?;
+        match f.kind()? {
+            "end" => Ok(None),
+            "step" => {
+                let nodes = node_steps_from_json(
+                    f.header.get("nodes").context("step frame missing nodes")?,
+                )?;
+                let rs = RunStep {
+                    epoch_pos: f.header.req_usize("epoch_pos")?,
+                    step: f.header.req_usize("step")?,
+                    epoch_end: f
+                        .header
+                        .get("epoch_end")
+                        .and_then(Json::as_bool)
+                        .context("step frame missing epoch_end")?,
+                    load: StepLoad {
+                        nodes: nodes.into_iter().map(PlanNodeStep::to_node_load).collect(),
+                    },
+                };
+                self.next += 1;
+                Ok(Some(rs))
+            }
+            k => bail!("unexpected plan reply '{k}'"),
+        }
+    }
+
+    /// Tell the daemon this tenant's run is complete (unblocks the
+    /// daemon's `run_until` accounting).
+    pub fn finish(&mut self) -> Result<()> {
+        let mut h = proto::msg("done");
+        h.set("tenant", Json::Num(self.tenant as f64));
+        let f = self.conn.request(&h, &[])?;
+        if f.kind()? != "ok" {
+            bail!("unexpected done reply '{}'", f.kind()?);
+        }
+        Ok(())
+    }
+
+    /// Fetch the daemon's live telemetry feed (testing/monitoring hook).
+    pub fn telemetry(&mut self) -> Result<Json> {
+        let f = self.conn.request(&proto::msg("telemetry"), &[])?;
+        f.header.get("feed").cloned().context("telemetry reply missing feed")
+    }
+}
+
+/// One node fetch stage's byte stream.
+pub struct NodeClient {
+    conn: Conn,
+    tenant: u32,
+    node: usize,
+}
+
+impl NodeClient {
+    pub fn connect(addr: &str, tenant: u32, node: usize) -> Result<NodeClient> {
+        Ok(NodeClient { conn: Conn::connect(addr)?, tenant, node })
+    }
+
+    fn decode_staged(f: &Frame) -> Result<HashMap<u32, Arc<Vec<f32>>>> {
+        if f.kind()? != "staged" {
+            bail!("unexpected fetch reply '{}'", f.kind()?);
+        }
+        let ids = f
+            .header
+            .get("ids")
+            .and_then(Json::arr_as_u32)
+            .context("staged frame missing ids")?;
+        Ok(proto::decode_samples(&ids, &f.payload)?.into_iter().collect())
+    }
+
+    /// The staged bytes for this node's planned step `step`: exactly the
+    /// (samples ∪ inserted) minus plan-resident set, keyed by id.
+    pub fn fetch_step(&mut self, step: usize) -> Result<HashMap<u32, Arc<Vec<f32>>>> {
+        let mut h = proto::msg("fetch");
+        h.set("node", Json::Num(self.node as f64))
+            .set("step", Json::Num(step as f64))
+            .set("tenant", Json::Num(self.tenant as f64));
+        let f = self.conn.request(&h, &[])?;
+        Self::decode_staged(&f)
+    }
+
+    /// Arbitrary ids (the holdout eval batch), served outside the pool.
+    pub fn fetch_ids(&mut self, ids: &[u32]) -> Result<HashMap<u32, Arc<Vec<f32>>>> {
+        let mut h = proto::msg("eval");
+        h.set("ids", Json::arr_u32(ids)).set("tenant", Json::Num(self.tenant as f64));
+        let f = self.conn.request(&h, &[])?;
+        Self::decode_staged(&f)
+    }
+}

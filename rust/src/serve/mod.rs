@@ -1,0 +1,32 @@
+//! Loader-as-a-service: the `solar serve` daemon and its clients.
+//!
+//! One daemon process plans for MANY tenant runs at once. Each tenant
+//! registers its run identity (dataset + policy + seed + shape knobs);
+//! the daemon recomputes that tenant's deterministic plan — the exact
+//! plan the tenant would compute standalone — then streams it back step
+//! by step and serves the staged bytes, fronted by ONE shared resident
+//! pool with cross-tenant Belady admission/eviction ([`pool`]).
+//!
+//! The invariant that makes this safe is SOLAR's core one: the schedule
+//! is a pure function of (dataset, policy, seed, shape), fixed before
+//! the first byte moves. Serving a tenant from the shared pool changes
+//! only WHERE its bytes come from (pool hit vs PFS read), never which
+//! samples feed which step — params, losses, and schedule fingerprints
+//! are bit-identical to a standalone run (integration-tested).
+//!
+//! Module map:
+//! * [`proto`] — the versioned, length-prefixed, checksummed wire frame
+//!   (dependency-free; `util::json` headers + raw f32 payloads);
+//! * [`transport`] — the fetch→stage handoff as a trait (in-process
+//!   channels today; the seam a socket-backed lane plugs into);
+//! * [`pool`] — the shared sample pool with the cross-tenant oracle;
+//! * [`tenant`] — registration specs and per-tenant server state;
+//! * [`server`] — the daemon: accept loop, tenant registry, fetch path;
+//! * [`client`] — `solar train --connect` side: plan + byte clients.
+
+pub mod client;
+pub mod pool;
+pub mod proto;
+pub mod server;
+pub mod tenant;
+pub mod transport;

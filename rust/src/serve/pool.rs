@@ -1,0 +1,336 @@
+//! The serve daemon's shared resident buffer: one sample pool for every
+//! tenant, evicted by a *cross-tenant* Belady oracle.
+//!
+//! Every tenant's plan is fully known before its first byte moves (the
+//! SOLAR invariant), so the daemon holds the complete future access
+//! sequence of every registered run. That turns cache management from a
+//! heuristic into the textbook-optimal policy, across tenants:
+//!
+//! * **Eviction** — evict the resident sample whose next use (by ANY
+//!   tenant) is farthest in the future (Belady / MIN).
+//! * **Admission bypass** — a fetched sample whose next use is farther
+//!   than the farthest-next-use resident would be evicted before that
+//!   use arrives; admitting it only displaces a better entry. Skip it.
+//!
+//! Positions are opaque `u64`s supplied by the caller; the server
+//! interleaves tenants into one global timeline by lane-striding step
+//! numbers (see `serve::server`). The pool never inspects them beyond
+//! ordering. A key is `(store_id, sample_id)` so tenants on different
+//! datasets never alias.
+//!
+//! Determinism: all state lives in `BTreeMap`/`BTreeSet`, counters are
+//! plain integers, and the policy consults only announced positions —
+//! the pool's decisions are a pure function of the announce/request
+//! sequence, independent of wall clocks or thread interleaving.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use crate::util::json::Json;
+
+/// Pool key: `(store_id, sample_id)` — store-qualified so tenants on
+/// different datasets never share bytes by accident.
+pub type Key = (u32, u32);
+
+struct Resident {
+    bytes: Arc<Vec<f32>>,
+    /// Next announced use across all tenants (`u64::MAX` = never again).
+    next: u64,
+}
+
+/// Byte-accounting + policy counters, all deterministic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Requests served from the pool.
+    pub hits: u64,
+    /// Requests the pool could not serve (caller reads the PFS).
+    pub misses: u64,
+    /// Fetched samples admitted as residents.
+    pub admitted: u64,
+    /// Residents displaced by a nearer-next-use sample.
+    pub evicted: u64,
+    /// Fetched samples NOT admitted (no future use, or the Belady test
+    /// says every current resident is reused sooner).
+    pub bypassed: u64,
+}
+
+/// The shared, oracle-evicted sample cache.
+pub struct SharedPool {
+    /// Max resident samples (0 disables the pool: every admit bypasses).
+    capacity: usize,
+    resident: BTreeMap<Key, Resident>,
+    /// `(next_use, key)` mirror of `resident` — `next_back()` is the
+    /// Belady victim, and the admission test reads it without a scan.
+    queue: BTreeSet<(u64, Key)>,
+    /// All announced-but-unconsumed future positions per key. A set, not
+    /// a deque: tenants announce in their own plan order, so positions
+    /// arrive interleaved, never globally sorted.
+    future: BTreeMap<Key, BTreeSet<u64>>,
+    stats: PoolStats,
+}
+
+impl SharedPool {
+    pub fn new(capacity: usize) -> SharedPool {
+        SharedPool {
+            capacity,
+            resident: BTreeMap::new(),
+            queue: BTreeSet::new(),
+            future: BTreeMap::new(),
+            stats: PoolStats::default(),
+        }
+    }
+
+    /// Declare one future access of `key` at global position `pos`.
+    /// Called for every (sample, step) of a tenant's plan at
+    /// registration. Duplicate announcements coalesce. If `key` is
+    /// already resident with a farther next-use, the new position
+    /// tightens it — late-registering tenants improve the oracle.
+    pub fn announce(&mut self, key: Key, pos: u64) {
+        self.future.entry(key).or_default().insert(pos);
+        if let Some(r) = self.resident.get_mut(&key) {
+            if pos < r.next {
+                self.queue.remove(&(r.next, key));
+                self.queue.insert((pos, key));
+                r.next = pos;
+            }
+        }
+    }
+
+    /// Consume the announced access of `key` at `pos` and look the bytes
+    /// up. `Some` is a pool hit (the resident's next-use advances to the
+    /// following announcement); `None` means the caller must fetch —
+    /// and should [`admit`](Self::admit) what it fetched.
+    pub fn request(&mut self, key: Key, pos: u64) -> Option<Arc<Vec<f32>>> {
+        if let Some(s) = self.future.get_mut(&key) {
+            s.remove(&pos);
+            if s.is_empty() {
+                self.future.remove(&key);
+            }
+        }
+        let nu = self.next_use(key);
+        match self.resident.get_mut(&key) {
+            Some(r) => {
+                self.queue.remove(&(r.next, key));
+                self.queue.insert((nu, key));
+                r.next = nu;
+                self.stats.hits += 1;
+                Some(r.bytes.clone())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Offer freshly fetched bytes to the pool. Belady admission: skip
+    /// if the sample is never used again, or if the pool is full and
+    /// even the worst resident is reused sooner (admitting would only
+    /// displace a better entry). Otherwise evict the farthest-next-use
+    /// resident if needed and admit.
+    pub fn admit(&mut self, key: Key, bytes: Arc<Vec<f32>>) {
+        if self.resident.contains_key(&key) {
+            return; // already resident (concurrent tenants raced a miss)
+        }
+        let nu = self.next_use(key);
+        if nu == u64::MAX || self.capacity == 0 {
+            self.stats.bypassed += 1;
+            return;
+        }
+        if self.resident.len() >= self.capacity {
+            let &(worst_next, worst_key) = match self.queue.iter().next_back() {
+                Some(w) => w,
+                None => {
+                    self.stats.bypassed += 1; // capacity 0 handled above;
+                    return; // unreachable in practice, but never panic
+                }
+            };
+            if worst_next <= nu {
+                self.stats.bypassed += 1;
+                return;
+            }
+            self.queue.remove(&(worst_next, worst_key));
+            self.resident.remove(&worst_key);
+            self.stats.evicted += 1;
+        }
+        self.queue.insert((nu, key));
+        self.resident.insert(key, Resident { bytes, next: nu });
+        self.stats.admitted += 1;
+    }
+
+    fn next_use(&self, key: Key) -> u64 {
+        self.future
+            .get(&key)
+            .and_then(|s| s.iter().next().copied())
+            .unwrap_or(u64::MAX)
+    }
+
+    pub fn len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.resident.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// Stats as a deterministic JSON object (the telemetry feed's
+    /// `pool` block).
+    pub fn stats_json(&self) -> Json {
+        let s = self.stats;
+        let mut o = Json::obj();
+        o.set("admitted", Json::Num(s.admitted as f64))
+            .set("bypassed", Json::Num(s.bypassed as f64))
+            .set("capacity", Json::Num(self.capacity as f64))
+            .set("evicted", Json::Num(s.evicted as f64))
+            .set("hits", Json::Num(s.hits as f64))
+            .set("misses", Json::Num(s.misses as f64))
+            .set("resident", Json::Num(self.resident.len() as f64));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bytes(v: f32) -> Arc<Vec<f32>> {
+        Arc::new(vec![v])
+    }
+
+    #[test]
+    fn miss_fetch_admit_then_hit() {
+        let mut p = SharedPool::new(4);
+        let k = (0, 7);
+        p.announce(k, 10);
+        p.announce(k, 20);
+        assert!(p.request(k, 10).is_none(), "first access misses");
+        p.admit(k, bytes(7.0));
+        assert_eq!(p.request(k, 20).as_deref(), Some(&vec![7.0]), "second access hits");
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses, s.admitted), (1, 1, 1));
+    }
+
+    #[test]
+    fn no_future_use_bypasses_admission() {
+        let mut p = SharedPool::new(4);
+        let k = (0, 1);
+        p.announce(k, 5);
+        assert!(p.request(k, 5).is_none());
+        p.admit(k, bytes(1.0)); // no remaining announcements
+        assert_eq!(p.len(), 0);
+        assert_eq!(p.stats().bypassed, 1);
+    }
+
+    #[test]
+    fn eviction_picks_the_farthest_next_use_across_tenants() {
+        let mut p = SharedPool::new(2);
+        // Next uses after the first consumption: k1 → 1100 (then 2000),
+        // k2 → 1200, k3 → 1300.
+        for (id, pos) in [(1u32, 100u64), (2, 200), (3, 300)] {
+            let k = (0, id);
+            p.announce(k, pos);
+            p.announce(k, pos + 1000); // keep a future use after consumption
+        }
+        p.announce((0, 1), 2000);
+        assert!(p.request((0, 1), 100).is_none());
+        p.admit((0, 1), bytes(1.0));
+        assert!(p.request((0, 2), 200).is_none());
+        p.admit((0, 2), bytes(2.0));
+        // Key 3's post-fetch next use is 1300 — farther than both
+        // residents (1100, 1200): Belady admission bypasses it.
+        assert!(p.request((0, 3), 300).is_none());
+        p.admit((0, 3), bytes(3.0));
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.stats().bypassed, 1);
+        // Key 1's hit advances its next use to 2000 — it is now the
+        // farthest resident.
+        assert!(p.request((0, 1), 1100).is_some(), "key 1 stayed resident");
+        // A late announcement makes key 3 nearer (1150) than key 1
+        // (2000): admitting 3 evicts 1, the Belady victim.
+        p.announce((0, 3), 1150);
+        p.admit((0, 3), bytes(3.0));
+        assert_eq!(p.stats().evicted, 1);
+        assert!(p.request((0, 3), 1150).is_some());
+        assert!(p.request((0, 2), 1200).is_some(), "nearer resident survived");
+        assert!(p.request((0, 1), 2000).is_none(), "key 1 was the Belady victim");
+    }
+
+    #[test]
+    fn announce_tightens_a_resident_next_use() {
+        let mut p = SharedPool::new(2);
+        let k = (0, 9);
+        p.announce(k, 10);
+        p.announce(k, 900);
+        assert!(p.request(k, 10).is_none());
+        p.admit(k, bytes(9.0)); // resident with next = 900
+        // A late tenant announces an earlier reuse: the queue re-sorts.
+        p.announce(k, 50);
+        // Fill the pool and offer a key with next use 100: the resident's
+        // tightened next (50) beats it, so the victim must be the OTHER
+        // entry, not key 9.
+        let k2 = (0, 8);
+        p.announce(k2, 400);
+        p.announce(k2, 401);
+        assert!(p.request(k2, 400).is_none());
+        p.admit(k2, bytes(8.0)); // resident with next = 401
+        let k3 = (0, 7);
+        p.announce(k3, 100);
+        p.announce(k3, 101);
+        assert!(p.request(k3, 100).is_none());
+        p.admit(k3, bytes(7.0));
+        assert!(p.request(k, 50).is_some(), "tightened key survived");
+        assert!(p.request(k3, 101).is_some(), "nearer key admitted");
+        assert!(p.request(k2, 401).is_none(), "farthest key evicted");
+    }
+
+    #[test]
+    fn store_qualified_keys_never_alias() {
+        let mut p = SharedPool::new(4);
+        p.announce((0, 5), 10);
+        p.announce((1, 5), 20);
+        p.announce((0, 5), 30);
+        p.announce((1, 5), 40);
+        assert!(p.request((0, 5), 10).is_none());
+        p.admit((0, 5), bytes(0.5));
+        assert!(p.request((1, 5), 20).is_none(), "same sample id, other store: miss");
+        p.admit((1, 5), bytes(1.5));
+        assert_eq!(p.request((0, 5), 30).as_deref(), Some(&vec![0.5]));
+        assert_eq!(p.request((1, 5), 40).as_deref(), Some(&vec![1.5]));
+    }
+
+    #[test]
+    fn zero_capacity_disables_the_pool() {
+        let mut p = SharedPool::new(0);
+        let k = (0, 1);
+        p.announce(k, 1);
+        p.announce(k, 2);
+        assert!(p.request(k, 1).is_none());
+        p.admit(k, bytes(1.0));
+        assert_eq!(p.len(), 0);
+        assert!(p.request(k, 2).is_none());
+        assert_eq!(p.stats().bypassed, 1);
+    }
+
+    #[test]
+    fn duplicate_announcements_coalesce() {
+        let mut p = SharedPool::new(4);
+        let k = (0, 3);
+        p.announce(k, 10);
+        p.announce(k, 10);
+        p.announce(k, 20);
+        assert!(p.request(k, 10).is_none());
+        p.admit(k, bytes(3.0));
+        // The duplicate at 10 was consumed with the first request; the
+        // resident's next use is 20, so it survives a full-pool squeeze
+        // against a farther key.
+        assert_eq!(p.request(k, 20).as_deref(), Some(&vec![3.0]));
+    }
+}

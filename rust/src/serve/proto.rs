@@ -1,0 +1,415 @@
+//! Length-prefixed, versioned, checksummed frames for the loader service.
+//!
+//! Same discipline as the `SOLARRUN` checkpoint format (`train::runstate`),
+//! adapted to a stream: magic + version up front so a mismatched peer fails
+//! immediately, an explicit total length so the reader never over-reads,
+//! a JSON header (via `util::json`, dependency-free and deterministic:
+//! BTreeMap keys serialize sorted) describing the message, an opaque binary
+//! payload for bulk bytes (staged samples), and an FNV-1a trailer over
+//! everything length-covered so torn or corrupted frames are *clean errors*,
+//! never panics and never silently wrong bytes.
+//!
+//! ```text
+//! [0..8)      magic  b"SOLARSRV"
+//! [8..12)     u32 LE protocol version (= 1)
+//! [12..20)    u64 LE total frame length L (the whole frame, magic..checksum)
+//! [20..28)    u64 LE header length H
+//! [28..28+H)  compact JSON header (UTF-8)
+//! [28+H..L-8) payload bytes
+//! [L-8..L)    u64 LE FNV-1a over bytes [8..L-8)
+//! ```
+//!
+//! The checksum deliberately skips the magic (a corrupted magic already
+//! fails the magic check) and covers version, lengths, header, and payload
+//! — exactly the `SOLARRUN` trailer convention.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+use crate::train::runstate::fnv1a;
+use crate::util::json::Json;
+
+pub const MAGIC: &[u8; 8] = b"SOLARSRV";
+pub const VERSION: u32 = 1;
+/// Fixed bytes before the header: magic (8) + version (4) + total length
+/// (8) + header length (8).
+pub const PREFIX: usize = 28;
+/// Trailing checksum bytes.
+pub const TRAILER: usize = 8;
+/// Hard ceiling on a single frame (1 GiB). A declared length beyond this
+/// is rejected *before* any allocation, so a garbage or hostile length
+/// field cannot OOM the server.
+pub const MAX_FRAME: u64 = 1 << 30;
+
+/// One decoded frame: a JSON header plus an opaque payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub header: Json,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Message kind — every header carries a `"type"` key.
+    pub fn kind(&self) -> Result<&str> {
+        self.header.req_str("type").context("frame header missing type")
+    }
+}
+
+/// A header skeleton with the mandatory `"type"` key set.
+pub fn msg(kind: &str) -> Json {
+    let mut h = Json::obj();
+    h.set("type", Json::Str(kind.to_string()));
+    h
+}
+
+/// Encode one frame to bytes.
+pub fn encode_frame(header: &Json, payload: &[u8]) -> Vec<u8> {
+    let htext = header.to_string_compact();
+    let hbytes = htext.as_bytes();
+    let total = PREFIX + hbytes.len() + payload.len() + TRAILER;
+    let mut out = Vec::with_capacity(total);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(total as u64).to_le_bytes());
+    out.extend_from_slice(&(hbytes.len() as u64).to_le_bytes());
+    out.extend_from_slice(hbytes);
+    out.extend_from_slice(payload);
+    let sum = fnv1a(&out[8..total - TRAILER]);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Decode one frame from an exact byte buffer (the whole buffer must be
+/// the frame). Every malformation — truncation, bad magic, version skew,
+/// lying lengths, bit rot — is a descriptive error.
+pub fn decode_frame(bytes: &[u8]) -> Result<Frame> {
+    if bytes.len() < PREFIX + TRAILER {
+        bail!("truncated serve frame: {} bytes, need at least {}", bytes.len(), PREFIX + TRAILER);
+    }
+    if &bytes[0..8] != MAGIC {
+        bail!("bad serve frame magic (not a SOLARSRV stream)");
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().context("version field")?);
+    if version != VERSION {
+        bail!("serve protocol version skew: frame is v{version}, this build speaks v{VERSION}");
+    }
+    let total = u64::from_le_bytes(bytes[12..20].try_into().context("length field")?);
+    if total > MAX_FRAME {
+        bail!("serve frame length {total} exceeds the {MAX_FRAME}-byte frame ceiling");
+    }
+    if total != bytes.len() as u64 {
+        bail!("serve frame length mismatch: declared {total}, got {} bytes", bytes.len());
+    }
+    let want = fnv1a(&bytes[8..bytes.len() - TRAILER]);
+    let got = u64::from_le_bytes(bytes[bytes.len() - TRAILER..].try_into().context("checksum")?);
+    if want != got {
+        bail!("serve frame checksum mismatch (corrupted or torn frame)");
+    }
+    let hlen = u64::from_le_bytes(bytes[20..28].try_into().context("header length field")?);
+    let body = bytes.len() - PREFIX - TRAILER;
+    if hlen > body as u64 {
+        bail!("serve frame header length {hlen} exceeds frame body ({body} bytes)");
+    }
+    let hlen = hlen as usize;
+    let htext =
+        std::str::from_utf8(&bytes[PREFIX..PREFIX + hlen]).context("frame header not UTF-8")?;
+    let header = Json::parse(htext).context("frame header not valid JSON")?;
+    Ok(Frame { header, payload: bytes[PREFIX + hlen..bytes.len() - TRAILER].to_vec() })
+}
+
+/// Write one frame.
+pub fn write_frame(w: &mut dyn Write, header: &Json, payload: &[u8]) -> Result<()> {
+    let bytes = encode_frame(header, payload);
+    w.write_all(&bytes).context("write serve frame")?;
+    w.flush().context("flush serve frame")
+}
+
+/// Read one frame from a stream. `Ok(None)` on a clean EOF *exactly at a
+/// frame boundary*; EOF anywhere inside a frame is a truncation error.
+/// The declared length is validated against [`MAX_FRAME`] before any
+/// buffer is allocated.
+pub fn read_frame(r: &mut dyn Read) -> Result<Option<Frame>> {
+    let mut prefix = [0u8; PREFIX];
+    // First byte decides clean-EOF vs truncation.
+    let mut got = 0usize;
+    while got < PREFIX {
+        let n = r.read(&mut prefix[got..]).context("read serve frame prefix")?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("truncated serve frame: EOF after {got} of {PREFIX} prefix bytes");
+        }
+        got += n;
+    }
+    if &prefix[0..8] != MAGIC {
+        bail!("bad serve frame magic (not a SOLARSRV stream)");
+    }
+    let version = u32::from_le_bytes(prefix[8..12].try_into().context("version field")?);
+    if version != VERSION {
+        bail!("serve protocol version skew: frame is v{version}, this build speaks v{VERSION}");
+    }
+    let total = u64::from_le_bytes(prefix[12..20].try_into().context("length field")?);
+    if total > MAX_FRAME {
+        bail!("serve frame length {total} exceeds the {MAX_FRAME}-byte frame ceiling");
+    }
+    if (total as usize) < PREFIX + TRAILER {
+        bail!("serve frame length {total} shorter than the fixed layout");
+    }
+    let mut bytes = prefix.to_vec();
+    bytes.resize(total as usize, 0);
+    r.read_exact(&mut bytes[PREFIX..]).context("read serve frame body (truncated?)")?;
+    decode_frame(&bytes)
+}
+
+/// Encode a staged-sample payload: each id's f32 record, concatenated LE
+/// in the order of `ids`.
+pub fn encode_samples(ids: &[u32], get: impl Fn(u32) -> std::sync::Arc<Vec<f32>>) -> Vec<u8> {
+    let mut out = Vec::new();
+    for &id in ids {
+        for v in get(id).iter() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a staged-sample payload produced by [`encode_samples`]: splits
+/// `payload` into `ids.len()` equal f32 records.
+pub fn decode_samples(
+    ids: &[u32],
+    payload: &[u8],
+) -> Result<Vec<(u32, std::sync::Arc<Vec<f32>>)>> {
+    if ids.is_empty() {
+        if !payload.is_empty() {
+            bail!("staged payload carries {} bytes but no ids", payload.len());
+        }
+        return Ok(Vec::new());
+    }
+    if payload.len() % 4 != 0 || payload.len() % ids.len() != 0 {
+        bail!("staged payload of {} bytes does not split into {} f32 records", payload.len(), ids.len());
+    }
+    let rec = payload.len() / ids.len();
+    if rec % 4 != 0 {
+        bail!("staged record of {rec} bytes is not f32-aligned");
+    }
+    let mut out = Vec::with_capacity(ids.len());
+    for (k, &id) in ids.iter().enumerate() {
+        let chunk = &payload[k * rec..(k + 1) * rec];
+        let mut v = Vec::with_capacity(rec / 4);
+        for b in chunk.chunks_exact(4) {
+            v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        out.push((id, std::sync::Arc::new(v)));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, DEFAULT_CASES};
+    use std::sync::Arc;
+
+    fn frame_bytes(kind: &str, payload: &[u8]) -> Vec<u8> {
+        let mut h = msg(kind);
+        h.set("step", Json::Num(7.0));
+        encode_frame(&h, payload)
+    }
+
+    #[test]
+    fn roundtrip_header_and_payload() {
+        let bytes = frame_bytes("fetch", &[1, 2, 3, 255]);
+        let f = decode_frame(&bytes).unwrap();
+        assert_eq!(f.kind().unwrap(), "fetch");
+        assert_eq!(f.header.req_usize("step").unwrap(), 7);
+        assert_eq!(f.payload, vec![1, 2, 3, 255]);
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let f = decode_frame(&frame_bytes("next", &[])).unwrap();
+        assert!(f.payload.is_empty());
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_a_clean_error() {
+        let bytes = frame_bytes("fetch", &[9u8; 33]);
+        for cut in 1..bytes.len() {
+            let err = decode_frame(&bytes[..cut]).unwrap_err();
+            let text = format!("{err:#}");
+            assert!(
+                text.contains("truncated") || text.contains("mismatch"),
+                "cut={cut}: unexpected error {text}"
+            );
+            // And through the stream reader: EOF mid-frame is truncation.
+            let mut cur = std::io::Cursor::new(bytes[..cut].to_vec());
+            assert!(read_frame(&mut cur).unwrap_err().to_string().contains("serve frame"));
+        }
+    }
+
+    #[test]
+    fn clean_eof_at_frame_boundary_is_none() {
+        let mut cur = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut cur).unwrap().is_none());
+        // Two frames back to back, then EOF.
+        let mut stream = frame_bytes("a", &[1]);
+        stream.extend_from_slice(&frame_bytes("b", &[2, 3]));
+        let mut cur = std::io::Cursor::new(stream);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap().kind().unwrap(), "a");
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap().payload, vec![2, 3]);
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn garbage_magic_rejected() {
+        let mut bytes = frame_bytes("x", &[]);
+        bytes[0] = b'G';
+        assert!(format!("{:#}", decode_frame(&bytes).unwrap_err()).contains("magic"));
+        let mut cur = std::io::Cursor::new(bytes);
+        assert!(format!("{:#}", read_frame(&mut cur).unwrap_err()).contains("magic"));
+    }
+
+    #[test]
+    fn version_skew_rejected_with_both_versions_named() {
+        let mut bytes = frame_bytes("x", &[]);
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let text = format!("{:#}", decode_frame(&bytes).unwrap_err());
+        assert!(text.contains("v99") && text.contains("v1"), "{text}");
+    }
+
+    #[test]
+    fn corrupted_payload_fails_checksum() {
+        let mut bytes = frame_bytes("x", &[0u8; 16]);
+        let n = bytes.len();
+        bytes[n - TRAILER - 3] ^= 0x40;
+        assert!(format!("{:#}", decode_frame(&bytes).unwrap_err()).contains("checksum"));
+    }
+
+    #[test]
+    fn lying_header_length_rejected() {
+        // Header length pointing past the body must error, not slice OOB.
+        let mut bytes = frame_bytes("x", &[1, 2, 3]);
+        bytes[20..28].copy_from_slice(&(1_000_000u64).to_le_bytes());
+        let err = format!("{:#}", decode_frame(&bytes).unwrap_err());
+        // The checksum covers the length field, so either failure is clean.
+        assert!(err.contains("header length") || err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn oversized_declared_length_rejected_before_allocation() {
+        let mut bytes = frame_bytes("x", &[]);
+        bytes[12..20].copy_from_slice(&u64::MAX.to_le_bytes());
+        let mut cur = std::io::Cursor::new(bytes.clone());
+        // If this allocated u64::MAX bytes first, the test would die; the
+        // ceiling check must come before the buffer.
+        assert!(format!("{:#}", read_frame(&mut cur).unwrap_err()).contains("ceiling"));
+        assert!(format!("{:#}", decode_frame(&bytes).unwrap_err()).contains("ceiling"));
+    }
+
+    #[test]
+    fn proptest_frame_roundtrips() {
+        check(
+            "encode/decode frame identity",
+            DEFAULT_CASES,
+            |rng| {
+                let mut h = msg("t");
+                for i in 0..rng.gen_index(6) {
+                    h.set(&format!("k{i}"), Json::Num(rng.gen_index(1 << 20) as f64));
+                }
+                let payload: Vec<u8> =
+                    (0..rng.gen_index(512)).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+                (h, payload)
+            },
+            |(h, payload)| {
+                let f = decode_frame(&encode_frame(h, payload)).map_err(|e| format!("{e:#}"))?;
+                if &f.header != h {
+                    return Err("header mismatch".into());
+                }
+                if &f.payload != payload {
+                    return Err("payload mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn proptest_frame_streams_concatenate() {
+        check(
+            "n frames through one stream",
+            32,
+            |rng| {
+                (0..rng.gen_index(5))
+                    .map(|i| {
+                        let payload: Vec<u8> =
+                            (0..rng.gen_index(64)).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+                        (format!("m{i}"), payload)
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |msgs| {
+                let mut stream = Vec::new();
+                for (kind, payload) in msgs {
+                    stream.extend_from_slice(&encode_frame(&msg(kind), payload));
+                }
+                let mut cur = std::io::Cursor::new(stream);
+                for (kind, payload) in msgs {
+                    let f = read_frame(&mut cur)
+                        .map_err(|e| format!("{e:#}"))?
+                        .ok_or("early EOF")?;
+                    if f.kind().map_err(|e| format!("{e:#}"))? != kind || &f.payload != payload {
+                        return Err("frame mismatch".into());
+                    }
+                }
+                match read_frame(&mut cur).map_err(|e| format!("{e:#}"))? {
+                    None => Ok(()),
+                    Some(_) => Err("trailing frame".into()),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn proptest_mutated_frames_never_panic() {
+        // Flip one byte anywhere in a valid frame: decode must return
+        // (Ok for the rare no-op flips in the payload... impossible — any
+        // flip lands under the checksum or in the magic) a clean error.
+        check(
+            "single-byte corruption is a clean error",
+            DEFAULT_CASES,
+            |rng| {
+                let payload: Vec<u8> =
+                    (0..rng.gen_index(64)).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+                let bytes = encode_frame(&msg("x"), &payload);
+                let pos = rng.gen_index(bytes.len());
+                let bit = 1u8 << rng.gen_index(8);
+                (bytes, pos, bit)
+            },
+            |(bytes, pos, bit)| {
+                let mut b = bytes.clone();
+                b[*pos] ^= bit;
+                match decode_frame(&b) {
+                    Ok(_) => Err("corrupted frame decoded successfully".into()),
+                    Err(_) => Ok(()),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn sample_payload_roundtrip() {
+        let a = Arc::new(vec![1.0f32, -2.5, 3.25]);
+        let b = Arc::new(vec![0.0f32, 7.0, -0.125]);
+        let ids = vec![4u32, 9];
+        let payload = encode_samples(&ids, |id| if id == 4 { a.clone() } else { b.clone() });
+        let back = decode_samples(&ids, &payload).unwrap();
+        assert_eq!(back[0].0, 4);
+        assert_eq!(*back[0].1, *a);
+        assert_eq!(*back[1].1, *b);
+        // Misaligned payload is a clean error.
+        assert!(decode_samples(&ids, &payload[..payload.len() - 4]).is_err());
+        assert!(decode_samples(&[], &payload).is_err());
+        assert!(decode_samples(&[], &[]).unwrap().is_empty());
+    }
+}

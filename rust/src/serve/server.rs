@@ -1,0 +1,389 @@
+//! The `solar serve` daemon: a multi-tenant plan server over one shared,
+//! oracle-evicted sample pool.
+//!
+//! Tenants register their run identity ([`super::tenant::TenantSpec`]);
+//! the daemon recomputes each tenant's deterministic plan, announces
+//! every future sample access to the shared pool's Belady oracle
+//! ([`super::pool::SharedPool`]), and then serves two request streams
+//! per tenant: plan steps (to the coordinator) and staged bytes (to
+//! each node's fetch stage). A staged read is served from the pool when
+//! the sample is resident (admitted on an earlier tenant's fetch) and
+//! from the PFS through a shared [`FetchPool`] otherwise — cross-tenant
+//! sharing changes WHERE bytes come from, never which samples feed
+//! which step, so every tenant's schedule fingerprint and trained
+//! params are bit-identical to a standalone run.
+//!
+//! Tenants interleave into the oracle's single timeline by lane-striding
+//! step indices: the access at a tenant's flat step `s` gets global
+//! position `s * MAX_TENANTS + tenant_id`. Relative order within a
+//! tenant is exact; across tenants it assumes lockstep progress — an
+//! approximation that only affects WHICH samples the pool keeps (a
+//! performance knob), never correctness, because pool state is invisible
+//! to the schedule.
+//!
+//! Request handling is serialized behind one state lock: byte accounting
+//! and pool decisions are then a pure function of the request arrival
+//! order, and the telemetry feed's per-tenant counters sum exactly to
+//! the pool totals (asserted in the feed itself).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::loader::io::FetchPool;
+use crate::serve::pool::SharedPool;
+use crate::serve::proto::{self, Frame};
+use crate::serve::tenant::{Tenant, TenantSpec};
+use crate::storage::store::{open_store, Contiguity, SampleStore};
+use crate::util::json::Json;
+
+/// Lane stride of the oracle's global timeline (and the tenant cap).
+pub const MAX_TENANTS: u64 = 4096;
+
+/// Daemon configuration.
+#[derive(Debug, Clone, Default)]
+pub struct ServeOpts {
+    /// Shared pool capacity in samples (0 disables the pool — every
+    /// staged read goes to the PFS).
+    pub pool_capacity: usize,
+    /// Where to write the telemetry feed JSON when the daemon finishes
+    /// (it is also served live via the `telemetry` message).
+    pub telemetry: Option<PathBuf>,
+}
+
+struct StoreEntry {
+    path: String,
+    store: Arc<dyn SampleStore>,
+    contig: Contiguity,
+}
+
+struct State {
+    pool: SharedPool,
+    fetcher: FetchPool,
+    stores: Vec<StoreEntry>,
+    tenants: Vec<Tenant>,
+    done: usize,
+}
+
+impl State {
+    /// Open (or reuse) the store at `path`. Tenants naming the same path
+    /// share one handle AND one pool key namespace — that sharing is the
+    /// whole point of the daemon.
+    fn store_id(&mut self, path: &str) -> Result<u32> {
+        if let Some(i) = self.stores.iter().position(|e| e.path == path) {
+            return Ok(i as u32);
+        }
+        let store = open_store(std::path::Path::new(path))
+            .with_context(|| format!("open tenant dataset {path}"))?;
+        let contig = store.chunk_contiguity();
+        self.stores.push(StoreEntry { path: path.to_string(), store, contig });
+        Ok((self.stores.len() - 1) as u32)
+    }
+
+    /// The telemetry feed: pool totals, per-tenant blocks, and the
+    /// accounting cross-check (Σ per-tenant == pool totals).
+    fn feed(&self) -> Json {
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let mut staged_bytes = 0u64;
+        let mut pfs_bytes = 0u64;
+        let tenants: Vec<Json> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                hits += t.stats.pool_hits;
+                misses += t.stats.pfs_samples;
+                staged_bytes += t.stats.staged_bytes;
+                pfs_bytes += t.stats.pfs_bytes;
+                t.stats_json()
+            })
+            .collect();
+        let p = self.pool.stats();
+        let ok = hits == p.hits && misses == p.misses;
+        let mut totals = Json::obj();
+        totals
+            .set("pfs_bytes", Json::Num(pfs_bytes as f64))
+            .set("pool_hits", Json::Num(hits as f64))
+            .set("pfs_samples", Json::Num(misses as f64))
+            .set("staged_bytes", Json::Num(staged_bytes as f64));
+        let mut o = Json::obj();
+        o.set("accounting", Json::Str(if ok { "ok" } else { "mismatch" }.to_string()))
+            .set("pool", self.pool.stats_json())
+            .set("tenants", Json::Arr(tenants))
+            .set("totals", totals);
+        o
+    }
+}
+
+/// A bound, running daemon. Create with [`Server::bind`], drive with
+/// [`Server::run_until`].
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<Mutex<State>>,
+    stop: Arc<AtomicBool>,
+    opts: ServeOpts,
+}
+
+impl Server {
+    pub fn bind(addr: &str, opts: ServeOpts) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind serve daemon on {addr}"))?;
+        let state = Arc::new(Mutex::new(State {
+            pool: SharedPool::new(opts.pool_capacity),
+            fetcher: FetchPool::new(crate::loader::io::io_threads()),
+            stores: Vec::new(),
+            tenants: Vec::new(),
+            done: 0,
+        }));
+        Ok(Server { listener, state, stop: Arc::new(AtomicBool::new(false)), opts })
+    }
+
+    /// The daemon's actual listen address (resolves `:0` test binds).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        self.listener.local_addr().context("serve daemon local_addr")
+    }
+
+    /// Accept and serve connections until `n_tenants` tenants have
+    /// registered AND finished, then return the final telemetry feed
+    /// (also written to `opts.telemetry` when set).
+    pub fn run_until(&self, n_tenants: usize) -> Result<Json> {
+        let accept_listener = self.listener.try_clone().context("clone serve listener")?;
+        let accept_state = self.state.clone();
+        let accept_stop = self.stop.clone();
+        let accept = std::thread::spawn(move || {
+            loop {
+                match accept_listener.accept() {
+                    Ok((stream, _)) => {
+                        if accept_stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let state = accept_state.clone();
+                        std::thread::spawn(move || {
+                            if let Err(e) = handle_conn(stream, &state) {
+                                eprintln!("serve: connection error: {e:#}");
+                            }
+                        });
+                    }
+                    Err(e) => {
+                        eprintln!("serve: accept error: {e}");
+                        break;
+                    }
+                }
+            }
+        });
+        // Wait for completion: all expected tenants registered and done.
+        loop {
+            {
+                let st = lock(&self.state)?;
+                if st.tenants.len() >= n_tenants && st.done >= n_tenants {
+                    break;
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        // Unblock the accept thread: set the stop flag, then poke the
+        // listener with a throwaway connection.
+        self.stop.store(true, Ordering::Relaxed);
+        if let Ok(addr) = self.local_addr() {
+            let _ = TcpStream::connect(addr);
+        }
+        accept.join().map_err(|_| anyhow!("serve accept thread panicked"))?;
+        let feed = lock(&self.state)?.feed();
+        if let Some(path) = &self.opts.telemetry {
+            let tmp = path.with_extension("tmp");
+            std::fs::write(&tmp, feed.to_string_compact())
+                .with_context(|| format!("write telemetry {}", tmp.display()))?;
+            std::fs::rename(&tmp, path)
+                .with_context(|| format!("rename telemetry into {}", path.display()))?;
+        }
+        Ok(feed)
+    }
+}
+
+fn lock<'a>(state: &'a Arc<Mutex<State>>) -> Result<std::sync::MutexGuard<'a, State>> {
+    state.lock().map_err(|_| anyhow!("serve daemon state poisoned"))
+}
+
+/// Serve one client connection: a request/response loop over serve
+/// frames. Errors are reported to the peer as an `error` frame (best
+/// effort) and close the connection.
+fn handle_conn(stream: TcpStream, state: &Arc<Mutex<State>>) -> Result<()> {
+    let reader = stream.try_clone().context("clone serve connection")?;
+    let mut r = BufReader::new(reader);
+    let mut w = BufWriter::new(stream);
+    while let Some(frame) = proto::read_frame(&mut r)? {
+        match handle_msg(state, &frame) {
+            Ok((header, payload)) => proto::write_frame(&mut w, &header, &payload)?,
+            Err(e) => {
+                let mut h = proto::msg("error");
+                h.set("message", Json::Str(format!("{e:#}")));
+                let _ = proto::write_frame(&mut w, &h, &[]);
+                return Err(e);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Look a tenant up by id, with a clean error for unknown ids.
+fn tenant_of(st: &mut State, h: &Json) -> Result<usize> {
+    let id = h.req_usize("tenant")?;
+    if id >= st.tenants.len() {
+        bail!("unknown tenant {id} ({} registered)", st.tenants.len());
+    }
+    Ok(id)
+}
+
+/// Dispatch one request frame; returns the response header + payload.
+fn handle_msg(state: &Arc<Mutex<State>>, frame: &Frame) -> Result<(Json, Vec<u8>)> {
+    match frame.kind()? {
+        "register" => {
+            let spec =
+                TenantSpec::from_json(frame.header.get("spec").context("register missing spec")?)?;
+            let mut st = lock(state)?;
+            if st.tenants.len() as u64 >= MAX_TENANTS {
+                bail!("tenant limit {MAX_TENANTS} reached");
+            }
+            let store_id = st.store_id(&spec.data)?;
+            let id = st.tenants.len() as u32;
+            let tenant = Tenant::materialize(
+                id,
+                spec,
+                store_id,
+                st.stores[store_id as usize].store.as_ref(),
+            )?;
+            // Feed the oracle the tenant's complete future: every staged
+            // access of every (step, node), at its lane-strided position.
+            for (s, nodes) in tenant.staged_ids.iter().enumerate() {
+                let pos = s as u64 * MAX_TENANTS + id as u64;
+                for ids in nodes {
+                    for &x in ids {
+                        st.pool.announce((store_id, x), pos);
+                    }
+                }
+            }
+            let n_steps = tenant.steps.len();
+            st.tenants.push(tenant);
+            let mut h = proto::msg("registered");
+            h.set("steps", Json::Num(n_steps as f64))
+                .set("tenant", Json::Num(id as f64));
+            Ok((h, Vec::new()))
+        }
+        "next" => {
+            let mut st = lock(state)?;
+            let id = tenant_of(&mut st, &frame.header)?;
+            let step = frame.header.req_usize("step")?;
+            let t = &st.tenants[id];
+            match t.steps.get(step) {
+                None => Ok((proto::msg("end"), Vec::new())),
+                Some(ts) => {
+                    let mut h = proto::msg("step");
+                    h.set("epoch_end", Json::Bool(ts.epoch_end))
+                        .set("epoch_pos", Json::Num(ts.epoch_pos as f64))
+                        .set(
+                            "nodes",
+                            Json::Arr(ts.nodes.iter().map(|ns| ns.to_json()).collect()),
+                        )
+                        .set("step", Json::Num(ts.step as f64));
+                    Ok((h, Vec::new()))
+                }
+            }
+        }
+        "fetch" => {
+            let mut st = lock(state)?;
+            let id = tenant_of(&mut st, &frame.header)?;
+            let step = frame.header.req_usize("step")?;
+            let node = frame.header.req_usize("node")?;
+            let t = &st.tenants[id];
+            let ids: Vec<u32> = t
+                .staged_ids
+                .get(step)
+                .and_then(|nodes| nodes.get(node))
+                .with_context(|| format!("tenant {id} has no staged set for step {step} node {node}"))?
+                .clone();
+            let store_id = t.store_id;
+            let pos = step as u64 * MAX_TENANTS + id as u64;
+            // Pool pass: consume this access from the oracle and collect
+            // hits; what is left is this tenant's PFS bill.
+            let mut staged: HashMap<u32, Arc<Vec<f32>>> = HashMap::with_capacity(ids.len());
+            let mut missing: Vec<u32> = Vec::new();
+            for &x in &ids {
+                match st.pool.request((store_id, x), pos) {
+                    Some(bytes) => {
+                        staged.insert(x, bytes);
+                    }
+                    None => missing.push(x),
+                }
+            }
+            let hits = ids.len() - missing.len();
+            if !missing.is_empty() {
+                // Split borrows: the fetcher and the store entry are
+                // disjoint fields of the locked state.
+                let State { fetcher, stores, .. } = &mut *st;
+                let entry = &stores[store_id as usize];
+                fetcher.fetch_ids(&entry.store, &entry.contig, &missing, &mut staged)?;
+                for &x in &missing {
+                    let bytes = staged
+                        .get(&x)
+                        .with_context(|| format!("PFS fetch did not stage sample {x}"))?;
+                    st.pool.admit((store_id, x), bytes.clone());
+                }
+            }
+            let payload = proto::encode_samples(&ids, |x| {
+                staged.get(&x).cloned().unwrap_or_default()
+            });
+            let sb = st.stores[store_id as usize].store.sample_bytes() as u64;
+            let t = &mut st.tenants[id];
+            t.stats.pool_hits += hits as u64;
+            t.stats.pfs_samples += missing.len() as u64;
+            t.stats.pfs_bytes += missing.len() as u64 * sb;
+            t.stats.staged_bytes += payload.len() as u64;
+            let mut h = proto::msg("staged");
+            h.set("ids", Json::arr_u32(&ids));
+            Ok((h, payload))
+        }
+        "eval" => {
+            let mut st = lock(state)?;
+            let id = tenant_of(&mut st, &frame.header)?;
+            let ids = frame
+                .header
+                .get("ids")
+                .and_then(Json::arr_as_u32)
+                .context("eval missing ids")?;
+            let store_id = st.tenants[id].store_id;
+            let mut staged: HashMap<u32, Arc<Vec<f32>>> = HashMap::with_capacity(ids.len());
+            // Eval bytes bypass the pool: the holdout is outside every
+            // training schedule, so it was never announced to the oracle.
+            let State { fetcher, stores, .. } = &mut *st;
+            let entry = &stores[store_id as usize];
+            fetcher.fetch_ids(&entry.store, &entry.contig, &ids, &mut staged)?;
+            let payload = proto::encode_samples(&ids, |x| {
+                staged.get(&x).cloned().unwrap_or_default()
+            });
+            st.tenants[id].stats.eval_bytes += payload.len() as u64;
+            let mut h = proto::msg("staged");
+            h.set("ids", Json::arr_u32(&ids));
+            Ok((h, payload))
+        }
+        "done" => {
+            let mut st = lock(state)?;
+            let id = tenant_of(&mut st, &frame.header)?;
+            if !st.tenants[id].done {
+                st.tenants[id].done = true;
+                st.done += 1;
+            }
+            Ok((proto::msg("ok"), Vec::new()))
+        }
+        "telemetry" => {
+            let st = lock(state)?;
+            let mut h = proto::msg("feed");
+            h.set("feed", st.feed());
+            Ok((h, Vec::new()))
+        }
+        other => bail!("unknown serve message type '{other}'"),
+    }
+}

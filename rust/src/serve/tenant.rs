@@ -1,0 +1,320 @@
+//! Tenant identity and per-tenant server state.
+//!
+//! A [`TenantSpec`] is the complete run identity a `--connect` client
+//! sends at registration: dataset path + loader policy + every schedule
+//! knob. It is COMPLETE by construction — the daemon recomputes the
+//! tenant's deterministic plan from it alone, and that plan must be
+//! bit-identical to what the client would compute standalone (the serve
+//! invariant). Anything that could change the schedule rides in the
+//! spec; anything that only changes timing (prefetch depth, io threads)
+//! stays client-side.
+//!
+//! [`Tenant`] is the daemon's materialized view: the full plan (every
+//! step of every epoch, in visiting order), the per-(step, node) staged
+//! id sets the fetch path serves, and the tenant's telemetry counters.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeSet;
+
+use crate::config::RunConfig;
+use crate::data::spec::DatasetSpec;
+use crate::loader::engine::LoaderEngine;
+use crate::loader::LoaderPolicy;
+use crate::sched::plan::PlanNodeStep;
+use crate::storage::pfs::CostModel;
+use crate::storage::store::SampleStore;
+use crate::util::json::Json;
+use crate::util::timer::Stopwatch;
+
+/// A tenant run's complete schedule identity, as sent over the wire in
+/// the `register` frame header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSpec {
+    /// Dataset path, resolvable on the DAEMON's filesystem.
+    pub data: String,
+    /// Loader policy name (`LoaderPolicy::by_name`).
+    pub policy: String,
+    pub n_nodes: usize,
+    pub local_batch: usize,
+    pub n_epochs: usize,
+    pub seed: u64,
+    pub buffer_capacity: usize,
+    /// Trailing samples held out for validation (excluded from the
+    /// training schedule, served to node 0 on request).
+    pub holdout: usize,
+}
+
+impl TenantSpec {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("batch", Json::Num(self.local_batch as f64))
+            .set("buffer", Json::Num(self.buffer_capacity as f64))
+            .set("data", Json::Str(self.data.clone()))
+            .set("epochs", Json::Num(self.n_epochs as f64))
+            .set("holdout", Json::Num(self.holdout as f64))
+            .set("nodes", Json::Num(self.n_nodes as f64))
+            .set("policy", Json::Str(self.policy.clone()))
+            .set("seed", Json::Num(self.seed as f64));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<TenantSpec> {
+        Ok(TenantSpec {
+            data: j.req_str("data")?.to_string(),
+            policy: j.req_str("policy")?.to_string(),
+            n_nodes: j.req_usize("nodes")?,
+            local_batch: j.req_usize("batch")?,
+            n_epochs: j.req_usize("epochs")?,
+            seed: j.req_u64("seed")?,
+            buffer_capacity: j.req_usize("buffer")?,
+            holdout: j.req_usize("holdout")?,
+        })
+    }
+}
+
+/// One planned step of a tenant's run, in visiting order.
+#[derive(Debug, Clone)]
+pub struct TenantStep {
+    pub epoch_pos: usize,
+    pub step: usize,
+    pub epoch_end: bool,
+    pub nodes: Vec<PlanNodeStep>,
+}
+
+/// Per-tenant byte/sample accounting, summed into the daemon's feed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TenantStats {
+    /// Samples the tenant's OWN plan served from its node buffers
+    /// (never reach the daemon's fetch path).
+    pub plan_hits: u64,
+    /// Staged samples served from the shared pool.
+    pub pool_hits: u64,
+    /// Staged samples read from the PFS on this tenant's behalf.
+    pub pfs_samples: u64,
+    /// Bytes of those PFS reads (decoded size).
+    pub pfs_bytes: u64,
+    /// Total staged bytes sent to the tenant (pool hits + PFS reads).
+    pub staged_bytes: u64,
+    /// Holdout eval bytes (served outside the pool, counted apart).
+    pub eval_bytes: u64,
+}
+
+/// The daemon's materialized view of one registered run.
+pub struct Tenant {
+    pub id: u32,
+    pub spec: TenantSpec,
+    /// Index into the daemon's open-store table (pool key namespace).
+    pub store_id: u32,
+    pub run: RunConfig,
+    /// The full plan, flattened in visiting order.
+    pub steps: Vec<TenantStep>,
+    /// `staged_ids[step][node]`: sorted, deduped ids the daemon stages
+    /// for that (step, node) — (samples ∪ inserted) minus the node's
+    /// plan-resident set at that step. Exactly the set a standalone
+    /// driver's fetch stage would read (same rule, same mirror).
+    pub staged_ids: Vec<Vec<Vec<u32>>>,
+    pub stats: TenantStats,
+    pub wall: Stopwatch,
+    pub done: bool,
+}
+
+impl Tenant {
+    /// Recompute the tenant's deterministic plan from its spec + store
+    /// and precompute every (step, node) staged id set. Pure CPU — no
+    /// store reads happen here.
+    pub fn materialize(
+        id: u32,
+        spec: TenantSpec,
+        store_id: u32,
+        store: &dyn SampleStore,
+    ) -> Result<Tenant> {
+        let policy = LoaderPolicy::by_name(&spec.policy)
+            .with_context(|| format!("unknown loader policy '{}'", spec.policy))?;
+        let mut ds = DatasetSpec::paper("cd17").context("builtin dataset template")?;
+        ds.id = store.dataset_name().to_string();
+        ds.n_samples = store.n_samples().saturating_sub(spec.holdout);
+        ds.sample_bytes = store.sample_bytes();
+        ds.shape = store.shape().to_vec();
+        let run = RunConfig {
+            spec: ds,
+            n_nodes: spec.n_nodes,
+            local_batch: spec.local_batch,
+            n_epochs: spec.n_epochs,
+            seed: spec.seed,
+            buffer_capacity: spec.buffer_capacity,
+            cost: CostModel::default(),
+        };
+        let mut engine = LoaderEngine::new(run.clone(), policy);
+        engine.bind_store(store)?;
+        let mut steps = Vec::new();
+        let mut staged_ids: Vec<Vec<Vec<u32>>> = Vec::new();
+        let mut stats = TenantStats::default();
+        // Per-node mirror of the plan's resident buffer keys, advanced
+        // in step order — the same mirror a standalone fetch stage keeps.
+        let mut resident: Vec<BTreeSet<u32>> = vec![BTreeSet::new(); run.n_nodes];
+        for rs in engine.plan_run() {
+            let mut node_plans = Vec::with_capacity(rs.load.nodes.len());
+            let mut node_staged = Vec::with_capacity(rs.load.nodes.len());
+            for (k, nl) in rs.load.nodes.iter().enumerate() {
+                stats.plan_hits += nl.hits as u64;
+                let mut ids: Vec<u32> = nl
+                    .samples
+                    .iter()
+                    .chain(nl.inserted.iter())
+                    .copied()
+                    .filter(|x| !resident[k].contains(x))
+                    .collect();
+                ids.sort_unstable();
+                ids.dedup();
+                node_staged.push(ids);
+                resident[k].extend(nl.inserted.iter().copied());
+                for x in &nl.evicted {
+                    resident[k].remove(x);
+                }
+                node_plans.push(PlanNodeStep::from_node_load(nl));
+            }
+            staged_ids.push(node_staged);
+            steps.push(TenantStep {
+                epoch_pos: rs.epoch_pos,
+                step: rs.step,
+                epoch_end: rs.epoch_end,
+                nodes: node_plans,
+            });
+        }
+        Ok(Tenant {
+            id,
+            spec,
+            store_id,
+            run,
+            steps,
+            staged_ids,
+            stats,
+            wall: Stopwatch::start(),
+            done: false,
+        })
+    }
+
+    /// This tenant's telemetry block for the daemon's feed JSON.
+    pub fn stats_json(&self) -> Json {
+        let s = self.stats;
+        let mut o = Json::obj();
+        o.set("data", Json::Str(self.spec.data.clone()))
+            .set("done", Json::Bool(self.done))
+            .set("eval_bytes", Json::Num(s.eval_bytes as f64))
+            .set("id", Json::Num(self.id as f64))
+            .set("pfs_bytes", Json::Num(s.pfs_bytes as f64))
+            .set("pfs_samples", Json::Num(s.pfs_samples as f64))
+            .set("plan_hits", Json::Num(s.plan_hits as f64))
+            .set("policy", Json::Str(self.spec.policy.clone()))
+            .set("pool_hits", Json::Num(s.pool_hits as f64))
+            .set("seed", Json::Num(self.spec.seed as f64))
+            .set("staged_bytes", Json::Num(s.staged_bytes as f64))
+            .set("steps", Json::Num(self.steps.len() as f64))
+            .set("wall_s", Json::Num(self.wall.elapsed_s()));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::store::MemStore;
+
+    fn mem_store(n: usize) -> MemStore {
+        let mut m = MemStore::new("tenant-test", vec![4], Vec::new()).unwrap();
+        for i in 0..n {
+            m.push_f32(&[i as f32, 1.0, 2.0, 3.0]).unwrap();
+        }
+        m
+    }
+
+    #[test]
+    fn spec_roundtrips_through_json() {
+        let spec = TenantSpec {
+            data: "/tmp/x.shdf".into(),
+            policy: "solar".into(),
+            n_nodes: 2,
+            local_batch: 8,
+            n_epochs: 3,
+            seed: 42,
+            buffer_capacity: 5,
+            holdout: 3,
+        };
+        let j = spec.to_json();
+        assert_eq!(TenantSpec::from_json(&j).unwrap(), spec);
+        // Wire compactness is deterministic (BTreeMap key order).
+        let s = j.to_string_compact();
+        assert_eq!(s, Json::parse(&s).unwrap().to_string_compact());
+    }
+
+    #[test]
+    fn materialized_plan_matches_a_standalone_engine() {
+        let store = mem_store(64);
+        let spec = TenantSpec {
+            data: "mem".into(),
+            policy: "solar".into(),
+            n_nodes: 2,
+            local_batch: 4,
+            n_epochs: 2,
+            seed: 7,
+            buffer_capacity: 10,
+            holdout: 4,
+        };
+        let t = Tenant::materialize(1, spec, 0, &store).unwrap();
+        // Standalone: same config, same engine, same cursor.
+        let policy = LoaderPolicy::by_name("solar").unwrap();
+        let mut engine = LoaderEngine::new(t.run.clone(), policy);
+        engine.bind_store(&store).unwrap();
+        let standalone: Vec<_> = engine.plan_run().collect();
+        assert_eq!(t.steps.len(), standalone.len());
+        for (ts, rs) in t.steps.iter().zip(standalone.iter()) {
+            assert_eq!((ts.epoch_pos, ts.step, ts.epoch_end), (rs.epoch_pos, rs.step, rs.epoch_end));
+            for (pn, nl) in ts.nodes.iter().zip(rs.load.nodes.iter()) {
+                assert_eq!(pn.samples, nl.samples);
+                assert_eq!(pn.hits, nl.hits);
+                assert_eq!(pn.inserted, nl.inserted);
+                assert_eq!(pn.evicted, nl.evicted);
+            }
+        }
+    }
+
+    #[test]
+    fn staged_ids_cover_samples_and_inserts_minus_residents() {
+        let store = mem_store(48);
+        let spec = TenantSpec {
+            data: "mem".into(),
+            policy: "solar".into(),
+            n_nodes: 2,
+            local_batch: 4,
+            n_epochs: 2,
+            seed: 42,
+            buffer_capacity: 8,
+            holdout: 0,
+        };
+        let t = Tenant::materialize(0, spec, 0, &store).unwrap();
+        // Replay the mirror: every (samples ∪ inserted) id is either
+        // staged this step or already resident, and staged sets are
+        // sorted + deduped.
+        let mut resident: Vec<BTreeSet<u32>> = vec![BTreeSet::new(); 2];
+        for (s, ts) in t.steps.iter().enumerate() {
+            for (k, pn) in ts.nodes.iter().enumerate() {
+                let staged = &t.staged_ids[s][k];
+                assert!(staged.windows(2).all(|w| w[0] < w[1]), "sorted+dedup");
+                let staged_set: BTreeSet<u32> = staged.iter().copied().collect();
+                for x in pn.samples.iter().chain(pn.inserted.iter()) {
+                    assert!(
+                        staged_set.contains(x) || resident[k].contains(x),
+                        "step {s} node {k}: id {x} neither staged nor resident"
+                    );
+                }
+                for x in staged {
+                    assert!(!resident[k].contains(x), "staged a resident id {x}");
+                }
+                resident[k].extend(pn.inserted.iter().copied());
+                for x in &pn.evicted {
+                    resident[k].remove(x);
+                }
+            }
+        }
+    }
+}

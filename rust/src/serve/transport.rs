@@ -1,0 +1,117 @@
+//! The fetch→stage handoff as a transport abstraction.
+//!
+//! The training driver's fetch thread used to hand staged bytes to its
+//! exec thread through a bare `mpsc::sync_channel` — a process-local
+//! assumption baked into the hot path. These traits name that seam: a
+//! bounded, blocking, single-producer/single-consumer lane. Today's only
+//! in-tree implementation wraps the same `sync_channel` (zero behavior
+//! change, same backpressure semantics); the serve subsystem speaks the
+//! framed wire protocol (`serve::proto`) over sockets at the *ends* of
+//! the pipeline, and a future socket-backed `StageTx`/`StageRx` pair can
+//! move the handoff itself across processes without touching the driver.
+//!
+//! Semantics the driver relies on (and the channel impl guarantees):
+//! * `send` blocks when the lane holds `bound` undelivered messages
+//!   (stage backpressure) and fails only when the receiver is gone;
+//! * `recv` blocks for the next message and returns `None` only when the
+//!   sender is dropped — the clean end-of-run signal;
+//! * dropping either end unblocks the other.
+
+use std::sync::mpsc;
+
+/// Sending half of a stage lane. Consumed by the fetch side.
+pub trait StageTx<T: Send>: Send {
+    /// Deliver one message, blocking on a full lane. `Err` means the
+    /// receiving side is gone and the producer should wind down.
+    fn send(&self, msg: T) -> Result<(), StageClosed>;
+}
+
+/// Receiving half of a stage lane. Consumed by the exec side.
+pub trait StageRx<T: Send>: Send {
+    /// Next message, blocking. `None` means the sender is gone.
+    fn recv(&self) -> Option<T>;
+}
+
+/// The lane's peer disappeared (receiver dropped mid-send, or the whole
+/// pipeline is shutting down).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageClosed;
+
+impl std::fmt::Display for StageClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "stage lane closed")
+    }
+}
+
+impl std::error::Error for StageClosed {}
+
+struct ChannelTx<T>(mpsc::SyncSender<T>);
+struct ChannelRx<T>(mpsc::Receiver<T>);
+
+impl<T: Send> StageTx<T> for ChannelTx<T> {
+    fn send(&self, msg: T) -> Result<(), StageClosed> {
+        self.0.send(msg).map_err(|_| StageClosed)
+    }
+}
+
+impl<T: Send> StageRx<T> for ChannelRx<T> {
+    fn recv(&self) -> Option<T> {
+        self.0.recv().ok()
+    }
+}
+
+/// An in-process stage lane over `mpsc::sync_channel` — the classic
+/// driver handoff, verbatim: `bound` staged slots of backpressure.
+pub fn in_process<T: Send + 'static>(bound: usize) -> (Box<dyn StageTx<T>>, Box<dyn StageRx<T>>) {
+    let (tx, rx) = mpsc::sync_channel::<T>(bound.max(1));
+    (Box::new(ChannelTx(tx)), Box::new(ChannelRx(rx)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_delivers_in_order_and_signals_close() {
+        let (tx, rx) = in_process::<u32>(2);
+        let producer = std::thread::spawn(move || {
+            for i in 0..10u32 {
+                if tx.send(i).is_err() {
+                    return i;
+                }
+            }
+            10
+        });
+        for want in 0..10u32 {
+            assert_eq!(rx.recv(), Some(want));
+        }
+        assert_eq!(rx.recv(), None, "sender dropped => clean end-of-stream");
+        assert_eq!(producer.join().ok(), Some(10));
+    }
+
+    #[test]
+    fn dropped_receiver_fails_send() {
+        let (tx, rx) = in_process::<u32>(1);
+        drop(rx);
+        assert_eq!(tx.send(1), Err(StageClosed));
+    }
+
+    #[test]
+    fn bound_backpressures_but_never_deadlocks_a_draining_consumer() {
+        let (tx, rx) = in_process::<u64>(1);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100u64 {
+                if tx.send(i).is_err() {
+                    return;
+                }
+            }
+        });
+        let mut got = 0u64;
+        while let Some(v) = rx.recv() {
+            assert_eq!(v, got);
+            got += 1;
+        }
+        assert_eq!(got, 100);
+        producer.join().ok();
+    }
+}

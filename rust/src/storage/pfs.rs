@@ -68,6 +68,18 @@ pub struct CostModel {
     /// [`super::store::Contiguity::span_bytes`], so scaling again would
     /// double-count.
     pub codec_ratio: f64,
+    /// Cross-node stream-contention coefficient: each concurrent PFS read
+    /// stream beyond the first inflates everyone's loading time by this
+    /// fraction (per-stream OST/MDS interference on a shared Lustre). The
+    /// default reproduces the historic single-factor model bit-for-bit
+    /// (see [`Self::stream_contention`]).
+    pub pfs_contention_coef: f64,
+    /// Stream-contention exponent: the extra-stream count is raised to
+    /// this power before multiplying by the coefficient. `1.0` (default)
+    /// is the historic linear model, exactly; calibrate above 1.0 to model
+    /// the super-linear collapse real parallel file systems exhibit once
+    /// N streams × M nodes oversubscribe the OSTs.
+    pub pfs_contention_exp: f64,
     /// SIM-ONLY fetch-ahead depth for `dist::sim`'s pipeline clock model,
     /// mirroring the driver's `--prefetch N`: the coordinator dispatches
     /// a step's fetch only once at most `depth` later steps are in
@@ -93,6 +105,8 @@ impl Default for CostModel {
             mem_bw: 12e9,
             per_sample_overhead_s: 95e-6,
             io_parallelism: 1,
+            pfs_contention_coef: 5e-4,
+            pfs_contention_exp: 1.0,
             decode_per_byte_s: 5e-10,
             codec_ratio: 1.0,
             prefetch_depth: usize::MAX,
@@ -222,9 +236,34 @@ impl CostModel {
     /// PFS contention multiplier for `n` concurrent reader nodes: Lustre
     /// aggregate bandwidth/metadata contention makes loading scale slightly
     /// sub-linearly (Table 1: 1.93x at 64 and 3.83x at 128 over 32 GPUs).
+    /// One read stream per node — the historic model, kept as the
+    /// single-stream case of [`Self::stream_contention`].
     #[inline]
     pub fn pfs_contention(&self, n_nodes: usize) -> f64 {
-        1.0 + 5e-4 * (n_nodes.saturating_sub(1)) as f64
+        self.stream_contention(n_nodes, 1)
+    }
+
+    /// Contention multiplier for `n_nodes` nodes each driving `n_streams`
+    /// concurrent PFS read streams (the fetch pool's width):
+    ///
+    /// ```text
+    /// factor = 1 + coef * (n_nodes * n_streams - 1) ^ exp
+    /// ```
+    ///
+    /// At the default calibration (`coef = 5e-4`, `exp = 1.0`) and one
+    /// stream per node this reproduces the historic
+    /// `1 + 5e-4 * (n_nodes - 1)` bit-for-bit: the `exp == 1.0` case is
+    /// special-cased to plain multiplication because `powf(x, 1.0)` is not
+    /// guaranteed to round identically to `x` on every platform, and the
+    /// simulator's fingerprints are compared byte-for-byte.
+    #[inline]
+    pub fn stream_contention(&self, n_nodes: usize, n_streams: usize) -> f64 {
+        let extra = (n_nodes * n_streams.max(1)).saturating_sub(1) as f64;
+        if self.pfs_contention_exp == 1.0 {
+            1.0 + self.pfs_contention_coef * extra
+        } else {
+            1.0 + self.pfs_contention_coef * extra.powf(self.pfs_contention_exp)
+        }
     }
 
     /// Convenience: cost of reading `n` samples of `sample_bytes` as one
@@ -393,6 +432,44 @@ mod tests {
         // sample costs less than streaming even a quarter of it from PFS.
         m.io_parallelism = 1;
         assert!(m.decode_cost(KB65) < (KB65 / 4) as f64 / m.pfs_bw + m.pfs_request_latency_s);
+    }
+
+    #[test]
+    fn default_contention_matches_historic_model_bitwise() {
+        // The calibratable form must reproduce the old hard-coded
+        // `1 + 5e-4 * (n - 1)` exactly — these factors reach the
+        // simulator's byte-compared fingerprints.
+        let m = CostModel::default();
+        for n in 0..=4096usize {
+            let old = 1.0 + 5e-4 * (n.saturating_sub(1)) as f64;
+            assert_eq!(m.pfs_contention(n).to_bits(), old.to_bits(), "n={n}");
+            assert_eq!(m.stream_contention(n, 1).to_bits(), old.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn stream_contention_composes_nodes_and_streams() {
+        let m = CostModel::default();
+        // 4 nodes x 2 streams contend like 8 single-stream nodes.
+        assert_eq!(m.stream_contention(4, 2).to_bits(), m.pfs_contention(8).to_bits());
+        // Zero streams is clamped to one, not a free pass.
+        assert_eq!(m.stream_contention(4, 0).to_bits(), m.pfs_contention(4).to_bits());
+    }
+
+    #[test]
+    fn superlinear_exponent_punishes_wide_fanout() {
+        let mut m = CostModel::default();
+        m.pfs_contention_exp = 1.6;
+        let lin = CostModel::default();
+        // Same at <= 1 extra stream (0^e = 0, 1^e = 1) ...
+        assert_eq!(m.stream_contention(1, 1).to_bits(), lin.stream_contention(1, 1).to_bits());
+        assert!((m.stream_contention(2, 1) - lin.stream_contention(2, 1)).abs() < 1e-15);
+        // ... then grows strictly faster than linear, and faster per
+        // doubling as the fan-out widens.
+        assert!(m.stream_contention(64, 4) > lin.stream_contention(64, 4));
+        let g1 = m.stream_contention(64, 2) - m.stream_contention(32, 2);
+        let g2 = m.stream_contention(128, 2) - m.stream_contention(64, 2);
+        assert!(g2 > g1, "super-linear: later doublings must cost more ({g2} vs {g1})");
     }
 
     #[test]

@@ -69,16 +69,21 @@ use std::sync::Arc;
 
 use crate::config::RunConfig;
 use crate::data::synth;
-use crate::loader::engine::{LoaderEngine, NodeStepLoad, RunStep};
+use crate::loader::engine::{LoaderEngine, NodeStepLoad, PlanRun, RunStep, StepLoad};
 use crate::loader::io::{contiguous_runs, FetchPool, FetchUnit};
 use crate::loader::LoaderPolicy;
 use crate::runtime::executable::{DenseImpl, TrainRuntime};
 use crate::runtime::params::{GradAccum, ParamStore};
+use crate::sched::plan::{PlanNodeStep, SchedulePlan};
 use crate::sched::replan;
+use crate::serve::client::{NodeClient, TenantClient};
+use crate::serve::tenant::TenantSpec;
+use crate::serve::transport::{self, StageRx, StageTx};
 use crate::storage::pfs::CostModel;
 use crate::storage::store::{decode_f32, Contiguity, SampleStore};
 use crate::train::metrics::{EpochLoadStat, LossPoint, TrainReport};
 use crate::train::runstate::RunState;
+use crate::util::json::Json;
 use crate::util::timer::Stopwatch;
 
 /// Depth cap for [`PrefetchMode::Auto`] (and the staged-channel bound it
@@ -212,6 +217,69 @@ pub struct TrainConfig {
     /// and per-epoch stats are bit-identical at every worker count
     /// (tested in `driver_pipeline_parity.rs`).
     pub io_threads: usize,
+    /// Execute this pre-computed [`SchedulePlan`] artifact instead of
+    /// running the loader engine (`train --plan FILE`). The plan must
+    /// match this run's config (validated); the schedule — and therefore
+    /// params, losses, and fingerprints — is identical to engine mode.
+    /// Mutually exclusive with `connect`, `resume`, and checkpointing.
+    pub plan: Option<Arc<SchedulePlan>>,
+    /// Run as a thin plan-executing client of a `solar serve` daemon:
+    /// the coordinator streams its plan from the daemon and each node's
+    /// fetch stage pulls staged bytes from the daemon's shared pool
+    /// instead of reading the store. Only WHERE bytes come from changes
+    /// — the schedule and trained params are bit-identical to a
+    /// standalone run (integration-tested).
+    pub connect: Option<ServeTarget>,
+}
+
+/// Where a `--connect` run finds its daemon, plus the dataset path AS
+/// THE DAEMON RESOLVES IT (the daemon opens the store; the client only
+/// names it).
+#[derive(Debug, Clone)]
+pub struct ServeTarget {
+    pub addr: String,
+    pub data: String,
+}
+
+/// Where the coordinator's step plans come from: the in-process engine
+/// cursor (classic mode), a materialized plan artifact (`--plan`), or a
+/// serve daemon's plan stream (`--connect`). All three yield the exact
+/// same schedule for the same run identity.
+enum StepFeed<'e> {
+    Engine(PlanRun<'e>),
+    Steps(std::vec::IntoIter<RunStep>),
+    Remote(TenantClient),
+}
+
+impl StepFeed<'_> {
+    fn next_step(&mut self) -> Result<Option<RunStep>> {
+        match self {
+            StepFeed::Engine(cursor) => Ok(cursor.next()),
+            StepFeed::Steps(it) => Ok(it.next()),
+            StepFeed::Remote(client) => client.next_step(),
+        }
+    }
+}
+
+/// Flatten a plan artifact into the driver's step stream, in visiting
+/// order with epoch-boundary markers — the artifact counterpart of the
+/// engine's run-long cursor.
+fn plan_to_steps(plan: &SchedulePlan) -> Vec<RunStep> {
+    let mut out = Vec::new();
+    for (epoch_pos, epoch) in plan.steps.iter().enumerate() {
+        let n = epoch.len();
+        for (si, step) in epoch.iter().enumerate() {
+            out.push(RunStep {
+                epoch_pos,
+                step: si,
+                epoch_end: si + 1 == n,
+                load: StepLoad {
+                    nodes: step.iter().cloned().map(PlanNodeStep::to_node_load).collect(),
+                },
+            });
+        }
+    }
+    out
 }
 
 type Params = Arc<Vec<Vec<f32>>>;
@@ -296,6 +364,9 @@ struct WorkerCtx {
     /// Batch/img when no manifest is available (`load_only`).
     fallback_batch: usize,
     fallback_img: usize,
+    /// Connect mode: `(daemon addr, tenant id)` — the fetch stage pulls
+    /// staged bytes from the serve daemon instead of reading the store.
+    remote: Option<(String, u32)>,
 }
 
 /// Depth for [`PrefetchMode::Auto`] after the measured first epoch: deep
@@ -331,10 +402,68 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             tc.holdout
         );
     }
-    let mut engine = LoaderEngine::new(tc.run.clone(), tc.policy.clone());
-    // Align engine request offsets + chunk boundaries with the store's
-    // real layout (single region for a flat file, one per shard else).
-    engine.bind_store(tc.store.as_ref())?;
+    if tc.plan.is_some() && tc.connect.is_some() {
+        bail!("--plan and --connect are mutually exclusive");
+    }
+    let external_plan = tc.plan.is_some() || tc.connect.is_some();
+    if external_plan && tc.resume.is_some() {
+        bail!("--plan/--connect runs cannot resume from a checkpoint (engine mode only)");
+    }
+    if external_plan && tc.checkpoint_every > 0 {
+        bail!("--plan/--connect runs cannot write checkpoints (engine mode only)");
+    }
+    if let Some(plan) = &tc.plan {
+        // A plan artifact is only executable against the exact run
+        // identity it was computed for — anything else would silently
+        // train a different schedule.
+        if plan.loader != tc.policy.name {
+            bail!(
+                "plan was computed for loader '{}', this run uses '{}'",
+                plan.loader,
+                tc.policy.name
+            );
+        }
+        if plan.config != Json::Null && plan.config != tc.run.to_json() {
+            bail!(
+                "plan config does not match this run:\n  plan: {}\n  run:  {}",
+                plan.config.to_string_compact(),
+                tc.run.to_json().to_string_compact()
+            );
+        }
+    }
+    // Engine mode only: `--plan`/`--connect` runs execute a plan computed
+    // elsewhere (file artifact / serve daemon) and never instantiate the
+    // engine — that is the whole point of the thin client.
+    let mut engine: Option<LoaderEngine> = if external_plan {
+        None
+    } else {
+        let mut e = LoaderEngine::new(tc.run.clone(), tc.policy.clone());
+        // Align engine request offsets + chunk boundaries with the
+        // store's real layout (single region for a flat file, one per
+        // shard else).
+        e.bind_store(tc.store.as_ref())?;
+        Some(e)
+    };
+    // Connect mode: register with the daemon BEFORE spawning workers —
+    // each node's fetch stage dials in with the assigned tenant id.
+    let mut remote_client: Option<TenantClient> = None;
+    let mut remote_node: Option<(String, u32)> = None;
+    if let Some(tgt) = &tc.connect {
+        let spec = TenantSpec {
+            data: tgt.data.clone(),
+            policy: tc.policy.name.clone(),
+            n_nodes,
+            local_batch: tc.run.local_batch,
+            n_epochs: tc.run.n_epochs,
+            seed: tc.run.seed,
+            buffer_capacity: tc.run.buffer_capacity,
+            holdout: tc.holdout,
+        };
+        let client = TenantClient::register(&tgt.addr, &spec)
+            .with_context(|| format!("register with serve daemon {}", tgt.addr))?;
+        remote_node = Some((tgt.addr.clone(), client.tenant));
+        remote_client = Some(client);
+    }
 
     // Resume: validate the checkpoint against this run's schedule
     // identity and work out each node's initial buffer bytes. Same node
@@ -388,7 +517,10 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
                     })
                     .collect::<Result<_>>()?;
             }
-            engine.import_buffers(&plan.members)?;
+            engine
+                .as_mut()
+                .context("elastic resume requires engine mode")?
+                .import_buffers(&plan.members)?;
         }
     }
 
@@ -444,6 +576,7 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             init_buffer: std::mem::take(&mut init_buffers[k]),
             fallback_batch: tc.run.local_batch.max(1),
             fallback_img,
+            remote: remote_node.clone(),
         };
         handles.push(std::thread::spawn(move || worker_loop(ctx, frx, rx, done)));
     }
@@ -516,10 +649,17 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     // resume replays the prefix (bit-identical cursor + buffer-key
     // state), an elastic one seeks (the imported membership stands in
     // for the prefix it never planned).
-    let mut cursor = match &tc.resume {
-        None => engine.plan_run(),
-        Some(rs) if !resume_elastic => engine.plan_run_from(rs.pos()),
-        Some(rs) => engine.plan_run_seek(rs.pos()),
+    let mut feed: StepFeed = if let Some(client) = remote_client {
+        StepFeed::Remote(client)
+    } else if let Some(plan) = &tc.plan {
+        StepFeed::Steps(plan_to_steps(plan).into_iter())
+    } else {
+        let engine = engine.as_mut().context("engine mode without an engine")?;
+        StepFeed::Engine(match &tc.resume {
+            None => engine.plan_run(),
+            Some(rs) if !resume_elastic => engine.plan_run_from(rs.pos()),
+            Some(rs) => engine.plan_run_seek(rs.pos()),
+        })
     };
     // Per-step (epoch, hits, pfs) of plans whose fetch has been
     // dispatched but whose exec hasn't run — counted into the report at
@@ -536,7 +676,11 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     loop {
         // Keep the fetch stages `depth` steps ahead of execution.
         while !fetch_down && inflight.len() <= depth {
-            let Some(rs) = pending.take().or_else(|| cursor.next()) else { break };
+            let next = match pending.take() {
+                Some(rs) => Some(rs),
+                None => feed.next_step()?,
+            };
+            let Some(rs) = next else { break };
             if tc.epoch_drain && rs.epoch_pos != dispatch_epoch && !inflight.is_empty() {
                 // Old per-epoch behaviour: hold the next epoch's first
                 // step until the pipeline drains at the boundary.
@@ -719,7 +863,15 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             break;
         }
     }
-    drop(cursor);
+    if let StepFeed::Remote(client) = &mut feed {
+        // Best effort: completion accounting on the daemon. A failed
+        // notification must not fail a finished run, but it should not
+        // vanish either — the daemon's run_until waits on this.
+        if let Err(e) = client.finish() {
+            eprintln!("warning: serve daemon completion notice failed: {e:#}");
+        }
+    }
+    drop(feed);
     if global_step == 0 {
         // Nothing executed (zero epochs, or zero steps per epoch): one
         // empty stat per configured epoch, matching the serial schedule.
@@ -762,9 +914,13 @@ fn worker_loop(
     // sit fully staged awaiting execution; the bound gives backpressure
     // so staged bytes stay O(depth), not O(epoch) — and, with the
     // cross-epoch cursor, lets steps of the NEXT epoch sit staged while
-    // this epoch's tail executes.
-    let (staged_tx, staged_rx) = mpsc::sync_channel::<Staged>(ctx.stage_bound.max(1));
+    // this epoch's tail executes. The lane is the transport abstraction
+    // (`serve::transport`): in-process channels here, with the same
+    // blocking/backpressure/close semantics a socket-backed lane must
+    // honor.
+    let (staged_tx, staged_rx) = transport::in_process::<Staged>(ctx.stage_bound.max(1));
     let node = ctx.node;
+    let remote = ctx.remote.clone();
     let fetch_store = ctx.store.clone();
     let fetch_done = done.clone();
     let throttle = ctx.throttle;
@@ -786,6 +942,7 @@ fn worker_loop(
             fetch_done,
             fault,
             init_resident,
+            remote,
         )
     });
 
@@ -984,7 +1141,7 @@ fn worker_loop(
 fn fetch_loop(
     node: usize,
     rx: mpsc::Receiver<FetchMsg>,
-    out: mpsc::SyncSender<Staged>,
+    out: Box<dyn StageTx<Staged>>,
     store: Arc<dyn SampleStore>,
     throttle: f64,
     mut cost: CostModel,
@@ -992,7 +1149,20 @@ fn fetch_loop(
     done: mpsc::Sender<Result<DoneMsg>>,
     fault: Option<(usize, FaultKind)>,
     init_resident: Vec<u32>,
+    remote: Option<(String, u32)>,
 ) {
+    // Connect mode: this stage is a byte client of the serve daemon —
+    // staged bytes arrive over the wire instead of from the store.
+    let mut remote_conn: Option<NodeClient> = match &remote {
+        Some((addr, tenant)) => match NodeClient::connect(addr, *tenant, node) {
+            Ok(c) => Some(c),
+            Err(e) => {
+                let _ = done.send(Err(anyhow::anyhow!("worker {node} fetch: {e:#}")));
+                return;
+            }
+        },
+        None => None,
+    };
     let contig = store.chunk_contiguity();
     // One fetch pool per node, alive for the whole run: its byte buffers,
     // decode buffers AND worker threads recycle across steps (no per-read
@@ -1035,7 +1205,14 @@ fn fetch_loop(
                     }
                 }
                 let t = Stopwatch::start();
-                match stage_step(&mut pool, &store, &contig, &resident, &load, &cost) {
+                // Remote staging carries no modeled PFS time: the daemon
+                // moved the bytes (pool hit or its own PFS read); the
+                // throttle emulates a PFS this node is NOT reading from.
+                let staged_result = match remote_conn.as_mut() {
+                    Some(nc) => nc.fetch_step(step_id).map(|staged| (staged, 0.0)),
+                    None => stage_step(&mut pool, &store, &contig, &resident, &load, &cost),
+                };
+                match staged_result {
                     Err(e) => {
                         let _ = done.send(Err(anyhow::anyhow!("worker {node} fetch: {e:#}")));
                         return;
@@ -1072,7 +1249,11 @@ fn fetch_loop(
             }
             FetchMsg::Eval { after_step, ids } => {
                 if holdout.is_none() {
-                    match stage_eval(&mut pool, &store, &contig, &ids) {
+                    let staged_eval = match remote_conn.as_mut() {
+                        Some(nc) => nc.fetch_ids(&ids),
+                        None => stage_eval(&mut pool, &store, &contig, &ids),
+                    };
+                    match staged_eval {
                         Ok(m) => holdout = Some(m),
                         Err(e) => {
                             let _ = done.send(Err(anyhow::anyhow!(
@@ -1151,11 +1332,20 @@ fn stage_step(
             .map(|(c, &region)| FetchUnit { lo: c.lo, count: c.span() as usize, region })
             .collect()
     } else {
-        // Per-sample fallback (non-chunking policies): batch the wanted
-        // ids into contiguous runs so a clustered batch still reads in
-        // few requests.
-        let mut ids: Vec<u32> =
-            load.samples.iter().copied().filter(|x| !resident.contains(x)).collect();
+        // Per-sample fallback (non-chunking policies, and plan-artifact
+        // loads, whose chunk lists are dropped at rehydration): batch
+        // the wanted ids into contiguous runs so a clustered batch
+        // still reads in few requests. The staged set is (samples ∪
+        // inserted) minus residents — `inserted` can reach past the
+        // batch when a plan admits prefetched ids, and the exec side
+        // only admits bytes it finds staged.
+        let mut ids: Vec<u32> = load
+            .samples
+            .iter()
+            .chain(load.inserted.iter())
+            .copied()
+            .filter(|x| !resident.contains(x))
+            .collect();
         ids.sort_unstable();
         ids.dedup();
         contiguous_runs(&ids, contig)

@@ -421,7 +421,9 @@ impl RunState {
 
 /// FNV-1a 64-bit — tiny, dependency-free, and plenty for torn/bit-rot
 /// detection (this is an integrity check, not an authenticity one).
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// `pub(crate)` so `serve::proto` frames reuse the same checksum
+/// discipline as the checkpoint format.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in bytes {
         h ^= b as u64;

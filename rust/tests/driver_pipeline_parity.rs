@@ -145,6 +145,8 @@ fn tc(ds: &str, loader: &str, prefetch: usize, throttle: f64) -> TrainConfig {
         // Serial fetch stage: the baseline every parallel-I/O case is
         // compared against (the io-thread sweep overrides this).
         io_threads: 1,
+        plan: None,
+        connect: None,
     }
 }
 

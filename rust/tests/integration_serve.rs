@@ -1,0 +1,203 @@
+//! Loader-as-a-service acceptance: two tenants served concurrently by
+//! one `solar serve` daemon must train BIT-IDENTICALLY to their
+//! standalone runs (the serve invariant — the daemon changes only WHERE
+//! staged bytes come from, never WHAT is trained), while the shared
+//! oracle-evicted pool lifts the aggregate hit rate at least to the
+//! best standalone run's. Runs PJRT-free (`load_only`), so it needs no
+//! artifacts and covers CI.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use solar::config::RunConfig;
+use solar::data::spec::DatasetSpec;
+use solar::data::synth;
+use solar::loader::LoaderPolicy;
+use solar::runtime::executable::DenseImpl;
+use solar::serve::server::{ServeOpts, Server};
+use solar::storage::pfs::CostModel;
+use solar::storage::store::{open_store, SampleStore};
+use solar::train::driver::{train, FaultKind, PrefetchMode, ServeTarget, TrainConfig};
+use solar::train::metrics::TrainReport;
+use solar::util::json::Json;
+
+const N_TOTAL: usize = 112;
+const HOLDOUT: usize = 16;
+const N_TRAIN: usize = N_TOTAL - HOLDOUT;
+
+fn dataset(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("solar_integration_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}_{N_TOTAL}.shdf"));
+    let ok = open_store(&path).map(|s| s.n_samples() == N_TOTAL).unwrap_or(false);
+    if !ok {
+        let mut spec = DatasetSpec::paper("cd17").unwrap();
+        spec.n_samples = N_TOTAL;
+        spec.id = name.into();
+        synth::generate_dataset(&path, &spec, 77).unwrap();
+    }
+    path
+}
+
+/// The exact store-derived run identity `cmd_train` (and the daemon's
+/// `Tenant::materialize`) builds — the test's bit-identity claim depends
+/// on all three deriving the same config from the same store.
+fn tc(path: &PathBuf, seed: u64) -> TrainConfig {
+    let store = open_store(path).unwrap();
+    let mut spec = DatasetSpec::paper("cd17").unwrap();
+    spec.id = store.dataset_name().to_string();
+    spec.n_samples = N_TRAIN;
+    spec.sample_bytes = store.sample_bytes();
+    spec.shape = store.shape().to_vec();
+    TrainConfig {
+        run: RunConfig {
+            spec,
+            n_nodes: 2,
+            local_batch: 8,
+            n_epochs: 3,
+            seed,
+            // 1/4 of the dataset per node: hits AND PFS fetches occur.
+            buffer_capacity: N_TRAIN / 4 / 2,
+            cost: CostModel::default(),
+        },
+        store,
+        artifacts_dir: PathBuf::from("artifacts"),
+        policy: LoaderPolicy::by_name("solar").unwrap(),
+        dense: DenseImpl::Xla,
+        lr: 0.08,
+        throttle: 0.0,
+        eval_every: 0,
+        max_steps: 0,
+        holdout: HOLDOUT,
+        prefetch: PrefetchMode::Fixed(1),
+        epoch_drain: false,
+        fetch_fault: None,
+        fault_kind: FaultKind::Error,
+        checkpoint_every: 0,
+        checkpoint_path: None,
+        resume: None,
+        load_only: true,
+        io_threads: 1,
+        plan: None,
+        connect: None,
+    }
+}
+
+fn assert_identical(tag: &str, a: &TrainReport, b: &TrainReport) {
+    assert_eq!(a.steps, b.steps, "{tag}: steps");
+    assert_eq!(a.epochs, b.epochs, "{tag}: epochs");
+    assert_eq!(a.hits, b.hits, "{tag}: total hits");
+    assert_eq!(a.pfs_samples, b.pfs_samples, "{tag}: total PFS fetches");
+    assert_eq!(a.epoch_stats, b.epoch_stats, "{tag}: per-epoch hits/pfs");
+    assert_eq!(a.points.len(), b.points.len(), "{tag}: loss points");
+    for (x, y) in a.points.iter().zip(b.points.iter()) {
+        assert_eq!(x.epoch, y.epoch, "{tag}: epoch attribution at step {}", x.step);
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{tag}: loss diverged at step {}",
+            x.step
+        );
+    }
+    assert_eq!(a.final_params, b.final_params, "{tag}: final params");
+}
+
+#[test]
+fn two_tenants_match_standalone_and_pool_lifts_hit_rate() {
+    let path = dataset("serve");
+    let seeds = [42u64, 7u64];
+
+    // Standalone baselines: same configs, no daemon.
+    let standalone: Vec<TrainReport> =
+        seeds.iter().map(|&s| train(&tc(&path, s)).unwrap()).collect();
+
+    // Daemon with the whole dataset resident — the second tenant's
+    // staged reads should overwhelmingly hit the shared pool.
+    let server = Server::bind(
+        "127.0.0.1:0",
+        ServeOpts { pool_capacity: N_TOTAL, telemetry: None },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server = Arc::new(server);
+    let daemon = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run_until(seeds.len()))
+    };
+
+    // Both tenants run CONCURRENTLY against the daemon.
+    let clients: Vec<std::thread::JoinHandle<TrainReport>> = seeds
+        .iter()
+        .map(|&s| {
+            let path = path.clone();
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = tc(&path, s);
+                c.connect =
+                    Some(ServeTarget { addr, data: path.display().to_string() });
+                train(&c).unwrap()
+            })
+        })
+        .collect();
+    let served: Vec<TrainReport> = clients.into_iter().map(|h| h.join().unwrap()).collect();
+    let feed = daemon.join().unwrap().unwrap();
+
+    // THE serve invariant: bit-identical to standalone, per tenant.
+    for ((&seed, alone), remote) in seeds.iter().zip(&standalone).zip(&served) {
+        assert_identical(&format!("seed {seed}"), alone, remote);
+    }
+
+    // Telemetry accounting: Σ per-tenant counters == pool totals.
+    assert_eq!(feed.req_str("accounting").unwrap(), "ok", "{}", feed.to_string_compact());
+
+    // The pool must pay for itself: aggregate hit rate (plan hits +
+    // cross-tenant pool hits over all staged samples) at least the best
+    // standalone (plan-only) hit rate.
+    let tenants = match feed.get("tenants") {
+        Some(Json::Arr(ts)) => ts,
+        other => panic!("feed missing tenants array: {other:?}"),
+    };
+    let plan_hits: u64 = tenants.iter().map(|t| t.req_u64("plan_hits").unwrap()).sum();
+    let totals = feed.get("totals").unwrap();
+    let pool_hits = totals.req_u64("pool_hits").unwrap();
+    let pfs = totals.req_u64("pfs_samples").unwrap();
+    assert!(pool_hits > 0, "shared pool never hit — tenants aren't sharing");
+    let aggregate = (plan_hits + pool_hits) as f64 / (plan_hits + pool_hits + pfs) as f64;
+    let best_alone = standalone
+        .iter()
+        .map(|r| r.hits as f64 / (r.hits + r.pfs_samples) as f64)
+        .fold(0.0f64, f64::max);
+    assert!(
+        aggregate >= best_alone,
+        "shared-pool aggregate hit rate {aggregate:.4} fell below best standalone {best_alone:.4}"
+    );
+}
+
+#[test]
+fn plan_artifact_run_matches_engine_run() {
+    // `train --plan FILE` parity: a plan computed offline against the
+    // store executes the exact schedule the in-process engine runs.
+    let path = dataset("planx");
+    let base = tc(&path, 42);
+    let plan_path = std::env::temp_dir().join("solar_integration_serve").join("planx.json");
+    solar::sched::plan::SchedulePlan::compute_to_file(&base.run, &base.policy, &plan_path)
+        .unwrap();
+    let engine_run = train(&base).unwrap();
+    let mut c = tc(&path, 42);
+    c.plan = Some(Arc::new(solar::sched::plan::SchedulePlan::load(&plan_path).unwrap()));
+    let plan_run = train(&c).unwrap();
+    assert_identical("plan artifact", &engine_run, &plan_run);
+}
+
+#[test]
+fn plan_config_mismatch_is_rejected() {
+    let path = dataset("planrej");
+    let base = tc(&path, 42);
+    let plan_path = std::env::temp_dir().join("solar_integration_serve").join("planrej.json");
+    solar::sched::plan::SchedulePlan::compute_to_file(&base.run, &base.policy, &plan_path)
+        .unwrap();
+    let mut c = tc(&path, 7); // different seed — different schedule identity
+    c.plan = Some(Arc::new(solar::sched::plan::SchedulePlan::load(&plan_path).unwrap()));
+    let err = train(&c).unwrap_err().to_string();
+    assert!(err.contains("plan config"), "unexpected error: {err}");
+}

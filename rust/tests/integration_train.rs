@@ -76,6 +76,8 @@ fn tc(path: PathBuf, n_train: usize, loader: &str, n_nodes: usize, epochs: usize
         resume: None,
         load_only: false,
         io_threads: 0, // auto: SOLAR_IO_THREADS or the machine default
+        plan: None,
+        connect: None,
     }
 }
 

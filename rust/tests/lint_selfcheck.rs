@@ -15,7 +15,7 @@ use solar::analysis::{deny_verdict, lint_tree, partition, render_json};
 fn write_fixture() -> PathBuf {
     let root = std::env::temp_dir().join(format!("solar_lint_fixture_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&root);
-    for sub in ["loader", "storage", "exp", "util", "train"] {
+    for sub in ["loader", "storage", "exp", "util", "train", "serve"] {
         std::fs::create_dir_all(root.join(sub)).unwrap();
     }
     // R1 (unsorted hash iteration), R4 (unwrap in spawn), R5 (ShdfReader
@@ -83,6 +83,29 @@ pub fn calibrated() -> std::time::Instant {
 "#,
     )
     .unwrap();
+    // serve/ inherits R1, R3, and R4 (PR 9): unsorted hash iteration, an
+    // ad-hoc wall-clock read, and an unwrap inside a handler-thread spawn.
+    std::fs::write(
+        root.join("serve/pool.rs"),
+        r#"use std::collections::HashMap;
+
+pub fn residents(pool: &HashMap<u32, Vec<u8>>) -> usize {
+    pool.values().map(Vec::len).sum()
+}
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+pub fn handler(rx: std::sync::mpsc::Receiver<u32>) {
+    std::thread::spawn(move || {
+        let v = rx.recv().unwrap();
+        drop(v);
+    });
+}
+"#,
+    )
+    .unwrap();
     // Clean file: BTree iteration + sorted hash collect are sanctioned.
     std::fs::write(
         root.join("train/clean.rs"),
@@ -119,6 +142,9 @@ fn every_rule_fires_on_its_seeded_fixture_and_only_there() {
         ("loader/fetch.rs", "R4", 13),
         ("loader/fetch.rs", "R5", 18),
         ("loader/fetch.rs", "R5", 19),
+        ("serve/pool.rs", "R1", 4),
+        ("serve/pool.rs", "R3", 8),
+        ("serve/pool.rs", "R4", 13),
         ("storage/layout.rs", "R6", 2),
         ("util/bad_pragma.rs", "PRAGMA", 2),
     ]

@@ -253,6 +253,8 @@ fn load_only_tc(store: Arc<dyn SampleStore>, loader: &str, prefetch: PrefetchMod
         resume: None,
         load_only: true,
         io_threads: 0, // auto: SOLAR_IO_THREADS or the machine default
+        plan: None,
+        connect: None,
     }
 }
 
