@@ -11,7 +11,7 @@ use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
 use solar::storage::pfs::CostModel;
 use solar::storage::store::{open_store, SampleStore};
-use solar::train::driver::{train, FaultKind, PrefetchMode, TrainConfig};
+use solar::train::driver::{train, PrefetchMode, TrainConfig};
 use solar::util::bench::BenchSuite;
 
 fn main() {
@@ -66,8 +66,8 @@ fn main() {
             holdout: 0,
             prefetch: PrefetchMode::Fixed(prefetch),
             epoch_drain: false,
-            fetch_fault: None,
-            fault_kind: FaultKind::Error,
+            fetch_fault: Vec::new(),
+            fallback: false,
             checkpoint_every: 0,
             checkpoint_path: None,
             resume: None,

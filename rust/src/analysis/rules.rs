@@ -59,10 +59,12 @@ fn r1_scope(path: &str) -> bool {
 const R3_ALLOW: &[&str] = &["util/timer.rs"];
 
 /// R4 scope: files whose spawns are fetch/exec/worker threads (serve/
-/// spawns accept-loop and per-connection handler threads).
+/// spawns accept-loop and per-connection handler threads;
+/// storage/fault.rs sits on every fetch worker's read path).
 fn r4_scope(path: &str) -> bool {
     ["loader/", "train/", "dist/", "serve/"].iter().any(|p| path.starts_with(p))
         || path == "util/pool.rs"
+        || path == "storage/fault.rs"
 }
 
 fn is_ident(b: u8) -> bool {

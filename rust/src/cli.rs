@@ -16,10 +16,13 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 
 /// Parsed argv: a subcommand plus `--key value` / `--flag` options.
+/// Options are multi-valued: a repeated `--key` accumulates (used by
+/// `--fetch-fault`); `get` returns the last occurrence, so single-value
+/// options keep the familiar last-one-wins behavior.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub cmd: String,
-    opts: HashMap<String, String>,
+    opts: HashMap<String, Vec<String>>,
     flags: Vec<String>,
 }
 
@@ -34,7 +37,7 @@ impl Args {
             };
             match it.peek() {
                 Some(v) if !v.starts_with("--") => {
-                    a.opts.insert(key.to_string(), it.next().unwrap().clone());
+                    a.opts.entry(key.to_string()).or_default().push(it.next().unwrap().clone());
                 }
                 _ => a.flags.push(key.to_string()),
             }
@@ -47,7 +50,12 @@ impl Args {
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.opts.get(name).map(String::as_str)
+        self.opts.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// Every occurrence of a repeatable option, in argv order.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.opts.get(name).map(Vec::as_slice).unwrap_or(&[])
     }
 
     pub fn get_or(&self, name: &str, default: &str) -> String {
@@ -100,7 +108,7 @@ pub fn parse_prefetch(s: &str) -> Result<crate::train::driver::PrefetchMode> {
 /// NODE at step STEP. The default kind reports an error (the well-behaved
 /// failure); the `:loss` suffix makes the stage vanish silently instead —
 /// the abrupt node-loss drill (resume the run elastically afterwards).
-pub fn parse_fetch_fault(s: &str) -> Result<((usize, usize), crate::train::driver::FaultKind)> {
+pub fn parse_fetch_fault(s: &str) -> Result<(usize, usize, crate::train::driver::FaultKind)> {
     use crate::train::driver::FaultKind;
     let parts: Vec<&str> = s.split(':').collect();
     let (node_s, step_s, kind) = match parts.as_slice() {
@@ -115,7 +123,7 @@ pub fn parse_fetch_fault(s: &str) -> Result<((usize, usize), crate::train::drive
     let step = step_s
         .parse()
         .with_context(|| format!("--fetch-fault step must be an integer, got '{step_s}'"))?;
-    Ok(((node, step), kind))
+    Ok((node, step, kind))
 }
 
 pub const USAGE: &str = "\
@@ -184,7 +192,21 @@ COMMANDS
             [--fetch-fault NODE:STEP[:loss]] (inject a fetch-stage fault:
             node NODE fails at step STEP. Default reports an error;
             ':loss' makes the stage vanish silently — the node-loss
-            drill; recover with --resume on the surviving node count)
+            drill; recover with --resume on the surviving node count.
+            Repeatable; NODE/STEP are validated against the run shape)
+            [--fault-plan SPEC] (deterministic store-fault injection:
+            wrap the dataset in a scripted FaultyStore. SPEC is comma-
+            separated clauses — transient:SAMPLE:N (sample's first N
+            read attempts fail), persistent:SAMPLE (every attempt
+            fails), latency:MS (per-read sleep), rate:P + seed:S
+            (seeded random first-attempt failures). Transients resolve
+            inside the fetch pool's retry budget and the run stays
+            bit-identical; the retry/backoff totals print beside the
+            schedule fingerprint)
+            [--fallback standalone] (with --connect: if the daemon dies
+            mid-run, rebuild the plan locally and continue from the
+            exact step the daemon last served — bit-identical to the
+            uninterrupted run; fetch stages fall back to local reads)
             [--plan FILE] (execute a pre-computed schedule artifact from
             `schedule --data` instead of running the loader engine;
             schedule knobs default to the plan's embedded config and may
@@ -263,12 +285,20 @@ mod tests {
     #[test]
     fn fetch_fault_parsing() {
         use crate::train::driver::FaultKind;
-        assert_eq!(parse_fetch_fault("1:4").unwrap(), ((1, 4), FaultKind::Error));
-        assert_eq!(parse_fetch_fault("0:12:error").unwrap(), ((0, 12), FaultKind::Error));
-        assert_eq!(parse_fetch_fault("2:7:loss").unwrap(), ((2, 7), FaultKind::NodeLoss));
+        assert_eq!(parse_fetch_fault("1:4").unwrap(), (1, 4, FaultKind::Error));
+        assert_eq!(parse_fetch_fault("0:12:error").unwrap(), (0, 12, FaultKind::Error));
+        assert_eq!(parse_fetch_fault("2:7:loss").unwrap(), (2, 7, FaultKind::NodeLoss));
         assert!(parse_fetch_fault("3").is_err());
         assert!(parse_fetch_fault("1:2:crash").is_err());
         assert!(parse_fetch_fault("x:2").is_err());
+    }
+
+    #[test]
+    fn repeated_options_accumulate_and_get_takes_last() {
+        let a = parse(&["train", "--fetch-fault", "0:2", "--fetch-fault", "1:5:loss"]);
+        assert_eq!(a.get_all("fetch-fault"), &["0:2".to_string(), "1:5:loss".to_string()]);
+        assert_eq!(a.get("fetch-fault"), Some("1:5:loss"), "get() is last-one-wins");
+        assert!(a.get_all("missing").is_empty());
     }
 
     #[test]

@@ -24,7 +24,7 @@ use crate::runtime::executable::{DenseImpl, TrainRuntime};
 use crate::runtime::params::ParamStore;
 use crate::storage::pfs::CostModel;
 use crate::storage::store::{decode_f32, open_store, SampleStore};
-use crate::train::driver::{train, FaultKind, PrefetchMode, TrainConfig};
+use crate::train::driver::{train, PrefetchMode, TrainConfig};
 use crate::train::metrics::TrainReport;
 
 /// Ensure the scaled CD dataset exists on disk; returns its path.
@@ -84,8 +84,8 @@ fn run_one(
         // covered by driver_pipeline_parity.rs).
         prefetch: PrefetchMode::Fixed(1),
         epoch_drain: false,
-        fetch_fault: None,
-        fault_kind: FaultKind::Error,
+        fetch_fault: Vec::new(),
+        fallback: false,
         checkpoint_every: 0,
         checkpoint_path: None,
         resume: None,

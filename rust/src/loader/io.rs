@@ -58,6 +58,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::storage::codec::Codec;
 use crate::storage::store::{Contiguity, SampleStore};
+use crate::util::retry::{self, RetryCell, RetryStats};
 
 /// Worker count for the fetch pool (and the modeled stream count): the
 /// `SOLAR_IO_THREADS` environment variable when set (min 1 —
@@ -182,6 +183,8 @@ struct Job {
     group: Vec<(FetchUnit, Vec<u8>)>,
     /// Pooled decode buffers: at least one per sample across the group.
     f32_bufs: Vec<Vec<f32>>,
+    /// Shared retry counters (crew threads bump the pool's cell).
+    retry: Arc<RetryCell>,
 }
 
 /// A finished parcel: the decoded samples plus every pooled buffer the
@@ -236,19 +239,62 @@ fn run_unit(
     Ok(decoded)
 }
 
+/// [`run_unit`] under the shared retry policy: up to
+/// [`retry::FETCH_ATTEMPTS`] attempts with deterministic exponential
+/// backoff between them. Transient faults (injected or real) resolve
+/// inside the budget and cost only wall-clock — the staged bytes, and
+/// therefore the schedule, cannot notice a retry. A unit still failing
+/// on the last attempt surfaces its root-cause chain annotated with the
+/// attempt count. Every attempt and backoff sleep is counted in `cell`
+/// (and the backoff follows `CostModel::retry_backoff_s`, so the driver
+/// charges the modeled clock the same amount it actually slept).
+fn run_unit_retrying(
+    store: &dyn SampleStore,
+    codec: Codec,
+    sb: usize,
+    u: FetchUnit,
+    buf: &mut Vec<u8>,
+    f32_bufs: &mut Vec<Vec<f32>>,
+    cell: &RetryCell,
+) -> Result<Vec<Arc<Vec<f32>>>> {
+    let mut failed = 0usize;
+    loop {
+        cell.attempt(failed > 0);
+        match run_unit(store, codec, sb, u, buf, f32_bufs) {
+            Ok(decoded) => return Ok(decoded),
+            Err(e) => {
+                failed += 1;
+                if failed >= retry::FETCH_ATTEMPTS {
+                    return Err(e.context(format!(
+                        "unit [{}, {}): read failed after {failed} attempts",
+                        u.lo,
+                        u.lo as usize + u.count
+                    )));
+                }
+                let ms = retry::backoff_ms(failed);
+                cell.backoff(ms);
+                if ms > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+            }
+        }
+    }
+}
+
 /// Execute one parcel (runs on a crew thread). The first failing unit
 /// stops the group's reads, but every pooled buffer still comes back.
 fn run_job(job: Job) -> JobOut {
     let store = job.store.as_ref();
     let codec = store.codec();
     let sb = job.sample_bytes;
+    let retry_cell = job.retry;
     let mut f32_bufs = job.f32_bufs;
     let mut byte_bufs = Vec::with_capacity(job.group.len());
     let mut done = Vec::with_capacity(job.group.len());
     let mut err = None;
     for (u, mut buf) in job.group {
         if err.is_none() {
-            match run_unit(store, codec, sb, u, &mut buf, &mut f32_bufs) {
+            match run_unit_retrying(store, codec, sb, u, &mut buf, &mut f32_bufs, &retry_cell) {
                 Ok(decoded) => done.push((u, decoded)),
                 Err(e) => err = Some(e),
             }
@@ -331,12 +377,23 @@ pub struct FetchPool {
     /// Total crew threads ever spawned — the persistent-threads evidence
     /// (stays at `workers` across arbitrarily many steps).
     spawned: u64,
+    /// Retry/backoff counters, shared with the crew threads (and, via
+    /// [`FetchPool::with_retry`], with whatever per-worker cell the
+    /// driver aggregates into its `TrainReport`).
+    retry: Arc<RetryCell>,
 }
 
 impl FetchPool {
     /// `workers <= 1` is the strictly serial fetch stage (no threads at
     /// all — bit-identical to the pre-pool behaviour).
     pub fn new(workers: usize) -> FetchPool {
+        FetchPool::with_retry(workers, Arc::new(RetryCell::default()))
+    }
+
+    /// A pool whose retry counters accumulate into a caller-owned cell
+    /// (the driver shares one cell per fetch worker between the pool and
+    /// the serve client so `TrainReport.retry` sees every attempt).
+    pub fn with_retry(workers: usize, retry: Arc<RetryCell>) -> FetchPool {
         FetchPool {
             workers: workers.max(1),
             bufs: BufferPool::default(),
@@ -345,6 +402,7 @@ impl FetchPool {
             stats: PoolStats::default(),
             crew: None,
             spawned: 0,
+            retry,
         }
     }
 
@@ -354,6 +412,12 @@ impl FetchPool {
 
     pub fn stats(&self) -> PoolStats {
         self.stats
+    }
+
+    /// Snapshot of the retry/backoff counters (attempts, retries, slept
+    /// backoff) accumulated by this pool's reads so far.
+    pub fn retry_stats(&self) -> RetryStats {
+        self.retry.stats()
     }
 
     /// Total crew threads spawned over the pool's lifetime. A run at a
@@ -465,7 +529,9 @@ impl FetchPool {
             // Serial fast path: caller's thread, unit order, no crew.
             for (u, mut buf) in work {
                 let mut f32s = self.acquire_f32(u.count);
-                let decoded = run_unit(store.as_ref(), codec, sb, u, &mut buf, &mut f32s)?;
+                let cell = Arc::clone(&self.retry);
+                let decoded =
+                    run_unit_retrying(store.as_ref(), codec, sb, u, &mut buf, &mut f32s, &cell)?;
                 self.stash(u, decoded, staged);
                 self.bufs.release(buf);
             }
@@ -497,7 +563,14 @@ impl FetchPool {
         for (seq, group) in items.into_iter().enumerate() {
             let total: usize = group.iter().map(|(u, _)| u.count).sum();
             let f32_bufs = self.acquire_f32(total);
-            jobs.push(Job { seq, store: Arc::clone(store), sample_bytes: sb, group, f32_bufs });
+            jobs.push(Job {
+                seq,
+                store: Arc::clone(store),
+                sample_bytes: sb,
+                group,
+                f32_bufs,
+                retry: Arc::clone(&self.retry),
+            });
         }
 
         // Hand the parcels to the persistent crew (spawned on the first
@@ -872,5 +945,57 @@ mod tests {
     #[test]
     fn io_threads_is_at_least_one() {
         assert!(io_threads() >= 1);
+    }
+
+    #[test]
+    fn transient_faults_are_retried_transparently_at_any_worker_count() {
+        use crate::storage::fault::{FaultPlan, FaultyStore};
+        let inner = mem(64, 4);
+        let contig = inner.chunk_contiguity();
+        let ids: Vec<u32> = vec![0, 1, 2, 10, 11, 30, 40, 41, 42, 43, 63];
+        let units = contiguous_runs(&ids, &contig);
+        for workers in [1usize, 4] {
+            // Transient faults inside the retry budget: sample 10 fails
+            // twice, 41 once — the fetch still succeeds and stages the
+            // exact same bytes as the fault-free store.
+            let plan = FaultPlan::parse("transient:10:2,transient:41:1").unwrap();
+            let store: Arc<dyn SampleStore> =
+                Arc::new(FaultyStore::new(inner.clone(), plan));
+            let mut pool = FetchPool::new(workers);
+            let mut staged = HashMap::new();
+            pool.fetch(&store, &units, &mut staged).unwrap();
+            assert_eq!(staged.len(), ids.len(), "workers={workers}");
+            for &i in &ids {
+                assert_eq!(**staged.get(&i).unwrap(), expect_sample(i, 4), "workers={workers}");
+            }
+            let r = pool.retry_stats();
+            assert_eq!(r.retries, 3, "workers={workers}: two retries for 10, one for 41");
+            assert_eq!(r.attempts, units.len() as u64 + 3, "workers={workers}");
+            assert!(r.backoff_us > 0, "workers={workers}: backoff was charged");
+            assert_eq!(r.fallbacks, 0);
+        }
+    }
+
+    #[test]
+    fn persistent_faults_exhaust_the_budget_and_carry_the_attempt_count() {
+        use crate::storage::fault::{FaultPlan, FaultyStore};
+        let inner = mem(16, 4);
+        let contig = inner.chunk_contiguity();
+        let units = contiguous_runs(&[0, 1, 2, 3], &contig);
+        for workers in [1usize, 4] {
+            let plan = FaultPlan::parse("persistent:2").unwrap();
+            let store: Arc<dyn SampleStore> =
+                Arc::new(FaultyStore::new(inner.clone(), plan));
+            let mut pool = FetchPool::new(workers);
+            let mut staged = HashMap::new();
+            let err = pool.fetch(&store, &units, &mut staged).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains(&format!("after {} attempts", retry::FETCH_ATTEMPTS)),
+                "workers={workers}: {msg}"
+            );
+            assert!(msg.contains("injected persistent fault"), "workers={workers}: {msg}");
+            assert_eq!(pool.retry_stats().retries, retry::FETCH_ATTEMPTS as u64 - 1);
+        }
     }
 }

@@ -13,6 +13,7 @@ use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
 use solar::sched::plan::SchedulePlan;
 use solar::storage::codec::Codec;
+use solar::storage::fault::{FaultPlan, FaultyStore};
 use solar::storage::pfs::{CostModel, SystemTier};
 use solar::storage::store::{open_store, SampleStore};
 use solar::train::driver::{train, FaultKind, ServeTarget, TrainConfig};
@@ -295,6 +296,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let policy = LoaderPolicy::by_name(&loader).context("unknown loader")?;
     // Any SampleStore backend: single SHDF file or sharded directory.
     let store = open_store(&data)?;
+    // `--fault-plan SPEC` wraps the store in the scripted fault injector
+    // before anything reads it, so planning metadata, training reads,
+    // and eval fetches all see the same deterministic faulty view.
+    let store: std::sync::Arc<dyn SampleStore> = match args.get("fault-plan") {
+        Some(spec) => std::sync::Arc::new(FaultyStore::new(store, FaultPlan::parse(spec)?)),
+        None => store,
+    };
     let holdout = args.get_usize("holdout", 32)?;
     let n_nodes = args.get_usize("nodes", 2)?;
     // Load the checkpoint up front: a resumed run defaults its schedule
@@ -362,12 +370,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         0 => solar::loader::io::io_threads(),
         n => n,
     };
-    let (fetch_fault, fault_kind) = match args.get("fetch-fault") {
-        Some(s) => {
-            let (at, kind) = parse_fetch_fault(s)?;
-            (Some(at), kind)
-        }
-        None => (None, FaultKind::Error),
+    // Repeatable: each occurrence scripts one (node, step, kind) fault;
+    // the driver validates every triple against the run shape.
+    let fetch_fault: Vec<(usize, usize, FaultKind)> =
+        args.get_all("fetch-fault").iter().map(|s| parse_fetch_fault(s)).collect::<Result<_>>()?;
+    let fallback = match args.get("fallback") {
+        None => false,
+        Some("standalone") => true,
+        Some(v) => bail!("--fallback must be 'standalone', got '{v}'"),
     };
     let checkpoint_path = args.get_path("checkpoint");
     // `--checkpoint PATH` alone checkpoints at every epoch boundary;
@@ -392,7 +402,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         prefetch,
         epoch_drain: args.flag("epoch-drain"),
         fetch_fault,
-        fault_kind,
+        fallback,
         checkpoint_every,
         checkpoint_path,
         resume,
@@ -419,7 +429,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("plan: executing a pre-computed schedule artifact (engine bypassed)");
     }
     if let Some(t) = &tc.connect {
-        println!("connect: plan + staged bytes streamed from serve daemon at {}", t.addr);
+        println!(
+            "connect: plan + staged bytes streamed from serve daemon at {}{}",
+            t.addr,
+            if tc.fallback { " (fallback: standalone on daemon loss)" } else { "" }
+        );
     }
     if let Some(rs) = &tc.resume {
         println!(
@@ -463,6 +477,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!(
         "schedule: steps={} epochs={} hits={} pfs={}",
         report.steps, report.epochs, report.hits, report.pfs_samples
+    );
+    // Fault-tolerance accounting, deliberately OUTSIDE the schedule
+    // fingerprint: retries/fallbacks change when bytes move, never what
+    // is trained, so chaos runs diff clean on the line above.
+    println!(
+        "retry: attempts={} retries={} backoff={:.3}s fallbacks={}",
+        report.retry.attempts,
+        report.retry.retries,
+        report.retry.backoff_s(),
+        report.retry.fallbacks
     );
     if matches!(tc.prefetch, solar::train::driver::PrefetchMode::Auto) {
         if tc.io_threads == 0 {

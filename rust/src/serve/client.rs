@@ -13,6 +13,18 @@
 //! head-of-line-blocks the coordinator's plan stream. All frames go
 //! through [`super::proto`]; a server-reported `error` frame surfaces
 //! as a descriptive `anyhow` error with the server's message.
+//!
+//! Hardening: every socket carries a request timeout
+//! ([`retry::REQUEST_TIMEOUT_MS`]), and every request can be re-issued
+//! once over a fresh connection ([`Conn::reconnect`], budgeted by
+//! [`retry::RECONNECT_ATTEMPTS`]) — safe because every serve request is
+//! idempotent server-side ("next" is keyed by step index, "fetch" by
+//! (step, node), "done" is a no-op when repeated; a re-fetched step
+//! double-counts pool stats on BOTH sides of the feed cross-check, so
+//! accounting stays reconciled). Server-reported `error` frames are
+//! deterministic rejections and are never retried. Reconnect work is
+//! counted into a [`RetryCell`] so the run's `RetryStats` cover the
+//! serve path too.
 
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -25,51 +37,110 @@ use crate::sched::plan::{node_steps_from_json, PlanNodeStep};
 use crate::serve::proto::{self, Frame};
 use crate::serve::tenant::TenantSpec;
 use crate::util::json::Json;
-
-/// Connection retry budget: the daemon may still be binding when the
-/// first tenant starts (CI launches both at once).
-const CONNECT_ATTEMPTS: usize = 40;
-const CONNECT_BACKOFF_MS: u64 = 250;
+use crate::util::retry::{self, RetryCell, RetryStats};
 
 /// One framed request/response connection to the daemon.
 pub struct Conn {
+    addr: String,
     r: BufReader<TcpStream>,
     w: BufWriter<TcpStream>,
 }
 
 impl Conn {
-    /// Connect, retrying while the daemon comes up.
+    /// Connect, retrying while the daemon comes up (the daemon may still
+    /// be binding when the first tenant starts — CI launches both at
+    /// once).
     pub fn connect(addr: &str) -> Result<Conn> {
+        Conn::connect_with(addr, retry::CONNECT_ATTEMPTS)
+    }
+
+    fn connect_with(addr: &str, attempts: usize) -> Result<Conn> {
         let mut last: Option<std::io::Error> = None;
-        for _ in 0..CONNECT_ATTEMPTS {
+        for k in 0..attempts {
             match TcpStream::connect(addr) {
                 Ok(stream) => {
+                    let timeout =
+                        Some(std::time::Duration::from_millis(retry::REQUEST_TIMEOUT_MS));
+                    stream.set_read_timeout(timeout).context("set serve read timeout")?;
+                    stream.set_write_timeout(timeout).context("set serve write timeout")?;
                     let reader = stream.try_clone().context("clone serve connection")?;
-                    return Ok(Conn { r: BufReader::new(reader), w: BufWriter::new(stream) });
+                    return Ok(Conn {
+                        addr: addr.to_string(),
+                        r: BufReader::new(reader),
+                        w: BufWriter::new(stream),
+                    });
                 }
                 Err(e) => {
                     last = Some(e);
-                    std::thread::sleep(std::time::Duration::from_millis(CONNECT_BACKOFF_MS));
+                    if k + 1 < attempts {
+                        std::thread::sleep(std::time::Duration::from_millis(
+                            retry::CONNECT_BACKOFF_MS,
+                        ));
+                    }
                 }
             }
         }
         bail!(
-            "serve daemon at {addr} unreachable after {CONNECT_ATTEMPTS} attempts: {}",
+            "serve daemon at {addr} unreachable after {attempts} attempts: {}",
             last.map(|e| e.to_string()).unwrap_or_else(|| "no attempt made".to_string())
         )
+    }
+
+    /// Re-dial the same address with the tight reconnect budget
+    /// (a mid-run drop is either a blip or a dead daemon — no point
+    /// waiting out the full startup budget).
+    fn reconnect(&mut self) -> Result<()> {
+        *self = Conn::connect_with(&self.addr, retry::RECONNECT_ATTEMPTS)?;
+        Ok(())
+    }
+
+    /// Transport round trip: send one frame, read one frame. Server
+    /// `error` frames pass through as `Ok` — [`check_error`] turns them
+    /// into errors at the request layer, where they are known NOT to be
+    /// retryable.
+    fn round_trip(&mut self, header: &Json, payload: &[u8]) -> Result<Frame> {
+        proto::write_frame(&mut self.w, header, payload)?;
+        proto::read_frame(&mut self.r)?
+            .context("serve daemon closed the connection mid-request")
     }
 
     /// One round trip. A server `error` frame becomes an `Err` carrying
     /// the server's message.
     pub fn request(&mut self, header: &Json, payload: &[u8]) -> Result<Frame> {
-        proto::write_frame(&mut self.w, header, payload)?;
-        let frame = proto::read_frame(&mut self.r)?
-            .context("serve daemon closed the connection mid-request")?;
-        if frame.kind()? == "error" {
-            bail!("serve daemon: {}", frame.header.req_str("message").unwrap_or("(no message)"));
-        }
-        Ok(frame)
+        check_error(self.round_trip(header, payload)?)
     }
+
+    /// One round trip with a single reconnect-and-reissue on transport
+    /// failure. Only transport errors trigger the retry; a server
+    /// `error` frame is a deterministic rejection and surfaces
+    /// directly. The retry is counted into `cell`.
+    pub fn request_retrying(
+        &mut self,
+        header: &Json,
+        payload: &[u8],
+        cell: &RetryCell,
+    ) -> Result<Frame> {
+        cell.attempt(false);
+        let frame = match self.round_trip(header, payload) {
+            Ok(f) => f,
+            Err(first) => {
+                cell.attempt(true);
+                self.reconnect().with_context(|| {
+                    format!("serve request failed ({first:#}); reconnect also failed")
+                })?;
+                self.round_trip(header, payload)?
+            }
+        };
+        check_error(frame)
+    }
+}
+
+/// Surface a server-reported `error` frame as a descriptive error.
+fn check_error(frame: Frame) -> Result<Frame> {
+    if frame.kind()? == "error" {
+        bail!("serve daemon: {}", frame.header.req_str("message").unwrap_or("(no message)"));
+    }
+    Ok(frame)
 }
 
 /// The coordinator's tenant handle: plan stream + lifecycle.
@@ -79,6 +150,7 @@ pub struct TenantClient {
     /// Total steps the daemon planned for this run.
     pub n_steps: usize,
     next: usize,
+    retry: RetryCell,
 }
 
 impl TenantClient {
@@ -97,7 +169,40 @@ impl TenantClient {
             tenant: f.header.req_usize("tenant")? as u32,
             n_steps: f.header.req_usize("steps")?,
             next: 0,
+            retry: RetryCell::default(),
         })
+    }
+
+    /// Re-attach to an already-registered tenant after losing the
+    /// coordinator connection: the daemon matches `spec` against its
+    /// live tenants (idempotent — no new tenant, no re-announcement to
+    /// the pool) and the plan stream resumes at `from`. Uses the tight
+    /// reconnect budget: a resume races a possibly-dead daemon.
+    pub fn resume(addr: &str, spec: &TenantSpec, from: usize) -> Result<TenantClient> {
+        let mut conn = Conn::connect_with(addr, retry::RECONNECT_ATTEMPTS)?;
+        let mut h = proto::msg("register");
+        h.set("resume", Json::Num(from as f64)).set("spec", spec.to_json());
+        let f = conn.request(&h, &[])?;
+        if f.kind()? != "registered" {
+            bail!("unexpected resume reply '{}'", f.kind()?);
+        }
+        Ok(TenantClient {
+            conn,
+            tenant: f.header.req_usize("tenant")? as u32,
+            n_steps: f.header.req_usize("steps")?,
+            next: from,
+            retry: RetryCell::default(),
+        })
+    }
+
+    /// Steps already pulled from the plan stream (the local cursor).
+    pub fn served(&self) -> usize {
+        self.next
+    }
+
+    /// Serve-path retry counters accumulated by this handle.
+    pub fn retry_stats(&self) -> RetryStats {
+        self.retry.stats()
     }
 
     /// Next planned step, in run order — the remote `plan_run` cursor.
@@ -106,7 +211,7 @@ impl TenantClient {
         let mut h = proto::msg("next");
         h.set("step", Json::Num(self.next as f64))
             .set("tenant", Json::Num(self.tenant as f64));
-        let f = self.conn.request(&h, &[])?;
+        let f = self.conn.request_retrying(&h, &[], &self.retry)?;
         match f.kind()? {
             "end" => Ok(None),
             "step" => {
@@ -137,7 +242,7 @@ impl TenantClient {
     pub fn finish(&mut self) -> Result<()> {
         let mut h = proto::msg("done");
         h.set("tenant", Json::Num(self.tenant as f64));
-        let f = self.conn.request(&h, &[])?;
+        let f = self.conn.request_retrying(&h, &[], &self.retry)?;
         if f.kind()? != "ok" {
             bail!("unexpected done reply '{}'", f.kind()?);
         }
@@ -146,7 +251,7 @@ impl TenantClient {
 
     /// Fetch the daemon's live telemetry feed (testing/monitoring hook).
     pub fn telemetry(&mut self) -> Result<Json> {
-        let f = self.conn.request(&proto::msg("telemetry"), &[])?;
+        let f = self.conn.request_retrying(&proto::msg("telemetry"), &[], &self.retry)?;
         f.header.get("feed").cloned().context("telemetry reply missing feed")
     }
 }
@@ -156,11 +261,25 @@ pub struct NodeClient {
     conn: Conn,
     tenant: u32,
     node: usize,
+    /// Shared with the owning fetch stage's pool cell, so serve-path
+    /// reconnects land in the same per-node `RetryStats` as store-read
+    /// retries.
+    retry: Arc<RetryCell>,
 }
 
 impl NodeClient {
     pub fn connect(addr: &str, tenant: u32, node: usize) -> Result<NodeClient> {
-        Ok(NodeClient { conn: Conn::connect(addr)?, tenant, node })
+        NodeClient::connect_with(addr, tenant, node, Arc::new(RetryCell::default()))
+    }
+
+    /// Connect, counting this client's request retries into `retry`.
+    pub fn connect_with(
+        addr: &str,
+        tenant: u32,
+        node: usize,
+        retry: Arc<RetryCell>,
+    ) -> Result<NodeClient> {
+        Ok(NodeClient { conn: Conn::connect(addr)?, tenant, node, retry })
     }
 
     fn decode_staged(f: &Frame) -> Result<HashMap<u32, Arc<Vec<f32>>>> {
@@ -182,7 +301,7 @@ impl NodeClient {
         h.set("node", Json::Num(self.node as f64))
             .set("step", Json::Num(step as f64))
             .set("tenant", Json::Num(self.tenant as f64));
-        let f = self.conn.request(&h, &[])?;
+        let f = self.conn.request_retrying(&h, &[], &self.retry)?;
         Self::decode_staged(&f)
     }
 
@@ -190,7 +309,7 @@ impl NodeClient {
     pub fn fetch_ids(&mut self, ids: &[u32]) -> Result<HashMap<u32, Arc<Vec<f32>>>> {
         let mut h = proto::msg("eval");
         h.set("ids", Json::arr_u32(ids)).set("tenant", Json::Num(self.tenant as f64));
-        let f = self.conn.request(&h, &[])?;
+        let f = self.conn.request_retrying(&h, &[], &self.retry)?;
         Self::decode_staged(&f)
     }
 }

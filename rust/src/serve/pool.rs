@@ -158,6 +158,37 @@ impl SharedPool {
         self.stats.admitted += 1;
     }
 
+    /// Withdraw every announced-but-unconsumed future access in one
+    /// lane of the global timeline (`pos % stride == lane`) — the
+    /// server calls this when a tenant finishes or is reaped, so a gone
+    /// tenant's never-to-arrive requests stop pinning pool capacity.
+    /// Affected residents' next-use LOOSENS (recomputed from the
+    /// surviving announcements); an entry left with no future use
+    /// becomes the immediate Belady victim. Deterministic: a pure
+    /// function of the announce/request/retract sequence.
+    pub fn retract_lane(&mut self, lane: u64, stride: u64) {
+        debug_assert!(stride > 0);
+        let mut touched: Vec<Key> = Vec::new();
+        self.future.retain(|key, set| {
+            let before = set.len();
+            set.retain(|pos| pos % stride != lane);
+            if set.len() != before {
+                touched.push(*key);
+            }
+            !set.is_empty()
+        });
+        for key in touched {
+            let nu = self.next_use(key);
+            if let Some(r) = self.resident.get_mut(&key) {
+                if r.next != nu {
+                    self.queue.remove(&(r.next, key));
+                    self.queue.insert((nu, key));
+                    r.next = nu;
+                }
+            }
+        }
+    }
+
     fn next_use(&self, key: Key) -> u64 {
         self.future
             .get(&key)
@@ -317,6 +348,35 @@ mod tests {
         assert_eq!(p.len(), 0);
         assert!(p.request(k, 2).is_none());
         assert_eq!(p.stats().bypassed, 1);
+    }
+
+    #[test]
+    fn retract_lane_loosens_next_use_and_frees_capacity() {
+        // Two "tenants" on stride 4: lane 0 and lane 1. Key A is kept
+        // resident only because lane 1 promises a reuse; once lane 1 is
+        // retracted, A's next-use loosens to MAX and it becomes the
+        // Belady victim instead of a better entry.
+        let mut p = SharedPool::new(1);
+        let a = (0, 1);
+        let b = (0, 2);
+        p.announce(a, 4); // lane 0, step 1
+        p.announce(a, 9); // lane 1, step 2 — the only future reuse
+        p.announce(b, 8); // lane 0, step 2
+        p.announce(b, 12); // lane 0, step 3
+        assert!(p.request(a, 4).is_none());
+        p.admit(a, bytes(1.0)); // resident, next = 9
+        // Lane 1 dies: its promised accesses will never arrive.
+        p.retract_lane(1, 4);
+        // B's fetch now evicts A (next = MAX) instead of being bypassed
+        // against a phantom reuse.
+        assert!(p.request(b, 8).is_none());
+        p.admit(b, bytes(2.0));
+        assert_eq!(p.stats().evicted, 1, "retracted key was the victim");
+        assert!(p.request(b, 12).is_some(), "live lane's key stayed resident");
+        // Retracting an empty lane is a no-op.
+        let before = p.stats();
+        p.retract_lane(3, 4);
+        assert_eq!(p.stats(), before);
     }
 
     #[test]

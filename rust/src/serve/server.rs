@@ -40,6 +40,7 @@ use crate::serve::proto::{self, Frame};
 use crate::serve::tenant::{Tenant, TenantSpec};
 use crate::storage::store::{open_store, Contiguity, SampleStore};
 use crate::util::json::Json;
+use crate::util::retry::RetryStats;
 
 /// Lane stride of the oracle's global timeline (and the tenant cap).
 pub const MAX_TENANTS: u64 = 4096;
@@ -91,6 +92,7 @@ impl State {
         let mut misses = 0u64;
         let mut staged_bytes = 0u64;
         let mut pfs_bytes = 0u64;
+        let mut retry = RetryStats::default();
         let tenants: Vec<Json> = self
             .tenants
             .iter()
@@ -99,16 +101,30 @@ impl State {
                 misses += t.stats.pfs_samples;
                 staged_bytes += t.stats.staged_bytes;
                 pfs_bytes += t.stats.pfs_bytes;
+                retry.attempts += t.stats.retry_attempts;
+                retry.retries += t.stats.retry_retries;
+                retry.backoff_us += t.stats.retry_backoff_us;
                 t.stats_json()
             })
             .collect();
         let p = self.pool.stats();
-        let ok = hits == p.hits && misses == p.misses;
+        // Every fetcher read happens inside a per-tenant request under
+        // this same lock, so the per-tenant retry sums must reconcile
+        // exactly with the shared fetcher's own counters.
+        let f = self.fetcher.retry_stats();
+        let ok = hits == p.hits
+            && misses == p.misses
+            && retry.attempts == f.attempts
+            && retry.retries == f.retries
+            && retry.backoff_us == f.backoff_us;
         let mut totals = Json::obj();
         totals
             .set("pfs_bytes", Json::Num(pfs_bytes as f64))
             .set("pool_hits", Json::Num(hits as f64))
             .set("pfs_samples", Json::Num(misses as f64))
+            .set("retry_attempts", Json::Num(retry.attempts as f64))
+            .set("retry_backoff_us", Json::Num(retry.backoff_us as f64))
+            .set("retry_retries", Json::Num(retry.retries as f64))
             .set("staged_bytes", Json::Num(staged_bytes as f64));
         let mut o = Json::obj();
         o.set("accounting", Json::Str(if ok { "ok" } else { "mismatch" }.to_string()))
@@ -245,6 +261,25 @@ fn handle_msg(state: &Arc<Mutex<State>>, frame: &Frame) -> Result<(Json, Vec<u8>
             let spec =
                 TenantSpec::from_json(frame.header.get("spec").context("register missing spec")?)?;
             let mut st = lock(state)?;
+            // Idempotent session resume: a reconnecting coordinator
+            // re-registers with an explicit `resume` header instead of
+            // creating a new tenant. The daemon matches the spec against
+            // the live tenants (latest first — identical specs may
+            // legitimately coexist) and hands back the existing id and
+            // its plan cursor; nothing is re-materialized or
+            // re-announced, so the shared pool's accounting is
+            // untouched. A plain register (no `resume` key) ALWAYS
+            // creates a new tenant.
+            if let Some(from) = frame.header.get("resume").and_then(Json::as_usize) {
+                let Some(t) = st.tenants.iter().rev().find(|t| !t.done && t.spec == spec) else {
+                    bail!("resume: no live tenant matches the spec");
+                };
+                let mut h = proto::msg("registered");
+                h.set("cursor", Json::Num(t.cursor.max(from) as f64))
+                    .set("steps", Json::Num(t.steps.len() as f64))
+                    .set("tenant", Json::Num(t.id as f64));
+                return Ok((h, Vec::new()));
+            }
             if st.tenants.len() as u64 >= MAX_TENANTS {
                 bail!("tenant limit {MAX_TENANTS} reached");
             }
@@ -269,7 +304,8 @@ fn handle_msg(state: &Arc<Mutex<State>>, frame: &Frame) -> Result<(Json, Vec<u8>
             let n_steps = tenant.steps.len();
             st.tenants.push(tenant);
             let mut h = proto::msg("registered");
-            h.set("steps", Json::Num(n_steps as f64))
+            h.set("cursor", Json::Num(0.0))
+                .set("steps", Json::Num(n_steps as f64))
                 .set("tenant", Json::Num(id as f64));
             Ok((h, Vec::new()))
         }
@@ -277,7 +313,11 @@ fn handle_msg(state: &Arc<Mutex<State>>, frame: &Frame) -> Result<(Json, Vec<u8>
             let mut st = lock(state)?;
             let id = tenant_of(&mut st, &frame.header)?;
             let step = frame.header.req_usize("step")?;
-            let t = &st.tenants[id];
+            let t = &mut st.tenants[id];
+            // Monotone cursor (clamped to the plan): re-pulls after a
+            // reconnect never move it backwards, so the resume
+            // handshake reports true progress.
+            t.cursor = t.cursor.max((step + 1).min(t.steps.len()));
             match t.steps.get(step) {
                 None => Ok((proto::msg("end"), Vec::new())),
                 Some(ts) => {
@@ -320,28 +360,54 @@ fn handle_msg(state: &Arc<Mutex<State>>, frame: &Frame) -> Result<(Json, Vec<u8>
                 }
             }
             let hits = ids.len() - missing.len();
+            // Attribute the shared fetcher's retry work to this tenant:
+            // the state lock serializes requests, so the counter delta
+            // around this fetch is exactly this tenant's share. Charged
+            // even when the read ultimately fails (exhausted budget), so
+            // the feed's retry reconciliation stays exact.
+            let retry_before = st.fetcher.retry_stats();
+            let mut fetch_err: Option<anyhow::Error> = None;
             if !missing.is_empty() {
                 // Split borrows: the fetcher and the store entry are
                 // disjoint fields of the locked state.
                 let State { fetcher, stores, .. } = &mut *st;
                 let entry = &stores[store_id as usize];
-                fetcher.fetch_ids(&entry.store, &entry.contig, &missing, &mut staged)?;
-                for &x in &missing {
-                    let bytes = staged
-                        .get(&x)
-                        .with_context(|| format!("PFS fetch did not stage sample {x}"))?;
-                    st.pool.admit((store_id, x), bytes.clone());
+                match fetcher.fetch_ids(&entry.store, &entry.contig, &missing, &mut staged) {
+                    Err(e) => fetch_err = Some(e),
+                    Ok(()) => {
+                        for &x in &missing {
+                            match staged.get(&x) {
+                                Some(bytes) => st.pool.admit((store_id, x), bytes.clone()),
+                                None => {
+                                    fetch_err = Some(anyhow!(
+                                        "PFS fetch did not stage sample {x}"
+                                    ));
+                                    break;
+                                }
+                            }
+                        }
+                    }
                 }
             }
-            let payload = proto::encode_samples(&ids, |x| {
-                staged.get(&x).cloned().unwrap_or_default()
-            });
+            let retry_after = st.fetcher.retry_stats();
             let sb = st.stores[store_id as usize].store.sample_bytes() as u64;
+            // Hit/miss charges mirror the pool.request calls above (made
+            // either way), retry charges mirror the fetcher — both sides
+            // of the feed cross-check move together even on failure.
             let t = &mut st.tenants[id];
             t.stats.pool_hits += hits as u64;
             t.stats.pfs_samples += missing.len() as u64;
             t.stats.pfs_bytes += missing.len() as u64 * sb;
-            t.stats.staged_bytes += payload.len() as u64;
+            t.stats.retry_attempts += retry_after.attempts - retry_before.attempts;
+            t.stats.retry_retries += retry_after.retries - retry_before.retries;
+            t.stats.retry_backoff_us += retry_after.backoff_us - retry_before.backoff_us;
+            if let Some(e) = fetch_err {
+                return Err(e);
+            }
+            let payload = proto::encode_samples(&ids, |x| {
+                staged.get(&x).cloned().unwrap_or_default()
+            });
+            st.tenants[id].stats.staged_bytes += payload.len() as u64;
             let mut h = proto::msg("staged");
             h.set("ids", Json::arr_u32(&ids));
             Ok((h, payload))
@@ -358,9 +424,20 @@ fn handle_msg(state: &Arc<Mutex<State>>, frame: &Frame) -> Result<(Json, Vec<u8>
             let mut staged: HashMap<u32, Arc<Vec<f32>>> = HashMap::with_capacity(ids.len());
             // Eval bytes bypass the pool: the holdout is outside every
             // training schedule, so it was never announced to the oracle.
-            let State { fetcher, stores, .. } = &mut *st;
-            let entry = &stores[store_id as usize];
-            fetcher.fetch_ids(&entry.store, &entry.contig, &ids, &mut staged)?;
+            // Retry charges are attributed the same way as `fetch` —
+            // even on failure — to keep the feed reconciliation exact.
+            let retry_before = st.fetcher.retry_stats();
+            let fetch_result = {
+                let State { fetcher, stores, .. } = &mut *st;
+                let entry = &stores[store_id as usize];
+                fetcher.fetch_ids(&entry.store, &entry.contig, &ids, &mut staged)
+            };
+            let retry_after = st.fetcher.retry_stats();
+            let t = &mut st.tenants[id];
+            t.stats.retry_attempts += retry_after.attempts - retry_before.attempts;
+            t.stats.retry_retries += retry_after.retries - retry_before.retries;
+            t.stats.retry_backoff_us += retry_after.backoff_us - retry_before.backoff_us;
+            fetch_result?;
             let payload = proto::encode_samples(&ids, |x| {
                 staged.get(&x).cloned().unwrap_or_default()
             });
@@ -375,6 +452,11 @@ fn handle_msg(state: &Arc<Mutex<State>>, frame: &Frame) -> Result<(Json, Vec<u8>
             if !st.tenants[id].done {
                 st.tenants[id].done = true;
                 st.done += 1;
+                // Reap the tenant's lane from the oracle: its remaining
+                // announced accesses will never arrive, and leaving them
+                // would pin pool capacity on phantom reuses. Idempotent
+                // with the `done` flag.
+                st.pool.retract_lane(id as u64, MAX_TENANTS);
             }
             Ok((proto::msg("ok"), Vec::new()))
         }

@@ -97,6 +97,14 @@ pub struct TenantStats {
     pub staged_bytes: u64,
     /// Holdout eval bytes (served outside the pool, counted apart).
     pub eval_bytes: u64,
+    /// Store-read attempts the shared fetcher made on this tenant's
+    /// behalf (attributed under the state lock, so the per-tenant sums
+    /// reconcile exactly with the fetcher's own totals in the feed).
+    pub retry_attempts: u64,
+    /// How many of those attempts were retries after a transient fault.
+    pub retry_retries: u64,
+    /// Microseconds of retry backoff spent serving this tenant.
+    pub retry_backoff_us: u64,
 }
 
 /// The daemon's materialized view of one registered run.
@@ -116,6 +124,12 @@ pub struct Tenant {
     pub stats: TenantStats,
     pub wall: Stopwatch,
     pub done: bool,
+    /// Plan-stream cursor: one past the highest step the coordinator
+    /// has pulled. Kept server-side so an idempotent re-registration
+    /// (`resume` header) can report where the stream stood — a
+    /// reconnecting client continues without disturbing the shared
+    /// pool's accounting (no re-materialize, no re-announce).
+    pub cursor: usize,
 }
 
 impl Tenant {
@@ -191,6 +205,7 @@ impl Tenant {
             stats,
             wall: Stopwatch::start(),
             done: false,
+            cursor: 0,
         })
     }
 
@@ -198,7 +213,8 @@ impl Tenant {
     pub fn stats_json(&self) -> Json {
         let s = self.stats;
         let mut o = Json::obj();
-        o.set("data", Json::Str(self.spec.data.clone()))
+        o.set("cursor", Json::Num(self.cursor as f64))
+            .set("data", Json::Str(self.spec.data.clone()))
             .set("done", Json::Bool(self.done))
             .set("eval_bytes", Json::Num(s.eval_bytes as f64))
             .set("id", Json::Num(self.id as f64))
@@ -207,6 +223,9 @@ impl Tenant {
             .set("plan_hits", Json::Num(s.plan_hits as f64))
             .set("policy", Json::Str(self.spec.policy.clone()))
             .set("pool_hits", Json::Num(s.pool_hits as f64))
+            .set("retry_attempts", Json::Num(s.retry_attempts as f64))
+            .set("retry_backoff_us", Json::Num(s.retry_backoff_us as f64))
+            .set("retry_retries", Json::Num(s.retry_retries as f64))
             .set("seed", Json::Num(self.spec.seed as f64))
             .set("staged_bytes", Json::Num(s.staged_bytes as f64))
             .set("steps", Json::Num(self.steps.len() as f64))

@@ -1,0 +1,377 @@
+//! Deterministic fault injection at the storage seam.
+//!
+//! [`FaultyStore`] wraps any [`SampleStore`] backend and fails reads
+//! according to a scripted, seeded [`FaultPlan`] — so tests and CI can
+//! exercise the retry/backoff machinery with *exact*, reproducible
+//! failure sequences instead of flaky external conditions. The core
+//! invariant this module exists to prove: a transient fault (and the
+//! retries it provokes) changes only when bytes move and how long the
+//! run takes; the schedule, params, and losses are bit-identical to the
+//! fault-free run (`tests/driver_pipeline_parity.rs`,
+//! `tests/store_conformance.rs`).
+//!
+//! Fault decisions are keyed on `(sample, attempt)`: each read covering
+//! a sample counts as one attempt for it, and the plan decides per
+//! sample whether that attempt fails. `transient:S:N` fails sample `S`'s
+//! first `N` attempts and then succeeds (resolving inside the fetch
+//! pool's retry budget); `persistent:S` fails every attempt, exhausting
+//! the budget and surfacing with the root-cause chain and attempt
+//! count. The `rate`/`seed` clauses add seeded random transients whose
+//! decision is a pure function of `(seed, sample)` — order-independent
+//! across concurrent fetch workers, so injection itself cannot perturb
+//! the schedule.
+//!
+//! Grammar for `--fault-plan SPEC` (comma-separated clauses):
+//!
+//! ```text
+//! transient:SAMPLE:N   sample fails its first N read attempts
+//! persistent:SAMPLE    sample fails every read attempt
+//! latency:MS           every read call sleeps MS ms before serving
+//! rate:P               each sample's first attempt fails with prob. P
+//! seed:S               seed for the rate draw (default 0)
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::storage::codec::Codec;
+use crate::storage::store::{Contiguity, SampleStore};
+
+/// Marker error for an injected fault that resolves on retry. The fetch
+/// pool retries *any* read error up to its budget, but carrying a typed
+/// marker lets tests (and error messages) distinguish a scripted
+/// transient from a genuine I/O failure via `anyhow`'s downcast.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransientFault {
+    pub sample: u32,
+    pub attempt: u32,
+}
+
+impl std::fmt::Display for TransientFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected transient fault: sample {} attempt {}", self.sample, self.attempt)
+    }
+}
+
+impl std::error::Error for TransientFault {}
+
+impl TransientFault {
+    /// Whether `err`'s chain bottoms out in an injected transient fault.
+    pub fn is(err: &anyhow::Error) -> bool {
+        err.chain().any(|c| c.downcast_ref::<TransientFault>().is_some())
+    }
+}
+
+/// A scripted fault schedule: which `(sample, attempt)` reads fail, plus
+/// optional injected per-read latency. Deterministic by construction —
+/// every decision is a pure function of the plan and the per-sample
+/// attempt counter.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// `sample -> n`: the sample's first `n` attempts fail (transient).
+    pub transient: BTreeMap<u32, u32>,
+    /// Samples that fail every attempt (persistent).
+    pub persistent: BTreeSet<u32>,
+    /// Injected latency per read call, in milliseconds.
+    pub latency_ms: u64,
+    /// Probability that a sample's first attempt fails (seeded random
+    /// transients); 0 disables the draw.
+    pub rate: f64,
+    /// Seed for the `rate` draw.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse the `--fault-plan` grammar (see module docs). An empty spec
+    /// is the empty plan (a bit-identical passthrough).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut p = FaultPlan::default();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let parts: Vec<&str> = clause.split(':').collect();
+            match parts.as_slice() {
+                ["transient", s, n] => {
+                    let sample = parse_num::<u32>(s, clause)?;
+                    let n = parse_num::<u32>(n, clause)?;
+                    if n == 0 {
+                        bail!("fault-plan clause `{clause}`: attempt count must be >= 1");
+                    }
+                    p.transient.insert(sample, n);
+                }
+                ["persistent", s] => {
+                    p.persistent.insert(parse_num::<u32>(s, clause)?);
+                }
+                ["latency", ms] => p.latency_ms = parse_num::<u64>(ms, clause)?,
+                ["rate", r] => {
+                    let r: f64 = r
+                        .parse()
+                        .with_context(|| format!("fault-plan clause `{clause}`: bad number"))?;
+                    if !(0.0..=1.0).contains(&r) {
+                        bail!("fault-plan clause `{clause}`: rate must be in [0, 1]");
+                    }
+                    p.rate = r;
+                }
+                ["seed", s] => p.seed = parse_num::<u64>(s, clause)?,
+                _ => bail!(
+                    "bad fault-plan clause `{clause}` (want transient:SAMPLE:N, \
+                     persistent:SAMPLE, latency:MS, rate:P, or seed:S)"
+                ),
+            }
+        }
+        Ok(p)
+    }
+
+    /// Whether the plan injects nothing at all.
+    pub fn is_empty(&self) -> bool {
+        self.transient.is_empty()
+            && self.persistent.is_empty()
+            && self.latency_ms == 0
+            && self.rate == 0.0
+    }
+
+    /// Decide sample `sample`'s fate on its `attempt`-th read (0-based):
+    /// `Some(true)` = persistent fault, `Some(false)` = transient fault,
+    /// `None` = the read goes through. Pure — no state, no clock.
+    fn decide(&self, sample: u32, attempt: u32) -> Option<bool> {
+        if self.persistent.contains(&sample) {
+            return Some(true);
+        }
+        if let Some(&n) = self.transient.get(&sample) {
+            if attempt < n {
+                return Some(false);
+            }
+        }
+        if self.rate > 0.0 && attempt == 0 {
+            // Pure draw keyed on (seed, sample): a 53-bit uniform from a
+            // splitmix64-style mix, so the decision is identical no
+            // matter which worker thread reads the sample first.
+            let u = (mix64(self.seed ^ mix64(sample as u64 + 1)) >> 11) as f64 / (1u64 << 53) as f64;
+            if u < self.rate {
+                return Some(false);
+            }
+        }
+        None
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(s: &str, clause: &str) -> Result<T>
+where
+    T::Err: std::error::Error + Send + Sync + 'static,
+{
+    s.parse::<T>().with_context(|| format!("fault-plan clause `{clause}`: bad number"))
+}
+
+/// splitmix64 finalizer: a cheap, well-mixed pure hash.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// A [`SampleStore`] that injects the faults a [`FaultPlan`] scripts,
+/// forwarding everything else verbatim to the wrapped backend — with an
+/// empty plan it is a bit-identical passthrough (every method, including
+/// the raw-span codec path, delegates to the inner store's own
+/// implementation).
+#[derive(Debug)]
+pub struct FaultyStore {
+    inner: Arc<dyn SampleStore>,
+    plan: FaultPlan,
+    /// Per-sample read-attempt counters. Behind a mutex because crew
+    /// threads read through `&self`; a poisoned lock (a panicking peer)
+    /// degrades to the counters as last written — never a panic on the
+    /// worker path.
+    attempts: Mutex<HashMap<u32, u32>>,
+}
+
+impl FaultyStore {
+    pub fn new(inner: Arc<dyn SampleStore>, plan: FaultPlan) -> FaultyStore {
+        FaultyStore { inner, plan, attempts: Mutex::new(HashMap::new()) }
+    }
+
+    /// The gate every read passes: charge injected latency, count one
+    /// attempt for each covered sample, and fail if the plan says so.
+    fn gate(&self, start: usize, count: usize) -> Result<()> {
+        if count == 0 || self.plan.is_empty() {
+            return Ok(());
+        }
+        if self.plan.latency_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(self.plan.latency_ms));
+        }
+        let mut counts = match self.attempts.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let mut fault: Option<(u32, u32, bool)> = None;
+        for i in start..start + count {
+            let sample = i as u32;
+            let attempt = counts.entry(sample).or_insert(0);
+            if fault.is_none() {
+                if let Some(persistent) = self.plan.decide(sample, *attempt) {
+                    fault = Some((sample, *attempt, persistent));
+                }
+            }
+            *attempt += 1;
+        }
+        match fault {
+            None => Ok(()),
+            Some((sample, attempt, false)) => {
+                Err(anyhow::Error::new(TransientFault { sample, attempt }))
+            }
+            Some((sample, attempt, true)) => {
+                bail!("injected persistent fault: sample {sample} attempt {attempt}")
+            }
+        }
+    }
+}
+
+impl SampleStore for FaultyStore {
+    fn n_samples(&self) -> usize {
+        self.inner.n_samples()
+    }
+
+    fn sample_bytes(&self) -> usize {
+        self.inner.sample_bytes()
+    }
+
+    fn shape(&self) -> &[usize] {
+        self.inner.shape()
+    }
+
+    fn dataset_name(&self) -> &str {
+        self.inner.dataset_name()
+    }
+
+    fn read_sample_into_at(&self, i: usize, buf: &mut [u8]) -> Result<()> {
+        self.gate(i, 1)?;
+        self.inner.read_sample_into_at(i, buf)
+    }
+
+    fn read_range_into_at(&self, start: usize, count: usize, buf: &mut [u8]) -> Result<()> {
+        self.gate(start, count)?;
+        self.inner.read_range_into_at(start, count, buf)
+    }
+
+    fn chunk_contiguity(&self) -> Contiguity {
+        self.inner.chunk_contiguity()
+    }
+
+    fn read_sample_at(&self, i: usize) -> Result<Vec<u8>> {
+        self.gate(i, 1)?;
+        self.inner.read_sample_at(i)
+    }
+
+    fn read_range_at(&self, start: usize, count: usize) -> Result<Vec<u8>> {
+        self.gate(start, count)?;
+        self.inner.read_range_at(start, count)
+    }
+
+    fn read_range_reusing_at(&self, start: usize, count: usize, buf: &mut Vec<u8>) -> Result<()> {
+        self.gate(start, count)?;
+        self.inner.read_range_reusing_at(start, count, buf)
+    }
+
+    fn codec(&self) -> Codec {
+        self.inner.codec()
+    }
+
+    fn read_span_raw_at(&self, start: usize, count: usize, buf: &mut Vec<u8>) -> Result<()> {
+        self.gate(start, count)?;
+        self.inner.read_span_raw_at(start, count, buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::store::MemStore;
+
+    fn mem(n: usize) -> Arc<dyn SampleStore> {
+        let mut m = MemStore::new("faulty", vec![4], Vec::new()).unwrap();
+        for i in 0..n {
+            m.push_f32(&[(i * 10) as f32, 1.0, 2.0, 3.0]).unwrap();
+        }
+        Arc::new(m)
+    }
+
+    #[test]
+    fn grammar_parses_every_clause() {
+        let p = FaultPlan::parse("transient:3:2, persistent:7, latency:5, rate:0.25, seed:42")
+            .unwrap();
+        assert_eq!(p.transient.get(&3), Some(&2));
+        assert!(p.persistent.contains(&7));
+        assert_eq!(p.latency_ms, 5);
+        assert_eq!(p.rate, 0.25);
+        assert_eq!(p.seed, 42);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("transient:1:0").is_err(), "zero attempts is a no-op typo");
+        assert!(FaultPlan::parse("rate:1.5").is_err());
+        assert!(FaultPlan::parse("bogus:1").is_err());
+        assert!(FaultPlan::parse("transient:x:1").is_err());
+    }
+
+    #[test]
+    fn empty_plan_is_bitwise_passthrough() {
+        let inner = mem(8);
+        let faulty = FaultyStore::new(inner.clone(), FaultPlan::default());
+        assert_eq!(faulty.n_samples(), 8);
+        assert_eq!(faulty.sample_bytes(), 16);
+        for i in 0..8 {
+            assert_eq!(faulty.read_sample_at(i).unwrap(), inner.read_sample_at(i).unwrap());
+        }
+        assert_eq!(faulty.read_range_at(2, 4).unwrap(), inner.read_range_at(2, 4).unwrap());
+        assert!(faulty.read_sample_at(8).is_err(), "inner bounds errors pass through");
+        assert!(faulty.read_range_at(7, 2).is_err());
+    }
+
+    #[test]
+    fn transient_fault_fails_exactly_n_attempts_then_recovers() {
+        let faulty = FaultyStore::new(mem(8), FaultPlan::parse("transient:3:2").unwrap());
+        let e1 = faulty.read_sample_at(3).unwrap_err();
+        assert!(TransientFault::is(&e1), "{e1:#}");
+        let e2 = faulty.read_sample_at(3).unwrap_err();
+        assert!(TransientFault::is(&e2));
+        assert!(faulty.read_sample_at(3).is_ok(), "third attempt succeeds");
+        assert!(faulty.read_sample_at(3).is_ok());
+        // Unrelated samples never notice.
+        assert!(faulty.read_sample_at(4).is_ok());
+    }
+
+    #[test]
+    fn range_reads_count_one_attempt_per_covered_sample() {
+        let faulty = FaultyStore::new(mem(8), FaultPlan::parse("transient:5:1").unwrap());
+        // The range covers sample 5 → the whole read fails once.
+        let e = faulty.read_range_at(4, 3).unwrap_err();
+        assert!(TransientFault::is(&e));
+        // The failed read consumed sample 5's faulty attempt: retry works.
+        assert!(faulty.read_range_at(4, 3).is_ok());
+        // A range missing sample 5 never faulted at all.
+        let faulty2 = FaultyStore::new(mem(8), FaultPlan::parse("transient:5:1").unwrap());
+        assert!(faulty2.read_range_at(0, 4).is_ok());
+    }
+
+    #[test]
+    fn persistent_fault_never_recovers() {
+        let faulty = FaultyStore::new(mem(8), FaultPlan::parse("persistent:2").unwrap());
+        for _ in 0..6 {
+            let e = faulty.read_sample_at(2).unwrap_err();
+            assert!(!TransientFault::is(&e), "persistent faults are not the transient marker");
+        }
+        assert!(faulty.read_sample_at(1).is_ok());
+    }
+
+    #[test]
+    fn rate_draw_is_a_pure_function_of_seed_and_sample() {
+        let p = FaultPlan::parse("rate:0.5,seed:9").unwrap();
+        let first: Vec<bool> = (0..64).map(|s| p.decide(s, 0).is_some()).collect();
+        let second: Vec<bool> = (0..64).map(|s| p.decide(s, 0).is_some()).collect();
+        assert_eq!(first, second, "same seed, same decisions");
+        assert!(first.iter().any(|&b| b) && first.iter().any(|&b| !b), "rate 0.5 is a mix");
+        // Rate faults hit only the first attempt: every sample recovers.
+        assert!((0..64).all(|s| p.decide(s, 1).is_none()));
+        let other = FaultPlan::parse("rate:0.5,seed:10").unwrap();
+        let third: Vec<bool> = (0..64).map(|s| other.decide(s, 0).is_some()).collect();
+        assert_ne!(first, third, "different seed, different draw");
+    }
+}

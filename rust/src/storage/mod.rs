@@ -6,6 +6,7 @@
 
 pub mod access;
 pub mod codec;
+pub mod fault;
 pub mod pfs;
 pub mod shard;
 pub mod shdf;

@@ -271,6 +271,17 @@ impl CostModel {
     pub fn chunk_read(&self, n: usize, sample_bytes: usize, jump: u64) -> f64 {
         self.pfs_read((n * sample_bytes) as u64, jump)
     }
+
+    /// Modeled backoff cost after the `attempt`-th failed read attempt —
+    /// exactly the deterministic sleep `util::retry` performs, so the
+    /// driver throttle and `dist::sim` charge a retry the same
+    /// wall-clock the fetch pool actually spends on it. One formula, two
+    /// consumers: the real path sleeps `retry::backoff_ms(attempt)`, the
+    /// modeled path charges this.
+    #[inline]
+    pub fn retry_backoff_s(&self, attempt: usize) -> f64 {
+        crate::util::retry::backoff_s(attempt)
+    }
 }
 
 /// System profile: buffer capacity per node, matching the paper's
@@ -309,6 +320,21 @@ mod tests {
     use super::*;
 
     const KB65: u64 = 65536;
+
+    #[test]
+    fn retry_backoff_matches_the_real_sleep_policy() {
+        // The modeled and the slept backoff must be the SAME formula:
+        // any drift would make the throttle and the simulator disagree
+        // with the fetch pool about what a retry costs.
+        let m = CostModel::default();
+        for attempt in 0..12 {
+            assert_eq!(
+                m.retry_backoff_s(attempt),
+                crate::util::retry::backoff_ms(attempt) as f64 / 1e3,
+                "attempt {attempt}"
+            );
+        }
+    }
 
     #[test]
     fn contiguous_cheaper_than_seeky() {

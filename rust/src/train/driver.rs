@@ -84,6 +84,7 @@ use crate::storage::store::{decode_f32, Contiguity, SampleStore};
 use crate::train::metrics::{EpochLoadStat, LossPoint, TrainReport};
 use crate::train::runstate::RunState;
 use crate::util::json::Json;
+use crate::util::retry::{self, RetryCell};
 use crate::util::timer::Stopwatch;
 
 /// Depth cap for [`PrefetchMode::Auto`] (and the staged-channel bound it
@@ -178,14 +179,13 @@ pub struct TrainConfig {
     /// is identical either way; only the boundary fill/drain bubble
     /// returns. Kept for A/B measurement of that bubble.
     pub epoch_drain: bool,
-    /// Test hook: node `.0`'s fetch stage fails instead of staging step
-    /// `.1` — exercises the fetch-death shutdown path (regression-tested
-    /// in `driver_pipeline_parity.rs`). Exposed on the CLI as
-    /// `train --fetch-fault NODE:STEP[:loss]`.
-    pub fetch_fault: Option<(usize, usize)>,
-    /// How the injected fault manifests: a reported error, or a silent
-    /// node loss (see [`FaultKind`]).
-    pub fault_kind: FaultKind,
+    /// Test hooks: node `.0`'s fetch stage fails instead of staging step
+    /// `.1`, manifesting as `.2` — exercises the fetch-death shutdown
+    /// path (regression-tested in `driver_pipeline_parity.rs`).
+    /// Repeatable on the CLI (`train --fetch-fault NODE:STEP[:loss]`,
+    /// once per fault); every entry is validated against the run's node
+    /// count and plan length before any thread spawns.
+    pub fetch_fault: Vec<(usize, usize, FaultKind)>,
     /// Write a [`RunState`] checkpoint to `checkpoint_path` every this
     /// many steps (0 = never). Each write is atomic (temp + rename) and
     /// replaces the previous checkpoint.
@@ -230,6 +230,14 @@ pub struct TrainConfig {
     /// — the schedule and trained params are bit-identical to a
     /// standalone run (integration-tested).
     pub connect: Option<ServeTarget>,
+    /// Graceful degradation for `--connect` runs (`--fallback
+    /// standalone`): when the daemon is lost mid-run — after the serve
+    /// clients' own reconnect budget — the coordinator re-derives the
+    /// standalone plan locally and each node's fetch stage falls back to
+    /// reading the store directly. The daemon's plan IS the standalone
+    /// plan (the serve invariant), so the run continues bit-identically;
+    /// only WHERE the remaining bytes come from changes.
+    pub fallback: bool,
 }
 
 /// Where a `--connect` run finds its daemon, plus the dataset path AS
@@ -355,7 +363,8 @@ struct WorkerCtx {
     /// written by the coordinator's `Auto` co-tuner at the epoch-0
     /// boundary (stays at its initial value otherwise).
     io_width: Arc<AtomicUsize>,
-    fetch_fault: Option<(usize, FaultKind)>,
+    /// This node's injected faults, as `(step, kind)` pairs.
+    fetch_fault: Vec<(usize, FaultKind)>,
     load_only: bool,
     /// Buffer contents to seed the node with (resume): the exec half
     /// starts with these bytes resident, the fetch half with their ids —
@@ -367,6 +376,12 @@ struct WorkerCtx {
     /// Connect mode: `(daemon addr, tenant id)` — the fetch stage pulls
     /// staged bytes from the serve daemon instead of reading the store.
     remote: Option<(String, u32)>,
+    /// Degrade to direct store reads when the daemon is lost mid-run.
+    fallback: bool,
+    /// Per-node retry/backoff counters, shared between the fetch pool
+    /// and the serve node client; the coordinator sums every node's
+    /// cell into `TrainReport.retry` after the join.
+    retry: Arc<RetryCell>,
 }
 
 /// Depth for [`PrefetchMode::Auto`] after the measured first epoch: deep
@@ -404,6 +419,20 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     }
     if tc.plan.is_some() && tc.connect.is_some() {
         bail!("--plan and --connect are mutually exclusive");
+    }
+    if tc.fallback && tc.connect.is_none() {
+        bail!("--fallback standalone requires --connect");
+    }
+    // Reject malformed fault injections up front: a fault aimed at a
+    // node or step the plan never reaches would silently test nothing.
+    let plan_steps = tc.run.steps_per_epoch() * tc.run.n_epochs;
+    for &(node, step, _) in &tc.fetch_fault {
+        if node >= n_nodes {
+            bail!("--fetch-fault node {node} out of range: the run has {n_nodes} nodes (0..{n_nodes})");
+        }
+        if step >= plan_steps {
+            bail!("--fetch-fault step {step} past the end of the plan ({plan_steps} steps; valid steps are 0..{plan_steps})");
+        }
     }
     let external_plan = tc.plan.is_some() || tc.connect.is_some();
     if external_plan && tc.resume.is_some() {
@@ -554,6 +583,8 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     let (done_tx, done_rx) = mpsc::channel::<Result<DoneMsg>>();
     let mut handles = Vec::with_capacity(n_nodes);
     let fallback_img = tc.run.spec.shape.last().copied().unwrap_or(1);
+    let retry_cells: Vec<Arc<RetryCell>> =
+        (0..n_nodes).map(|_| Arc::new(RetryCell::default())).collect();
     for k in 0..n_nodes {
         let (ftx, frx) = mpsc::channel::<FetchMsg>();
         let (tx, rx) = mpsc::channel::<WorkMsg>();
@@ -571,12 +602,17 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             io_width: io_width.clone(),
             fetch_fault: tc
                 .fetch_fault
-                .and_then(|(node, step)| (node == k).then_some((step, tc.fault_kind))),
+                .iter()
+                .filter(|&&(node, _, _)| node == k)
+                .map(|&(_, step, kind)| (step, kind))
+                .collect(),
             load_only: tc.load_only,
             init_buffer: std::mem::take(&mut init_buffers[k]),
             fallback_batch: tc.run.local_batch.max(1),
             fallback_img,
             remote: remote_node.clone(),
+            fallback: tc.fallback,
+            retry: retry_cells[k].clone(),
         };
         handles.push(std::thread::spawn(move || worker_loop(ctx, frx, rx, done)));
     }
@@ -678,7 +714,37 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
         while !fetch_down && inflight.len() <= depth {
             let next = match pending.take() {
                 Some(rs) => Some(rs),
-                None => feed.next_step()?,
+                None => match feed.next_step() {
+                    Ok(next) => next,
+                    Err(e) => {
+                        // Graceful degradation (`--fallback standalone`):
+                        // the daemon is gone — the client already spent
+                        // its reconnect budget. Re-derive the standalone
+                        // plan (identical to the daemon's, by the serve
+                        // invariant), skip the steps already served, and
+                        // keep dispatching. The schedule — and therefore
+                        // params, losses, and fingerprints — is
+                        // bit-identical; only WHERE the remaining plan
+                        // comes from changes.
+                        let served = match &feed {
+                            StepFeed::Remote(client) if tc.fallback => {
+                                report.retry.add(&client.retry_stats());
+                                client.served()
+                            }
+                            _ => return Err(e),
+                        };
+                        eprintln!(
+                            "train: serve daemon lost after {served} plan steps ({e:#}); \
+                             falling back to standalone planning"
+                        );
+                        report.retry.fallbacks += 1;
+                        let mut eng = LoaderEngine::new(tc.run.clone(), tc.policy.clone());
+                        eng.bind_store(tc.store.as_ref())?;
+                        let steps: Vec<RunStep> = eng.plan_run().skip(served).collect();
+                        feed = StepFeed::Steps(steps.into_iter());
+                        feed.next_step()?
+                    }
+                },
             };
             let Some(rs) = next else { break };
             if tc.epoch_drain && rs.epoch_pos != dispatch_epoch && !inflight.is_empty() {
@@ -724,7 +790,11 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
             if fetch_down {
                 // The dead fetch half forwards its root cause straight
                 // to done_rx; drain for it so the real error surfaces.
-                while let Ok(d) = done_rx.recv_timeout(std::time::Duration::from_secs(5)) {
+                // The drain window shares the serve layer's shutdown
+                // budget (`util::retry`) — one constant, every path.
+                while let Ok(d) = done_rx
+                    .recv_timeout(std::time::Duration::from_millis(retry::SHUTDOWN_DRAIN_MS))
+                {
                     d?;
                 }
                 bail!("worker fetch stage died without reporting a cause");
@@ -870,6 +940,7 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
         if let Err(e) = client.finish() {
             eprintln!("warning: serve daemon completion notice failed: {e:#}");
         }
+        report.retry.add(&client.retry_stats());
     }
     drop(feed);
     if global_step == 0 {
@@ -899,6 +970,12 @@ pub fn train(tc: &TrainConfig) -> Result<TrainReport> {
     for h in handles {
         h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
     }
+    // Fold every node's retry/backoff/fallback counters into the report
+    // AFTER the join: the cells are quiet now, so the totals reconcile
+    // exactly with what the fetch pools and serve clients counted.
+    for cell in &retry_cells {
+        report.retry.add(&cell.stats());
+    }
     Ok(report)
 }
 
@@ -925,7 +1002,9 @@ fn worker_loop(
     let fetch_done = done.clone();
     let throttle = ctx.throttle;
     let cost = ctx.cost.clone();
-    let fault = ctx.fetch_fault;
+    let fault = ctx.fetch_fault.clone();
+    let fallback = ctx.fallback;
+    let retry_cell = ctx.retry.clone();
     let io_width = ctx.io_width.clone();
     // The fetch half mirrors buffer KEYS only — seed it with the resumed
     // ids (the exec half below gets the bytes).
@@ -943,6 +1022,8 @@ fn worker_loop(
             fault,
             init_resident,
             remote,
+            fallback,
+            retry_cell,
         )
     });
 
@@ -1147,20 +1228,25 @@ fn fetch_loop(
     mut cost: CostModel,
     io_width: Arc<AtomicUsize>,
     done: mpsc::Sender<Result<DoneMsg>>,
-    fault: Option<(usize, FaultKind)>,
+    fault: Vec<(usize, FaultKind)>,
     init_resident: Vec<u32>,
     remote: Option<(String, u32)>,
+    fallback: bool,
+    retry_cell: Arc<RetryCell>,
 ) {
     // Connect mode: this stage is a byte client of the serve daemon —
-    // staged bytes arrive over the wire instead of from the store.
+    // staged bytes arrive over the wire instead of from the store. Its
+    // request retries count into the same per-node cell as store reads.
     let mut remote_conn: Option<NodeClient> = match &remote {
-        Some((addr, tenant)) => match NodeClient::connect(addr, *tenant, node) {
-            Ok(c) => Some(c),
-            Err(e) => {
-                let _ = done.send(Err(anyhow::anyhow!("worker {node} fetch: {e:#}")));
-                return;
+        Some((addr, tenant)) => {
+            match NodeClient::connect_with(addr, *tenant, node, retry_cell.clone()) {
+                Ok(c) => Some(c),
+                Err(e) => {
+                    let _ = done.send(Err(anyhow::anyhow!("worker {node} fetch: {e:#}")));
+                    return;
+                }
             }
-        },
+        }
         None => None,
     };
     let contig = store.chunk_contiguity();
@@ -1168,8 +1254,10 @@ fn fetch_loop(
     // decode buffers AND worker threads recycle across steps (no per-read
     // allocation, no per-step spawn/join in steady state), and its
     // workers read — and, on compressed stores, decompress — independent
-    // chunks/runs concurrently.
-    let mut pool = FetchPool::new(io_width.load(Ordering::Relaxed).max(1));
+    // chunks/runs concurrently. Transient read faults are retried inside
+    // the pool (`util::retry` budget) with counters in `retry_cell`.
+    let mut pool =
+        FetchPool::with_retry(io_width.load(Ordering::Relaxed).max(1), retry_cell.clone());
     // Mirror of the exec thread's buffer KEYS, advanced in step order:
     // only staged-and-inserted ids enter, evicted ids leave — identical
     // to the exec side's value map, so "already buffered" decisions match
@@ -1191,27 +1279,45 @@ fn fetch_loop(
         }
         match msg {
             FetchMsg::Step { step_id, load } => {
-                if let Some((at, kind)) = fault {
-                    if at == step_id {
-                        if kind == FaultKind::Error {
-                            let _ = done.send(Err(anyhow::anyhow!(
-                                "worker {node} fetch: injected fetch fault at step {step_id}"
-                            )));
-                        }
-                        // NodeLoss: vanish without a report — the abrupt
-                        // node-death path. The exec half's closed staged
-                        // channel carries the failure to the coordinator.
-                        return;
+                if let Some(&(_, kind)) = fault.iter().find(|&&(at, _)| at == step_id) {
+                    if kind == FaultKind::Error {
+                        let _ = done.send(Err(anyhow::anyhow!(
+                            "worker {node} fetch: injected fetch fault at step {step_id}"
+                        )));
                     }
+                    // NodeLoss: vanish without a report — the abrupt
+                    // node-death path. The exec half's closed staged
+                    // channel carries the failure to the coordinator.
+                    return;
                 }
                 let t = Stopwatch::start();
                 // Remote staging carries no modeled PFS time: the daemon
                 // moved the bytes (pool hit or its own PFS read); the
                 // throttle emulates a PFS this node is NOT reading from.
+                // Losing the daemon (after the client's own reconnect
+                // budget) degrades to direct store reads when `fallback`
+                // is set: the staged set is identical either way (the
+                // daemon serves exactly what `stage_step` would read).
+                let mut daemon_lost = false;
                 let staged_result = match remote_conn.as_mut() {
-                    Some(nc) => nc.fetch_step(step_id).map(|staged| (staged, 0.0)),
+                    Some(nc) => match nc.fetch_step(step_id) {
+                        Ok(staged) => Ok((staged, 0.0)),
+                        Err(e) if fallback => {
+                            eprintln!(
+                                "worker {node} fetch: daemon lost at step {step_id} ({e:#}); \
+                                 falling back to direct store reads"
+                            );
+                            daemon_lost = true;
+                            retry_cell.fallback();
+                            stage_step(&mut pool, &store, &contig, &resident, &load, &cost)
+                        }
+                        Err(e) => Err(e),
+                    },
                     None => stage_step(&mut pool, &store, &contig, &resident, &load, &cost),
                 };
+                if daemon_lost {
+                    remote_conn = None;
+                }
                 match staged_result {
                     Err(e) => {
                         let _ = done.send(Err(anyhow::anyhow!("worker {node} fetch: {e:#}")));
@@ -1249,10 +1355,26 @@ fn fetch_loop(
             }
             FetchMsg::Eval { after_step, ids } => {
                 if holdout.is_none() {
+                    let mut daemon_lost = false;
                     let staged_eval = match remote_conn.as_mut() {
-                        Some(nc) => nc.fetch_ids(&ids),
+                        Some(nc) => match nc.fetch_ids(&ids) {
+                            Ok(m) => Ok(m),
+                            Err(e) if fallback => {
+                                eprintln!(
+                                    "worker {node} fetch (eval batch): daemon lost ({e:#}); \
+                                     falling back to direct store reads"
+                                );
+                                daemon_lost = true;
+                                retry_cell.fallback();
+                                stage_eval(&mut pool, &store, &contig, &ids)
+                            }
+                            Err(e) => Err(e),
+                        },
                         None => stage_eval(&mut pool, &store, &contig, &ids),
                     };
+                    if daemon_lost {
+                        remote_conn = None;
+                    }
                     match staged_eval {
                         Ok(m) => holdout = Some(m),
                         Err(e) => {
@@ -1352,7 +1474,15 @@ fn stage_step(
     };
     let mut staged: HashMap<u32, Arc<Vec<f32>>> =
         HashMap::with_capacity(units.iter().map(|u| u.count).sum());
+    let backoff_before = pool.retry_stats().backoff_us;
     pool.fetch(store, &units, &mut staged)?;
+    // Retry backoff is PFS time the store made us wait: charge it to
+    // the modeled step cost so the throttle agrees with the real sleep.
+    // The cell's microsecond total is exactly Σ backoff_ms over this
+    // fetch's retries — the same formula `CostModel::retry_backoff_s`
+    // exposes to the simulator (`pfs.rs` pins the identity with a test).
+    let backoff_us = pool.retry_stats().backoff_us - backoff_before;
+    modeled += backoff_us as f64 / 1e6;
     Ok((staged, modeled))
 }
 

@@ -3,6 +3,8 @@
 use anyhow::{Context, Result};
 use std::path::Path;
 
+use crate::util::retry::RetryStats;
+
 /// One logged point of the training run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LossPoint {
@@ -53,6 +55,12 @@ pub struct TrainReport {
     pub hits: usize,
     /// Per-epoch hits/PFS totals, in execution order.
     pub epoch_stats: Vec<EpochLoadStat>,
+    /// Fault-tolerance accounting: store-read attempts/retries/backoff
+    /// across every node's fetch stage (plus serve-path reconnects and
+    /// standalone fallbacks in `--connect` runs). Retries change only
+    /// WHEN bytes move — never the schedule or the trained params — so
+    /// these counters ride beside the schedule stats, not inside them.
+    pub retry: RetryStats,
     /// Final parameter tensors (manifest order) — used for post-training
     /// evaluation (Fig 15 PSNR).
     pub final_params: Vec<Vec<f32>>,

@@ -6,6 +6,7 @@ pub mod bitset;
 pub mod json;
 pub mod pool;
 pub mod proptest;
+pub mod retry;
 pub mod rng;
 pub mod stats;
 pub mod timer;

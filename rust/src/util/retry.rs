@@ -1,0 +1,190 @@
+//! The one home for every retry/backoff/timeout knob in the tree.
+//!
+//! SOLAR's fault-tolerance invariant: a retry changes only *when* bytes
+//! move and how long the run takes — never the schedule, the params, or
+//! the losses. That only holds if backoff is itself deterministic, so
+//! the policy here is a pure function of the attempt number (exponential
+//! doubling, capped, **no jitter**): the same fault script produces the
+//! same sleep sequence on every run, and `CostModel::retry_backoff_s`
+//! charges exactly this formula into the modeled wall-clock so the
+//! driver throttle and `dist::sim` agree on what a retry costs.
+//!
+//! Every hardcoded sleep/timeout that used to live inline (the serve
+//! client's connect loop, the driver's shutdown drain) now reads its
+//! constant from here, so tuning a timeout is a one-line change with one
+//! blast radius.
+
+/// Attempts the serve client makes to reach a daemon at startup (the
+/// daemon may still be binding when the first tenant launches).
+pub const CONNECT_ATTEMPTS: usize = 40;
+
+/// Fixed sleep between startup connect attempts, in milliseconds.
+pub const CONNECT_BACKOFF_MS: u64 = 250;
+
+/// Attempts a *re*connect makes once a session is already live. Much
+/// tighter than the startup loop: a daemon that vanishes mid-run is
+/// either restarting (back within a second) or dead, and a `--fallback
+/// standalone` client should discover "dead" fast.
+pub const RECONNECT_ATTEMPTS: usize = 3;
+
+/// Socket read/write timeout on every serve-protocol request, in
+/// milliseconds. A wedged daemon surfaces as a timeout error (and then a
+/// reconnect or fallback), never as a hung client.
+pub const REQUEST_TIMEOUT_MS: u64 = 30_000;
+
+/// How long the driver's coordinator waits for fetch stages to report a
+/// root cause after one stage dies, in milliseconds (previously a
+/// hardcoded 5 s `recv_timeout` in `train/driver.rs`).
+pub const SHUTDOWN_DRAIN_MS: u64 = 5_000;
+
+/// Read attempts per fetch unit (1 initial + up to 3 retries). Transient
+/// faults must resolve within this budget; anything still failing on the
+/// last attempt is persistent and surfaces with its root-cause chain.
+pub const FETCH_ATTEMPTS: usize = 4;
+
+/// Base backoff after the first failed fetch attempt, in milliseconds.
+pub const FETCH_BACKOFF_BASE_MS: u64 = 10;
+
+/// Cap on any single fetch backoff sleep, in milliseconds.
+pub const FETCH_BACKOFF_CAP_MS: u64 = 1_000;
+
+/// Deterministic exponential backoff: the sleep after the `attempt`-th
+/// failed fetch attempt (1-based), in milliseconds. Doubles from
+/// [`FETCH_BACKOFF_BASE_MS`] and saturates at [`FETCH_BACKOFF_CAP_MS`];
+/// `backoff_ms(0)` is 0 (nothing failed yet, nothing to wait for).
+pub fn backoff_ms(attempt: usize) -> u64 {
+    if attempt == 0 {
+        return 0;
+    }
+    let doublings = (attempt - 1).min(63) as u32;
+    FETCH_BACKOFF_BASE_MS
+        .checked_shl(doublings)
+        .unwrap_or(FETCH_BACKOFF_CAP_MS)
+        .min(FETCH_BACKOFF_CAP_MS)
+}
+
+/// [`backoff_ms`] in seconds — the unit the cost model charges.
+pub fn backoff_s(attempt: usize) -> f64 {
+    backoff_ms(attempt) as f64 / 1e3
+}
+
+/// Counters for everything the fault-tolerance layer did: how many read
+/// attempts ran, how many were retries, how much deterministic backoff
+/// was slept, and how many remote sessions fell back to standalone.
+/// Additive (per-worker cells sum into the run total), integral (so the
+/// totals cross-check exactly), with backoff in microseconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RetryStats {
+    /// Read attempts issued (successes and failures alike).
+    pub attempts: u64,
+    /// Attempts that were re-tries of a failed read.
+    pub retries: u64,
+    /// Total deterministic backoff slept, in microseconds.
+    pub backoff_us: u64,
+    /// Remote sessions that degraded to the standalone path.
+    pub fallbacks: u64,
+}
+
+impl RetryStats {
+    /// Fold another counter set into this one.
+    pub fn add(&mut self, o: &RetryStats) {
+        self.attempts += o.attempts;
+        self.retries += o.retries;
+        self.backoff_us += o.backoff_us;
+        self.fallbacks += o.fallbacks;
+    }
+
+    /// Total backoff in seconds (for reports and telemetry).
+    pub fn backoff_s(&self) -> f64 {
+        self.backoff_us as f64 / 1e6
+    }
+}
+
+/// A shared, thread-safe [`RetryStats`] accumulator: the fetch pool's
+/// crew threads and the serve clients all bump the same cell, and the
+/// driver snapshots it into the `TrainReport`. Plain relaxed atomics —
+/// these are counters, not synchronization.
+#[derive(Debug, Default)]
+pub struct RetryCell {
+    attempts: std::sync::atomic::AtomicU64,
+    retries: std::sync::atomic::AtomicU64,
+    backoff_us: std::sync::atomic::AtomicU64,
+    fallbacks: std::sync::atomic::AtomicU64,
+}
+
+impl RetryCell {
+    /// Record one read attempt; `retry` marks it as a re-issue.
+    pub fn attempt(&self, retry: bool) {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.attempts.fetch_add(1, Relaxed);
+        if retry {
+            self.retries.fetch_add(1, Relaxed);
+        }
+    }
+
+    /// Record `ms` milliseconds of backoff sleep.
+    pub fn backoff(&self, ms: u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.backoff_us.fetch_add(ms * 1_000, Relaxed);
+    }
+
+    /// Record one remote→standalone fallback.
+    pub fn fallback(&self) {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.fallbacks.fetch_add(1, Relaxed);
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> RetryStats {
+        use std::sync::atomic::Ordering::Relaxed;
+        RetryStats {
+            attempts: self.attempts.load(Relaxed),
+            retries: self.retries.load(Relaxed),
+            backoff_us: self.backoff_us.load(Relaxed),
+            fallbacks: self.fallbacks.load(Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_from_base_and_caps() {
+        assert_eq!(backoff_ms(0), 0);
+        assert_eq!(backoff_ms(1), FETCH_BACKOFF_BASE_MS);
+        assert_eq!(backoff_ms(2), 2 * FETCH_BACKOFF_BASE_MS);
+        assert_eq!(backoff_ms(3), 4 * FETCH_BACKOFF_BASE_MS);
+        assert_eq!(backoff_ms(8), FETCH_BACKOFF_CAP_MS);
+        assert_eq!(backoff_ms(1000), FETCH_BACKOFF_CAP_MS);
+        assert!((backoff_s(2) - 0.020).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backoff_is_deterministic() {
+        let a: Vec<u64> = (0..12).map(backoff_ms).collect();
+        let b: Vec<u64> = (0..12).map(backoff_ms).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cell_accumulates_and_snapshots() {
+        let c = RetryCell::default();
+        c.attempt(false);
+        c.attempt(true);
+        c.backoff(25);
+        c.fallback();
+        let s = c.stats();
+        assert_eq!(
+            s,
+            RetryStats { attempts: 2, retries: 1, backoff_us: 25_000, fallbacks: 1 }
+        );
+        let mut total = RetryStats::default();
+        total.add(&s);
+        total.add(&s);
+        assert_eq!(total.attempts, 4);
+        assert_eq!(total.backoff_us, 50_000);
+        assert!((total.backoff_s() - 0.05).abs() < 1e-12);
+    }
+}

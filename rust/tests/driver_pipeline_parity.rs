@@ -10,6 +10,7 @@
 //! `make artifacts` hasn't run.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use solar::config::RunConfig;
 use solar::data::spec::DatasetSpec;
@@ -17,6 +18,7 @@ use solar::data::synth;
 use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
 use solar::storage::codec::Codec;
+use solar::storage::fault::{FaultPlan, FaultyStore};
 use solar::storage::pfs::CostModel;
 use solar::storage::store::{open_store, SampleStore};
 use solar::train::driver::{train, FaultKind, PrefetchMode, TrainConfig, MAX_AUTO_PREFETCH};
@@ -136,8 +138,8 @@ fn tc(ds: &str, loader: &str, prefetch: usize, throttle: f64) -> TrainConfig {
         holdout,
         prefetch: PrefetchMode::Fixed(prefetch),
         epoch_drain: false,
-        fetch_fault: None,
-        fault_kind: FaultKind::Error,
+        fetch_fault: Vec::new(),
+        fallback: false,
         checkpoint_every: 0,
         checkpoint_path: None,
         resume: None,
@@ -748,6 +750,57 @@ fn elastic_bounce_trains_within_tolerance() {
 }
 
 #[test]
+fn chaos_transient_faults_train_bit_identically() {
+    // THE fault-tolerance acceptance criterion: scripted transient store
+    // faults (three samples each failing their first 1–3 read attempts,
+    // a seeded 5% random first-attempt failure rate, and a 1 ms latency
+    // tax per read) drive the fetch pool through its retry/backoff path
+    // on both nodes — and change nothing but timing. Params, losses, and
+    // per-epoch hit/PFS totals must be bit-identical to the clean run.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    for loader in ["solar", "pytorch+lru"] {
+        let clean = train(&tc("chaos", loader, 2, 0.0)).unwrap();
+        assert_eq!(clean.retry.retries, 0, "{loader}: clean run must not retry");
+        let mut c = tc("chaos", loader, 2, 0.0);
+        let plan =
+            FaultPlan::parse("transient:3:2,transient:17:1,transient:64:3,rate:0.05,seed:9,latency:1")
+                .unwrap();
+        c.store = Arc::new(FaultyStore::new(c.store.clone(), plan));
+        let chaos = train(&c).unwrap();
+        assert!(
+            chaos.retry.retries > 0,
+            "{loader}: the scripted faults must actually exercise the retry path"
+        );
+        assert!(
+            chaos.retry.attempts > chaos.retry.retries,
+            "{loader}: every retried unit eventually succeeded, so attempts > retries"
+        );
+        assert!(chaos.retry.backoff_us > 0, "{loader}: retries charge deterministic backoff");
+        assert_eq!(chaos.retry.fallbacks, 0, "{loader}: standalone runs never fall back");
+        assert_eq!(clean.steps, chaos.steps, "{loader}");
+        assert_eq!(
+            clean.epoch_stats, chaos.epoch_stats,
+            "{loader}: faults must not perturb the schedule's hit/PFS totals"
+        );
+        for (a, b) in clean.points.iter().zip(chaos.points.iter()) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "{loader}: loss diverged under faults at step {}",
+                a.step
+            );
+        }
+        assert_eq!(
+            clean.final_params, chaos.final_params,
+            "{loader}: final params must be bit-identical under transient faults"
+        );
+    }
+}
+
+#[test]
 fn node_loss_fault_surfaces_without_hanging() {
     // The abrupt node-death drill (`--fetch-fault N:S:loss`): the fetch
     // stage vanishes silently — no error report — so the failure must
@@ -756,8 +809,7 @@ fn node_loss_fault_surfaces_without_hanging() {
     let t0 = std::time::Instant::now();
     let mut c = tc("nodeloss", "solar", 2, 0.0);
     c.load_only = true;
-    c.fetch_fault = Some((1, 2));
-    c.fault_kind = FaultKind::NodeLoss;
+    c.fetch_fault = vec![(1, 2, FaultKind::NodeLoss)];
     let err = train(&c).expect_err("a vanished fetch stage must fail the run");
     let chain = format!("{err:#}");
     assert!(chain.contains("fetch stage died"), "closed-channel cause must surface, got: {chain}");
@@ -780,7 +832,7 @@ fn fetch_stage_death_surfaces_root_cause_promptly() {
     }
     let t0 = std::time::Instant::now();
     let mut c = tc("fault", "solar", 2, 0.0);
-    c.fetch_fault = Some((1, 2)); // node 1 dies instead of staging step 2
+    c.fetch_fault = vec![(1, 2, FaultKind::Error)]; // node 1 dies instead of staging step 2
     let err = train(&c).expect_err("a dead fetch stage must fail the run");
     let chain = format!("{err:#}");
     assert!(

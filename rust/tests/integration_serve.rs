@@ -17,7 +17,7 @@ use solar::runtime::executable::DenseImpl;
 use solar::serve::server::{ServeOpts, Server};
 use solar::storage::pfs::CostModel;
 use solar::storage::store::{open_store, SampleStore};
-use solar::train::driver::{train, FaultKind, PrefetchMode, ServeTarget, TrainConfig};
+use solar::train::driver::{train, PrefetchMode, ServeTarget, TrainConfig};
 use solar::train::metrics::TrainReport;
 use solar::util::json::Json;
 
@@ -71,8 +71,8 @@ fn tc(path: &PathBuf, seed: u64) -> TrainConfig {
         holdout: HOLDOUT,
         prefetch: PrefetchMode::Fixed(1),
         epoch_drain: false,
-        fetch_fault: None,
-        fault_kind: FaultKind::Error,
+        fetch_fault: Vec::new(),
+        fallback: false,
         checkpoint_every: 0,
         checkpoint_path: None,
         resume: None,
@@ -171,6 +171,76 @@ fn two_tenants_match_standalone_and_pool_lifts_hit_rate() {
         aggregate >= best_alone,
         "shared-pool aggregate hit rate {aggregate:.4} fell below best standalone {best_alone:.4}"
     );
+}
+
+#[test]
+fn coordinator_resume_reattaches_to_the_live_tenant_mid_plan() {
+    use solar::loader::engine::{LoaderEngine, RunStep};
+    use solar::serve::client::TenantClient;
+    use solar::serve::tenant::TenantSpec;
+
+    let path = dataset("resume");
+    let base = tc(&path, 42);
+    // Plan truth from the local engine — exactly what the daemon must
+    // stream (Tenant::materialize recomputes the same plan).
+    let mut eng = LoaderEngine::new(base.run.clone(), base.policy.clone());
+    eng.bind_store(base.store.as_ref()).unwrap();
+    let want: Vec<RunStep> = eng.plan_run().collect();
+
+    let server =
+        Server::bind("127.0.0.1:0", ServeOpts { pool_capacity: 0, telemetry: None }).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server = Arc::new(server);
+    let daemon = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run_until(1))
+    };
+
+    let spec = TenantSpec {
+        data: path.display().to_string(),
+        policy: "solar".into(),
+        n_nodes: base.run.n_nodes,
+        local_batch: base.run.local_batch,
+        n_epochs: base.run.n_epochs,
+        seed: base.run.seed,
+        buffer_capacity: base.run.buffer_capacity,
+        holdout: HOLDOUT,
+    };
+    let mut c1 = TenantClient::register(&addr, &spec).unwrap();
+    assert_eq!(c1.n_steps, want.len());
+    let tenant_id = c1.tenant;
+    let k = 5usize;
+    for (i, w) in want.iter().take(k).enumerate() {
+        let s = c1.next_step().unwrap().expect("mid-plan step");
+        assert_eq!(s.step, w.step, "step {i}");
+    }
+    drop(c1); // the coordinator's connection dies; the tenant lives on
+
+    // Re-attach: the daemon matches the spec to its live tenant — same
+    // id, no re-registration — and the stream resumes where it stopped.
+    let mut c2 = TenantClient::resume(&addr, &spec, k).unwrap();
+    assert_eq!(c2.tenant, tenant_id, "resume must re-attach, not create a tenant");
+    assert_eq!(c2.n_steps, want.len());
+    for (i, w) in want.iter().enumerate().skip(k) {
+        let s = c2.next_step().unwrap().expect("resumed step");
+        assert_eq!(s.step, w.step, "resumed stream diverged at {i}");
+        assert_eq!(s.epoch_pos, w.epoch_pos, "resumed epoch_pos diverged at {i}");
+    }
+    assert!(c2.next_step().unwrap().is_none(), "plan exhausted");
+
+    // A resume whose spec matches no live tenant is a clean rejection.
+    let mut other = spec.clone();
+    other.seed = 7;
+    let err = TenantClient::resume(&addr, &other, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("no live tenant"), "unexpected: {err:#}");
+
+    c2.finish().unwrap();
+    let feed = daemon.join().unwrap().unwrap();
+    assert_eq!(feed.req_str("accounting").unwrap(), "ok", "{}", feed.to_string_compact());
+    match feed.get("tenants") {
+        Some(Json::Arr(ts)) => assert_eq!(ts.len(), 1, "one tenant, resumed — not two"),
+        other => panic!("feed missing tenants array: {other:?}"),
+    }
 }
 
 #[test]

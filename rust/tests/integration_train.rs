@@ -11,7 +11,7 @@ use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
 use solar::storage::pfs::CostModel;
 use solar::storage::store::{open_store, SampleStore};
-use solar::train::driver::{train, FaultKind, PrefetchMode, TrainConfig};
+use solar::train::driver::{train, PrefetchMode, TrainConfig};
 
 fn artifacts() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -69,8 +69,8 @@ fn tc(path: PathBuf, n_train: usize, loader: &str, n_nodes: usize, epochs: usize
         holdout: 16,
         prefetch: PrefetchMode::Fixed(1),
         epoch_drain: false,
-        fetch_fault: None,
-        fault_kind: FaultKind::Error,
+        fetch_fault: Vec::new(),
+        fallback: false,
         checkpoint_every: 0,
         checkpoint_path: None,
         resume: None,

@@ -106,6 +106,29 @@ pub fn handler(rx: std::sync::mpsc::Receiver<u32>) {
 "#,
     )
     .unwrap();
+    // storage/fault.rs joins the R4 scope (PR 10): the fault injector
+    // sits on every fetch worker's read path, so a panic token inside a
+    // spawn closure there would kill a worker thread. A panic-free
+    // error-returning gate stays clean.
+    std::fs::write(
+        root.join("storage/fault.rs"),
+        r#"pub fn injector(rx: std::sync::mpsc::Receiver<u32>) {
+    std::thread::spawn(move || {
+        let v = rx.recv().unwrap();
+        drop(v);
+    });
+}
+
+pub fn gate(attempt: u32) -> Result<(), String> {
+    if attempt == 0 {
+        Err("injected transient fault".to_string())
+    } else {
+        Ok(())
+    }
+}
+"#,
+    )
+    .unwrap();
     // Clean file: BTree iteration + sorted hash collect are sanctioned.
     std::fs::write(
         root.join("train/clean.rs"),
@@ -145,6 +168,7 @@ fn every_rule_fires_on_its_seeded_fixture_and_only_there() {
         ("serve/pool.rs", "R1", 4),
         ("serve/pool.rs", "R3", 8),
         ("serve/pool.rs", "R4", 13),
+        ("storage/fault.rs", "R4", 3),
         ("storage/layout.rs", "R6", 2),
         ("util/bad_pragma.rs", "PRAGMA", 2),
     ]

@@ -16,9 +16,10 @@ use solar::data::synth;
 use solar::loader::LoaderPolicy;
 use solar::runtime::executable::DenseImpl;
 use solar::storage::codec::Codec;
+use solar::storage::fault::{FaultPlan, FaultyStore};
 use solar::storage::pfs::CostModel;
 use solar::storage::store::{decode_f32, open_store, SampleStore};
-use solar::train::driver::{train, FaultKind, PrefetchMode, TrainConfig};
+use solar::train::driver::{train, PrefetchMode, TrainConfig};
 use solar::util::rng::Rng;
 
 const N: usize = 56;
@@ -220,6 +221,42 @@ fn open_store_detects_layouts() {
     assert!(open_store(&tmp("nope.shdf")).is_err());
 }
 
+#[test]
+fn faulty_store_with_empty_plan_is_a_bitwise_passthrough_everywhere() {
+    // The fault injector is a SampleStore like any other: with an empty
+    // plan it must forward every method verbatim on every backend —
+    // metadata, per-sample reads, range reads, and error semantics.
+    for (name, store) in backends() {
+        let faulty = FaultyStore::new(store.clone(), FaultPlan::default());
+        assert_eq!(faulty.n_samples(), store.n_samples(), "{name}");
+        assert_eq!(faulty.sample_bytes(), store.sample_bytes(), "{name}");
+        assert_eq!(faulty.shape(), store.shape(), "{name}");
+        assert_eq!(faulty.dataset_name(), store.dataset_name(), "{name}");
+        assert_eq!(faulty.codec(), store.codec(), "{name}");
+        assert_eq!(
+            faulty.chunk_contiguity().n_regions(),
+            store.chunk_contiguity().n_regions(),
+            "{name}"
+        );
+        for i in [0usize, 17, 19, 37, N - 1] {
+            assert_eq!(
+                faulty.read_sample_at(i).unwrap(),
+                store.read_sample_at(i).unwrap(),
+                "{name}: sample {i}"
+            );
+        }
+        for (start, count) in [(0usize, 5usize), (17, 6), (0, N)] {
+            assert_eq!(
+                faulty.read_range_at(start, count).unwrap(),
+                store.read_range_at(start, count).unwrap(),
+                "{name}: range [{start},+{count})"
+            );
+        }
+        assert!(faulty.read_sample_at(N).is_err(), "{name}: inner bounds errors pass through");
+        assert!(faulty.read_range_at(N - 1, 2).is_err(), "{name}");
+    }
+}
+
 /// Load-only training config over a given store (no artifacts, no PJRT).
 fn load_only_tc(store: Arc<dyn SampleStore>, loader: &str, prefetch: PrefetchMode) -> TrainConfig {
     let holdout = 8usize;
@@ -246,8 +283,8 @@ fn load_only_tc(store: Arc<dyn SampleStore>, loader: &str, prefetch: PrefetchMod
         holdout,
         prefetch,
         epoch_drain: false,
-        fetch_fault: None,
-        fault_kind: FaultKind::Error,
+        fetch_fault: Vec::new(),
+        fallback: false,
         checkpoint_every: 0,
         checkpoint_path: None,
         resume: None,
@@ -299,6 +336,28 @@ fn load_only_schedule_is_io_thread_invariant_on_every_backend() {
         assert_eq!(base.hits, par.hits, "{name}");
         assert_eq!(base.pfs_samples, par.pfs_samples, "{name}");
         assert_eq!(base.epoch_stats, par.epoch_stats, "{name}");
+    }
+}
+
+#[test]
+fn load_only_schedule_is_fault_invariant_on_every_backend() {
+    // Transient store faults exercise the fetch pool's retry/backoff on
+    // every backend without perturbing the schedule: identical step
+    // counts and hit/PFS totals to the bare store, with the retries
+    // showing up only in the report's RetryStats.
+    for (name, store) in backends() {
+        let clean = train(&load_only_tc(store.clone(), "solar", PrefetchMode::Fixed(1))).unwrap();
+        assert_eq!(clean.retry.retries, 0, "{name}: clean run must not retry");
+        let plan = FaultPlan::parse("transient:5:2,transient:21:3,rate:0.1,seed:4").unwrap();
+        let faulty: Arc<dyn SampleStore> = Arc::new(FaultyStore::new(store, plan));
+        let r = train(&load_only_tc(faulty, "solar", PrefetchMode::Fixed(1))).unwrap();
+        assert!(r.retry.retries > 0, "{name}: scripted faults must trigger retries");
+        assert!(r.retry.attempts > r.retry.retries, "{name}");
+        assert!(r.retry.backoff_us > 0, "{name}: retries charge backoff");
+        assert_eq!(clean.steps, r.steps, "{name}");
+        assert_eq!(clean.hits, r.hits, "{name}");
+        assert_eq!(clean.pfs_samples, r.pfs_samples, "{name}");
+        assert_eq!(clean.epoch_stats, r.epoch_stats, "{name}");
     }
 }
 
